@@ -1,0 +1,97 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! Walks through the paper's core ideas on a 2-GPU cluster:
+//! 1. MIG placement rules (Table I) and how fragmentation arises (Fig. 1);
+//! 2. the fragmentation score (Algorithm 1) on the paper's worked example;
+//! 3. why fit-based baselines reject schedulable workloads (Fig. 3);
+//! 4. how MFI (Algorithm 2) picks the minimum-ΔF placement.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use migsched::frag::{evaluate_cluster_full, FragScorer, ScoreTable};
+use migsched::prelude::*;
+use migsched::workload::WorkloadId;
+
+fn main() {
+    let hw = HardwareModel::a100_80gb();
+    let table = ScoreTable::for_hardware(&hw);
+
+    println!("=== 1. The hardware model (paper Table I) ===\n");
+    println!("{}", hw.spec_table().render());
+
+    println!("=== 2. Fragmentation dynamics (paper Fig. 1) ===\n");
+    let mut gpu = GpuState::empty();
+    gpu.place(Profile::P2g20gb, 0).unwrap();
+    gpu.place(Profile::P1g10gb, 5).unwrap();
+    println!("GPU after arrivals 2g.20gb@0 + 1g.10gb@5:   [{}]", gpu.diagram());
+    println!("  free slices: {}   can host 3g.40gb? {}", gpu.free_slices(),
+             gpu.can_host(Profile::P3g40gb));
+    println!(
+        "  -> fragmented w.r.t. 3g.40gb: {} (enough slices, no feasible anchor)",
+        gpu.fragmented_for(Profile::P3g40gb)
+    );
+    println!(
+        "  fragmentation score F = {} (the paper's worked example: 2+2+8+4 = 16)\n",
+        table.score(gpu)
+    );
+
+    println!("=== 3. Fit-based baselines reject schedulable work (Fig. 3) ===\n");
+    let mut cluster = Cluster::new(hw.clone(), 2);
+    cluster.allocate(WorkloadId(0), Placement { gpu: 0, profile: Profile::P2g20gb, index: 0 })
+        .unwrap();
+    cluster.allocate(WorkloadId(1), Placement { gpu: 0, profile: Profile::P1g10gb, index: 5 })
+        .unwrap();
+    for (i, g) in cluster.gpus().iter().enumerate() {
+        println!("  GPU {i}: [{}]  F = {}", g.diagram(), table.score(*g));
+    }
+    let mut best_fit = BestFit::new(IndexPolicy::BestIndex);
+    let mut mfi = Mfi::for_hardware(&hw);
+    let request = Profile::P3g40gb;
+    println!("\n  request: {request}");
+    println!(
+        "  BF-BI -> {:?}  (selects busiest GPU 0 on slice counts, fails its anchors)",
+        best_fit.schedule(&cluster, request).map(|p| p.to_string())
+    );
+    let choice = mfi.schedule(&cluster, request);
+    println!(
+        "  MFI   -> {:?}  (evaluates every feasible placement cluster-wide)",
+        choice.map(|p| p.to_string())
+    );
+
+    println!("\n=== 4. MFI's dry-run ΔF evaluation (Algorithm 2) ===\n");
+    let outcome = evaluate_cluster_full(&table, cluster.gpus(), Profile::P1g10gb);
+    println!("  request: 1g.10gb — candidates (gpu, anchor, ΔF):");
+    for c in &outcome.candidates {
+        let marker = if Some(c) == outcome.best.as_ref() { "  <== argmin" } else { "" };
+        println!("    gpu {}  index {}  ΔF {:+}{}", c.gpu, c.index, c.delta, marker);
+    }
+    let best = outcome.best.unwrap();
+    println!(
+        "\n  MFI places 1g.10gb at gpu {} index {} (ΔF = {:+}), repairing fragmentation\n",
+        best.gpu, best.index, best.delta
+    );
+
+    println!("=== 5. Ten requests end-to-end ===\n");
+    let mut cluster = Cluster::new(hw.clone(), 2);
+    let mut rng = Rng::new(7);
+    let gen = WorkloadGenerator::new(Distribution::Uniform);
+    let stream = gen.generate_stream(10, 1.0, 20, &mut rng);
+    for w in &stream {
+        match mfi.schedule(&cluster, w.profile) {
+            Some(pl) => {
+                cluster.allocate(w.id, pl).unwrap();
+                println!("  {}  {}  -> {}", w.id, w.profile, pl);
+            }
+            None => println!("  {}  {}  -> REJECTED", w.id, w.profile),
+        }
+    }
+    println!(
+        "\n  utilization {:.1}%   active GPUs {}/{}   mean F {:.2}",
+        cluster.utilization() * 100.0,
+        cluster.active_gpus(),
+        cluster.num_gpus(),
+        table.mean_score(cluster.gpus())
+    );
+    println!("\nNext: `cargo run --release --example cluster_sim` reproduces the paper's");
+    println!("evaluation; `migsched serve` runs the online daemon.");
+}

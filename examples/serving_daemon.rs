@@ -1,0 +1,95 @@
+//! Online serving demo: boots the daemon, replays a multi-tenant workload
+//! stream against it over HTTP, and reports serving latency/throughput
+//! plus the paper's cluster metrics — the "live" counterpart of the
+//! Monte Carlo evaluation.
+//!
+//! Run: `cargo run --release --example serving_daemon -- [requests]`
+
+use std::time::Instant;
+
+use migsched::prelude::*;
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::json::Json;
+use migsched::util::stats::Sample;
+
+fn main() {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(400);
+
+    // 1. Boot the daemon on an ephemeral port.
+    let config = DaemonConfig {
+        num_gpus: 16,
+        scheduler: SchedulerKind::Mfi,
+        workers: 4,
+        ..DaemonConfig::default()
+    };
+    let daemon = Daemon::new(config);
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    println!("daemon up on http://{addr} (16 x A100-80GB, scheduler MFI)\n");
+
+    // 2. Generate a bursty multi-tenant stream.
+    let mut rng = Rng::new(42);
+    let gen = WorkloadGenerator::new(Distribution::Bimodal).with_tenants(8);
+    let stream = gen.generate_stream(n_requests, 1.0, 60, &mut rng);
+
+    // 3. Replay it over HTTP, ticking the logical clock with arrivals.
+    let client = HttpClient::new(&addr);
+    let mut latencies = Sample::new();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut clock = 0u64;
+    let t0 = Instant::now();
+    for w in &stream {
+        // Advance the slot clock to this arrival (expires old leases).
+        if w.arrival_slot > clock {
+            let delta = w.arrival_slot - clock;
+            client
+                .post_json("/v1/tick", &Json::obj().with("slots", delta))
+                .expect("tick");
+            clock = w.arrival_slot;
+        }
+        let body = Json::obj()
+            .with("profile", w.profile.canonical_name())
+            .with("tenant", w.tenant.0 as u64)
+            .with("duration_slots", w.duration_slots);
+        let t = Instant::now();
+        let resp = client.post_json("/v1/workloads", &body).expect("submit");
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        match resp.status {
+            201 => accepted += 1,
+            409 => rejected += 1,
+            other => panic!("unexpected status {other}: {}", resp.body),
+        }
+    }
+    let wall = t0.elapsed();
+
+    // 4. Report.
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    println!("=== load generation finished ===");
+    println!("requests: {n_requests}  accepted: {accepted}  rejected: {rejected}");
+    println!(
+        "acceptance rate: {:.2}%   wall time: {wall:.2?}   throughput: {:.0} req/s",
+        accepted as f64 / n_requests as f64 * 100.0,
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "request latency (HTTP round trip, ms): p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}",
+        latencies.percentile(50.0),
+        latencies.percentile(95.0),
+        latencies.percentile(99.0),
+        latencies.max()
+    );
+    println!("\n=== cluster state (GET /v1/stats) ===");
+    println!("{}", stats.to_string_pretty());
+
+    let snapshot = client.get("/v1/cluster").unwrap().json().unwrap();
+    println!("\n=== occupancy diagrams ===");
+    if let Some(diagrams) = snapshot.get("diagrams").and_then(Json::as_arr) {
+        for (i, d) in diagrams.iter().enumerate() {
+            println!("  gpu {i:>2}: [{}]", d.as_str().unwrap_or("?"));
+        }
+    }
+    handle.shutdown();
+    println!("\ndaemon shut down cleanly");
+}

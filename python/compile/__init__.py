@@ -1,0 +1,5 @@
+"""Build-time compilation path: the JAX/Pallas fragmentation program and
+its AOT lowering to HLO-text artifacts (`python -m compile.aot`).
+
+Never imported at runtime — the rust binary consumes `artifacts/` only.
+"""

@@ -1,0 +1,146 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Run via ``make artifacts`` (or ``cd python && python -m compile.aot``).
+Python executes exactly once, at build time; the rust binary loads the
+emitted text with ``HloModuleProto::from_text_file`` and never touches
+python again.
+
+HLO **text** — not ``lowered.compile()`` output nor a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the ``xla`` crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+
+* ``frag.hlo.txt``       -- the batched fragmentation program (Pallas path)
+* ``manifest.json``      -- batch size, rule, candidate arity, versions
+* ``candidates.json``    -- the frozen candidate table (cross-checked
+                            against rust's ``mig::candidates_json()`` and
+                            the kernel constants by the test suites)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big array constants as the literal token ``{...}``, which the
+    rust-side text parser silently reads back as zeros — the candidate
+    window tables embedded in the fragmentation program would vanish.
+    """
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError(
+            "HLO text still contains elided constants ('{...}'); the rust "
+            "loader would misread them as zeros"
+        )
+    return text
+
+
+def lower_frag_program(batch: int, rule: str, impl: str = "pallas") -> str:
+    """Lower the batched fragmentation program.
+
+    ``impl`` selects the Layer-1 body: ``"pallas"`` (the Pallas kernel in
+    interpret mode — while-loop + dynamic-slice scaffolding on CPU) or
+    ``"jnp"`` (the identical math as straight-line jnp that XLA fuses
+    flat). Numerics are bit-identical (pytest + the rust integration suite
+    verify both); on the CPU PJRT backend the fused form measures ~15-20%
+    faster (EXPERIMENTS.md §Perf, L2 iteration), while on a real TPU the
+    Pallas kernel would lower through Mosaic instead of the interpreter.
+    """
+    if impl == "pallas":
+        fn = lambda occ: model.frag_program(occ, rule=rule)  # noqa: E731
+    elif impl == "jnp":
+        fn = lambda occ: model.frag_program_reference(occ, rule=rule)  # noqa: E731
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    lowered = jax.jit(fn).lower(model.example_input(batch))
+    return to_hlo_text(lowered)
+
+
+def candidates_json() -> list[dict]:
+    out = []
+    for name, start, size, weight in ref.CANDIDATES:
+        mask = ((1 << size) - 1) << start
+        out.append(
+            {
+                "profile": name,
+                "start": start,
+                "size": size,
+                "mem_weight": weight,
+                "mask": mask,
+            }
+        )
+    return out
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    parser.add_argument("--batch", type=int, default=model.DEFAULT_BATCH)
+    parser.add_argument("--rule", choices=["partial", "any"], default="partial")
+    parser.add_argument(
+        "--impl",
+        choices=["pallas", "jnp"],
+        default="jnp",
+        help="Layer-1 body for the default artifact (frag.hlo.txt). Both "
+        "are always emitted; 'jnp' is the CPU-PJRT default because the "
+        "interpret-mode pallas scaffolding costs ~15-20%% on this backend.",
+    )
+    # Back-compat with the scaffold Makefile (`--out path/model.hlo.txt`):
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    # Emit both implementations: the chosen one as frag.hlo.txt (what the
+    # rust runtime loads by default) and the other as frag_<impl>.hlo.txt
+    # for the perf ablation bench.
+    for impl in ("pallas", "jnp"):
+        hlo = lower_frag_program(args.batch, args.rule, impl)
+        name = "frag.hlo.txt" if impl == args.impl else f"frag_{impl}.hlo.txt"
+        hlo_path = os.path.join(out_dir, name)
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        print(f"wrote {len(hlo)} chars to {hlo_path} (impl={impl})")
+
+    manifest = {
+        "format_version": 1,
+        "batch": args.batch,
+        "rule": args.rule,
+        "impl": args.impl,
+        "num_slices": ref.NUM_SLICES,
+        "num_candidates": ref.NUM_CANDIDATES,
+        "outputs": ["scores[B]", "deltas[B,18]", "feasible[B,18]"],
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    with open(os.path.join(out_dir, "candidates.json"), "w") as f:
+        json.dump(candidates_json(), f, indent=2)
+        f.write("\n")
+    print(f"wrote manifest.json + candidates.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

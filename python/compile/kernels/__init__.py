@@ -1,0 +1,2 @@
+"""Layer-1 kernels: the Pallas fragmentation kernel (`frag_kernel`) and
+its pure-jnp correctness oracle (`ref`)."""

@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernel: batched MIG fragmentation scoring.
+
+The paper's scheduling hot spot — evaluating the fragmentation score and
+the 18 hypothetical placement deltas for every GPU in the cluster — as a
+single tiled kernel.
+
+TPU-oriented structure (DESIGN.md §6, Hardware-Adaptation):
+
+* the window-overlap test is formulated as a dense matmul
+  ``occ[Mb, 8] @ WINDOWSᵀ[8, 18]`` so it maps onto the MXU systolic array
+  (padded 8→128 on real hardware by Mosaic; on the CPU interpreter it is
+  an ordinary dot);
+* the hypothetical-occupancy expansion materializes ``[Mb, 18, 8]`` in
+  VMEM only — with the default block of 256 rows that is
+  256·18·8·4 B ≈ 147 KiB, comfortably inside a TensorCore's 16 MiB VMEM
+  with room for double-buffering;
+* the candidate tables (windows, sizes, weights) are embedded constants,
+  so the kernel reads HBM only for the occupancy tile and writes only the
+  three result tiles — the whole computation is one HBM round trip.
+
+The kernel MUST run with ``interpret=True`` here: real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). Correctness vs ``ref.py`` is enforced by
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NUM_SLICES = ref.NUM_SLICES
+NUM_CANDIDATES = ref.NUM_CANDIDATES
+
+#: Rows of the occupancy matrix processed per grid step.
+DEFAULT_BLOCK = 256
+
+
+def _kernel(
+    occ_ref, windows_ref, sizes_ref, weights_ref, scores_ref, deltas_ref, feasible_ref,
+    *, rule: str,
+):
+    """One grid step: score a [Mb, 8] occupancy tile.
+
+    The candidate tables ride along as (grid-invariant) inputs — Pallas
+    kernels cannot capture array constants — with block specs that map
+    every grid step to the same full table block.
+    """
+    occ = occ_ref[...]  # [Mb, 8]
+    windows = windows_ref[...]  # [18, 8]
+    sizes = sizes_ref[...]  # [18]
+    weights = weights_ref[...]  # [18]
+
+    def score(o, overlap, free):
+        # o: [..., 8]; overlap: [..., 18]; free: [...]
+        blocked = overlap > 0.0
+        if rule == "partial":
+            blocked = blocked & (overlap < sizes)
+        eligible = sizes <= free[..., None]
+        return jnp.sum(weights * blocked * eligible, axis=-1)
+
+    free = NUM_SLICES - jnp.sum(occ, axis=-1)  # [Mb]
+    overlap = jnp.dot(occ, windows.T)  # [Mb, 18] — MXU-shaped
+    scores = score(occ, overlap, free)  # [Mb]
+
+    feasible = (overlap == 0.0).astype(jnp.float32)  # [Mb, 18]
+
+    # Hypothetical occupancy per candidate, kept in VMEM: [Mb, 18, 8].
+    occ_hyp = jnp.clip(occ[:, None, :] + windows[None, :, :], 0.0, 1.0)
+    free_hyp = NUM_SLICES - jnp.sum(occ_hyp, axis=-1)  # [Mb, 18]
+    # Batched window test for every hypothetical: [Mb, 18, 18].
+    overlap_hyp = jax.lax.dot_general(
+        occ_hyp,
+        windows.T,
+        dimension_numbers=(((2,), (0,)), ((), ())),
+    )
+    hyp_scores = score(occ_hyp, overlap_hyp, free_hyp)  # [Mb, 18]
+
+    deltas = hyp_scores - scores[:, None]
+    deltas = jnp.where(feasible > 0.0, deltas, jnp.float32(ref.INFEASIBLE))
+
+    scores_ref[...] = scores
+    deltas_ref[...] = deltas
+    feasible_ref[...] = feasible
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rule"))
+def frag_program_pallas(
+    occ: jnp.ndarray, *, block: int = DEFAULT_BLOCK, rule: str = "partial"
+):
+    """Pallas-kernel version of :func:`ref.frag_program`.
+
+    ``occ`` is [M, 8] float32 0/1 with M divisible by ``block`` (the AOT
+    path always passes the padded batch).
+    """
+    m = occ.shape[0]
+    if m % block != 0:
+        # Tests call with odd sizes; fall back to a single block.
+        block = m
+    grid = (m // block,)
+    kernel = functools.partial(_kernel, rule=rule)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, NUM_SLICES), lambda i: (i, 0)),
+            pl.BlockSpec((NUM_CANDIDATES, NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((NUM_CANDIDATES,), lambda i: (0,)),
+            pl.BlockSpec((NUM_CANDIDATES,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, NUM_CANDIDATES), lambda i: (i, 0)),
+            pl.BlockSpec((block, NUM_CANDIDATES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, NUM_CANDIDATES), jnp.float32),
+            jax.ShapeDtypeStruct((m, NUM_CANDIDATES), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        occ.astype(jnp.float32),
+        jnp.asarray(ref.WINDOWS),
+        jnp.asarray(ref.SIZES),
+        jnp.asarray(ref.WEIGHTS),
+    )
+
+
+def vmem_footprint_bytes(block: int = DEFAULT_BLOCK) -> int:
+    """Estimated peak VMEM bytes per grid step (DESIGN.md §8 L1 target).
+
+    occ tile + hypothetical expansion + overlap tensors + outputs, f32.
+    """
+    occ = block * NUM_SLICES
+    occ_hyp = block * NUM_CANDIDATES * NUM_SLICES
+    overlap = block * NUM_CANDIDATES
+    overlap_hyp = block * NUM_CANDIDATES * NUM_CANDIDATES
+    outputs = block + 2 * block * NUM_CANDIDATES
+    return 4 * (occ + occ_hyp + overlap + overlap_hyp + outputs)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracle for the batched MIG fragmentation program.
+
+This file is the *specification* the Pallas kernel (``frag_kernel.py``) and,
+transitively, the AOT artifact executed from rust are verified against. It
+mirrors ``rust/src/frag`` exactly:
+
+* a GPU is eight memory-slice positions; occupancy is a row of 0/1 floats;
+* the 18 candidate placements (profile x feasible anchor, paper Table I)
+  are frozen in ``CANDIDATE_*`` below in the same order as the rust
+  ``mig::CANDIDATES`` table (cross-checked by ``tests/test_model.py``
+  against ``artifacts/candidates.json``);
+* the fragmentation score follows the paper's Algorithm 1 under the
+  "partial overlap" rule pinned by its worked example (F(GPU2)=16,
+  F(GPU1)=8) — see ``rust/src/frag/score.rs`` module docs: an anchor
+  counts iff its window overlaps occupied slices AND retains a free slice,
+  guarded by ``size(p) <= free slices``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NUM_SLICES = 8
+NUM_CANDIDATES = 18
+
+# Candidate table, Table I order: (profile name, anchor, size, mem weight).
+CANDIDATES = [
+    ("7g.80gb", 0, 8, 8),
+    ("4g.40gb", 0, 4, 4),
+    ("3g.40gb", 0, 4, 4),
+    ("3g.40gb", 4, 4, 4),
+    ("2g.20gb", 0, 2, 2),
+    ("2g.20gb", 2, 2, 2),
+    ("2g.20gb", 4, 2, 2),
+    ("1g.20gb", 0, 2, 2),
+    ("1g.20gb", 2, 2, 2),
+    ("1g.20gb", 4, 2, 2),
+    ("1g.20gb", 6, 2, 2),
+    ("1g.10gb", 0, 1, 1),
+    ("1g.10gb", 1, 1, 1),
+    ("1g.10gb", 2, 1, 1),
+    ("1g.10gb", 3, 1, 1),
+    ("1g.10gb", 4, 1, 1),
+    ("1g.10gb", 5, 1, 1),
+    ("1g.10gb", 6, 1, 1),
+]
+
+# Column ranges of each profile within the candidate axis.
+PROFILE_RANGES = {
+    "7g.80gb": (0, 1),
+    "4g.40gb": (1, 2),
+    "3g.40gb": (2, 4),
+    "2g.20gb": (4, 7),
+    "1g.20gb": (7, 11),
+    "1g.10gb": (11, 18),
+}
+
+# Large sentinel marking infeasible deltas.
+INFEASIBLE = np.float32(1e9)
+
+
+def _windows() -> np.ndarray:
+    w = np.zeros((NUM_CANDIDATES, NUM_SLICES), dtype=np.float32)
+    for k, (_, start, size, _) in enumerate(CANDIDATES):
+        w[k, start : start + size] = 1.0
+    return w
+
+
+#: [18, 8] one-hot window masks.
+WINDOWS = _windows()
+#: [18] occupied-slice counts per candidate.
+SIZES = np.array([size for (_, _, size, _) in CANDIDATES], dtype=np.float32)
+#: [18] Algorithm 1 memory weights per candidate.
+WEIGHTS = np.array([w for (_, _, _, w) in CANDIDATES], dtype=np.float32)
+
+
+def frag_scores(occ: jnp.ndarray, rule: str = "partial") -> jnp.ndarray:
+    """Fragmentation score F(m) for each row of ``occ`` ([M, 8] of 0/1).
+
+    ``rule`` is "partial" (default, paper worked example) or "any"
+    (literal Algorithm 1 text).
+    """
+    occ = occ.astype(jnp.float32)
+    free = NUM_SLICES - jnp.sum(occ, axis=-1)  # [M]
+    overlap = occ @ WINDOWS.T  # [M, 18] occupied count in each window
+    blocked_any = overlap > 0.0
+    if rule == "partial":
+        blocked = blocked_any & (overlap < SIZES[None, :])
+    elif rule == "any":
+        blocked = blocked_any
+    else:
+        raise ValueError(f"unknown rule {rule!r}")
+    eligible = SIZES[None, :] <= free[:, None]
+    return jnp.sum(WEIGHTS[None, :] * blocked * eligible, axis=-1)
+
+
+def frag_program(occ: jnp.ndarray, rule: str = "partial"):
+    """The full batched program: scores, deltas and feasibility.
+
+    Returns ``(scores [M], deltas [M, 18], feasible [M, 18])`` where
+    ``deltas[m, k] = F(occ[m] | window_k) - F(occ[m])`` for feasible
+    candidates (window entirely free) and ``INFEASIBLE`` otherwise.
+    ``feasible`` is 1.0/0.0.
+    """
+    occ = occ.astype(jnp.float32)
+    scores = frag_scores(occ, rule)
+    overlap = occ @ WINDOWS.T  # [M, 18]
+    feasible = (overlap == 0.0).astype(jnp.float32)
+    # Hypothetical occupancies: [M, 18, 8]. For infeasible candidates the
+    # union is clamped, producing garbage scores that are masked out below.
+    occ_hyp = jnp.clip(occ[:, None, :] + WINDOWS[None, :, :], 0.0, 1.0)
+    hyp_scores = frag_scores(occ_hyp.reshape(-1, NUM_SLICES), rule).reshape(
+        occ.shape[0], NUM_CANDIDATES
+    )
+    deltas = hyp_scores - scores[:, None]
+    deltas = jnp.where(feasible > 0.0, deltas, INFEASIBLE)
+    return scores, deltas, feasible
+
+
+def occ_from_masks(masks) -> np.ndarray:
+    """Expand an iterable of u8 occupancy bitmasks to an [M, 8] 0/1 array
+    (bit i == slice i, matching ``rust/src/mig/gpu.rs``)."""
+    masks = list(masks)
+    out = np.zeros((len(masks), NUM_SLICES), dtype=np.float32)
+    for row, mask in enumerate(masks):
+        for s in range(NUM_SLICES):
+            if mask & (1 << s):
+                out[row, s] = 1.0
+    return out

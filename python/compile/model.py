@@ -1,0 +1,46 @@
+"""Layer-2 JAX program: the batched fragmentation evaluation the rust
+coordinator offloads through PJRT.
+
+The "model" of this serving system is not a neural network — the paper's
+compute graph is the cluster-wide dry-run evaluation of Algorithm 1/2.
+This module assembles the program around the Layer-1 Pallas kernel
+(`kernels.frag_kernel`) and is what `aot.py` lowers to HLO text.
+
+The program contract (frozen; rust's `runtime::FragEngine` depends on it):
+
+    inputs : occ f32[B, 8]             -- 0/1 occupancy, bit i == slice i
+    outputs: (scores f32[B],
+              deltas f32[B, 18],       -- candidate order == Table I order
+              feasible f32[B, 18])     -- 1.0 iff window free
+
+Padding convention: callers pad with fully-occupied rows (all ones), which
+score 0 and are infeasible for every candidate, so they can never win an
+argmin on the rust side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import frag_kernel, ref
+
+#: Default batch the artifact is lowered for (cluster M=100 pads to 128).
+DEFAULT_BATCH = 128
+
+
+def frag_program(occ: jnp.ndarray, *, rule: str = "partial"):
+    """The full L2 program over one occupancy batch (calls the L1 kernel)."""
+    scores, deltas, feasible = frag_kernel.frag_program_pallas(occ, rule=rule)
+    return scores, deltas, feasible
+
+
+def frag_program_reference(occ: jnp.ndarray, *, rule: str = "partial"):
+    """The same contract built from the pure-jnp oracle (no Pallas), used
+    to A/B the kernel inside pytest and as an XLA-fusion baseline."""
+    return ref.frag_program(occ, rule=rule)
+
+
+def example_input(batch: int = DEFAULT_BATCH) -> jax.ShapeDtypeStruct:
+    """Input aval used for AOT lowering."""
+    return jax.ShapeDtypeStruct((batch, ref.NUM_SLICES), jnp.float32)

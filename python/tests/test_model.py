@@ -1,0 +1,157 @@
+"""Layer-2 contract tests: the AOT-facing program shape/semantics and the
+frozen candidate table shared with rust."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import frag_kernel, ref
+
+
+class TestCandidateTable:
+    def test_arity_and_order(self):
+        assert len(ref.CANDIDATES) == 18
+        # Table I order: profiles largest-first, anchors ascending.
+        names = [c[0] for c in ref.CANDIDATES]
+        assert names[0] == "7g.80gb"
+        assert names[1] == "4g.40gb"
+        assert names[2:4] == ["3g.40gb"] * 2
+        assert names[4:7] == ["2g.20gb"] * 3
+        assert names[7:11] == ["1g.20gb"] * 4
+        assert names[11:] == ["1g.10gb"] * 7
+
+    def test_profile_ranges_partition(self):
+        covered = []
+        for name, (lo, hi) in ref.PROFILE_RANGES.items():
+            for k in range(lo, hi):
+                assert ref.CANDIDATES[k][0] == name
+                covered.append(k)
+        assert sorted(covered) == list(range(18))
+
+    def test_windows_contiguous(self):
+        for k, (_, start, size, _) in enumerate(ref.CANDIDATES):
+            row = ref.WINDOWS[k]
+            assert row.sum() == size
+            assert (row[start : start + size] == 1.0).all()
+
+    def test_weights_equal_sizes(self):
+        # On the 8-slice model every profile's occupied slices ARE its
+        # memory slices (DESIGN.md §2.1).
+        assert (ref.SIZES == ref.WEIGHTS).all()
+
+    def test_matches_exported_candidates_json(self):
+        # The artifact export must be the same table rust embeds.
+        import json
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                            "candidates.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts/candidates.json not built yet (run `make artifacts`)")
+        with open(path) as f:
+            exported = json.load(f)
+        assert len(exported) == 18
+        for entry, (name, start, size, weight) in zip(exported, ref.CANDIDATES):
+            assert entry["profile"] == name
+            assert entry["start"] == start
+            assert entry["size"] == size
+            assert entry["mem_weight"] == weight
+            assert entry["mask"] == ((1 << size) - 1) << start
+
+
+class TestProgramContract:
+    def test_output_shapes(self):
+        occ = jnp.zeros((model.DEFAULT_BATCH, 8), dtype=jnp.float32)
+        scores, deltas, feasible = model.frag_program(occ)
+        assert scores.shape == (model.DEFAULT_BATCH,)
+        assert deltas.shape == (model.DEFAULT_BATCH, 18)
+        assert feasible.shape == (model.DEFAULT_BATCH, 18)
+        for out in (scores, deltas, feasible):
+            assert out.dtype == jnp.float32
+
+    def test_pallas_and_reference_paths_agree(self):
+        rng = np.random.default_rng(3)
+        occ = jnp.array(
+            ref.occ_from_masks(rng.integers(0, 256, size=model.DEFAULT_BATCH).tolist())
+        )
+        a = model.frag_program(occ)
+        b = model.frag_program_reference(occ)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_padding_rows_never_win(self):
+        # The rust runtime pads with all-ones rows; they must be infeasible
+        # everywhere and score 0.
+        occ = jnp.ones((4, 8), dtype=jnp.float32)
+        scores, deltas, feasible = model.frag_program(occ)
+        assert (np.asarray(scores) == 0.0).all()
+        assert (np.asarray(feasible) == 0.0).all()
+        assert (np.asarray(deltas) == ref.INFEASIBLE).all()
+
+    def test_example_input_aval(self):
+        aval = model.example_input(64)
+        assert aval.shape == (64, 8)
+        assert aval.dtype == jnp.float32
+
+
+class TestLowering:
+    def test_jit_lowering_succeeds(self):
+        lowered = jax.jit(model.frag_program).lower(model.example_input(8))
+        text = str(lowered.compiler_ir("stablehlo"))
+        assert "stablehlo" in text or "func.func" in text
+
+    def test_hlo_text_roundtrip_format(self):
+        from compile import aot
+
+        hlo = aot.lower_frag_program(batch=8, rule="partial")
+        # The rust loader requires HLO text with a module header.
+        assert hlo.startswith("HloModule")
+        assert "f32[8,8]" in hlo  # input layout
+        assert "f32[8,18]" in hlo  # delta/feasible outputs
+
+    def test_any_rule_lowering(self):
+        from compile import aot
+
+        hlo = aot.lower_frag_program(batch=8, rule="any")
+        assert hlo.startswith("HloModule")
+
+    def test_executes_after_roundtrip_via_jax(self):
+        # Sanity: the lowered computation is numerically identical when
+        # compiled+run by jax itself (the rust-side check happens in
+        # rust/tests/runtime_vs_native.rs through PJRT).
+        occ = jnp.array(ref.occ_from_masks([0b0010_0011, 0b0010_0000] + [0] * 6))
+        compiled = jax.jit(model.frag_program).lower(model.example_input(8)).compile()
+        scores, _, _ = compiled(occ)
+        assert scores[0] == 16.0 and scores[1] == 8.0
+
+
+class TestManifest:
+    def test_manifest_contents(self):
+        import json
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                            "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts/manifest.json not built yet (run `make artifacts`)")
+        with open(path) as f:
+            manifest = json.load(f)
+        assert manifest["num_candidates"] == 18
+        assert manifest["num_slices"] == 8
+        assert manifest["batch"] >= 1
+        assert manifest["rule"] in ("partial", "any")
+
+    def test_aot_candidates_json_helper(self):
+        from compile import aot
+
+        table = aot.candidates_json()
+        assert len(table) == 18
+        assert table[0] == {
+            "profile": "7g.80gb",
+            "start": 0,
+            "size": 8,
+            "mem_weight": 8,
+            "mask": 255,
+        }

@@ -1,0 +1,70 @@
+//! Index-policy ablation (experiment X2): how much of the MIG-aware
+//! baselines' advantage comes purely from the best-index preference of
+//! [21]? Runs BF/WF with both index policies (BI vs FI) plus FF/MFI
+//! anchors, across all four distributions at 85% demand.
+
+use migsched::sched::SchedulerKind;
+use migsched::sim::experiment::{run_sweep, ExperimentConfig};
+use migsched::util::bench;
+use migsched::util::table::Table;
+use migsched::workload::Distribution;
+
+fn runs() -> usize {
+    if let Ok(v) = std::env::var("MIGSCHED_BENCH_RUNS") {
+        return v.parse().expect("MIGSCHED_BENCH_RUNS must be an integer");
+    }
+    if bench::quick_mode() {
+        20
+    } else {
+        200
+    }
+}
+
+fn main() {
+    let schemes = vec![
+        SchedulerKind::Mfi,
+        SchedulerKind::Ff,
+        SchedulerKind::BfBi,
+        SchedulerKind::BfFi,
+        SchedulerKind::WfBi,
+        SchedulerKind::WfFi,
+        SchedulerKind::Random,
+    ];
+    let config = ExperimentConfig { runs: runs(), schemes, ..ExperimentConfig::paper() };
+    println!(
+        "== index-policy ablation: {} runs, M={}, schemes BF/WF x BI/FI ==",
+        config.runs, config.num_gpus
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&config);
+    let idx = sweep.checkpoint_index(0.85);
+
+    let mut table = Table::new(&[
+        "scheme", "uniform", "skew-small", "skew-big", "bimodal",
+    ])
+    .title("acceptance rate at 85% demand (mean over runs)");
+    for &k in &config.schemes {
+        let vals: Vec<f64> = Distribution::paper_set()
+            .iter()
+            .map(|d| {
+                sweep.series_for(k, d).unwrap().checkpoints[idx].acceptance_rate.mean()
+            })
+            .collect();
+        table.row_keyed(k.name(), &vals, 4);
+    }
+    println!("{}", table.render());
+
+    // The ablation takeaway: BI − FI gap per fit family.
+    println!("== best-index contribution (acceptance delta BI - FI, 85% demand) ==");
+    for (bi, fi, family) in [
+        (SchedulerKind::BfBi, SchedulerKind::BfFi, "best-fit"),
+        (SchedulerKind::WfBi, SchedulerKind::WfFi, "worst-fit"),
+    ] {
+        for d in Distribution::paper_set() {
+            let a = sweep.series_for(bi, &d).unwrap().checkpoints[idx].acceptance_rate.mean();
+            let b = sweep.series_for(fi, &d).unwrap().checkpoints[idx].acceptance_rate.mean();
+            println!("  {family:<9} {:<12} {:+.4}", d.name(), a - b);
+        }
+    }
+    println!("\nablation finished in {:.2?}", t0.elapsed());
+}

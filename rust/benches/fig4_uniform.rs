@@ -1,0 +1,52 @@
+//! Bench/harness for paper Fig. 4 (a–d): allocated workloads, acceptance
+//! rate, resource utilization and active GPUs versus GPU demand (10%…100%)
+//! under the uniform distribution, all five schemes, M = 100 GPUs.
+//!
+//! Prints the same series the paper plots and exports CSVs under
+//! `results/`. Runs default to the paper's 500 seeds; override with
+//! `MIGSCHED_BENCH_RUNS=n` or `MIGSCHED_BENCH_QUICK=1` (20 seeds).
+
+use migsched::sched::SchedulerKind;
+use migsched::sim::experiment::{run_sweep, ExperimentConfig};
+use migsched::sim::fig4_report;
+use migsched::util::bench;
+use migsched::workload::Distribution;
+
+fn runs() -> usize {
+    if let Ok(v) = std::env::var("MIGSCHED_BENCH_RUNS") {
+        return v.parse().expect("MIGSCHED_BENCH_RUNS must be an integer");
+    }
+    if bench::quick_mode() {
+        20
+    } else {
+        500
+    }
+}
+
+fn main() {
+    let config = ExperimentConfig {
+        runs: runs(),
+        schemes: SchedulerKind::paper_set().to_vec(),
+        distributions: vec![Distribution::Uniform],
+        ..ExperimentConfig::paper()
+    };
+    println!(
+        "== fig4: {} runs x {} schemes, M={}, uniform distribution ==",
+        config.runs,
+        config.schemes.len(),
+        config.num_gpus
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&config);
+    let elapsed = t0.elapsed();
+    let report = fig4_report(&sweep, &Distribution::Uniform);
+    println!("{}", report.render());
+    if let Err(e) = report.save_csvs(std::path::Path::new("results")) {
+        eprintln!("warning: CSV export failed: {e}");
+    }
+    println!(
+        "fig4 harness: {} simulation runs in {elapsed:.2?} ({:.1} runs/s)",
+        config.runs * config.schemes.len(),
+        (config.runs * config.schemes.len()) as f64 / elapsed.as_secs_f64()
+    );
+}

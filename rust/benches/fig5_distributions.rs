@@ -1,0 +1,73 @@
+//! Bench/harness for paper Fig. 5 (a–d): the four evaluation metrics at
+//! 85% GPU demand across the four Table II profile distributions.
+//!
+//! Also prints the paper-abstract headline check: MFI's gain in scheduled
+//! workloads over the baselines in heavy load.
+
+use migsched::sched::SchedulerKind;
+use migsched::sim::experiment::{run_sweep, ExperimentConfig};
+use migsched::sim::fig5_report;
+use migsched::util::bench;
+use migsched::workload::Distribution;
+
+fn runs() -> usize {
+    if let Ok(v) = std::env::var("MIGSCHED_BENCH_RUNS") {
+        return v.parse().expect("MIGSCHED_BENCH_RUNS must be an integer");
+    }
+    if bench::quick_mode() {
+        20
+    } else {
+        500
+    }
+}
+
+fn main() {
+    let config = ExperimentConfig { runs: runs(), ..ExperimentConfig::paper() };
+    println!(
+        "== fig5: {} runs x {} schemes x {} distributions, M={} ==",
+        config.runs,
+        config.schemes.len(),
+        config.distributions.len(),
+        config.num_gpus
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&config);
+    let elapsed = t0.elapsed();
+    let report = fig5_report(&sweep, 0.85);
+    println!("{}", report.render());
+    if let Err(e) = report.save_csvs(std::path::Path::new("results")) {
+        eprintln!("warning: CSV export failed: {e}");
+    }
+
+    // Headline: MFI vs baseline-mean accepted workloads at 85% demand.
+    let idx = sweep.checkpoint_index(0.85);
+    println!("== headline: MFI gain in scheduled workloads at 85% demand ==");
+    for dist in Distribution::paper_set() {
+        let mfi = sweep
+            .series_for(SchedulerKind::Mfi, &dist)
+            .unwrap()
+            .checkpoints[idx]
+            .accepted_workloads
+            .mean();
+        let baselines =
+            [SchedulerKind::Ff, SchedulerKind::Rr, SchedulerKind::BfBi, SchedulerKind::WfBi];
+        let mean: f64 = baselines
+            .iter()
+            .map(|&k| {
+                sweep.series_for(k, &dist).unwrap().checkpoints[idx].accepted_workloads.mean()
+            })
+            .sum::<f64>()
+            / baselines.len() as f64;
+        println!(
+            "  {:<12} MFI {:>7.1} vs baseline mean {:>7.1}  ->  {:+.1}%",
+            dist.name(),
+            mfi,
+            mean,
+            (mfi / mean - 1.0) * 100.0
+        );
+    }
+    println!(
+        "\nfig5 harness: {} simulation runs in {elapsed:.2?}",
+        config.runs * config.schemes.len() * config.distributions.len()
+    );
+}

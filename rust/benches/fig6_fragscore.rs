@@ -1,0 +1,67 @@
+//! Bench/harness for paper Fig. 6: average (time-averaged, then
+//! run-averaged) cluster fragmentation score per scheme per distribution
+//! — plus the overlap-rule ablation (Algorithm 1's literal "any overlap"
+//! text vs the "partial overlap" semantics of the paper's worked example,
+//! see `frag::score` docs).
+
+use migsched::sched::SchedulerKind;
+use migsched::sim::experiment::{run_sweep, ExperimentConfig};
+use migsched::sim::fig6_report;
+use migsched::util::bench;
+use migsched::workload::Distribution;
+
+fn runs() -> usize {
+    if let Ok(v) = std::env::var("MIGSCHED_BENCH_RUNS") {
+        return v.parse().expect("MIGSCHED_BENCH_RUNS must be an integer");
+    }
+    if bench::quick_mode() {
+        20
+    } else {
+        500
+    }
+}
+
+fn main() {
+    let config = ExperimentConfig { runs: runs(), ..ExperimentConfig::paper() };
+    println!(
+        "== fig6: {} runs x {} schemes x {} distributions, M={} ==",
+        config.runs,
+        config.schemes.len(),
+        config.distributions.len(),
+        config.num_gpus
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&config);
+    let report = fig6_report(&sweep);
+    println!("{}", report.render());
+    if let Err(e) = report.save_csvs(std::path::Path::new("results")) {
+        eprintln!("warning: CSV export failed: {e}");
+    }
+
+    // Consistency check the paper narrates: the scheme ordering by
+    // fragmentation score is the inverse of the acceptance ordering.
+    let idx = sweep.checkpoint_index(0.85);
+    println!("== consistency: acceptance rank vs fragmentation rank (uniform) ==");
+    let mut rows: Vec<(String, f64, f64)> = SchedulerKind::paper_set()
+        .iter()
+        .map(|&k| {
+            let s = sweep.series_for(k, &Distribution::Uniform).unwrap();
+            (
+                k.name().to_string(),
+                s.checkpoints[idx].acceptance_rate.mean(),
+                s.time_avg_frag.mean(),
+            )
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, acc, frag) in &rows {
+        println!("  {name:<8} acceptance {acc:.4}   avg frag {frag:8.3}");
+    }
+    let mfi_frag = rows.iter().find(|r| r.0 == "MFI").unwrap().2;
+    let min_frag = rows.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    println!(
+        "  MFI has the lowest fragmentation score: {}",
+        if (mfi_frag - min_frag).abs() < 1e-9 { "yes" } else { "NO (investigate)" }
+    );
+    println!("\nfig6 harness finished in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,74 @@
+//! Complexity validation (experiment X1): the paper claims MFI decides in
+//! O(k·M). Sweep the cluster size M from 25 to 1600 and verify the
+//! per-decision latency grows linearly (doubling M ≈ doubles the cost),
+//! and that end-to-end simulation throughput scales accordingly.
+
+use migsched::cluster::Cluster;
+use migsched::mig::{HardwareModel, ALL_PROFILES};
+use migsched::sched::SchedulerKind;
+use migsched::sim::{SimConfig, SimEngine};
+use migsched::util::bench::BenchRunner;
+use migsched::util::rng::Rng;
+use migsched::workload::{Distribution, WorkloadId};
+
+fn loaded_cluster(num_gpus: usize, target: f64) -> Cluster {
+    let hw = HardwareModel::a100_80gb();
+    let mut cluster = Cluster::new(hw.clone(), num_gpus);
+    let mut sched = SchedulerKind::Random.build(&hw);
+    let mut rng = Rng::new(33);
+    let mut id = 0u64;
+    while cluster.utilization() < target {
+        let p = *rng.choose(&ALL_PROFILES);
+        match sched.schedule(&cluster, p) {
+            Some(pl) => {
+                cluster.allocate(WorkloadId(id), pl).unwrap();
+                id += 1;
+            }
+            None => break,
+        }
+    }
+    cluster
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("scaling");
+    let hw = HardwareModel::a100_80gb();
+
+    let sizes = [25usize, 50, 100, 200, 400, 800, 1600];
+    let mut medians = Vec::new();
+    for &m in &sizes {
+        let cluster = loaded_cluster(m, 0.5);
+        let mut mfi = SchedulerKind::Mfi.build(&hw);
+        let mut rng = Rng::new(1);
+        let r = runner.bench(&format!("mfi_decision_M{m}"), || {
+            let p = ALL_PROFILES[rng.index(6)];
+            mfi.schedule(&cluster, p)
+        });
+        medians.push((m, r.median_ns));
+    }
+
+    println!("\n== O(k·M) check: per-decision cost ratio when doubling M ==");
+    for pair in medians.windows(2) {
+        let (m1, t1) = pair[0];
+        let (m2, t2) = pair[1];
+        println!(
+            "  M {m1:>5} -> {m2:>5}: cost x{:.2} (linear would be x{:.2})",
+            t2 / t1,
+            m2 as f64 / m1 as f64
+        );
+    }
+
+    // End-to-end simulation throughput at two scales.
+    for &m in &[100usize, 400] {
+        let cfg = SimConfig {
+            num_gpus: m,
+            ..SimConfig::paper(Distribution::Uniform, 11)
+        };
+        let engine = SimEngine::new(cfg);
+        runner.bench_once(&format!("full_sim_run_M{m}_uniform"), 5, || {
+            let mut sched = SchedulerKind::Mfi.build(&hw);
+            engine.run(&mut *sched)
+        });
+    }
+    runner.save_csv();
+}

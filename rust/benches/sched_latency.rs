@@ -1,0 +1,111 @@
+//! Per-decision scheduling latency (experiment X4 in DESIGN.md §4): the
+//! L3 hot path. Measures every policy on clusters at three load levels,
+//! plus the raw fragmentation-engine primitives.
+//!
+//! The paper claims O(k·M) per MFI decision; `benches/scaling.rs` sweeps
+//! M — this bench pins the absolute cost at the paper's M=100.
+
+use migsched::cluster::Cluster;
+use migsched::frag::{FragScorer, ScoreTable};
+use migsched::mig::{GpuState, HardwareModel, Profile, ALL_PROFILES};
+use migsched::sched::SchedulerKind;
+use migsched::util::bench::BenchRunner;
+use migsched::util::rng::Rng;
+use migsched::workload::WorkloadId;
+
+/// Fill a cluster to roughly `target` utilization with random placements.
+fn loaded_cluster(num_gpus: usize, target: f64, seed: u64) -> Cluster {
+    let hw = HardwareModel::a100_80gb();
+    let mut cluster = Cluster::new(hw.clone(), num_gpus);
+    let mut sched = SchedulerKind::Random.build(&hw);
+    let mut rng = Rng::new(seed);
+    let mut next_id = 0u64;
+    while cluster.utilization() < target {
+        let p = *rng.choose(&ALL_PROFILES);
+        match sched.schedule(&cluster, p) {
+            Some(pl) => {
+                cluster.allocate(WorkloadId(next_id), pl).unwrap();
+                next_id += 1;
+            }
+            None => break,
+        }
+    }
+    cluster
+}
+
+fn main() {
+    let mut runner = BenchRunner::new("sched_latency");
+    let hw = HardwareModel::a100_80gb();
+    let table = ScoreTable::for_hardware(&hw);
+
+    // --- engine primitives --------------------------------------------
+    let gpus: Vec<GpuState> = {
+        let c = loaded_cluster(100, 0.5, 7);
+        c.gpus().to_vec()
+    };
+    runner.bench("frag_score_single_lookup", || {
+        let mut acc = 0u32;
+        for g in &gpus {
+            acc = acc.wrapping_add(table.score(*g));
+        }
+        acc
+    });
+    runner.bench("frag_mean_score_m100", || table.mean_score(&gpus));
+    runner.bench("delta_f_single", || {
+        table.delta(GpuState::empty(), Profile::P3g40gb, 4)
+    });
+    runner.bench("evaluate_cluster_m100_1g10gb", || {
+        migsched::frag::evaluate_cluster(&table, &gpus, Profile::P1g10gb)
+    });
+    // The naive Algorithm 2 (recompute Algorithm 1 per dry-run) — the
+    // §Perf "before" datum the LUT engine is measured against.
+    runner.bench("naive_direct_mfi_decision_m100_1g10gb", || {
+        let p = Profile::P1g10gb;
+        let mut best: Option<(i32, usize, u8)> = None;
+        for (gid, g) in gpus.iter().enumerate() {
+            if p.size() > g.free_slices() {
+                continue;
+            }
+            let base = migsched::frag::score_direct(*g, &hw) as i32;
+            for &s in p.starts() {
+                if !g.fits_at(p, s) {
+                    continue;
+                }
+                let d =
+                    migsched::frag::score_direct(g.with_placement(p, s), &hw) as i32 - base;
+                if best.is_none() || (d, gid, s) < best.unwrap() {
+                    best = Some((d, gid, s));
+                }
+            }
+        }
+        best
+    });
+
+    // --- per-policy decision latency at three load levels ---------------
+    for (label, util) in [("empty", 0.0), ("half", 0.5), ("heavy", 0.85)] {
+        let cluster = loaded_cluster(100, util, 99);
+        for kind in SchedulerKind::all() {
+            let mut sched = kind.build(&hw);
+            let mut rng = Rng::new(1);
+            let name = format!("decide_{label}_{}", kind.name());
+            runner.bench(&name, || {
+                let p = ALL_PROFILES[rng.index(6)];
+                sched.schedule(&cluster, p)
+            });
+        }
+    }
+
+    // --- decisions per second summary for MFI ---------------------------
+    let cluster = loaded_cluster(100, 0.5, 5);
+    let mut mfi = SchedulerKind::Mfi.build(&hw);
+    let mut rng = Rng::new(2);
+    let result = runner.bench("mfi_decision_m100_half_load", || {
+        let p = ALL_PROFILES[rng.index(6)];
+        mfi.schedule(&cluster, p)
+    });
+    println!(
+        "\nMFI throughput at M=100, 50% load: {:.2} M decisions/s (target >= 1 M/s, DESIGN.md §8)",
+        result.throughput(1.0) / 1e6
+    );
+    runner.save_csv();
+}

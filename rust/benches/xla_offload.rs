@@ -1,0 +1,115 @@
+//! ΔF engine ablation (experiment X3): native 256-entry-LUT engine vs the
+//! AOT-compiled XLA program through PJRT, at two cluster sizes — both the
+//! raw batched evaluation and the end-to-end scheduling decision.
+//!
+//! Skips (exit 0 with a message) when `make artifacts` has not run.
+
+use migsched::cluster::Cluster;
+use migsched::frag::ScoreTable;
+use migsched::mig::{HardwareModel, Profile, ALL_PROFILES};
+use migsched::runtime::{artifacts_dir, FragEngine, PjrtRuntime};
+use migsched::sched::{Mfi, MfiXla, Scheduler, SchedulerKind};
+use migsched::util::bench::BenchRunner;
+use migsched::util::rng::Rng;
+use migsched::workload::WorkloadId;
+
+fn loaded_cluster(num_gpus: usize, target: f64) -> Cluster {
+    let hw = HardwareModel::a100_80gb();
+    let mut cluster = Cluster::new(hw.clone(), num_gpus);
+    let mut sched = SchedulerKind::Random.build(&hw);
+    let mut rng = Rng::new(4);
+    let mut id = 0u64;
+    while cluster.utilization() < target {
+        let p = *rng.choose(&ALL_PROFILES);
+        match sched.schedule(&cluster, p) {
+            Some(pl) => {
+                cluster.allocate(WorkloadId(id), pl).unwrap();
+                id += 1;
+            }
+            None => break,
+        }
+    }
+    cluster
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("frag.hlo.txt").exists() {
+        println!(
+            "SKIP xla_offload bench: {}/frag.hlo.txt missing (run `make artifacts`)",
+            dir.display()
+        );
+        return;
+    }
+    let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let engine = FragEngine::load_default(&runtime).expect("artifact");
+    // The non-default L1 implementation, if `make artifacts` produced one.
+    let (alt_name, alt_engine) = ["pallas", "jnp"]
+        .iter()
+        .find_map(|impl_name| {
+            let path = dir.join(format!("frag_{impl_name}.hlo.txt"));
+            path.exists().then(|| {
+                (
+                    *impl_name,
+                    FragEngine::load(&runtime, &path, &dir.join("manifest.json")).ok(),
+                )
+            })
+        })
+        .unwrap_or(("none", None));
+    let hw = HardwareModel::a100_80gb();
+    let table = ScoreTable::for_hardware(&hw);
+
+    let mut runner = BenchRunner::new("xla_offload");
+    for &m in &[100usize, 400] {
+        let cluster = loaded_cluster(m, 0.5);
+        let masks = cluster.occupancy_masks();
+
+        // Raw batched ΔF evaluation.
+        runner.bench(&format!("native_eval_all_profiles_M{m}"), || {
+            let mut count = 0usize;
+            for p in ALL_PROFILES {
+                if migsched::frag::evaluate_cluster(&table, cluster.gpus(), p).is_some() {
+                    count += 1;
+                }
+            }
+            count
+        });
+        runner.bench(&format!("xla_eval_batch_M{m}"), || {
+            engine.evaluate(&masks).expect("evaluate")
+        });
+        // L1-impl ablation: the interpret-mode Pallas artifact vs the
+        // fused-jnp default (same math; EXPERIMENTS.md §Perf L2 iteration).
+        if let Some(alt) = &alt_engine {
+            runner.bench(&format!("xla_eval_batch_M{m}_{alt_name}"), || {
+                alt.evaluate(&masks).expect("evaluate")
+            });
+        }
+
+        // End-to-end decision.
+        let mut native = Mfi::for_hardware(&hw);
+        let mut rng = Rng::new(9);
+        runner.bench(&format!("native_mfi_decision_M{m}"), || {
+            let p = ALL_PROFILES[rng.index(6)];
+            native.schedule(&cluster, p)
+        });
+    }
+
+    // MfiXla decision (owns the engine, so benched last).
+    let cluster = loaded_cluster(100, 0.5);
+    let mut xla_sched = MfiXla::from_engine(engine);
+    let mut rng = Rng::new(9);
+    runner.bench("xla_mfi_decision_M100", || {
+        let p = ALL_PROFILES[rng.index(6)];
+        xla_sched.schedule(&cluster, p)
+    });
+
+    // Sanity: identical decision on a fixed state.
+    let mut native = Mfi::for_hardware(&hw);
+    assert_eq!(
+        native.schedule(&cluster, Profile::P3g40gb),
+        xla_sched.schedule(&cluster, Profile::P3g40gb),
+        "native and XLA engines diverged"
+    );
+    println!("\nnative vs XLA decisions agree on the probe state ✔");
+    runner.save_csv();
+}

@@ -1,0 +1,114 @@
+//! Point-in-time cluster metrics — the five quantities the paper's
+//! evaluation tracks (Section VI).
+
+use super::state::Cluster;
+use crate::frag::FragScorer;
+use crate::util::json::Json;
+
+/// A snapshot of the paper's evaluation metrics at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClusterMetrics {
+    /// Workloads currently allocated (paper: "allocated workloads").
+    pub allocated_workloads: usize,
+    /// Workloads accepted since reset (cumulative; the acceptance-rate
+    /// numerator — maintained by the simulation/serving loop).
+    pub accepted_total: u64,
+    /// Workloads arrived since reset (the acceptance-rate denominator).
+    pub arrived_total: u64,
+    /// Allocated slices / capacity.
+    pub utilization: f64,
+    /// GPUs hosting at least one workload.
+    pub active_gpus: usize,
+    /// Cluster-average fragmentation score (paper Fig. 6).
+    pub mean_frag_score: f64,
+}
+
+impl ClusterMetrics {
+    /// Capture the instantaneous gauges from a cluster; the cumulative
+    /// counters (`accepted_total`, `arrived_total`) are supplied by the
+    /// owning loop.
+    pub fn capture(
+        cluster: &Cluster,
+        scorer: &dyn FragScorer,
+        accepted_total: u64,
+        arrived_total: u64,
+    ) -> Self {
+        Self {
+            allocated_workloads: cluster.allocated_workloads(),
+            accepted_total,
+            arrived_total,
+            utilization: cluster.utilization(),
+            active_gpus: cluster.active_gpus(),
+            mean_frag_score: scorer.mean_score(cluster.gpus()),
+        }
+    }
+
+    /// Acceptance rate in [0, 1]; 1.0 when nothing has arrived yet.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.arrived_total == 0 {
+            1.0
+        } else {
+            self.accepted_total as f64 / self.arrived_total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("allocated_workloads", self.allocated_workloads)
+            .with("accepted_total", self.accepted_total)
+            .with("arrived_total", self.arrived_total)
+            .with("acceptance_rate", self.acceptance_rate())
+            .with("utilization", self.utilization)
+            .with("active_gpus", self.active_gpus)
+            .with("mean_frag_score", self.mean_frag_score)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frag::ScoreTable;
+    use crate::mig::{HardwareModel, Placement, Profile};
+    use crate::workload::WorkloadId;
+
+    #[test]
+    fn capture_reads_cluster_gauges() {
+        let hw = HardwareModel::a100_80gb();
+        let mut c = Cluster::new(hw.clone(), 2);
+        let table = ScoreTable::for_hardware(&hw);
+        c.allocate(
+            WorkloadId(0),
+            Placement { gpu: 0, profile: Profile::P1g10gb, index: 5 },
+        )
+        .unwrap();
+        let m = ClusterMetrics::capture(&c, &table, 1, 2);
+        assert_eq!(m.allocated_workloads, 1);
+        assert_eq!(m.active_gpus, 1);
+        assert!((m.utilization - 1.0 / 16.0).abs() < 1e-12);
+        // GPU 0 scores 8 (paper worked example), GPU 1 scores 0.
+        assert!((m.mean_frag_score - 4.0).abs() < 1e-12);
+        assert!((m.acceptance_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acceptance_rate_empty() {
+        let m = ClusterMetrics::default();
+        assert_eq!(m.acceptance_rate(), 1.0);
+    }
+
+    #[test]
+    fn json_contains_all_fields() {
+        let m = ClusterMetrics {
+            allocated_workloads: 3,
+            accepted_total: 5,
+            arrived_total: 10,
+            utilization: 0.25,
+            active_gpus: 2,
+            mean_frag_score: 1.5,
+        };
+        let j = m.to_json();
+        assert_eq!(j.req_u64("accepted_total").unwrap(), 5);
+        assert!((j.get("acceptance_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(j.req_u64("active_gpus").unwrap(), 2);
+    }
+}

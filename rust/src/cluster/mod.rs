@@ -1,0 +1,10 @@
+//! Cluster state management: the authoritative view of every GPU's
+//! occupancy plus the workload → placement registry, with point-in-time
+//! metrics and JSON snapshots.
+
+pub mod metrics;
+pub mod snapshot;
+pub mod state;
+
+pub use metrics::ClusterMetrics;
+pub use state::{AllocError, Cluster};

@@ -1,0 +1,140 @@
+//! JSON snapshots of the full cluster state (daemon persistence,
+//! `inspect` CLI, postmortem debugging).
+
+use super::state::Cluster;
+use crate::mig::{HardwareModel, Placement, Profile};
+use crate::util::json::Json;
+use crate::workload::WorkloadId;
+
+/// Serialize the cluster: hardware name, occupancy masks, allocations.
+pub fn to_json(cluster: &Cluster) -> Json {
+    let mut allocs: Vec<(WorkloadId, Placement)> = cluster.allocations().collect();
+    allocs.sort_by_key(|(id, _)| *id);
+    Json::obj()
+        .with("hardware", cluster.hardware().name())
+        .with("num_gpus", cluster.num_gpus())
+        .with(
+            "gpu_masks",
+            Json::Arr(cluster.occupancy_masks().iter().map(|&m| Json::Num(m as f64)).collect()),
+        )
+        .with(
+            "allocations",
+            Json::Arr(
+                allocs
+                    .iter()
+                    .map(|(id, p)| {
+                        Json::obj()
+                            .with("workload", id.0)
+                            .with("gpu", p.gpu)
+                            .with("profile", p.profile.canonical_name())
+                            .with("index", p.index as u64)
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+/// Restore a cluster from a snapshot. The occupancy is rebuilt from the
+/// allocation list (the mask array is redundant and cross-checked).
+pub fn from_json(j: &Json) -> Result<Cluster, String> {
+    let hw_name = j.req_str("hardware")?;
+    let hw = HardwareModel::by_name(hw_name)
+        .ok_or_else(|| format!("unknown hardware model '{hw_name}'"))?;
+    let num_gpus = j.req_u64("num_gpus")? as usize;
+    if num_gpus == 0 {
+        return Err("num_gpus must be positive".into());
+    }
+    let mut cluster = Cluster::new(hw, num_gpus);
+    let allocs = j
+        .get("allocations")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'allocations' array")?;
+    for a in allocs {
+        let profile_name = a.req_str("profile")?;
+        let profile = Profile::parse(profile_name)
+            .ok_or_else(|| format!("unknown profile '{profile_name}'"))?;
+        let placement = Placement {
+            gpu: a.req_u64("gpu")? as usize,
+            profile,
+            index: a.req_u64("index")? as u8,
+        };
+        cluster
+            .allocate(WorkloadId(a.req_u64("workload")?), placement)
+            .map_err(|e| format!("allocation replay failed: {e}"))?;
+    }
+    // Cross-check the stored masks when present.
+    if let Some(masks) = j.get("gpu_masks").and_then(Json::as_arr) {
+        if masks.len() != cluster.num_gpus() {
+            return Err("gpu_masks arity mismatch".into());
+        }
+        for (i, m) in masks.iter().enumerate() {
+            let stored = m.as_u64().ok_or("bad mask value")? as u8;
+            let rebuilt = cluster.gpu(i).unwrap().mask();
+            if stored != rebuilt {
+                return Err(format!(
+                    "gpu {i}: stored mask {stored:#010b} != rebuilt {rebuilt:#010b}"
+                ));
+            }
+        }
+    }
+    Ok(cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn populated() -> Cluster {
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 4);
+        c.allocate(
+            WorkloadId(0),
+            Placement { gpu: 0, profile: Profile::P4g40gb, index: 0 },
+        )
+        .unwrap();
+        c.allocate(
+            WorkloadId(1),
+            Placement { gpu: 2, profile: Profile::P1g20gb, index: 6 },
+        )
+        .unwrap();
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = populated();
+        let j = to_json(&c);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.occupancy_masks(), c.occupancy_masks());
+        assert_eq!(back.allocated_workloads(), 2);
+        assert_eq!(back.placement_of(WorkloadId(1)), c.placement_of(WorkloadId(1)));
+    }
+
+    #[test]
+    fn detects_mask_tampering() {
+        let c = populated();
+        let mut j = to_json(&c);
+        j.set("gpu_masks", vec![0u64, 0, 0, 0]);
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("stored mask"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_hardware() {
+        let mut j = to_json(&populated());
+        j.set("hardware", "TPU-v5");
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_conflicting_allocations() {
+        let text = r#"{
+            "hardware": "A100-80GB", "num_gpus": 1,
+            "allocations": [
+                {"workload": 0, "gpu": 0, "profile": "4g.40gb", "index": 0},
+                {"workload": 1, "gpu": 0, "profile": "3g.40gb", "index": 0}
+            ]
+        }"#;
+        let j = Json::parse(text).unwrap();
+        assert!(from_json(&j).unwrap_err().contains("replay failed"));
+    }
+}

@@ -1,0 +1,289 @@
+//! The cluster state: GPU occupancy vector + workload allocation registry.
+
+use std::collections::HashMap;
+
+use crate::mig::{GpuState, HardwareModel, Placement, Profile};
+use crate::workload::WorkloadId;
+
+/// A homogeneous MIG GPU cluster (paper Section IV: set `M` of GPUs of the
+/// same hardware model).
+///
+/// `Cluster` owns the authoritative occupancy state. Schedulers *propose*
+/// placements ([`crate::sched::Scheduler::schedule`]); the owner (simulator
+/// or serving daemon) *commits* them here, which keeps dry-run logic free
+/// of undo bookkeeping and makes double-commit/double-free programming
+/// errors detectable at this single choke point.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    hw: HardwareModel,
+    gpus: Vec<GpuState>,
+    allocations: HashMap<WorkloadId, Placement>,
+    /// Slices currently allocated (kept incrementally; equals the sum of
+    /// per-GPU used slices — asserted in debug builds).
+    used_slices: u64,
+}
+
+/// Errors from committing or releasing allocations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    UnknownGpu { gpu: usize, cluster_size: usize },
+    DuplicateWorkload(WorkloadId),
+    UnknownWorkload(WorkloadId),
+    UnsupportedProfile(Profile),
+    Placement(crate::mig::gpu::PlacementError),
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::UnknownGpu { gpu, cluster_size } => {
+                write!(f, "gpu {gpu} out of range (cluster has {cluster_size})")
+            }
+            AllocError::DuplicateWorkload(id) => write!(f, "workload {id} already allocated"),
+            AllocError::UnknownWorkload(id) => write!(f, "workload {id} not allocated"),
+            AllocError::UnsupportedProfile(p) => {
+                write!(f, "profile {p} not supported by this hardware model")
+            }
+            AllocError::Placement(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+impl Cluster {
+    /// A cluster of `num_gpus` empty GPUs.
+    pub fn new(hw: HardwareModel, num_gpus: usize) -> Self {
+        assert!(num_gpus > 0, "cluster needs at least one GPU");
+        Self {
+            gpus: vec![GpuState::empty(); num_gpus],
+            hw,
+            allocations: HashMap::new(),
+            used_slices: 0,
+        }
+    }
+
+    // ----- read access ----------------------------------------------------
+
+    pub fn hardware(&self) -> &HardwareModel {
+        &self.hw
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpu(&self, id: usize) -> Option<GpuState> {
+        self.gpus.get(id).copied()
+    }
+
+    /// The occupancy vector — the scheduler-facing view.
+    pub fn gpus(&self) -> &[GpuState] {
+        &self.gpus
+    }
+
+    /// Total slice capacity (M × 8).
+    pub fn capacity_slices(&self) -> u64 {
+        (self.gpus.len() * self.hw.num_slices()) as u64
+    }
+
+    /// Currently allocated slices.
+    pub fn used_slices(&self) -> u64 {
+        debug_assert_eq!(
+            self.used_slices,
+            self.gpus.iter().map(|g| g.used_slices() as u64).sum::<u64>()
+        );
+        self.used_slices
+    }
+
+    pub fn free_slices(&self) -> u64 {
+        self.capacity_slices() - self.used_slices()
+    }
+
+    /// Fraction of slices allocated (paper Fig. 4c/5c "resource utilization").
+    pub fn utilization(&self) -> f64 {
+        self.used_slices() as f64 / self.capacity_slices() as f64
+    }
+
+    /// GPUs hosting at least one workload (paper Fig. 4d/5d "active GPUs").
+    pub fn active_gpus(&self) -> usize {
+        self.gpus.iter().filter(|g| !g.is_empty()).count()
+    }
+
+    /// Number of currently allocated workloads.
+    pub fn allocated_workloads(&self) -> usize {
+        self.allocations.len()
+    }
+
+    pub fn placement_of(&self, id: WorkloadId) -> Option<Placement> {
+        self.allocations.get(&id).copied()
+    }
+
+    /// Iterate over current allocations in unspecified order.
+    pub fn allocations(&self) -> impl Iterator<Item = (WorkloadId, Placement)> + '_ {
+        self.allocations.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Raw occupancy masks, one byte per GPU — the XLA engine's input.
+    pub fn occupancy_masks(&self) -> Vec<u8> {
+        self.gpus.iter().map(|g| g.mask()).collect()
+    }
+
+    /// Whether any GPU can host `profile` right now.
+    pub fn can_host(&self, profile: Profile) -> bool {
+        self.hw.supports(profile) && self.gpus.iter().any(|g| g.can_host(profile))
+    }
+
+    // ----- mutation ---------------------------------------------------------
+
+    /// Commit a placement for a workload.
+    pub fn allocate(&mut self, id: WorkloadId, placement: Placement) -> Result<(), AllocError> {
+        if !self.hw.supports(placement.profile) {
+            return Err(AllocError::UnsupportedProfile(placement.profile));
+        }
+        if placement.gpu >= self.gpus.len() {
+            return Err(AllocError::UnknownGpu {
+                gpu: placement.gpu,
+                cluster_size: self.gpus.len(),
+            });
+        }
+        if self.allocations.contains_key(&id) {
+            return Err(AllocError::DuplicateWorkload(id));
+        }
+        self.gpus[placement.gpu]
+            .place(placement.profile, placement.index)
+            .map_err(AllocError::Placement)?;
+        self.used_slices += placement.profile.size() as u64;
+        self.allocations.insert(id, placement);
+        Ok(())
+    }
+
+    /// Release a workload's slices; returns the freed placement.
+    pub fn release(&mut self, id: WorkloadId) -> Result<Placement, AllocError> {
+        let placement =
+            self.allocations.remove(&id).ok_or(AllocError::UnknownWorkload(id))?;
+        self.gpus[placement.gpu]
+            .release(placement.profile, placement.index)
+            .map_err(AllocError::Placement)?;
+        self.used_slices -= placement.profile.size() as u64;
+        Ok(placement)
+    }
+
+    /// Drop every allocation (simulation reset without reallocating).
+    pub fn clear(&mut self) {
+        for g in &mut self.gpus {
+            *g = GpuState::empty();
+        }
+        self.allocations.clear();
+        self.used_slices = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::PlacementError;
+
+    fn cluster() -> Cluster {
+        Cluster::new(HardwareModel::a100_80gb(), 3)
+    }
+
+    fn wid(n: u64) -> WorkloadId {
+        WorkloadId(n)
+    }
+
+    fn pl(gpu: usize, profile: Profile, index: u8) -> Placement {
+        Placement { gpu, profile, index }
+    }
+
+    #[test]
+    fn fresh_cluster_counts() {
+        let c = cluster();
+        assert_eq!(c.capacity_slices(), 24);
+        assert_eq!(c.used_slices(), 0);
+        assert_eq!(c.free_slices(), 24);
+        assert_eq!(c.active_gpus(), 0);
+        assert_eq!(c.allocated_workloads(), 0);
+        assert_eq!(c.utilization(), 0.0);
+        assert!(c.can_host(Profile::P7g80gb));
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P3g40gb, 4)).unwrap();
+        c.allocate(wid(2), pl(1, Profile::P1g10gb, 6)).unwrap();
+        assert_eq!(c.used_slices(), 5);
+        assert_eq!(c.active_gpus(), 2);
+        assert_eq!(c.allocated_workloads(), 2);
+        assert_eq!(c.placement_of(wid(1)), Some(pl(0, Profile::P3g40gb, 4)));
+
+        let freed = c.release(wid(1)).unwrap();
+        assert_eq!(freed, pl(0, Profile::P3g40gb, 4));
+        assert_eq!(c.used_slices(), 1);
+        assert_eq!(c.active_gpus(), 1);
+        assert_eq!(c.placement_of(wid(1)), None);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_unknowns() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P1g10gb, 0)).unwrap();
+        assert_eq!(
+            c.allocate(wid(1), pl(1, Profile::P1g10gb, 0)),
+            Err(AllocError::DuplicateWorkload(wid(1)))
+        );
+        assert_eq!(c.release(wid(9)), Err(AllocError::UnknownWorkload(wid(9))));
+        assert_eq!(
+            c.allocate(wid(2), pl(7, Profile::P1g10gb, 0)),
+            Err(AllocError::UnknownGpu { gpu: 7, cluster_size: 3 })
+        );
+    }
+
+    #[test]
+    fn rejects_overlapping_commit() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P4g40gb, 0)).unwrap();
+        let err = c.allocate(wid(2), pl(0, Profile::P3g40gb, 0)).unwrap_err();
+        assert!(matches!(err, AllocError::Placement(PlacementError::Occupied { .. })));
+        // Failed commit must not corrupt accounting.
+        assert_eq!(c.used_slices(), 4);
+        assert_eq!(c.allocated_workloads(), 1);
+    }
+
+    #[test]
+    fn rejects_unsupported_profile() {
+        let hw = HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let mut c = Cluster::new(hw, 1);
+        assert_eq!(
+            c.allocate(wid(1), pl(0, Profile::P7g80gb, 0)),
+            Err(AllocError::UnsupportedProfile(Profile::P7g80gb))
+        );
+        assert!(!c.can_host(Profile::P7g80gb));
+        assert!(c.can_host(Profile::P1g10gb));
+    }
+
+    #[test]
+    fn occupancy_masks_reflect_state() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(1, Profile::P2g20gb, 2)).unwrap();
+        assert_eq!(c.occupancy_masks(), vec![0, 0b0000_1100, 0]);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P7g80gb, 0)).unwrap();
+        c.clear();
+        assert_eq!(c.used_slices(), 0);
+        assert_eq!(c.allocated_workloads(), 0);
+        assert_eq!(c.active_gpus(), 0);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P7g80gb, 0)).unwrap();
+        assert!((c.utilization() - 8.0 / 24.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,265 @@
+//! Rescheduling-based defragmentation — the paper's stated future work
+//! ("we are going to consider rescheduling in a future work to augment
+//! the proposed scheduling logic", Section IV).
+//!
+//! The online scheduler never migrates running workloads (migration
+//! disrupts tenants), so fragmentation released by terminations can only
+//! be *avoided*, not repaired. This module adds the repair side as an
+//! **offline planner**: given the current cluster state it computes a
+//! bounded sequence of single-workload migrations that monotonically
+//! lowers the total fragmentation score, which an operator can apply
+//! during maintenance windows (or the simulator can apply periodically —
+//! `SimConfig::defrag_every`).
+//!
+//! Planning is greedy: at each step consider every (allocated workload ×
+//! feasible target placement) pair, simulate the move (release + place),
+//! and commit the move with the largest total-F reduction; stop when no
+//! move improves F or the migration budget is exhausted. Each step is
+//! O(W · M · 18) table lookups — milliseconds at cluster scale.
+
+use crate::cluster::Cluster;
+use crate::frag::{FragScorer, ScoreTable};
+use crate::mig::{GpuState, Placement};
+use crate::workload::WorkloadId;
+
+/// One planned migration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Migration {
+    pub workload: WorkloadId,
+    pub from: Placement,
+    pub to: Placement,
+    /// Total-cluster fragmentation-score change of this step (< 0).
+    pub delta_f: i32,
+}
+
+/// A defragmentation plan: migrations in application order.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    pub moves: Vec<Migration>,
+    /// Cluster total F before planning.
+    pub f_before: u32,
+    /// Cluster total F after applying every move.
+    pub f_after: u32,
+}
+
+impl MigrationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    pub fn total_delta(&self) -> i64 {
+        self.f_after as i64 - self.f_before as i64
+    }
+}
+
+/// Total cluster fragmentation score under `table`.
+fn total_f(gpus: &[GpuState], table: &ScoreTable) -> u32 {
+    gpus.iter().map(|&g| table.score(g)).sum()
+}
+
+/// Compute a greedy defragmentation plan with at most `max_migrations`
+/// moves. The cluster is not modified; apply with [`apply_plan`].
+pub fn plan_defrag(
+    cluster: &Cluster,
+    table: &ScoreTable,
+    max_migrations: usize,
+) -> MigrationPlan {
+    // Work on shadow state: occupancies + the allocation list.
+    let mut gpus: Vec<GpuState> = cluster.gpus().to_vec();
+    let mut allocs: Vec<(WorkloadId, Placement)> = cluster.allocations().collect();
+    allocs.sort_by_key(|(id, _)| *id); // determinism
+
+    let f_before = total_f(&gpus, table);
+    let mut current_f = f_before as i64;
+    let mut plan = MigrationPlan { moves: Vec::new(), f_before, f_after: f_before };
+
+    for _ in 0..max_migrations {
+        // Find the single move with the best (most negative) ΔF_total.
+        let mut best: Option<(usize, Placement, i64)> = None; // (alloc idx, target, ΔF)
+        for (ai, &(_, from)) in allocs.iter().enumerate() {
+            let profile = from.profile;
+            // State with the workload lifted out.
+            let mut lifted = gpus[from.gpu];
+            lifted
+                .release(profile, from.index)
+                .expect("allocation registry consistent");
+            let lifted_delta =
+                lifted_score_delta(&gpus, from.gpu, lifted, table);
+            for (gpu_id, &g) in gpus.iter().enumerate() {
+                let host = if gpu_id == from.gpu { lifted } else { g };
+                if profile.size() > host.free_slices() {
+                    continue;
+                }
+                for &start in profile.starts() {
+                    if gpu_id == from.gpu && start == from.index {
+                        continue; // no-op move
+                    }
+                    if !host.fits_at(profile, start) {
+                        continue;
+                    }
+                    // ΔF = (remove from source) + (add to target host).
+                    let placed = host.with_placement(profile, start);
+                    let add_delta =
+                        table.score(placed) as i64 - table.score(host) as i64;
+                    let delta = if gpu_id == from.gpu {
+                        // Same-GPU move: lifted_delta already counts the
+                        // removal on this GPU; add_delta is vs `lifted`.
+                        lifted_delta + add_delta
+                    } else {
+                        lifted_delta + add_delta
+                    };
+                    let candidate = (ai, Placement { gpu: gpu_id, profile, index: start }, delta);
+                    if delta < best.map(|b| b.2).unwrap_or(0) {
+                        best = Some(candidate);
+                    }
+                }
+            }
+        }
+        let Some((ai, to, delta)) = best else { break };
+        // Commit the move on the shadow state.
+        let (wid, from) = allocs[ai];
+        gpus[from.gpu].release(from.profile, from.index).unwrap();
+        gpus[to.gpu].place(to.profile, to.index).unwrap();
+        allocs[ai].1 = to;
+        current_f += delta;
+        debug_assert_eq!(current_f, total_f(&gpus, table) as i64, "ΔF accounting");
+        plan.moves.push(Migration { workload: wid, from, to, delta_f: delta as i32 });
+    }
+    plan.f_after = current_f as u32;
+    plan
+}
+
+/// ΔF on the source GPU of lifting the workload out.
+fn lifted_score_delta(
+    gpus: &[GpuState],
+    gpu_id: usize,
+    lifted: GpuState,
+    table: &ScoreTable,
+) -> i64 {
+    table.score(lifted) as i64 - table.score(gpus[gpu_id]) as i64
+}
+
+/// Apply a plan to a live cluster (release + allocate per move, in order).
+/// Fails atomically per move; on error the cluster retains all moves
+/// applied so far (callers treat plans as advisory).
+pub fn apply_plan(cluster: &mut Cluster, plan: &MigrationPlan) -> Result<usize, String> {
+    for (i, mv) in plan.moves.iter().enumerate() {
+        let freed = cluster
+            .release(mv.workload)
+            .map_err(|e| format!("move {i}: release failed: {e}"))?;
+        if freed != mv.from {
+            return Err(format!(
+                "move {i}: plan is stale (expected {}, found {})",
+                mv.from, freed
+            ));
+        }
+        cluster
+            .allocate(mv.workload, mv.to)
+            .map_err(|e| format!("move {i}: allocate failed: {e}"))?;
+    }
+    Ok(plan.moves.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::{HardwareModel, Profile};
+
+    fn setup() -> (Cluster, ScoreTable) {
+        let hw = HardwareModel::a100_80gb();
+        let table = ScoreTable::for_hardware(&hw);
+        (Cluster::new(hw, 3), table)
+    }
+
+    fn alloc(c: &mut Cluster, id: u64, gpu: usize, p: Profile, idx: u8) {
+        c.allocate(WorkloadId(id), Placement { gpu, profile: p, index: idx }).unwrap();
+    }
+
+    #[test]
+    fn empty_cluster_needs_no_plan() {
+        let (cluster, table) = setup();
+        let plan = plan_defrag(&cluster, &table, 10);
+        assert!(plan.is_empty());
+        assert_eq!(plan.f_before, 0);
+        assert_eq!(plan.f_after, 0);
+    }
+
+    #[test]
+    fn repairs_misplaced_1g() {
+        // A 1g.10gb at index 1 (F=12) migrates to a lower-F anchor.
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        assert_eq!(table.score(cluster.gpu(0).unwrap()), 12);
+        let plan = plan_defrag(&cluster, &table, 10);
+        assert!(!plan.is_empty());
+        assert!(plan.f_after < plan.f_before, "{plan:?}");
+        apply_plan(&mut cluster, &plan).unwrap();
+        let total: u32 = cluster.gpus().iter().map(|&g| table.score(g)).sum();
+        assert_eq!(total, plan.f_after);
+        // The 4g anchor is usable again.
+        assert!(cluster.gpu(0).unwrap().can_host(Profile::P4g40gb));
+    }
+
+    #[test]
+    fn plan_respects_budget() {
+        let (mut cluster, table) = setup();
+        // Three badly-placed small profiles across GPUs.
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 1, 1, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 2, 2, Profile::P1g10gb, 3);
+        let plan = plan_defrag(&cluster, &table, 1);
+        assert_eq!(plan.moves.len(), 1);
+        // The single move is the best available one.
+        let unbounded = plan_defrag(&cluster, &table, 16);
+        assert_eq!(plan.moves[0].delta_f, unbounded.moves[0].delta_f);
+    }
+
+    #[test]
+    fn plan_monotonically_improves() {
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 1, 0, Profile::P1g10gb, 5);
+        alloc(&mut cluster, 2, 1, Profile::P2g20gb, 2);
+        alloc(&mut cluster, 3, 2, Profile::P1g20gb, 2);
+        let plan = plan_defrag(&cluster, &table, 16);
+        for mv in &plan.moves {
+            assert!(mv.delta_f < 0, "every move strictly improves: {mv:?}");
+        }
+        // Applying reproduces the predicted score exactly.
+        apply_plan(&mut cluster, &plan).unwrap();
+        let total: u32 = cluster.gpus().iter().map(|&g| table.score(g)).sum();
+        assert_eq!(total, plan.f_after);
+        // And planning again finds nothing (local optimum).
+        let again = plan_defrag(&cluster, &table, 16);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn defrag_restores_schedulability() {
+        // Fragmented state rejecting a 7g.80gb; defrag consolidates.
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 4);
+        alloc(&mut cluster, 1, 1, Profile::P1g10gb, 4);
+        alloc(&mut cluster, 2, 2, Profile::P1g10gb, 4);
+        assert!(!cluster.can_host(Profile::P7g80gb));
+        let plan = plan_defrag(&cluster, &table, 16);
+        apply_plan(&mut cluster, &plan).unwrap();
+        assert!(
+            cluster.can_host(Profile::P7g80gb),
+            "defrag should free a whole GPU: {:?}",
+            cluster.gpus().iter().map(|g| g.diagram()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn stale_plan_detected() {
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        let plan = plan_defrag(&cluster, &table, 4);
+        assert!(!plan.is_empty());
+        // Mutate the cluster behind the plan's back.
+        cluster.release(WorkloadId(0)).unwrap();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 2);
+        assert!(apply_plan(&mut cluster, &plan).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! ΔF (fragmentation-increment) evaluation — the inner loop of the MFI
+//! scheduler (paper Algorithm 2, lines 4-13).
+//!
+//! Given a cluster's GPU states and a requested profile, evaluate the
+//! hypothetical fragmentation-score variation of every feasible placement
+//! and select the argmin. Tie-breaking is deterministic: lowest ΔF, then
+//! lowest GPU id, then lowest anchor index — the "first" semantics a FIFO
+//! scheduler needs for reproducible runs.
+
+use super::table::ScoreTable;
+use crate::mig::{GpuState, Placement, Profile};
+
+/// ΔF of placing `profile` at `start` on `gpu` (must be a free window).
+#[inline]
+pub fn delta_f(table: &ScoreTable, gpu: GpuState, profile: Profile, start: u8) -> i32 {
+    table.delta(gpu, profile, start)
+}
+
+/// Best (lowest-ΔF) anchor for `profile` on a single GPU, with its ΔF.
+/// `None` when no feasible anchor exists.
+///
+/// Hot-path shape (EXPERIMENTS.md §Perf, L3 iteration 1): iterates the
+/// precomputed [`CANDIDATES`] rows for the profile — window mask and
+/// anchor come from one static table row, so the inner loop is a mask
+/// test plus two score-table loads, with no per-iteration mask
+/// recomputation or bounds checks on the anchor list.
+pub fn best_delta_on_gpu(
+    table: &ScoreTable,
+    gpu: GpuState,
+    profile: Profile,
+) -> Option<(u8, i32)> {
+    // Skip early when not even the slice count fits (Algorithm 2 line 5).
+    if profile.size() > gpu.free_slices() {
+        return None;
+    }
+    let occ = gpu.mask();
+    let scores = table.raw();
+    let base = scores[occ as usize] as i32;
+    let mut best: Option<(u8, i32)> = None;
+    for cand in &crate::mig::CANDIDATES[crate::mig::candidate_range(profile)] {
+        if occ & cand.mask != 0 {
+            continue;
+        }
+        let d = scores[(occ | cand.mask) as usize] as i32 - base;
+        match best {
+            Some((_, bd)) if bd <= d => {}
+            _ => best = Some((cand.start, d)),
+        }
+    }
+    best
+}
+
+/// One evaluated candidate placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EvaluatedCandidate {
+    pub gpu: usize,
+    pub index: u8,
+    pub delta: i32,
+}
+
+/// Full dry-run outcome over a cluster for one request — every feasible
+/// (GPU, anchor) pair with its ΔF, plus the selected argmin. Produced by
+/// [`evaluate_cluster_full`] for diagnostics/inspection; the scheduler hot
+/// path uses [`evaluate_cluster`] which keeps only the running minimum.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaOutcome {
+    pub candidates: Vec<EvaluatedCandidate>,
+    pub best: Option<EvaluatedCandidate>,
+}
+
+/// Argmin-ΔF placement over the whole cluster (Algorithm 2 lines 14-16).
+/// Returns `None` when every GPU rejects the profile (line 18).
+///
+/// This is the MFI hot loop (EXPERIMENTS.md §Perf, L3 iteration 2): one
+/// flat scan over GPUs × the profile's candidate rows, tracking the
+/// running (ΔF, gpu, anchor) minimum in scalars. Tie-breaking is
+/// strictly-less, so equal-ΔF candidates resolve to the lowest GPU id,
+/// then the lowest anchor — identical to the reference implementation
+/// (asserted by `full_and_fast_paths_agree`).
+pub fn evaluate_cluster(
+    table: &ScoreTable,
+    gpus: &[GpuState],
+    profile: Profile,
+) -> Option<Placement> {
+    let scores = table.raw();
+    let cands = &crate::mig::CANDIDATES[crate::mig::candidate_range(profile)];
+    let size = profile.size();
+    let mut best_delta = i32::MAX;
+    let mut best_gpu = usize::MAX;
+    let mut best_start = 0u8;
+    for (gpu_id, g) in gpus.iter().enumerate() {
+        let occ = g.mask();
+        if size > crate::mig::NUM_SLICES as u8 - occ.count_ones() as u8 {
+            continue;
+        }
+        let base = scores[occ as usize] as i32;
+        for cand in cands {
+            if occ & cand.mask != 0 {
+                continue;
+            }
+            let d = scores[(occ | cand.mask) as usize] as i32 - base;
+            if d < best_delta {
+                best_delta = d;
+                best_gpu = gpu_id;
+                best_start = cand.start;
+            }
+        }
+    }
+    if best_gpu == usize::MAX {
+        None
+    } else {
+        Some(Placement { gpu: best_gpu, profile, index: best_start })
+    }
+}
+
+/// Like [`evaluate_cluster`] but retains every candidate (for the
+/// `inspect` CLI and the quickstart example's explainability output).
+pub fn evaluate_cluster_full(
+    table: &ScoreTable,
+    gpus: &[GpuState],
+    profile: Profile,
+) -> DeltaOutcome {
+    let mut out = DeltaOutcome::default();
+    for (gpu_id, &gpu) in gpus.iter().enumerate() {
+        if profile.size() > gpu.free_slices() {
+            continue;
+        }
+        for &start in profile.starts() {
+            if !gpu.fits_at(profile, start) {
+                continue;
+            }
+            let c = EvaluatedCandidate {
+                gpu: gpu_id,
+                index: start,
+                delta: table.delta(gpu, profile, start),
+            };
+            out.candidates.push(c);
+            let better = match out.best {
+                None => true,
+                Some(b) => c.delta < b.delta,
+            };
+            if better {
+                out.best = Some(c);
+            }
+        }
+    }
+    out
+}
+
+/// Test-only helpers shared by property tests across modules.
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use crate::mig::GpuState;
+
+    /// Build a random *reachable* GPU state by committing random feasible
+    /// placements.
+    pub(crate) fn random_reachable_state(rng: &mut crate::util::rng::Rng) -> GpuState {
+        let mut g = GpuState::empty();
+        for _ in 0..rng.index(6) {
+            let p = *rng.choose(&crate::mig::profile::ALL_PROFILES);
+            let feasible: Vec<u8> = g.feasible_indexes(p).collect();
+            if feasible.is_empty() {
+                continue;
+            }
+            let s = *rng.choose(&feasible);
+            g = g.with_placement(p, s);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::random_reachable_state;
+    use super::*;
+    use crate::mig::HardwareModel;
+
+    fn table() -> ScoreTable {
+        ScoreTable::for_hardware(&HardwareModel::a100_80gb())
+    }
+
+    #[test]
+    fn empty_gpu_prefers_zero_delta_anchor() {
+        // On an empty GPU, 3g.40gb at either anchor gives the same ΔF by
+        // symmetry? Not quite: @0 blocks 4g.40gb@0; @4 blocks 1g.20gb@6
+        // window partially... evaluate and require determinism + argmin.
+        let t = table();
+        let g = GpuState::empty();
+        let (idx, d) = best_delta_on_gpu(&t, g, Profile::P3g40gb).unwrap();
+        // Check against brute force.
+        let mut best = i32::MAX;
+        let mut best_idx = 0;
+        for &s in Profile::P3g40gb.starts() {
+            let dd = t.delta(g, Profile::P3g40gb, s);
+            if dd < best {
+                best = dd;
+                best_idx = s;
+            }
+        }
+        assert_eq!((idx, d), (best_idx, best));
+    }
+
+    #[test]
+    fn no_candidate_on_blocked_gpu() {
+        let t = table();
+        let g = GpuState::empty().with_placement(Profile::P1g10gb, 1);
+        assert!(best_delta_on_gpu(&t, g, Profile::P4g40gb).is_none());
+        // ΔS guard: 7g on a GPU with one slice used.
+        assert!(best_delta_on_gpu(&t, g, Profile::P7g80gb).is_none());
+    }
+
+    #[test]
+    fn cluster_argmin_prefers_lower_delta_then_lower_ids() {
+        let t = table();
+        // GPU 0 empty; GPU 1 has 1g.10gb@5 → placing 1g.10gb@4 there has
+        // ΔF = -4 (fills a broken window), strictly better than any anchor
+        // on the empty GPU 0 (ΔF >= 0).
+        let gpus =
+            vec![GpuState::empty(), GpuState::empty().with_placement(Profile::P1g10gb, 5)];
+        let p = evaluate_cluster(&t, &gpus, Profile::P1g10gb).unwrap();
+        assert_eq!((p.gpu, p.index), (1, 4));
+        assert_eq!(t.delta(gpus[1], Profile::P1g10gb, 4), -4);
+    }
+
+    #[test]
+    fn tie_breaks_are_first_gpu_first_index() {
+        let t = table();
+        // Two identical empty GPUs: must pick GPU 0 and the lowest-ΔF
+        // anchor with the lowest index among equals.
+        let gpus = vec![GpuState::empty(), GpuState::empty()];
+        let p = evaluate_cluster(&t, &gpus, Profile::P7g80gb).unwrap();
+        assert_eq!((p.gpu, p.index), (0, 0));
+    }
+
+    #[test]
+    fn rejects_when_cluster_full() {
+        let t = table();
+        let gpus = vec![GpuState::from_mask(0xFF); 4];
+        assert!(evaluate_cluster(&t, &gpus, Profile::P1g10gb).is_none());
+    }
+
+    #[test]
+    fn full_outcome_lists_all_feasible() {
+        let t = table();
+        let gpus = vec![GpuState::empty(), GpuState::from_mask(0xFF)];
+        let out = evaluate_cluster_full(&t, &gpus, Profile::P2g20gb);
+        // 3 anchors on the empty GPU, none on the full one.
+        assert_eq!(out.candidates.len(), 3);
+        assert!(out.candidates.iter().all(|c| c.gpu == 0));
+        let best = out.best.unwrap();
+        assert_eq!(best.delta, out.candidates.iter().map(|c| c.delta).min().unwrap());
+    }
+
+    #[test]
+    fn full_and_fast_paths_agree() {
+        let t = table();
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4242);
+        for _ in 0..500 {
+            let gpus: Vec<GpuState> =
+                (0..8).map(|_| random_reachable_state(&mut rng)).collect();
+            for p in crate::mig::profile::ALL_PROFILES {
+                let fast = evaluate_cluster(&t, &gpus, p);
+                let full = evaluate_cluster_full(&t, &gpus, p);
+                match (fast, full.best) {
+                    (None, None) => {}
+                    (Some(pl), Some(b)) => {
+                        assert_eq!((pl.gpu, pl.index), (b.gpu, b.index), "{p}");
+                    }
+                    (a, b) => panic!("disagreement for {p}: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The paper's fragmentation metric for MIG (Section V-B, Algorithm 1) and
+//! the ΔF machinery behind the MFI scheduler (Algorithm 2).
+//!
+//! A GPU is *fragmented with respect to profile `p`* when `p`'s slice count
+//! fits in the free capacity (`size(p) ≤ ΔS`) yet every feasible anchor
+//! window overlaps an occupied slice. The **fragmentation score** `F(m)`
+//! sums, over every supported profile in that situation-check, the
+//! profile's memory-slice weight for each blocked anchor:
+//!
+//! ```text
+//! F(m) = Σ_{p : size(p) ≤ ΔS_m}  mem(p) · |{ i ∈ I_p : window(p, i) ∩ occ(m) ≠ ∅ }|
+//! ```
+//!
+//! Three engines compute it, all bit-identical (cross-checked exhaustively
+//! over all 256 occupancy patterns):
+//!
+//! * [`score::score_direct`] — a literal transcription of Algorithm 1;
+//!   the readable oracle.
+//! * [`ScoreTable`] — a 256-entry lookup table per (hardware profile set);
+//!   the production hot path: a score is one indexed load, a ΔF is two.
+//! * `runtime::FragEngine` — the AOT-compiled JAX/Pallas program executed
+//!   through PJRT (built from the same candidate table; see
+//!   `python/compile/model.py`).
+
+pub mod delta;
+pub mod score;
+pub mod table;
+
+pub use delta::{
+    best_delta_on_gpu, delta_f, evaluate_cluster, evaluate_cluster_full, DeltaOutcome,
+    EvaluatedCandidate,
+};
+pub use score::{
+    max_score, score_direct, score_direct_rule, DirectScorer, FragScorer, OverlapRule,
+};
+pub use table::ScoreTable;

@@ -1,0 +1,370 @@
+//! Direct (oracle) implementation of the paper's Algorithm 1.
+//!
+//! This module favors legibility over speed — it is the transcription of
+//! the pseudo-code that the optimized engines ([`super::table::ScoreTable`],
+//! the XLA artifact) are verified against.
+//!
+//! ## Overlap semantics ([`OverlapRule`])
+//!
+//! Algorithm 1's line 7 reads "if Σ_{i∈window} x_{m,i} > 0" — *any*
+//! overlap between the hypothetical window and occupied slices counts.
+//! The paper's own worked example, however, computes something subtly
+//! different: on the Fig. 3a states the literal rule yields F(GPU 2)=22,
+//! while the paper reports F(GPU 2)=16 with per-profile contributions
+//! {1g.20gb→2, 2g.20gb→2, 3g.40gb→8, 4g.40gb→4, 1g.10gb→0} and
+//! F(GPU 1)=8 — the numbers produced exactly by counting only windows
+//! that contain **both** occupied and free slices. That "partial overlap"
+//! reading is also the semantically right one: a fully-occupied window is
+//! *productively used* (no slice wasted) and a fully-free window is
+//! schedulable; only the mixed windows represent capacity lost to
+//! fragmentation. We therefore support both:
+//!
+//! * [`OverlapRule::Partial`] (default, reproduces the paper's numbers):
+//!   an anchor is counted iff its window overlaps an occupied slice AND
+//!   retains at least one free slice;
+//! * [`OverlapRule::Any`] (literal pseudo-code): any overlap counts.
+//!
+//! Exhaustive tests pin the paper's worked examples under `Partial`, and
+//! the evaluation harness exposes the rule as an ablation
+//! (`benches/fig6_fragscore.rs` reports both).
+
+use crate::mig::{GpuState, HardwareModel};
+#[cfg(test)]
+use crate::mig::Profile;
+
+/// Which hypothetical windows count as fragmented (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OverlapRule {
+    /// Window overlaps occupied slices and still has a free slice — the
+    /// semantics of the paper's worked example (F(GPU2)=16, F(GPU1)=8).
+    #[default]
+    Partial,
+    /// Any overlap with occupied slices — the literal Algorithm 1 text.
+    Any,
+}
+
+impl OverlapRule {
+    pub fn parse(s: &str) -> Option<OverlapRule> {
+        match s.to_ascii_lowercase().as_str() {
+            "partial" => Some(OverlapRule::Partial),
+            "any" | "literal" => Some(OverlapRule::Any),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverlapRule::Partial => "partial",
+            OverlapRule::Any => "any",
+        }
+    }
+}
+
+/// Fragmentation score of one GPU under a hardware model's supported
+/// profile set — Algorithm 1.
+///
+/// For each supported profile `p` (line 3): if enough slices are free
+/// (line 5, `r_w(p) ≤ ΔS_m`), walk its feasible anchors `I_p` (line 6) and
+/// add `r^mem(p)` for every anchor whose window is blocked per `rule`
+/// (lines 7-8).
+pub fn score_direct_rule(gpu: GpuState, hw: &HardwareModel, rule: OverlapRule) -> u32 {
+    let occ = gpu.mask();
+    let mut f = 0u32;
+    for p in hw.profiles() {
+        // line 5: r_w(p) <= ΔS_m
+        if p.size() > gpu.free_slices() {
+            continue;
+        }
+        // lines 6-10: count blocked anchors, weighted by memory slices.
+        for &start in p.starts() {
+            let w = p.mask_at(start);
+            let blocked = match rule {
+                OverlapRule::Any => occ & w != 0,
+                OverlapRule::Partial => occ & w != 0 && occ & w != w,
+            };
+            if blocked {
+                f += p.mem_weight();
+            }
+        }
+    }
+    f
+}
+
+/// [`score_direct_rule`] under the default (paper worked-example) rule.
+pub fn score_direct(gpu: GpuState, hw: &HardwareModel) -> u32 {
+    score_direct_rule(gpu, hw, OverlapRule::Partial)
+}
+
+/// Trait over fragmentation-score engines so schedulers, metrics and tests
+/// can be generic over the implementation (direct oracle, lookup table,
+/// XLA-offloaded).
+pub trait FragScorer {
+    /// `F(m)` for a single GPU state.
+    fn score(&self, gpu: GpuState) -> u32;
+
+    /// Cluster-average fragmentation severity `1/M · Σ F(m)` (paper Fig. 6).
+    fn mean_score(&self, gpus: &[GpuState]) -> f64 {
+        if gpus.is_empty() {
+            return 0.0;
+        }
+        gpus.iter().map(|&g| self.score(g) as f64).sum::<f64>() / gpus.len() as f64
+    }
+}
+
+/// The oracle engine: recomputes Algorithm 1 on every call.
+#[derive(Clone, Debug)]
+pub struct DirectScorer {
+    hw: HardwareModel,
+    rule: OverlapRule,
+}
+
+impl DirectScorer {
+    pub fn new(hw: HardwareModel) -> Self {
+        Self { hw, rule: OverlapRule::default() }
+    }
+
+    pub fn with_rule(hw: HardwareModel, rule: OverlapRule) -> Self {
+        Self { hw, rule }
+    }
+
+    pub fn hardware(&self) -> &HardwareModel {
+        &self.hw
+    }
+
+    pub fn rule(&self) -> OverlapRule {
+        self.rule
+    }
+}
+
+impl FragScorer for DirectScorer {
+    fn score(&self, gpu: GpuState) -> u32 {
+        score_direct_rule(gpu, &self.hw, self.rule)
+    }
+}
+
+/// Upper bound of the score for a profile set: every anchor of every
+/// profile blocked while its size still fits. Used to size integer types
+/// and normalize severity plots.
+pub fn max_score(hw: &HardwareModel) -> u32 {
+    hw.profiles().map(|p| p.mem_weight() * p.starts().len() as u32).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ALL_PROFILES;
+
+    fn a100() -> HardwareModel {
+        HardwareModel::a100_80gb()
+    }
+
+    #[test]
+    fn empty_gpu_scores_zero_both_rules() {
+        for rule in [OverlapRule::Partial, OverlapRule::Any] {
+            assert_eq!(score_direct_rule(GpuState::empty(), &a100(), rule), 0);
+        }
+    }
+
+    #[test]
+    fn full_gpu_scores_zero_both_rules() {
+        // Saturated ≠ fragmented: every profile fails the ΔS guard.
+        let g = GpuState::empty().with_placement(Profile::P7g80gb, 0);
+        for rule in [OverlapRule::Partial, OverlapRule::Any] {
+            assert_eq!(score_direct_rule(g, &a100(), rule), 0);
+        }
+    }
+
+    /// The paper's worked example, Section V-B: GPU 2 of Fig. 3a scores
+    /// F(2) = 2 + 2 + 8 + 4 = 16 with per-profile contributions
+    /// 1g.20gb→2 (blocked only at index 4, "the second memory slice is
+    /// allocated to profile 1g.10gb"), 2g.20gb→2, 3g.40gb→8, 4g.40gb→4,
+    /// and 1g.10gb→0. The state realizing the narrative is
+    /// {2g.20gb@0, 1g.10gb@5} (occupied slices 0, 1, 5).
+    #[test]
+    fn paper_worked_example_gpu2_f16() {
+        let g = GpuState::empty()
+            .with_placement(Profile::P2g20gb, 0)
+            .with_placement(Profile::P1g10gb, 5);
+        let hw = a100();
+
+        // Per-profile contributions under the Partial rule:
+        let contrib = |p: Profile| -> u32 {
+            if p.size() > g.free_slices() {
+                return 0;
+            }
+            p.starts()
+                .iter()
+                .filter(|&&s| {
+                    let w = p.mask_at(s);
+                    g.mask() & w != 0 && g.mask() & w != w
+                })
+                .count() as u32
+                * p.mem_weight()
+        };
+        assert_eq!(contrib(Profile::P1g20gb), 2, "blocked only at index 4");
+        assert_eq!(contrib(Profile::P2g20gb), 2);
+        assert_eq!(contrib(Profile::P3g40gb), 8, "both anchors blocked");
+        assert_eq!(contrib(Profile::P4g40gb), 4);
+        assert_eq!(contrib(Profile::P1g10gb), 0);
+        assert_eq!(contrib(Profile::P7g80gb), 0, "ΔS guard");
+
+        assert_eq!(score_direct(g, &hw), 16, "paper: F(GPU 2) = 16");
+        // The literal any-overlap rule does NOT reproduce the paper's
+        // number — documented divergence (module docs):
+        // 4g@0 +4, 3g@{0,4} +8, 2g@{0,4} +4, 1g.20@{0,4} +4, 1g.10@{0,1,5} +3.
+        assert_eq!(score_direct_rule(g, &hw, OverlapRule::Any), 23);
+    }
+
+    /// Companion example: F(GPU 1) = 8, realized by {1g.10gb@5}
+    /// (3g.40gb@4 +4, 2g.20gb@4 +2, 1g.20gb@4 +2; the fully-occupied
+    /// 1g.10gb@5 window does not count).
+    #[test]
+    fn paper_worked_example_gpu1_f8() {
+        let g = GpuState::empty().with_placement(Profile::P1g10gb, 5);
+        assert_eq!(score_direct(g, &a100()), 8, "paper: F(GPU 1) = 8");
+        // GPU 2 is more fragmented than GPU 1 — the paper's conclusion.
+        let g2 = GpuState::empty()
+            .with_placement(Profile::P2g20gb, 0)
+            .with_placement(Profile::P1g10gb, 5);
+        assert!(score_direct(g2, &a100()) > score_direct(g, &a100()));
+    }
+
+    #[test]
+    fn misplaced_1g_on_empty_gpu() {
+        // Section V-B motivation: a single misplaced 1g.10gb at index 1
+        // blocks 4g.40gb@0 (+4), 3g.40gb@0 (+4), 2g.20gb@0 (+2),
+        // 1g.20gb@0 (+2); 7g.80gb is guarded out (size 8 > ΔS 7). F = 12.
+        let g = GpuState::empty().with_placement(Profile::P1g10gb, 1);
+        assert_eq!(score_direct(g, &a100()), 12);
+        assert!(!g.can_host(Profile::P4g40gb));
+    }
+
+    #[test]
+    fn well_placed_1g_scores_less() {
+        // The same profile at index 6 blocks only 3g.40gb@4 (+4) and
+        // 1g.20gb@6 (+2): F = 6 — the best-index intuition the MIG-aware
+        // baselines encode.
+        let g6 = GpuState::empty().with_placement(Profile::P1g10gb, 6);
+        assert_eq!(score_direct(g6, &a100()), 6);
+        let g1 = GpuState::empty().with_placement(Profile::P1g10gb, 1);
+        assert!(score_direct(g6, &a100()) < score_direct(g1, &a100()));
+    }
+
+    #[test]
+    fn perfectly_packed_partial_scores_zero() {
+        // Partial rule: a tightly packed GPU (4g@0 + 3g@4) wastes nothing.
+        let g = GpuState::empty()
+            .with_placement(Profile::P4g40gb, 0)
+            .with_placement(Profile::P3g40gb, 4);
+        assert!(g.is_full());
+        assert_eq!(score_direct(g, &a100()), 0);
+    }
+
+    #[test]
+    fn any_rule_dominates_partial() {
+        // Any-overlap counts a superset of windows, so F_any >= F_partial.
+        let hw = a100();
+        for occ in 0u16..=255 {
+            let g = GpuState::from_mask(occ as u8);
+            assert!(
+                score_direct_rule(g, &hw, OverlapRule::Any)
+                    >= score_direct_rule(g, &hw, OverlapRule::Partial),
+                "occ={occ:#010b}"
+            );
+        }
+    }
+
+    #[test]
+    fn score_monotone_under_restriction() {
+        // Removing profiles from the supported set can only lower F.
+        let full = a100();
+        let restricted = a100().with_profiles(&[Profile::P1g10gb, Profile::P1g20gb]);
+        for occ in 0u16..=255 {
+            let g = GpuState::from_mask(occ as u8);
+            for rule in [OverlapRule::Partial, OverlapRule::Any] {
+                assert!(
+                    score_direct_rule(g, &restricted, rule)
+                        <= score_direct_rule(g, &full, rule),
+                    "occ={occ:#010b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_score_value_a100() {
+        // 8·1 + 4·1 + 4·2 + 2·3 + 2·4 + 1·7 = 41.
+        assert_eq!(max_score(&a100()), 41);
+        for occ in 0u16..=255 {
+            let g = GpuState::from_mask(occ as u8);
+            assert!(score_direct_rule(g, &a100(), OverlapRule::Any) <= 41);
+        }
+    }
+
+    /// DESIGN.md §2.1 clarification: modeling 7g.80gb as occupying 8 slices
+    /// is indistinguishable from the literal Table I "7 slices" reading —
+    /// exhaustively, over all reachable allocation states, every other
+    /// profile sees the same feasibility vector.
+    #[test]
+    fn occupy7_vs_8_equivalence() {
+        fn reachable(seven_g_mask: u8) -> std::collections::BTreeSet<u8> {
+            let mut masks: Vec<u8> = Vec::new();
+            for p in ALL_PROFILES {
+                for &s in p.starts() {
+                    masks.push(if p == Profile::P7g80gb { seven_g_mask } else { p.mask_at(s) });
+                }
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            let mut stack = vec![0u8];
+            while let Some(occ) = stack.pop() {
+                if !seen.insert(occ) {
+                    continue;
+                }
+                for &m in &masks {
+                    if occ & m == 0 {
+                        stack.push(occ | m);
+                    }
+                }
+            }
+            seen
+        }
+        let with8 = reachable(0xFF);
+        let with7 = reachable(0x7F);
+        for occ in with7 {
+            let equiv = if occ == 0x7F { 0xFF } else { occ };
+            assert!(with8.contains(&equiv), "occ={occ:#010b}");
+            for p in ALL_PROFILES {
+                if p == Profile::P7g80gb {
+                    continue;
+                }
+                assert_eq!(
+                    GpuState::from_mask(occ).can_host(p),
+                    GpuState::from_mask(equiv).can_host(p),
+                    "profile {p} occ={occ:#010b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn direct_scorer_mean() {
+        let scorer = DirectScorer::new(a100());
+        let gpus = vec![
+            GpuState::empty(),
+            GpuState::empty().with_placement(Profile::P1g10gb, 1), // 12
+            GpuState::empty().with_placement(Profile::P1g10gb, 5), // 8
+        ];
+        let mean = scorer.mean_score(&gpus);
+        assert!((mean - 20.0 / 3.0).abs() < 1e-12, "{mean}");
+        assert_eq!(scorer.mean_score(&[]), 0.0);
+    }
+
+    #[test]
+    fn rule_parse() {
+        assert_eq!(OverlapRule::parse("partial"), Some(OverlapRule::Partial));
+        assert_eq!(OverlapRule::parse("ANY"), Some(OverlapRule::Any));
+        assert_eq!(OverlapRule::parse("literal"), Some(OverlapRule::Any));
+        assert_eq!(OverlapRule::parse("x"), None);
+        assert_eq!(OverlapRule::default().name(), "partial");
+    }
+}

@@ -1,0 +1,169 @@
+//! Lookup-table fragmentation engine — the production hot path.
+//!
+//! An 8-slice GPU has only 256 possible occupancy masks, so the entire
+//! Algorithm 1 computation is precomputed into a 256-entry table per
+//! (hardware profile set, overlap rule). A score becomes one indexed load;
+//! a dry-run ΔF (Algorithm 2 line 9-10) becomes two loads and a subtract.
+//! Tables are built once per hardware model and cached process-wide.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::score::{score_direct_rule, FragScorer, OverlapRule};
+use crate::mig::{GpuState, HardwareModel, Profile};
+
+/// Precomputed Algorithm 1 scores for all 256 occupancy masks.
+#[derive(Clone, Debug)]
+pub struct ScoreTable {
+    scores: Arc<[u16; 256]>,
+    rule: OverlapRule,
+    hw_name: String,
+}
+
+impl ScoreTable {
+    /// Build (or fetch from the process-wide cache) the table for a
+    /// hardware model under the default overlap rule.
+    pub fn for_hardware(hw: &HardwareModel) -> Self {
+        Self::for_hardware_rule(hw, OverlapRule::default())
+    }
+
+    /// Build (or fetch) the table for a hardware model and overlap rule.
+    pub fn for_hardware_rule(hw: &HardwareModel, rule: OverlapRule) -> Self {
+        static CACHE: OnceLock<Mutex<HashMap<(u8, OverlapRule), Arc<[u16; 256]>>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (hw.profile_set_key(), rule);
+        let scores = {
+            let mut guard = cache.lock().unwrap();
+            guard.entry(key).or_insert_with(|| Arc::new(build_table(hw, rule))).clone()
+        };
+        Self { scores, rule, hw_name: hw.name().to_string() }
+    }
+
+    #[inline]
+    pub fn score_mask(&self, occ: u8) -> u32 {
+        self.scores[occ as usize] as u32
+    }
+
+    /// ΔF of hypothetically placing `profile` at `start` on a GPU with the
+    /// given state (Algorithm 2 lines 8-10). The window must be free.
+    #[inline]
+    pub fn delta(&self, gpu: GpuState, profile: Profile, start: u8) -> i32 {
+        let occ = gpu.mask();
+        let mask = profile.mask_at(start);
+        debug_assert_eq!(occ & mask, 0, "delta() requires a free window");
+        self.scores[(occ | mask) as usize] as i32 - self.scores[occ as usize] as i32
+    }
+
+    pub fn rule(&self) -> OverlapRule {
+        self.rule
+    }
+
+    pub fn hardware_name(&self) -> &str {
+        &self.hw_name
+    }
+
+    /// Raw table access (consumed by the python cross-check export and the
+    /// runtime's numeric validation).
+    pub fn raw(&self) -> &[u16; 256] {
+        &self.scores
+    }
+}
+
+impl FragScorer for ScoreTable {
+    #[inline]
+    fn score(&self, gpu: GpuState) -> u32 {
+        self.score_mask(gpu.mask())
+    }
+}
+
+fn build_table(hw: &HardwareModel, rule: OverlapRule) -> [u16; 256] {
+    let mut t = [0u16; 256];
+    for occ in 0..=255u8 {
+        t[occ as usize] = score_direct_rule(GpuState::from_mask(occ), hw, rule) as u16;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ALL_PROFILES;
+
+    #[test]
+    fn table_matches_direct_exhaustively() {
+        for hw in [
+            HardwareModel::a100_80gb(),
+            HardwareModel::a100_40gb(),
+            HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb, Profile::P3g40gb]),
+        ] {
+            for rule in [OverlapRule::Partial, OverlapRule::Any] {
+                let table = ScoreTable::for_hardware_rule(&hw, rule);
+                for occ in 0u16..=255 {
+                    let g = GpuState::from_mask(occ as u8);
+                    assert_eq!(
+                        table.score(g),
+                        score_direct_rule(g, &hw, rule),
+                        "hw={} rule={:?} occ={occ:#010b}",
+                        hw.name(),
+                        rule
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_matches_recompute_exhaustively() {
+        let hw = HardwareModel::a100_80gb();
+        let table = ScoreTable::for_hardware(&hw);
+        for occ in 0u16..=255 {
+            let g = GpuState::from_mask(occ as u8);
+            for p in ALL_PROFILES {
+                for &s in p.starts() {
+                    if !g.fits_at(p, s) {
+                        continue;
+                    }
+                    let expect = score_direct_rule(g.with_placement(p, s), &hw, table.rule())
+                        as i32
+                        - score_direct_rule(g, &hw, table.rule()) as i32;
+                    assert_eq!(table.delta(g, p, s), expect, "occ={occ:#010b} {p}@{s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_shares_backing_storage() {
+        let hw = HardwareModel::a100_80gb();
+        let a = ScoreTable::for_hardware(&hw);
+        let b = ScoreTable::for_hardware(&hw);
+        assert!(Arc::ptr_eq(&a.scores, &b.scores));
+        // Different rule → different table.
+        let c = ScoreTable::for_hardware_rule(&hw, OverlapRule::Any);
+        assert!(!Arc::ptr_eq(&a.scores, &c.scores));
+    }
+
+    #[test]
+    fn paper_examples_via_table() {
+        let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
+        let gpu2 = GpuState::empty()
+            .with_placement(Profile::P2g20gb, 0)
+            .with_placement(Profile::P1g10gb, 5);
+        assert_eq!(table.score(gpu2), 16);
+        let gpu1 = GpuState::empty().with_placement(Profile::P1g10gb, 5);
+        assert_eq!(table.score(gpu1), 8);
+    }
+
+    #[test]
+    fn delta_can_be_negative() {
+        // Completing a partially-blocked window can REDUCE fragmentation:
+        // occ = {1g.10gb@5}: F = 8. Placing 1g.10gb@4 fills the other half
+        // of the 2-slice windows at anchor 4: new occ {4,5},
+        // F = 3g@4 partial (+4) → scores: windows 2g@4/1g.20@4 now fully
+        // occupied → F drops from 8 to 4: ΔF = -4.
+        let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
+        let g = GpuState::empty().with_placement(Profile::P1g10gb, 5);
+        assert_eq!(table.delta(g, Profile::P1g10gb, 4), -4);
+    }
+}

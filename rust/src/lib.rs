@@ -1,0 +1,72 @@
+//! # migsched — online fragmentation-aware scheduling for MIG-based GPU clouds
+//!
+//! A production-shaped reproduction of *"An Online Fragmentation-Aware GPU
+//! Scheduler for Multi-Tenant MIG-based Clouds"* (Zambianco, Fasol,
+//! Doriguzzi-Corin — CS.DC 2025).
+//!
+//! The paper's contribution is twofold and both parts are first-class here:
+//!
+//! 1. a **fragmentation score** for MIG-sliced GPUs (paper Algorithm 1) —
+//!    see [`frag`]: a GPU is *fragmented w.r.t. profile p* when enough
+//!    slices are free but no feasible placement index exists; the score
+//!    weighs every infeasible (profile, index) pair by the profile's
+//!    memory-slice footprint;
+//! 2. the **Minimum Fragmentation Increment (MFI)** scheduler (Algorithm 2)
+//!    — see [`sched::mfi`]: an online greedy policy that dry-runs every
+//!    feasible placement of the requested profile and commits the one with
+//!    the smallest fragmentation-score growth.
+//!
+//! Everything the paper's evaluation depends on is implemented as well:
+//! the MIG hardware model with Table I placement rules ([`mig`]), the
+//! baseline schedulers ([`sched`]), the Table II workload distributions and
+//! trace tooling ([`workload`]), the slot-based Monte Carlo simulator and
+//! the experiment/figure harness ([`sim`]), an online serving daemon with a
+//! JSON-over-HTTP API ([`server`]), and a PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas fragmentation program from the rust hot path
+//! ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use migsched::prelude::*;
+//!
+//! // A 4-GPU A100-80GB cluster and the MFI scheduler.
+//! let mut cluster = Cluster::new(HardwareModel::a100_80gb(), 4);
+//! let mut mfi = Mfi::new();
+//! let placement = mfi
+//!     .schedule(&mut cluster, Profile::P2g20gb)
+//!     .expect("empty cluster accepts everything");
+//! println!("placed at GPU {} index {}", placement.gpu, placement.index);
+//! ```
+//!
+//! ## Layering
+//!
+//! Python (JAX + Pallas) exists only at build time: `make artifacts` lowers
+//! the batched fragmentation program to HLO text under `artifacts/`, and
+//! [`runtime::FragEngine`] loads + compiles it once through PJRT. The serve
+//! and simulation request paths are pure rust.
+
+pub mod cluster;
+pub mod defrag;
+pub mod frag;
+pub mod mig;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::cluster::{Cluster, ClusterMetrics};
+    pub use crate::frag::{FragScorer, ScoreTable};
+    pub use crate::mig::{GpuState, HardwareModel, Placement, Profile};
+    pub use crate::sched::{
+        BestFit, FirstFit, IndexPolicy, Mfi, RandomFit, RoundRobin, Scheduler, SchedulerKind,
+        WorstFit,
+    };
+    pub use crate::sim::{Distribution, ExperimentConfig, SimConfig, SimEngine};
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{Workload, WorkloadGenerator, WorkloadId};
+}

@@ -1,0 +1,346 @@
+//! `migsched` — the command-line launcher for the fragmentation-aware MIG
+//! scheduling framework.
+//!
+//! Subcommands:
+//!
+//! * `sim`          — one Monte Carlo run, metrics to stdout
+//! * `sweep`        — full multi-seed experiment, prints Figs. 4/5/6
+//! * `figures`      — regenerate one paper figure (`--fig 4|5|6`)
+//! * `serve`        — run the online serving daemon (JSON over HTTP)
+//! * `inspect`      — hardware spec tables / Table II / candidate table
+//! * `trace-record` — generate + save a workload trace
+//! * `trace-replay` — replay a trace through a scheduler
+//!
+//! `migsched help` prints usage. Flags are `--key value` pairs.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use migsched::prelude::*;
+use migsched::sim::{fig4_report, fig5_report, fig6_report};
+use migsched::sim::experiment::run_sweep;
+use migsched::util::json::Json;
+use migsched::workload::Trace;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (command, flags) = match parse_args(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            print_usage();
+            return ExitCode::from(2);
+        }
+    };
+    let result = match command.as_str() {
+        "sim" => cmd_sim(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "figures" => cmd_figures(&flags),
+        "serve" => cmd_serve(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "trace-record" => cmd_trace_record(&flags),
+        "trace-replay" => cmd_trace_replay(&flags),
+        "help" | "--help" | "-h" | "" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "migsched — online fragmentation-aware GPU scheduler for MIG-based clouds
+
+USAGE:
+  migsched <command> [--flag value]...
+
+COMMANDS:
+  sim           one Monte Carlo run
+                  --scheduler MFI|FF|RR|BF-BI|WF-BI|...  (default MFI)
+                  --distribution uniform|skew-small|skew-big|bimodal
+                  --gpus N (default 100)   --seed N   --hardware a100-80gb
+  sweep         full experiment (paper setup: 500 runs x 5 schemes x 4 dists)
+                  --runs N   --gpus N   --quick (20 runs, M=20)
+                  --out DIR (CSV exports, default results/)
+  figures       regenerate a paper figure: --fig 4|5|6 [sweep flags]
+  serve         online serving daemon
+                  --addr 127.0.0.1:8080   --gpus N   --scheduler MFI
+  inspect       --hardware a100-80gb | --distributions | --candidates
+  trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
+  trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N]
+  help          this message
+
+Environment: MIGSCHED_LOG=info|debug|trace, MIGSCHED_ARTIFACTS=dir"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_args(args: &[String]) -> Result<(String, Flags), String> {
+    let mut flags = HashMap::new();
+    let command = args.first().cloned().unwrap_or_default();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // Boolean flags (no value or next is another flag).
+            if i + 1 >= args.len() || args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            return Err(format!("unexpected argument '{a}'"));
+        }
+    }
+    Ok((command, flags))
+}
+
+fn flag_usize(flags: &Flags, key: &str, default: usize) -> Result<usize, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} must be an integer, got '{v}'")),
+    }
+}
+
+fn flag_u64(flags: &Flags, key: &str, default: u64) -> Result<u64, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} must be an integer, got '{v}'")),
+    }
+}
+
+fn flag_scheduler(flags: &Flags) -> Result<SchedulerKind, String> {
+    let name = flags.get("scheduler").map(String::as_str).unwrap_or("MFI");
+    SchedulerKind::parse(name).ok_or_else(|| format!("unknown scheduler '{name}'"))
+}
+
+fn flag_distribution(flags: &Flags) -> Result<Distribution, String> {
+    let name = flags.get("distribution").map(String::as_str).unwrap_or("uniform");
+    Distribution::parse(name).ok_or_else(|| format!("unknown distribution '{name}'"))
+}
+
+fn flag_hardware(flags: &Flags) -> Result<HardwareModel, String> {
+    let name = flags.get("hardware").map(String::as_str).unwrap_or("a100-80gb");
+    HardwareModel::by_name(name).ok_or_else(|| format!("unknown hardware model '{name}'"))
+}
+
+fn cmd_sim(flags: &Flags) -> Result<(), String> {
+    let kind = flag_scheduler(flags)?;
+    let hw = flag_hardware(flags)?;
+    let config = SimConfig {
+        hardware: hw.clone(),
+        num_gpus: flag_usize(flags, "gpus", 100)?,
+        distribution: flag_distribution(flags)?,
+        checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
+        seed: flag_u64(flags, "seed", 1)?,
+        defrag_every: None,
+    };
+    let engine = SimEngine::new(config.clone());
+    let mut sched = kind.build(&hw);
+    let t0 = std::time::Instant::now();
+    let result = engine.run(&mut *sched);
+    let elapsed = t0.elapsed();
+    println!(
+        "scheme={} distribution={} M={} seed={} horizon={} ({} arrivals) [{elapsed:.2?}]",
+        result.scheme,
+        result.distribution,
+        config.num_gpus,
+        config.seed,
+        result.horizon,
+        result.arrived
+    );
+    let mut table = migsched::util::table::Table::new(&[
+        "demand", "accepted", "acceptance", "allocated", "utilization", "active GPUs", "frag",
+    ]);
+    for r in &result.records {
+        table.row(&[
+            format!("{:.0}%", r.demand * 100.0),
+            r.metrics.accepted_total.to_string(),
+            format!("{:.4}", r.metrics.acceptance_rate()),
+            r.metrics.allocated_workloads.to_string(),
+            format!("{:.4}", r.metrics.utilization),
+            r.metrics.active_gpus.to_string(),
+            format!("{:.2}", r.metrics.mean_frag_score),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "whole-run acceptance: {:.4}   time-averaged fragmentation score: {:.3}",
+        result.acceptance_rate(),
+        result.time_avg_frag
+    );
+    Ok(())
+}
+
+fn sweep_config(flags: &Flags) -> Result<ExperimentConfig, String> {
+    let mut config = if flags.contains_key("quick") {
+        ExperimentConfig::quick()
+    } else {
+        ExperimentConfig::paper()
+    };
+    config.hardware = flag_hardware(flags)?;
+    config.num_gpus = flag_usize(flags, "gpus", config.num_gpus)?;
+    config.runs = flag_usize(flags, "runs", config.runs)?;
+    config.threads = flag_usize(flags, "threads", 0)?;
+    config.base_seed = flag_u64(flags, "seed", config.base_seed)?;
+    if let Some(s) = flags.get("schemes") {
+        config.schemes = s
+            .split(',')
+            .map(|name| {
+                SchedulerKind::parse(name).ok_or_else(|| format!("unknown scheduler '{name}'"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    Ok(config)
+}
+
+fn cmd_sweep(flags: &Flags) -> Result<(), String> {
+    let config = sweep_config(flags)?;
+    eprintln!(
+        "running sweep: {} runs x {} schemes x {} distributions on M={} ...",
+        config.runs,
+        config.schemes.len(),
+        config.distributions.len(),
+        config.num_gpus
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_sweep(&config);
+    eprintln!("sweep finished in {:.2?}", t0.elapsed());
+    let out_dir = std::path::PathBuf::from(
+        flags.get("out").cloned().unwrap_or_else(|| "results".to_string()),
+    );
+    for report in [
+        fig4_report(&sweep, &Distribution::Uniform),
+        fig5_report(&sweep, 0.85),
+        fig6_report(&sweep),
+    ] {
+        println!("{}", report.render());
+        report.save_csvs(&out_dir).map_err(|e| format!("saving CSVs: {e}"))?;
+    }
+    println!("raw CSVs saved under {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_figures(flags: &Flags) -> Result<(), String> {
+    let fig = flags.get("fig").map(String::as_str).unwrap_or("4");
+    let config = sweep_config(flags)?;
+    let sweep = run_sweep(&config);
+    let report = match fig {
+        "4" => fig4_report(&sweep, &Distribution::Uniform),
+        "5" => fig5_report(&sweep, 0.85),
+        "6" => fig6_report(&sweep),
+        other => return Err(format!("unknown figure '{other}' (use 4, 5 or 6)")),
+    };
+    println!("{}", report.render());
+    let out_dir = std::path::PathBuf::from(
+        flags.get("out").cloned().unwrap_or_else(|| "results".to_string()),
+    );
+    report.save_csvs(&out_dir).map_err(|e| format!("saving CSVs: {e}"))?;
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<(), String> {
+    use migsched::server::{Daemon, DaemonConfig};
+    let config = DaemonConfig {
+        hardware: flag_hardware(flags)?,
+        num_gpus: flag_usize(flags, "gpus", 100)?,
+        scheduler: flag_scheduler(flags)?,
+        workers: flag_usize(flags, "workers", 8)?,
+    };
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".to_string());
+    let daemon = Daemon::new(config);
+    let handle = daemon.serve(&addr).map_err(|e| format!("binding {addr}: {e}"))?;
+    println!("migsched daemon listening on http://{}", handle.addr());
+    println!("try: curl -s http://{}/v1/stats", handle.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_inspect(flags: &Flags) -> Result<(), String> {
+    let mut shown = false;
+    if flags.contains_key("hardware") {
+        let hw = flag_hardware(flags)?;
+        println!("{}", hw.spec_table().render());
+        shown = true;
+    }
+    if flags.contains_key("distributions") {
+        println!("{}", migsched::workload::distribution::table_ii().render());
+        shown = true;
+    }
+    if flags.contains_key("candidates") {
+        println!("{}", migsched::mig::candidates_json().to_string_pretty());
+        shown = true;
+    }
+    if !shown {
+        return Err("inspect needs --hardware MODEL, --distributions or --candidates".into());
+    }
+    Ok(())
+}
+
+fn cmd_trace_record(flags: &Flags) -> Result<(), String> {
+    let out = flags.get("out").ok_or("trace-record requires --out FILE")?;
+    let hw = flag_hardware(flags)?;
+    let num_gpus = flag_usize(flags, "gpus", 100)?;
+    let distribution = flag_distribution(flags)?;
+    let seed = flag_u64(flags, "seed", 1)?;
+    let capacity = (num_gpus * hw.num_slices()) as u64;
+    let gen = WorkloadGenerator::new(distribution.clone());
+    let generated = gen.generate(capacity, &mut Rng::new(seed));
+    let trace = Trace::from_workloads(
+        &format!("distribution={} gpus={num_gpus} seed={seed}", distribution.name()),
+        capacity,
+        &generated.workloads,
+    );
+    trace.save(std::path::Path::new(out)).map_err(|e| format!("saving {out}: {e}"))?;
+    println!(
+        "wrote {} arrivals (horizon T={}) to {out}",
+        generated.workloads.len(),
+        generated.horizon
+    );
+    Ok(())
+}
+
+fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
+    let path = flags.get("trace").ok_or("trace-replay requires --trace FILE")?;
+    let trace = Trace::load(std::path::Path::new(path))?;
+    let kind = flag_scheduler(flags)?;
+    let hw = flag_hardware(flags)?;
+    let num_gpus = flag_usize(
+        flags,
+        "gpus",
+        (trace.capacity_slices as usize / hw.num_slices()).max(1),
+    )?;
+    let config = SimConfig {
+        hardware: hw.clone(),
+        num_gpus,
+        distribution: Distribution::Uniform, // informational only on replay
+        checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
+        seed: 0,
+        defrag_every: None,
+    };
+    let engine = SimEngine::new(config);
+    let mut sched = kind.build(&hw);
+    let result = engine.replay_trace(&mut *sched, &trace);
+    let summary = Json::obj()
+        .with("trace", path.as_str())
+        .with("scheme", result.scheme.as_str())
+        .with("accepted", result.accepted)
+        .with("arrived", result.arrived)
+        .with("acceptance_rate", result.acceptance_rate())
+        .with("time_avg_frag", result.time_avg_frag);
+    println!("{}", summary.to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,328 @@
+//! Per-GPU slice occupancy state machine.
+//!
+//! A GPU's MIG state is fully captured by which of its 8 memory-slice
+//! positions are occupied — a single `u8` bitmask. All placement rules
+//! (contiguity + Table I anchor constraints) are enforced here; higher
+//! layers (cluster, schedulers) never manipulate raw masks.
+
+use super::placement::Placement;
+use super::profile::{Profile, NUM_SLICES};
+
+/// Occupancy state of one GPU.
+///
+/// The zero value is an empty GPU. `Copy` on purpose: schedulers dry-run
+/// placements on copies, which is how the paper's Algorithm 2 "hypothetical
+/// allocation" is realized without undo logic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct GpuState {
+    occ: u8,
+}
+
+impl GpuState {
+    /// An empty GPU.
+    pub fn empty() -> Self {
+        Self { occ: 0 }
+    }
+
+    /// Rebuild from a raw occupancy bitmask (snapshots, tests, the XLA
+    /// engine's occupancy matrix).
+    pub fn from_mask(occ: u8) -> Self {
+        Self { occ }
+    }
+
+    /// Raw occupancy bitmask; bit `i` ⇔ slice `i` occupied.
+    #[inline]
+    pub fn mask(self) -> u8 {
+        self.occ
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.occ == 0
+    }
+
+    #[inline]
+    pub fn is_full(self) -> bool {
+        self.occ == 0xFF
+    }
+
+    /// Number of occupied slices.
+    #[inline]
+    pub fn used_slices(self) -> u8 {
+        self.occ.count_ones() as u8
+    }
+
+    /// `ΔS` in the paper: number of unused slices.
+    #[inline]
+    pub fn free_slices(self) -> u8 {
+        NUM_SLICES as u8 - self.used_slices()
+    }
+
+    #[inline]
+    pub fn slice_occupied(self, idx: u8) -> bool {
+        debug_assert!((idx as usize) < NUM_SLICES);
+        self.occ & (1 << idx) != 0
+    }
+
+    /// Can `profile` anchor at `start` right now? (window entirely free —
+    /// the paper's feasibility condition at one index).
+    #[inline]
+    pub fn fits_at(self, profile: Profile, start: u8) -> bool {
+        self.occ & profile.mask_at(start) == 0
+    }
+
+    /// Feasible anchor indexes for `profile`, ascending.
+    pub fn feasible_indexes(self, profile: Profile) -> impl Iterator<Item = u8> + 'static {
+        let occ = self.occ;
+        profile.starts().iter().copied().filter(move |&s| {
+            occ & ((((1u16 << profile.size()) - 1) << s) as u8) == 0
+        })
+    }
+
+    /// First feasible anchor, ascending index order (the "first available
+    /// index" policy the paper's MIG-agnostic baselines use).
+    pub fn first_feasible(self, profile: Profile) -> Option<u8> {
+        self.feasible_indexes(profile).next()
+    }
+
+    /// Last feasible anchor, descending index order (the "best index"
+    /// preference policy of the MIG-aware baselines; see
+    /// [`crate::sched::IndexPolicy`]).
+    pub fn best_feasible(self, profile: Profile) -> Option<u8> {
+        self.feasible_indexes(profile).last()
+    }
+
+    /// Whether any feasible placement exists.
+    #[inline]
+    pub fn can_host(self, profile: Profile) -> bool {
+        self.first_feasible(profile).is_some()
+    }
+
+    /// The paper's *fragmented w.r.t. p* predicate (Section V-B Definition):
+    /// enough free slices, yet no feasible anchor.
+    pub fn fragmented_for(self, profile: Profile) -> bool {
+        profile.size() <= self.free_slices() && !self.can_host(profile)
+    }
+
+    /// Hypothetical state after placing `profile` at `start` (dry-run).
+    /// Panics (debug) if the window is not free.
+    #[inline]
+    pub fn with_placement(self, profile: Profile, start: u8) -> GpuState {
+        let m = profile.mask_at(start);
+        debug_assert_eq!(self.occ & m, 0, "window not free: occ={:08b} mask={m:08b}", self.occ);
+        GpuState { occ: self.occ | m }
+    }
+
+    /// Commit a placement. Returns an error if the window is not entirely
+    /// free (double-allocation is a bug in the caller, but the server layer
+    /// surfaces it as a 409 rather than crashing the daemon).
+    pub fn place(&mut self, profile: Profile, start: u8) -> Result<(), PlacementError> {
+        if !profile.starts().contains(&start) {
+            return Err(PlacementError::InfeasibleIndex { profile, start });
+        }
+        let m = profile.mask_at(start);
+        if self.occ & m != 0 {
+            return Err(PlacementError::Occupied { profile, start, occ: self.occ });
+        }
+        self.occ |= m;
+        Ok(())
+    }
+
+    /// Release a previously committed placement. Errors if those slices are
+    /// not currently all occupied (double-free detection).
+    pub fn release(&mut self, profile: Profile, start: u8) -> Result<(), PlacementError> {
+        if !profile.starts().contains(&start) {
+            return Err(PlacementError::InfeasibleIndex { profile, start });
+        }
+        let m = profile.mask_at(start);
+        if self.occ & m != m {
+            return Err(PlacementError::NotAllocated { profile, start, occ: self.occ });
+        }
+        self.occ &= !m;
+        Ok(())
+    }
+
+    /// Render as an 8-character slice diagram, MSB = slice 7 … LSB = slice 0
+    /// reversed so slice 0 prints first: `"##..####"` means slices 0,1 and
+    /// 4..=7 occupied.
+    pub fn diagram(self) -> String {
+        (0..NUM_SLICES as u8)
+            .map(|i| if self.slice_occupied(i) { '#' } else { '.' })
+            .collect()
+    }
+}
+
+/// Errors from committing/releasing placements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementError {
+    /// The anchor index is not in the profile's Table I feasible set.
+    InfeasibleIndex { profile: Profile, start: u8 },
+    /// Some slice in the window is already occupied.
+    Occupied { profile: Profile, start: u8, occ: u8 },
+    /// Release of a window that is not fully allocated.
+    NotAllocated { profile: Profile, start: u8, occ: u8 },
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::InfeasibleIndex { profile, start } => {
+                write!(f, "index {start} is not a feasible anchor for {profile}")
+            }
+            PlacementError::Occupied { profile, start, occ } => {
+                write!(f, "cannot place {profile} at {start}: occupancy {occ:#010b}")
+            }
+            PlacementError::NotAllocated { profile, start, occ } => {
+                write!(f, "cannot release {profile} at {start}: occupancy {occ:#010b}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Apply a [`Placement`]'s (profile, index) part to a [`GpuState`]
+/// — convenience for cluster-level code.
+pub fn apply(gpu: &mut GpuState, p: &Placement) -> Result<(), PlacementError> {
+    gpu.place(p.profile, p.index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ALL_PROFILES;
+
+    #[test]
+    fn empty_gpu_hosts_everything() {
+        let g = GpuState::empty();
+        for p in ALL_PROFILES {
+            assert!(g.can_host(p), "{p}");
+            assert!(!g.fragmented_for(p), "{p}");
+            assert_eq!(g.first_feasible(p), Some(p.starts()[0]));
+            assert_eq!(g.best_feasible(p), Some(*p.starts().last().unwrap()));
+        }
+        assert_eq!(g.free_slices(), 8);
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn place_and_release_roundtrip() {
+        let mut g = GpuState::empty();
+        g.place(Profile::P3g40gb, 4).unwrap();
+        assert_eq!(g.mask(), 0b1111_0000);
+        assert_eq!(g.used_slices(), 4);
+        assert_eq!(g.diagram(), "....####");
+        g.release(Profile::P3g40gb, 4).unwrap();
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn rejects_infeasible_anchor() {
+        let mut g = GpuState::empty();
+        assert_eq!(
+            g.place(Profile::P4g40gb, 4),
+            Err(PlacementError::InfeasibleIndex { profile: Profile::P4g40gb, start: 4 })
+        );
+        assert_eq!(
+            g.place(Profile::P2g20gb, 1),
+            Err(PlacementError::InfeasibleIndex { profile: Profile::P2g20gb, start: 1 })
+        );
+    }
+
+    #[test]
+    fn rejects_overlap() {
+        let mut g = GpuState::empty();
+        g.place(Profile::P2g20gb, 2).unwrap();
+        let err = g.place(Profile::P3g40gb, 0).unwrap_err();
+        assert!(matches!(err, PlacementError::Occupied { .. }));
+        // But index 4 is free:
+        g.place(Profile::P3g40gb, 4).unwrap();
+        assert_eq!(g.mask(), 0b1111_1100);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut g = GpuState::empty();
+        g.place(Profile::P1g10gb, 3).unwrap();
+        g.release(Profile::P1g10gb, 3).unwrap();
+        assert!(matches!(
+            g.release(Profile::P1g10gb, 3),
+            Err(PlacementError::NotAllocated { .. })
+        ));
+    }
+
+    #[test]
+    fn paper_fig3a_fragmentation_predicate() {
+        // The paper's Fig. 3a GPU 2 narrative: slices occupied such that
+        // 1g.10gb/2g.20gb still fit but 3g.40gb/4g.40gb are fragmented.
+        // Construct: 1g.10gb at 1 and at 5 → occ = 0b0010_0010 (6 free).
+        let mut g = GpuState::empty();
+        g.place(Profile::P1g10gb, 1).unwrap();
+        g.place(Profile::P1g10gb, 5).unwrap();
+        assert!(g.can_host(Profile::P1g10gb));
+        assert!(g.can_host(Profile::P2g20gb));
+        assert!(g.fragmented_for(Profile::P3g40gb), "enough slices but both anchors blocked");
+        assert!(g.fragmented_for(Profile::P4g40gb));
+        // 7g.80gb is NOT fragmented: not enough free slices at all.
+        assert!(!g.fragmented_for(Profile::P7g80gb));
+    }
+
+    #[test]
+    fn misplaced_small_profile_blocks_big_one() {
+        // Paper Section V-B: "scheduling profile 1g.10gb on MIG slice at
+        // index 1 prevents the allocation of MIG profile 4g.40gb".
+        let g = GpuState::empty().with_placement(Profile::P1g10gb, 1);
+        assert!(!g.can_host(Profile::P4g40gb));
+        assert!(g.fragmented_for(Profile::P4g40gb));
+    }
+
+    #[test]
+    fn feasible_indexes_ordering() {
+        let mut g = GpuState::empty();
+        g.place(Profile::P2g20gb, 2).unwrap();
+        let idx: Vec<u8> = g.feasible_indexes(Profile::P1g20gb).collect();
+        assert_eq!(idx, vec![0, 4, 6]);
+        assert_eq!(g.first_feasible(Profile::P1g20gb), Some(0));
+        assert_eq!(g.best_feasible(Profile::P1g20gb), Some(6));
+    }
+
+    #[test]
+    fn full_gpu() {
+        let mut g = GpuState::empty();
+        g.place(Profile::P7g80gb, 0).unwrap();
+        assert!(g.is_full());
+        assert_eq!(g.free_slices(), 0);
+        for p in ALL_PROFILES {
+            assert!(!g.can_host(p));
+            assert!(!g.fragmented_for(p), "full GPU is saturated, not fragmented");
+        }
+    }
+
+    #[test]
+    fn seven_independent_1g_instances() {
+        // MIG's headline: up to seven isolated instances per GPU.
+        let mut g = GpuState::empty();
+        for i in 0..7 {
+            g.place(Profile::P1g10gb, i).unwrap();
+        }
+        assert_eq!(g.used_slices(), 7);
+        assert_eq!(g.free_slices(), 1); // slice 7 unreachable for 1g.10gb
+        for p in ALL_PROFILES {
+            assert!(!g.can_host(p));
+        }
+    }
+
+    #[test]
+    fn with_placement_is_pure() {
+        let g = GpuState::empty();
+        let h = g.with_placement(Profile::P4g40gb, 0);
+        assert!(g.is_empty());
+        assert_eq!(h.used_slices(), 4);
+    }
+
+    #[test]
+    fn diagram_rendering() {
+        let g = GpuState::from_mask(0b1100_0011);
+        assert_eq!(g.diagram(), "##....##");
+    }
+}

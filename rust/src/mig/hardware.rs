@@ -1,0 +1,206 @@
+//! Hardware models: which MIG-capable part the cluster is built from.
+//!
+//! All supported parts share the six canonical profile *shapes* of
+//! [`super::profile::Profile`]; a hardware model contributes naming (memory
+//! GB per slice), the enabled-shape set, and bookkeeping used by reports
+//! (total memory, SM count). The paper evaluates on A100-80GB; the rest are
+//! provided so downstream users can model their fleets, and the whole stack
+//! (scoring, scheduling, simulation) is generic over the model.
+
+use super::profile::{Profile, ALL_PROFILES, NUM_PROFILES, NUM_SLICES};
+
+/// A MIG-capable GPU part.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareModel {
+    name: String,
+    /// Memory GB represented by one memory slice (A100-80GB: 10).
+    mem_gb_per_slice: u32,
+    /// Which profile shapes the part supports (all six on every current
+    /// part; kept configurable for restricted fleet policies, e.g. an
+    /// operator disabling full-GPU rentals).
+    enabled: [bool; NUM_PROFILES],
+    /// Total streaming multiprocessors (reports only).
+    total_sms: u32,
+}
+
+impl HardwareModel {
+    /// NVIDIA A100 80GB — the paper's evaluation hardware.
+    pub fn a100_80gb() -> Self {
+        Self { name: "A100-80GB".into(), mem_gb_per_slice: 10, enabled: [true; 6], total_sms: 108 }
+    }
+
+    /// NVIDIA A100 40GB (same shapes, 5GB memory slices).
+    pub fn a100_40gb() -> Self {
+        Self { name: "A100-40GB".into(), mem_gb_per_slice: 5, enabled: [true; 6], total_sms: 108 }
+    }
+
+    /// NVIDIA H100 80GB.
+    pub fn h100_80gb() -> Self {
+        Self { name: "H100-80GB".into(), mem_gb_per_slice: 10, enabled: [true; 6], total_sms: 132 }
+    }
+
+    /// NVIDIA H200 141GB (slices of ~17.6GB, reported rounded to 18).
+    pub fn h200_141gb() -> Self {
+        Self { name: "H200-141GB".into(), mem_gb_per_slice: 18, enabled: [true; 6], total_sms: 132 }
+    }
+
+    /// Look up a model by name (CLI / config).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "a100-80gb" | "a100" => Some(Self::a100_80gb()),
+            "a100-40gb" => Some(Self::a100_40gb()),
+            "h100-80gb" | "h100" => Some(Self::h100_80gb()),
+            "h200-141gb" | "h200" => Some(Self::h200_141gb()),
+            _ => None,
+        }
+    }
+
+    /// Restrict the supported profile set (builder style).
+    pub fn with_profiles(mut self, profiles: &[Profile]) -> Self {
+        self.enabled = [false; NUM_PROFILES];
+        for p in profiles {
+            self.enabled[p.index()] = true;
+        }
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_slices(&self) -> usize {
+        NUM_SLICES
+    }
+
+    pub fn total_memory_gb(&self) -> u32 {
+        self.mem_gb_per_slice * NUM_SLICES as u32
+    }
+
+    pub fn total_sms(&self) -> u32 {
+        self.total_sms
+    }
+
+    #[inline]
+    pub fn supports(&self, p: Profile) -> bool {
+        self.enabled[p.index()]
+    }
+
+    /// Supported profiles in Table I order.
+    pub fn profiles(&self) -> impl Iterator<Item = Profile> + '_ {
+        ALL_PROFILES.iter().copied().filter(|p| self.supports(*p))
+    }
+
+    /// Bitmask over profile indexes of the enabled set; keys the
+    /// fragmentation lookup-table cache in [`crate::frag`].
+    pub fn profile_set_key(&self) -> u8 {
+        let mut key = 0u8;
+        for (i, &on) in self.enabled.iter().enumerate() {
+            if on {
+                key |= 1 << i;
+            }
+        }
+        key
+    }
+
+    /// Hardware-specific profile name, e.g. the 3g shape is `3g.40gb` on
+    /// A100-80GB but `3g.20gb` on A100-40GB.
+    pub fn profile_name(&self, p: Profile) -> String {
+        format!("{}g.{}gb", p.compute_slices(), p.mem_weight() * self.mem_gb_per_slice)
+    }
+
+    /// Parse a hardware-specific profile name.
+    pub fn parse_profile(&self, name: &str) -> Option<Profile> {
+        let name = name.trim();
+        self.profiles().find(|p| {
+            self.profile_name(*p).eq_ignore_ascii_case(name)
+                || p.canonical_name().eq_ignore_ascii_case(name)
+        })
+    }
+
+    /// Render the Table I equivalent for this part (used by
+    /// `migsched inspect --hardware`).
+    pub fn spec_table(&self) -> crate::util::table::Table {
+        let mut t = crate::util::table::Table::new(&[
+            "Profile", "Slices", "Compute", "Mem GB", "No. Instances", "Indexes",
+        ])
+        .title(&format!("MIG specifications for {} GPU", self.name));
+        for p in self.profiles() {
+            t.row(&[
+                self.profile_name(p),
+                p.size().to_string(),
+                p.compute_slices().to_string(),
+                (p.mem_weight() * self.mem_gb_per_slice).to_string(),
+                p.max_instances().to_string(),
+                format!("{:?}", p.starts()),
+            ]);
+        }
+        t
+    }
+}
+
+impl Default for HardwareModel {
+    fn default() -> Self {
+        Self::a100_80gb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_80gb_names_match_table_i() {
+        let hw = HardwareModel::a100_80gb();
+        for p in ALL_PROFILES {
+            assert_eq!(hw.profile_name(p), p.canonical_name(), "{p:?}");
+        }
+        assert_eq!(hw.total_memory_gb(), 80);
+    }
+
+    #[test]
+    fn a100_40gb_names() {
+        let hw = HardwareModel::a100_40gb();
+        assert_eq!(hw.profile_name(Profile::P7g80gb), "7g.40gb");
+        assert_eq!(hw.profile_name(Profile::P3g40gb), "3g.20gb");
+        assert_eq!(hw.profile_name(Profile::P1g10gb), "1g.5gb");
+        assert_eq!(hw.total_memory_gb(), 40);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(HardwareModel::by_name("a100").unwrap().name(), "A100-80GB");
+        assert_eq!(HardwareModel::by_name("A100_40GB").unwrap().name(), "A100-40GB");
+        assert_eq!(HardwareModel::by_name("h100").unwrap().name(), "H100-80GB");
+        assert!(HardwareModel::by_name("v100").is_none());
+    }
+
+    #[test]
+    fn restricted_profile_set() {
+        let hw = HardwareModel::a100_80gb()
+            .with_profiles(&[Profile::P1g10gb, Profile::P2g20gb]);
+        assert!(hw.supports(Profile::P1g10gb));
+        assert!(!hw.supports(Profile::P7g80gb));
+        assert_eq!(hw.profiles().count(), 2);
+        assert_eq!(
+            hw.profile_set_key(),
+            (1 << Profile::P1g10gb.index()) | (1 << Profile::P2g20gb.index())
+        );
+    }
+
+    #[test]
+    fn parse_profile_both_namings() {
+        let hw = HardwareModel::a100_40gb();
+        assert_eq!(hw.parse_profile("3g.20gb"), Some(Profile::P3g40gb));
+        assert_eq!(hw.parse_profile("3g.40gb"), Some(Profile::P3g40gb)); // canonical accepted
+        assert_eq!(hw.parse_profile("9g.90gb"), None);
+    }
+
+    #[test]
+    fn spec_table_renders_all_rows() {
+        let t = HardwareModel::a100_80gb().spec_table();
+        assert_eq!(t.n_rows(), 6);
+        let s = t.render();
+        assert!(s.contains("7g.80gb"));
+        assert!(s.contains("[0, 2, 4, 6]"));
+    }
+}

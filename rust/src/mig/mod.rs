@@ -1,0 +1,19 @@
+//! The MIG hardware model: profiles, placement rules and per-GPU slice
+//! state (paper Section III, Table I).
+//!
+//! NVIDIA MIG partitions a GPU into up to seven compute-isolated instances
+//! built from *slices*. Following the paper we model a GPU as `S = 8`
+//! memory-slice positions (indexes `0..=7`); a MIG profile occupies a
+//! *contiguous* run of slices anchored at one of a small set of feasible
+//! start indexes. The combination of contiguity and anchor constraints is
+//! exactly what makes MIG clusters fragment.
+
+pub mod gpu;
+pub mod hardware;
+pub mod placement;
+pub mod profile;
+
+pub use gpu::GpuState;
+pub use hardware::HardwareModel;
+pub use placement::{candidate_range, candidates_json, Candidate, Placement, CANDIDATES, NUM_CANDIDATES};
+pub use profile::{Profile, ALL_PROFILES, NUM_PROFILES, NUM_SLICES};

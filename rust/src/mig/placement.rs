@@ -1,0 +1,159 @@
+//! Placement descriptors and the static candidate table.
+//!
+//! A *candidate* is a (profile, anchor index) pair; there are exactly 18 of
+//! them on the 8-slice model (1+1+2+3+4+7, Table I). The candidate table is
+//! the shared vocabulary between the native fragmentation engine
+//! ([`crate::frag`]), the XLA-offloaded engine ([`crate::runtime`]) and the
+//! python build path (`python/compile/model.py` embeds the same table —
+//! asserted equal by `python/tests/test_model.py` against
+//! `artifacts/candidates.json` exported from this module).
+
+use super::profile::Profile;
+#[cfg(test)]
+use super::profile::ALL_PROFILES;
+
+/// A committed or proposed placement of a profile on a specific GPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Placement {
+    /// GPU id within the cluster.
+    pub gpu: usize,
+    /// The MIG profile shape placed.
+    pub profile: Profile,
+    /// Anchor slice index (member of `profile.starts()`).
+    pub index: u8,
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@gpu{}[{}]", self.profile, self.gpu, self.index)
+    }
+}
+
+/// One (profile, anchor) candidate with its precomputed occupancy mask.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub profile: Profile,
+    pub start: u8,
+    /// Bit `i` set ⇔ slice `i` covered by this placement.
+    pub mask: u8,
+}
+
+/// Total number of (profile, anchor) candidates.
+pub const NUM_CANDIDATES: usize = 18;
+
+/// The full candidate table in (Table I profile order, ascending anchor)
+/// order. This ordering is frozen: the XLA artifact's `[M, 18]` delta
+/// output is indexed by it.
+pub static CANDIDATES: [Candidate; NUM_CANDIDATES] = build_candidates();
+
+const fn build_candidates() -> [Candidate; NUM_CANDIDATES] {
+    // const-fn construction keeps the table in rodata and lets the python
+    // side be checked against an exported copy rather than re-derived.
+    const fn cand(profile: Profile, start: u8, size: u8) -> Candidate {
+        Candidate { profile, start, mask: (((1u16 << size) - 1) << start) as u8 }
+    }
+    [
+        cand(Profile::P7g80gb, 0, 8),
+        cand(Profile::P4g40gb, 0, 4),
+        cand(Profile::P3g40gb, 0, 4),
+        cand(Profile::P3g40gb, 4, 4),
+        cand(Profile::P2g20gb, 0, 2),
+        cand(Profile::P2g20gb, 2, 2),
+        cand(Profile::P2g20gb, 4, 2),
+        cand(Profile::P1g20gb, 0, 2),
+        cand(Profile::P1g20gb, 2, 2),
+        cand(Profile::P1g20gb, 4, 2),
+        cand(Profile::P1g20gb, 6, 2),
+        cand(Profile::P1g10gb, 0, 1),
+        cand(Profile::P1g10gb, 1, 1),
+        cand(Profile::P1g10gb, 2, 1),
+        cand(Profile::P1g10gb, 3, 1),
+        cand(Profile::P1g10gb, 4, 1),
+        cand(Profile::P1g10gb, 5, 1),
+        cand(Profile::P1g10gb, 6, 1),
+    ]
+}
+
+/// Candidate-table range `[lo, hi)` for one profile; the XLA delta vector
+/// for profile `p` lives at columns `candidate_range(p)`. Constant-time
+/// (the table layout is frozen; the partition is asserted in tests).
+#[inline]
+pub fn candidate_range(profile: Profile) -> std::ops::Range<usize> {
+    match profile {
+        Profile::P7g80gb => 0..1,
+        Profile::P4g40gb => 1..2,
+        Profile::P3g40gb => 2..4,
+        Profile::P2g20gb => 4..7,
+        Profile::P1g20gb => 7..11,
+        Profile::P1g10gb => 11..18,
+    }
+}
+
+/// Export the candidate table as JSON (consumed by `make artifacts` to
+/// cross-check the python copy, and by external tooling).
+pub fn candidates_json() -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        CANDIDATES
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .with("profile", c.profile.canonical_name())
+                    .with("profile_index", c.profile.index())
+                    .with("start", c.start as u64)
+                    .with("size", c.profile.size() as u64)
+                    .with("mem_weight", c.profile.mem_weight() as u64)
+                    .with("mask", c.mask as u64)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_profile_starts() {
+        let mut expect = Vec::new();
+        for p in ALL_PROFILES {
+            for &s in p.starts() {
+                expect.push((p, s, p.mask_at(s)));
+            }
+        }
+        assert_eq!(expect.len(), NUM_CANDIDATES);
+        for (c, (p, s, m)) in CANDIDATES.iter().zip(expect) {
+            assert_eq!((c.profile, c.start, c.mask), (p, s, m));
+        }
+    }
+
+    #[test]
+    fn ranges_partition_the_table() {
+        let mut covered = 0usize;
+        for p in ALL_PROFILES {
+            let r = candidate_range(p);
+            assert_eq!(r.start, covered, "{p}");
+            for i in r.clone() {
+                assert_eq!(CANDIDATES[i].profile, p);
+            }
+            covered = r.end;
+        }
+        assert_eq!(covered, NUM_CANDIDATES);
+    }
+
+    #[test]
+    fn json_export_is_complete() {
+        let j = candidates_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), NUM_CANDIDATES);
+        assert_eq!(arr[0].req_str("profile").unwrap(), "7g.80gb");
+        assert_eq!(arr[0].req_u64("mask").unwrap(), 255);
+        assert_eq!(arr[17].req_u64("mask").unwrap(), 1 << 6);
+    }
+
+    #[test]
+    fn placement_display() {
+        let pl = Placement { gpu: 3, profile: Profile::P2g20gb, index: 4 };
+        assert_eq!(pl.to_string(), "2g.20gb@gpu3[4]");
+    }
+}

@@ -1,0 +1,246 @@
+//! MIG profile shapes and the Table I placement-rule data.
+//!
+//! The six canonical MIG shapes (compute slices `g`, memory slices, feasible
+//! anchor indexes) are identical across MIG-capable parts — A100-40/80GB,
+//! H100-80GB, H200-141GB — only the per-slice memory size (and thus the
+//! profile *names*) changes; naming lives in [`super::hardware`].
+//!
+//! One deliberate clarification of the paper's Table I (see DESIGN.md §2.1):
+//! `7g.80gb` is modeled as occupying all **8** memory slices. Table I lists
+//! it as 7 slices, but slice 7 is not a feasible anchor for any profile and
+//! is only ever covered by windows that also cover slice 6, so no reachable
+//! allocation pattern distinguishes the two choices; occupy-8 keeps
+//! `ΔS = 0` for a saturated GPU. The equivalence is proven exhaustively in
+//! `frag::score::tests::occupy7_vs_8_equivalence`.
+
+/// Number of memory-slice positions per GPU.
+pub const NUM_SLICES: usize = 8;
+
+/// Number of MIG profile shapes.
+pub const NUM_PROFILES: usize = 6;
+
+/// A MIG profile shape, ordered as in the paper's Table I (largest first).
+///
+/// Names follow the A100-80GB convention `<g>g.<mem>gb`; on other hardware
+/// models the same shapes carry different memory sizes (see
+/// [`super::HardwareModel::profile_name`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Profile {
+    /// 7 compute slices, all 8 memory slices — the whole GPU.
+    P7g80gb = 0,
+    /// 4 compute slices, 4 memory slices; anchors only at index 0.
+    P4g40gb = 1,
+    /// 3 compute slices, 4 memory slices; anchors at 0 or 4.
+    P3g40gb = 2,
+    /// 2 compute slices, 2 memory slices; anchors at 0, 2 or 4.
+    P2g20gb = 3,
+    /// 1 compute slice, 2 memory slices; anchors at 0, 2, 4 or 6.
+    P1g20gb = 4,
+    /// 1 compute slice, 1 memory slice; anchors at 0..=6.
+    P1g10gb = 5,
+}
+
+/// All profiles in Table I order (largest → smallest).
+pub const ALL_PROFILES: [Profile; NUM_PROFILES] = [
+    Profile::P7g80gb,
+    Profile::P4g40gb,
+    Profile::P3g40gb,
+    Profile::P2g20gb,
+    Profile::P1g20gb,
+    Profile::P1g10gb,
+];
+
+/// Occupied (memory) slices per profile, Table I order.
+const SIZES: [u8; NUM_PROFILES] = [8, 4, 4, 2, 2, 1];
+
+/// Compute slices per profile (the `<g>` in the name), Table I order.
+const COMPUTE: [u8; NUM_PROFILES] = [7, 4, 3, 2, 1, 1];
+
+/// Feasible anchor indexes per profile (paper Table I "Index" column).
+const STARTS: [&[u8]; NUM_PROFILES] =
+    [&[0], &[0], &[0, 4], &[0, 2, 4], &[0, 2, 4, 6], &[0, 1, 2, 3, 4, 5, 6]];
+
+impl Profile {
+    /// Profile from its Table I row index.
+    pub fn from_index(idx: usize) -> Option<Profile> {
+        ALL_PROFILES.get(idx).copied()
+    }
+
+    /// Table I row index (also the array index used throughout).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Number of contiguous memory slices the profile occupies.
+    #[inline]
+    pub fn size(self) -> u8 {
+        SIZES[self as usize]
+    }
+
+    /// Number of compute (SM) slices.
+    #[inline]
+    pub fn compute_slices(self) -> u8 {
+        COMPUTE[self as usize]
+    }
+
+    /// Memory-slice count — the weight `r^mem` in the paper's Algorithm 1.
+    ///
+    /// Equal to [`Profile::size`] for every shape (memory slices are what a
+    /// profile occupies in the 8-position model); kept as a distinct
+    /// accessor because the two play different roles in the algorithm.
+    #[inline]
+    pub fn mem_weight(self) -> u32 {
+        SIZES[self as usize] as u32
+    }
+
+    /// Feasible anchor indexes `I_p`.
+    #[inline]
+    pub fn starts(self) -> &'static [u8] {
+        STARTS[self as usize]
+    }
+
+    /// Occupancy bitmask of a placement anchored at `start`.
+    ///
+    /// Bit `i` set ⇔ slice `i` occupied. Panics if `start` is not feasible
+    /// for the profile (all callers iterate `starts()`).
+    #[inline]
+    pub fn mask_at(self, start: u8) -> u8 {
+        debug_assert!(
+            self.starts().contains(&start),
+            "{self:?} cannot anchor at index {start}"
+        );
+        (((1u16 << self.size()) - 1) << start) as u8
+    }
+
+    /// Canonical A100-80GB profile name.
+    pub fn canonical_name(self) -> &'static str {
+        match self {
+            Profile::P7g80gb => "7g.80gb",
+            Profile::P4g40gb => "4g.40gb",
+            Profile::P3g40gb => "3g.40gb",
+            Profile::P2g20gb => "2g.20gb",
+            Profile::P1g20gb => "1g.20gb",
+            Profile::P1g10gb => "1g.10gb",
+        }
+    }
+
+    /// Parse a canonical A100-80GB name (as used in configs and the API).
+    pub fn parse(name: &str) -> Option<Profile> {
+        ALL_PROFILES
+            .iter()
+            .copied()
+            .find(|p| p.canonical_name().eq_ignore_ascii_case(name.trim()))
+    }
+
+    /// Maximum number of simultaneous instances of this profile on one GPU
+    /// (Table I "No. Instances" column).
+    pub fn max_instances(self) -> usize {
+        // All anchors of one profile are non-overlapping except 1g.10gb,
+        // whose 7 anchors are each a single distinct slice — so for every
+        // shape the anchor count IS the instance count.
+        self.starts().len()
+    }
+}
+
+impl std::fmt::Display for Profile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.canonical_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I, asserted verbatim (experiment id T1 in DESIGN.md §4).
+    #[test]
+    fn table_i_data() {
+        let rows: [(Profile, u8, usize, &[u8]); 6] = [
+            (Profile::P7g80gb, 8, 1, &[0]),
+            (Profile::P4g40gb, 4, 1, &[0]),
+            (Profile::P3g40gb, 4, 2, &[0, 4]),
+            (Profile::P2g20gb, 2, 3, &[0, 2, 4]),
+            (Profile::P1g20gb, 2, 4, &[0, 2, 4, 6]),
+            (Profile::P1g10gb, 1, 7, &[0, 1, 2, 3, 4, 5, 6]),
+        ];
+        for (p, size, n_inst, starts) in rows {
+            assert_eq!(p.size(), size, "{p}");
+            assert_eq!(p.max_instances(), n_inst, "{p}");
+            assert_eq!(p.starts(), starts, "{p}");
+        }
+    }
+
+    #[test]
+    fn compute_slices_match_names() {
+        assert_eq!(Profile::P7g80gb.compute_slices(), 7);
+        assert_eq!(Profile::P4g40gb.compute_slices(), 4);
+        assert_eq!(Profile::P3g40gb.compute_slices(), 3);
+        assert_eq!(Profile::P2g20gb.compute_slices(), 2);
+        assert_eq!(Profile::P1g20gb.compute_slices(), 1);
+        assert_eq!(Profile::P1g10gb.compute_slices(), 1);
+    }
+
+    #[test]
+    fn mem_weight_matches_paper_example_weights() {
+        // Pinned by the paper's worked example F(2) = 2 + 2 + 8 + 4 = 16.
+        assert_eq!(Profile::P1g20gb.mem_weight(), 2);
+        assert_eq!(Profile::P2g20gb.mem_weight(), 2);
+        assert_eq!(Profile::P3g40gb.mem_weight(), 4);
+        assert_eq!(Profile::P4g40gb.mem_weight(), 4);
+        assert_eq!(Profile::P1g10gb.mem_weight(), 1);
+        assert_eq!(Profile::P7g80gb.mem_weight(), 8);
+    }
+
+    #[test]
+    fn masks_are_contiguous_and_in_range() {
+        for p in ALL_PROFILES {
+            for &s in p.starts() {
+                let m = p.mask_at(s);
+                assert_eq!(m.count_ones() as u8, p.size(), "{p}@{s}");
+                // Contiguity: m >> trailing_zeros must be 2^size - 1.
+                let shifted = m >> m.trailing_zeros();
+                assert_eq!(shifted, ((1u16 << p.size()) - 1) as u8, "{p}@{s}");
+                // In range: start + size <= 8.
+                assert!(s + p.size() <= NUM_SLICES as u8, "{p}@{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn anchors_within_a_profile_do_not_overlap_except_none() {
+        // For each profile, anchors are spaced >= size apart, so the
+        // max_instances() derivation in the Table I test is justified.
+        for p in ALL_PROFILES {
+            let starts = p.starts();
+            for w in starts.windows(2) {
+                assert!(w[1] - w[0] >= p.size() || p == Profile::P1g10gb, "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for p in ALL_PROFILES {
+            assert_eq!(Profile::parse(p.canonical_name()), Some(p));
+            assert_eq!(Profile::parse(&p.canonical_name().to_uppercase()), Some(p));
+        }
+        assert_eq!(Profile::parse("5g.50gb"), None);
+        assert_eq!(Profile::parse(""), None);
+    }
+
+    #[test]
+    fn from_index_roundtrip() {
+        for (i, p) in ALL_PROFILES.iter().enumerate() {
+            assert_eq!(Profile::from_index(i), Some(*p));
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Profile::from_index(6), None);
+    }
+
+    #[test]
+    fn display_is_canonical() {
+        assert_eq!(format!("{}", Profile::P3g40gb), "3g.40gb");
+    }
+}

@@ -1,0 +1,16 @@
+//! The PJRT runtime bridge: load AOT-compiled HLO artifacts produced by the
+//! python build path (`make artifacts`) and execute them from rust.
+//!
+//! Python/JAX/Pallas never runs on the request path — `python/compile/aot.py`
+//! lowers the batched fragmentation program to **HLO text** once, and this
+//! module compiles it with the PJRT CPU client at startup. HLO text (not a
+//! serialized `HloModuleProto`) is the interchange format because jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `/opt/xla-example/README.md`
+//! and DESIGN.md §1).
+
+pub mod frag_engine;
+pub mod pjrt;
+
+pub use frag_engine::{FragBatch, FragEngine};
+pub use pjrt::{artifacts_dir, CompiledModule, PjrtRuntime};

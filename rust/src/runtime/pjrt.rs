@@ -1,0 +1,119 @@
+//! Thin wrapper over the `xla` crate's PJRT client: compile HLO-text
+//! artifacts once, execute many times.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Directory holding AOT artifacts; `MIGSCHED_ARTIFACTS` overrides the
+/// default `artifacts/` (relative to the working directory).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MIGSCHED_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // Prefer the crate root (where `make artifacts` writes) so tests
+        // and benches work from any cargo working directory.
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if manifest.exists() {
+            manifest
+        } else {
+            PathBuf::from("artifacts")
+        }
+    })
+}
+
+/// A PJRT client (CPU). Create once per process; compiling executables
+/// through it is cheap relative to client construction.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Connect to the CPU PJRT backend.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<CompiledModule> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModule { exe, source: path.to_path_buf() })
+    }
+}
+
+/// A compiled, executable HLO module.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    source: PathBuf,
+}
+
+impl CompiledModule {
+    pub fn source(&self) -> &Path {
+        &self.source
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the single device
+    /// output is a tuple literal; we decompose it for the caller.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outputs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.source.display()))?;
+        let first = outputs
+            .first()
+            .and_then(|replica| replica.first())
+            .context("executable produced no output buffer")?;
+        let literal = first.to_literal_sync().context("device → host transfer")?;
+        literal.to_tuple().context("decomposing output tuple")
+    }
+}
+
+/// Build an `f32` input literal of the given shape from host data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "shape {dims:?} needs {expected} elements, got {}",
+        data.len()
+    );
+    xla::Literal::vec1(data).reshape(dims).context("reshaping input literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("MIGSCHED_ARTIFACTS", "/tmp/custom-artifacts");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/custom-artifacts"));
+        std::env::remove_var("MIGSCHED_ARTIFACTS");
+        // Default ends with "artifacts".
+        assert!(artifacts_dir().to_string_lossy().ends_with("artifacts"));
+    }
+
+    #[test]
+    fn literal_f32_shape_checked() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+
+    // Client-dependent tests live in rust/tests/runtime_vs_native.rs so a
+    // missing artifacts/ directory (pre-`make artifacts`) skips cleanly.
+}

@@ -1,0 +1,146 @@
+//! Best Fit (BF-BI / BF-FI) — MIG-aware bin-packing paper baseline.
+//!
+//! Selects the single GPU minimizing remaining free slices after the
+//! allocation (the busiest GPU with capacity, ties by id) and applies the
+//! configured [`IndexPolicy`] there — BestIndex per Turkkan et al. [21]
+//! in the paper's "BF-BI", FirstIndex as the "BF-FI" ablation. Committing
+//! to the fit-selected GPU means a blocked anchor set rejects the request
+//! (the paper's Fig. 3a example) even when capacity exists elsewhere —
+//! the mechanism behind the paper's heavy-load acceptance gaps.
+//!
+//! `BF-*-R` are the retrying ablations (see `first_fit.rs`).
+
+use super::{IndexPolicy, Scheduler};
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+
+/// The BF baseline, parameterized by index policy.
+#[derive(Clone, Debug)]
+pub struct BestFit {
+    policy: IndexPolicy,
+    strict: bool,
+    name: String,
+}
+
+impl BestFit {
+    /// Paper Best Fit (single-GPU commit, the evaluation default).
+    pub fn new(policy: IndexPolicy) -> Self {
+        Self { policy, strict: true, name: format!("BF-{}", policy.tag()) }
+    }
+
+    /// Retrying variant — semantics ablation.
+    pub fn retry(policy: IndexPolicy) -> Self {
+        Self { policy, strict: false, name: format!("BF-{}-R", policy.tag()) }
+    }
+
+    pub fn policy(&self) -> IndexPolicy {
+        self.policy
+    }
+}
+
+impl Scheduler for BestFit {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        if self.strict {
+            // Min free slices among GPUs with capacity; ties → lowest id.
+            let gpu_id = cluster
+                .gpus()
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.free_slices() >= profile.size())
+                .min_by_key(|(id, g)| (g.free_slices(), *id))
+                .map(|(id, _)| id)?;
+            let index = self.policy.select(cluster.gpus()[gpu_id], profile)?;
+            return Some(Placement { gpu: gpu_id, profile, index });
+        }
+        let mut ranked: Vec<(u8, usize)> = cluster
+            .gpus()
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.free_slices() >= profile.size())
+            .map(|(id, g)| (g.free_slices(), id))
+            .collect();
+        ranked.sort_unstable();
+        for &(_, gpu_id) in &ranked {
+            if let Some(index) = self.policy.select(cluster.gpus()[gpu_id], profile) {
+                return Some(Placement { gpu: gpu_id, profile, index });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::HardwareModel;
+    use crate::workload::WorkloadId;
+
+    fn commit(c: &mut Cluster, id: u64, gpu: usize, profile: Profile, index: u8) {
+        c.allocate(WorkloadId(id), Placement { gpu, profile, index }).unwrap();
+    }
+
+    #[test]
+    fn prefers_busiest_gpu_with_capacity() {
+        let mut s = BestFit::new(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        commit(&mut c, 0, 1, Profile::P4g40gb, 0); // GPU 1: 4 free
+        commit(&mut c, 1, 2, Profile::P2g20gb, 0); // GPU 2: 6 free
+        let pl = s.schedule(&c, Profile::P3g40gb).unwrap();
+        assert_eq!(pl.gpu, 1, "GPU 1 has the least free slices that still fit");
+    }
+
+    #[test]
+    fn best_index_policy_applied() {
+        let mut s = BestFit::new(IndexPolicy::BestIndex);
+        let c = Cluster::new(HardwareModel::a100_80gb(), 1);
+        assert_eq!(s.schedule(&c, Profile::P1g10gb).unwrap().index, 6);
+        let mut s_fi = BestFit::new(IndexPolicy::FirstIndex);
+        assert_eq!(s_fi.schedule(&c, Profile::P1g10gb).unwrap().index, 0);
+    }
+
+    #[test]
+    fn fig3a_rejection() {
+        // Paper Fig. 3a: best-fit picks the fullest GPU whose remaining
+        // slices cannot anchor the profile → reject despite capacity
+        // elsewhere.
+        let mut s = BestFit::new(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        // GPU 0: occupied {0,1,5} (2g@0 + 1g.10@5) → 5 free, 3g infeasible.
+        commit(&mut c, 0, 0, Profile::P2g20gb, 0);
+        commit(&mut c, 1, 0, Profile::P1g10gb, 5);
+        // GPU 1 empty (8 free) → best-fit selects GPU 0 (5 < 8).
+        assert!(c.gpu(1).unwrap().can_host(Profile::P3g40gb));
+        assert_eq!(s.schedule(&c, Profile::P3g40gb), None);
+    }
+
+    #[test]
+    fn retry_variant_falls_through() {
+        let mut s = BestFit::retry(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        commit(&mut c, 0, 0, Profile::P2g20gb, 0);
+        commit(&mut c, 1, 0, Profile::P1g10gb, 5);
+        assert_eq!(s.schedule(&c, Profile::P3g40gb).unwrap().gpu, 1);
+        assert_eq!(s.name(), "BF-BI-R");
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_id() {
+        let mut s = BestFit::new(IndexPolicy::BestIndex);
+        let c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        assert_eq!(s.schedule(&c, Profile::P1g10gb).unwrap().gpu, 0);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(BestFit::new(IndexPolicy::BestIndex).name(), "BF-BI");
+        assert_eq!(BestFit::new(IndexPolicy::FirstIndex).name(), "BF-FI");
+        assert_eq!(BestFit::retry(IndexPolicy::FirstIndex).name(), "BF-FI-R");
+    }
+}

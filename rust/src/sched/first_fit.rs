@@ -1,0 +1,170 @@
+//! First Fit (FF) — MIG-agnostic paper baseline.
+//!
+//! Selects the first GPU (by id) with enough *free slices* — a pure
+//! resource-count check, blind to MIG anchor constraints — then tries the
+//! first available index on that GPU. If the chosen GPU's free slices are
+//! arranged infeasibly, the request is rejected even though another GPU
+//! might have hosted it: that is the fragmentation-agnostic failure mode
+//! the paper illustrates in Fig. 3, and it is what produces the paper's
+//! acceptance gaps (a baseline that retried every GPU would reject only
+//! truly-infeasible requests and the reported ~10% heavy-load gap could
+//! not exist).
+//!
+//! The retrying reading ships as the `FF-R` ablation so the semantics gap
+//! itself is measurable (`benches/ablation_index_policy.rs`).
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+
+/// The FF baseline.
+#[derive(Clone, Debug)]
+pub struct FirstFit {
+    strict: bool,
+    name: &'static str,
+}
+
+impl FirstFit {
+    /// Paper First Fit: commit to the first GPU passing the slice-count
+    /// check (the evaluation default).
+    pub fn new() -> Self {
+        Self { strict: true, name: "FF" }
+    }
+
+    /// Retrying variant (`FF-R`): falls through to the next GPU when the
+    /// resource-selected one has no feasible anchor — semantics ablation.
+    pub fn retry() -> Self {
+        Self { strict: false, name: "FF-R" }
+    }
+
+    pub fn is_strict(&self) -> bool {
+        self.strict
+    }
+}
+
+impl Default for FirstFit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for FirstFit {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        if self.strict {
+            // Commit to the first GPU passing the resource-count check.
+            let gpu_id = cluster
+                .gpus()
+                .iter()
+                .position(|g| g.free_slices() >= profile.size())?;
+            let index = cluster.gpus()[gpu_id].first_feasible(profile)?;
+            return Some(Placement { gpu: gpu_id, profile, index });
+        }
+        for (gpu_id, g) in cluster.gpus().iter().enumerate() {
+            if g.free_slices() < profile.size() {
+                continue;
+            }
+            if let Some(index) = g.first_feasible(profile) {
+                return Some(Placement { gpu: gpu_id, profile, index });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::{GpuState, HardwareModel};
+    use crate::workload::WorkloadId;
+
+    fn commit(c: &mut Cluster, id: u64, pl: Placement) {
+        c.allocate(WorkloadId(id), pl).unwrap();
+    }
+
+    #[test]
+    fn picks_first_gpu_first_index() {
+        let mut s = FirstFit::new();
+        let cluster = Cluster::new(HardwareModel::a100_80gb(), 3);
+        let pl = s.schedule(&cluster, Profile::P2g20gb).unwrap();
+        assert_eq!((pl.gpu, pl.index), (0, 0));
+    }
+
+    #[test]
+    fn skips_gpus_without_capacity() {
+        let mut s = FirstFit::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P7g80gb, index: 0 });
+        let pl = s.schedule(&c, Profile::P4g40gb).unwrap();
+        assert_eq!(pl.gpu, 1);
+    }
+
+    #[test]
+    fn fig3_pathology_rejects_despite_feasible_elsewhere() {
+        // GPU 0: a misplaced 1g.10gb@1 leaves 7 free slices but blocks
+        // 4g.40gb's only anchor. GPU 1 is empty. FF's resource check picks
+        // GPU 0 (7 >= 4) and fails on the index constraint → reject.
+        let mut s = FirstFit::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 });
+        assert!(c.gpu(1).unwrap().can_host(Profile::P4g40gb));
+        assert_eq!(s.schedule(&c, Profile::P4g40gb), None);
+    }
+
+    #[test]
+    fn retry_variant_falls_through() {
+        let mut s = FirstFit::retry();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 });
+        assert_eq!(s.schedule(&c, Profile::P4g40gb).unwrap().gpu, 1);
+        assert_eq!(s.name(), "FF-R");
+        assert!(!s.is_strict());
+    }
+
+    #[test]
+    fn first_index_is_ascending() {
+        let mut s = FirstFit::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 1);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P1g10gb, index: 0 });
+        let pl = s.schedule(&c, Profile::P1g10gb).unwrap();
+        assert_eq!(pl.index, 1);
+    }
+
+    #[test]
+    fn retry_ff_is_complete() {
+        // Retrying FF rejects only when NO GPU can host the profile.
+        let mut s = FirstFit::retry();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 });
+        commit(&mut c, 1, Placement { gpu: 1, profile: Profile::P1g10gb, index: 1 });
+        assert!(!c.can_host(Profile::P4g40gb));
+        assert_eq!(s.schedule(&c, Profile::P4g40gb), None);
+        assert!(c.can_host(Profile::P3g40gb));
+        assert_eq!(s.schedule(&c, Profile::P3g40gb).unwrap().index, 4);
+    }
+
+    #[test]
+    fn rejects_unsupported_profile() {
+        let hw = HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let mut s = FirstFit::new();
+        let c = Cluster::new(hw, 1);
+        assert_eq!(s.schedule(&c, Profile::P7g80gb), None);
+    }
+
+    #[test]
+    fn rejects_on_saturated_cluster() {
+        let mut s = FirstFit::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 1);
+        commit(&mut c, 0, Placement { gpu: 0, profile: Profile::P7g80gb, index: 0 });
+        assert_eq!(c.gpus()[0], GpuState::from_mask(0xFF));
+        for p in crate::mig::profile::ALL_PROFILES {
+            assert_eq!(s.schedule(&c, p), None, "{p}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Anchor-index selection policies.
+//!
+//! The paper distinguishes MIG-agnostic baselines (first available index)
+//! from MIG-aware ones, which adopt the preference policy of Turkkan et
+//! al. [21]: place profiles on indexes that do not restrict profiles with
+//! fewer anchoring options — e.g. a 1g.10gb goes to index 6 rather than 0
+//! whenever possible, keeping index 0 free for a 4g.40gb which can anchor
+//! *only* there.
+//!
+//! Because every profile's feasible index set is sorted ascending and the
+//! scarcest anchors are the low ones (index 0 serves 7g/4g/3g/2g/1g…),
+//! the [21] preference is realized exactly by scanning anchors in
+//! *descending* order: 1g.10gb tries 6,5,…,0; 1g.20gb tries 6,4,2,0;
+//! 3g.40gb tries 4 before 0; 4g/7g have a single anchor either way.
+
+use crate::mig::{GpuState, Profile};
+
+/// How a scheduler picks an anchor among the feasible ones on a chosen GPU.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum IndexPolicy {
+    /// First (lowest) feasible index — the MIG-agnostic baselines.
+    FirstIndex,
+    /// Highest feasible index — the MIG-aware "best index" policy of [21].
+    #[default]
+    BestIndex,
+}
+
+impl IndexPolicy {
+    /// Select an anchor for `profile` on `gpu` under this policy.
+    #[inline]
+    pub fn select(self, gpu: GpuState, profile: Profile) -> Option<u8> {
+        match self {
+            IndexPolicy::FirstIndex => gpu.first_feasible(profile),
+            IndexPolicy::BestIndex => gpu.best_feasible(profile),
+        }
+    }
+
+    /// Short suffix used in scheme names ("FI" / "BI").
+    pub fn tag(self) -> &'static str {
+        match self {
+            IndexPolicy::FirstIndex => "FI",
+            IndexPolicy::BestIndex => "BI",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_index_reserves_low_anchors() {
+        let g = GpuState::empty();
+        // The paper's example: 1g.10gb goes to 6 instead of 0.
+        assert_eq!(IndexPolicy::BestIndex.select(g, Profile::P1g10gb), Some(6));
+        assert_eq!(IndexPolicy::FirstIndex.select(g, Profile::P1g10gb), Some(0));
+        // ... thereby keeping 4g.40gb's unique anchor available.
+        let g2 = g.with_placement(Profile::P1g10gb, 6);
+        assert!(g2.can_host(Profile::P4g40gb));
+        let g3 = g.with_placement(Profile::P1g10gb, 0);
+        assert!(!g3.can_host(Profile::P4g40gb));
+    }
+
+    #[test]
+    fn single_anchor_profiles_unaffected() {
+        let g = GpuState::empty();
+        for p in [Profile::P7g80gb, Profile::P4g40gb] {
+            assert_eq!(IndexPolicy::BestIndex.select(g, p), Some(0));
+            assert_eq!(IndexPolicy::FirstIndex.select(g, p), Some(0));
+        }
+    }
+
+    #[test]
+    fn respects_occupancy() {
+        let g = GpuState::empty().with_placement(Profile::P1g20gb, 6);
+        assert_eq!(IndexPolicy::BestIndex.select(g, Profile::P1g20gb), Some(4));
+        assert_eq!(IndexPolicy::FirstIndex.select(g, Profile::P1g20gb), Some(0));
+        let full = GpuState::from_mask(0xFF);
+        for p in crate::mig::profile::ALL_PROFILES {
+            assert_eq!(IndexPolicy::BestIndex.select(full, p), None);
+            assert_eq!(IndexPolicy::FirstIndex.select(full, p), None);
+        }
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(IndexPolicy::FirstIndex.tag(), "FI");
+        assert_eq!(IndexPolicy::BestIndex.tag(), "BI");
+    }
+}

@@ -1,0 +1,90 @@
+//! MFI with the ΔF evaluation offloaded to the AOT-compiled XLA program —
+//! the full three-layer composition (rust coordinator → HLO artifact →
+//! Pallas kernel) on the scheduling hot path.
+//!
+//! Semantically identical to [`super::Mfi`]: the artifact computes the same
+//! Algorithm 1 scores/deltas (from the same frozen candidate table), and
+//! the argmin tie-breaking here mirrors the native path (lowest ΔF, then
+//! lowest GPU id, then lowest anchor). `rust/tests/runtime_vs_native.rs`
+//! asserts decision-for-decision equality on random clusters.
+//!
+//! When is this worth it? The native engine is a table lookup — far faster
+//! at M=100 (see `benches/xla_offload.rs`). The XLA path exists to (a)
+//! prove the AOT pipeline end-to-end, and (b) model deployments where the
+//! scoring function is a *learned* or much heavier model that genuinely
+//! needs an accelerator — the paper's O(k·M) dry-run loop is exactly the
+//! shape that batches onto one.
+
+use anyhow::Result;
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::mig::{candidate_range, Placement, Profile, CANDIDATES};
+use crate::runtime::{FragEngine, PjrtRuntime};
+
+/// MFI scheduling via the PJRT-compiled fragmentation program.
+pub struct MfiXla {
+    engine: FragEngine,
+}
+
+impl MfiXla {
+    /// Load the default artifact (`artifacts/frag.hlo.txt`).
+    pub fn load_default(runtime: &PjrtRuntime) -> Result<Self> {
+        Ok(Self { engine: FragEngine::load_default(runtime)? })
+    }
+
+    pub fn from_engine(engine: FragEngine) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &FragEngine {
+        &self.engine
+    }
+
+    /// Fallible scheduling (PJRT execution can fail); the `Scheduler` impl
+    /// maps errors to rejection after logging.
+    pub fn try_schedule(
+        &mut self,
+        cluster: &Cluster,
+        profile: Profile,
+    ) -> Result<Option<Placement>> {
+        if !cluster.hardware().supports(profile) {
+            return Ok(None);
+        }
+        let masks = cluster.occupancy_masks();
+        let batch = self.engine.evaluate(&masks)?;
+        let range = candidate_range(profile);
+        let mut best: Option<(f32, usize, usize)> = None; // (delta, gpu, cand)
+        for gpu in 0..masks.len() {
+            for c in range.clone() {
+                if !batch.feasible[gpu][c] {
+                    continue;
+                }
+                let d = batch.deltas[gpu][c];
+                if best.is_none() || d < best.unwrap().0 {
+                    best = Some((d, gpu, c));
+                }
+            }
+        }
+        Ok(best.map(|(_, gpu, c)| Placement { gpu, profile, index: CANDIDATES[c].start }))
+    }
+}
+
+impl Scheduler for MfiXla {
+    fn name(&self) -> &str {
+        "MFI-XLA"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        match self.try_schedule(cluster, profile) {
+            Ok(p) => p,
+            Err(e) => {
+                crate::log_error!("MFI-XLA evaluation failed, rejecting request: {e:#}");
+                None
+            }
+        }
+    }
+}
+
+// Integration coverage (artifact-dependent) lives in
+// rust/tests/runtime_vs_native.rs.

@@ -1,0 +1,270 @@
+//! Scheduling policies: the paper's MFI algorithm and every baseline it is
+//! evaluated against (Section VI), behind a single [`Scheduler`] trait.
+//!
+//! Schedulers are *proposers*: `schedule` inspects the read-only cluster
+//! state and returns a placement (or `None` = reject); the owning loop
+//! commits it via [`crate::cluster::Cluster::allocate`]. Internal policy
+//! state (the round-robin cursor, score tables, the PJRT executable) lives
+//! inside the scheduler, which is why `schedule` takes `&mut self`.
+//!
+//! | scheme | MIG-awareness | GPU choice | index choice |
+//! |--------|---------------|------------|--------------|
+//! | [`FirstFit`]   | agnostic | first with a feasible index | first |
+//! | [`RoundRobin`] | agnostic | rotating cursor             | first |
+//! | [`BestFit`]    | aware    | min free slices after alloc | best (policy) |
+//! | [`WorstFit`]   | aware    | max free slices after alloc | best (policy) |
+//! | [`RandomFit`]  | agnostic | uniform among feasible      | uniform |
+//! | [`Mfi`]        | aware    | argmin ΔF (Algorithm 2)     | argmin ΔF |
+//! | [`MfiXla`]     | aware    | argmin ΔF via PJRT artifact | argmin ΔF |
+
+pub mod best_fit;
+pub mod first_fit;
+pub mod index_policy;
+pub mod mfi;
+pub mod mfi_xla;
+pub mod random;
+pub mod round_robin;
+pub mod worst_fit;
+
+pub use best_fit::BestFit;
+pub use first_fit::FirstFit;
+pub use index_policy::IndexPolicy;
+pub use mfi::Mfi;
+pub use mfi_xla::MfiXla;
+pub use random::RandomFit;
+pub use round_robin::RoundRobin;
+pub use worst_fit::WorstFit;
+
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+
+/// A scheduling policy: propose a placement for one profile request.
+pub trait Scheduler {
+    /// Stable name used in reports/CSV (e.g. `"MFI"`, `"BF-BI"`).
+    fn name(&self) -> &str;
+
+    /// Propose a placement for `profile` on `cluster`, or `None` to reject.
+    /// Must NOT mutate the cluster (the caller commits).
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement>;
+
+    /// Reset internal policy state between simulation runs (cursors, RNG).
+    fn reset(&mut self) {}
+}
+
+/// Constructible scheduler kinds (CLI/config/benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// First Fit (MIG-agnostic) — paper baseline "FF".
+    Ff,
+    /// Round Robin (MIG-agnostic) — paper baseline "RR".
+    Rr,
+    /// Best Fit + Best Index (MIG-aware) — paper baseline "BF-BI".
+    BfBi,
+    /// Best Fit + First Index — index-policy ablation (not in the paper).
+    BfFi,
+    /// Worst Fit + Best Index (MIG-aware) — paper baseline "WF-BI".
+    WfBi,
+    /// Worst Fit + First Index — index-policy ablation (not in the paper).
+    WfFi,
+    /// Minimum Fragmentation Increment — the paper's contribution.
+    Mfi,
+    /// Random feasible placement — sanity floor (not in the paper).
+    Random,
+    /// Retrying FF: falls through to the next GPU when the
+    /// resource-selected one has blocked anchors — semantics ablation
+    /// quantifying how much of the paper's gap is Fig. 3 commitment.
+    FfRetry,
+    /// Retrying RR — semantics ablation.
+    RrRetry,
+    /// Retrying BF-BI — semantics ablation.
+    BfBiRetry,
+    /// Retrying WF-BI — semantics ablation.
+    WfBiRetry,
+}
+
+impl SchedulerKind {
+    /// The five schemes of the paper's evaluation, in figure-legend order.
+    pub fn paper_set() -> [SchedulerKind; 5] {
+        [
+            SchedulerKind::Mfi,
+            SchedulerKind::Ff,
+            SchedulerKind::Rr,
+            SchedulerKind::BfBi,
+            SchedulerKind::WfBi,
+        ]
+    }
+
+    /// Everything, for exhaustive sweeps/ablations.
+    pub fn all() -> [SchedulerKind; 12] {
+        [
+            SchedulerKind::Mfi,
+            SchedulerKind::Ff,
+            SchedulerKind::Rr,
+            SchedulerKind::BfBi,
+            SchedulerKind::BfFi,
+            SchedulerKind::WfBi,
+            SchedulerKind::WfFi,
+            SchedulerKind::Random,
+            SchedulerKind::FfRetry,
+            SchedulerKind::RrRetry,
+            SchedulerKind::BfBiRetry,
+            SchedulerKind::WfBiRetry,
+        ]
+    }
+
+    /// Does the scheme reject only when no feasible placement exists
+    /// cluster-wide? The paper baselines commit to a single
+    /// resource-selected GPU (Fig. 3) and are deliberately incomplete;
+    /// MFI, RandomFit and the `-R` ablations are complete.
+    pub fn is_complete(self) -> bool {
+        matches!(
+            self,
+            SchedulerKind::Mfi
+                | SchedulerKind::Random
+                | SchedulerKind::FfRetry
+                | SchedulerKind::RrRetry
+                | SchedulerKind::BfBiRetry
+                | SchedulerKind::WfBiRetry
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Ff => "FF",
+            SchedulerKind::Rr => "RR",
+            SchedulerKind::BfBi => "BF-BI",
+            SchedulerKind::BfFi => "BF-FI",
+            SchedulerKind::WfBi => "WF-BI",
+            SchedulerKind::WfFi => "WF-FI",
+            SchedulerKind::Mfi => "MFI",
+            SchedulerKind::Random => "RANDOM",
+            SchedulerKind::FfRetry => "FF-R",
+            SchedulerKind::RrRetry => "RR-R",
+            SchedulerKind::BfBiRetry => "BF-BI-R",
+            SchedulerKind::WfBiRetry => "WF-BI-R",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_uppercase().replace('_', "-").as_str() {
+            "FF" | "FIRST-FIT" => Some(SchedulerKind::Ff),
+            "RR" | "ROUND-ROBIN" => Some(SchedulerKind::Rr),
+            "BF-BI" | "BEST-FIT" => Some(SchedulerKind::BfBi),
+            "BF-FI" => Some(SchedulerKind::BfFi),
+            "WF-BI" | "WORST-FIT" => Some(SchedulerKind::WfBi),
+            "WF-FI" => Some(SchedulerKind::WfFi),
+            "MFI" => Some(SchedulerKind::Mfi),
+            "RANDOM" | "RAND" => Some(SchedulerKind::Random),
+            "FF-R" => Some(SchedulerKind::FfRetry),
+            "RR-R" => Some(SchedulerKind::RrRetry),
+            "BF-BI-R" => Some(SchedulerKind::BfBiRetry),
+            "WF-BI-R" => Some(SchedulerKind::WfBiRetry),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the scheduler for a hardware model.
+    pub fn build(self, hw: &crate::mig::HardwareModel) -> Box<dyn Scheduler + Send> {
+        match self {
+            SchedulerKind::Ff => Box::new(FirstFit::new()),
+            SchedulerKind::Rr => Box::new(RoundRobin::new()),
+            SchedulerKind::BfBi => Box::new(BestFit::new(IndexPolicy::BestIndex)),
+            SchedulerKind::BfFi => Box::new(BestFit::new(IndexPolicy::FirstIndex)),
+            SchedulerKind::WfBi => Box::new(WorstFit::new(IndexPolicy::BestIndex)),
+            SchedulerKind::WfFi => Box::new(WorstFit::new(IndexPolicy::FirstIndex)),
+            SchedulerKind::Mfi => Box::new(Mfi::for_hardware(hw)),
+            SchedulerKind::Random => Box::new(RandomFit::new(0x5EED)),
+            SchedulerKind::FfRetry => Box::new(FirstFit::retry()),
+            SchedulerKind::RrRetry => Box::new(RoundRobin::retry()),
+            SchedulerKind::BfBiRetry => Box::new(BestFit::retry(IndexPolicy::BestIndex)),
+            SchedulerKind::WfBiRetry => Box::new(WorstFit::retry(IndexPolicy::BestIndex)),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::HardwareModel;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in SchedulerKind::all() {
+            assert_eq!(SchedulerKind::parse(k.name()), Some(k), "{k}");
+        }
+        assert_eq!(SchedulerKind::parse("first_fit"), Some(SchedulerKind::Ff));
+        assert_eq!(SchedulerKind::parse("mfi"), Some(SchedulerKind::Mfi));
+        assert_eq!(SchedulerKind::parse("slurm"), None);
+    }
+
+    #[test]
+    fn build_produces_named_schedulers() {
+        let hw = HardwareModel::a100_80gb();
+        for k in SchedulerKind::all() {
+            let s = k.build(&hw);
+            assert_eq!(s.name(), k.name());
+        }
+    }
+
+    #[test]
+    fn paper_set_is_five_schemes() {
+        let set = SchedulerKind::paper_set();
+        assert_eq!(set.len(), 5);
+        assert!(set.contains(&SchedulerKind::Mfi));
+    }
+
+    /// Shared behavioural contract: every scheduler only proposes valid
+    /// (free-window, feasible-anchor) placements and preserves the
+    /// requested profile. Strict variants MAY reject feasible requests —
+    /// that is precisely the paper's Fig. 3 pathology (committing to one
+    /// GPU chosen on resource counts and failing on its index
+    /// constraints) — every other scheme must reject only when no
+    /// feasible placement exists cluster-wide.
+    #[test]
+    fn all_schedulers_respect_feasibility() {
+        use crate::cluster::Cluster;
+        use crate::util::rng::Rng;
+        use crate::workload::WorkloadId;
+        let hw = HardwareModel::a100_80gb();
+        let mut rng = Rng::new(77);
+        for k in SchedulerKind::all() {
+            let complete = k.is_complete();
+            let mut s = k.build(&hw);
+            let mut cluster = Cluster::new(hw.clone(), 4);
+            let mut next_id = 0u64;
+            for step in 0..600 {
+                let p = *rng.choose(&crate::mig::profile::ALL_PROFILES);
+                match s.schedule(&cluster, p) {
+                    Some(pl) => {
+                        assert_eq!(pl.profile, p, "{k} changed the profile");
+                        cluster
+                            .allocate(WorkloadId(next_id), pl)
+                            .unwrap_or_else(|e| panic!("{k} proposed invalid {pl}: {e}"));
+                        next_id += 1;
+                    }
+                    None => {
+                        if complete {
+                            assert!(
+                                !cluster.can_host(p),
+                                "{k} rejected {p} at step {step} though feasible"
+                            );
+                        }
+                    }
+                }
+                // Random releases keep the cluster in flux.
+                if rng.chance(0.35) && cluster.allocated_workloads() > 0 {
+                    let ids: Vec<WorkloadId> =
+                        cluster.allocations().map(|(id, _)| id).collect();
+                    let id = *rng.choose(&ids);
+                    cluster.release(id).unwrap();
+                }
+            }
+        }
+    }
+}

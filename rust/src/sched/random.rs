@@ -1,0 +1,101 @@
+//! Random feasible placement — a sanity floor for the evaluation.
+//!
+//! Not a paper baseline: it exists to calibrate how much of each scheme's
+//! performance is real policy rather than luck. It is *feasibility-aware*
+//! (uniform over all feasible (GPU, anchor) pairs, rejecting only when
+//! none exists), so it bounds what "no policy at all" achieves.
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+use crate::util::rng::Rng;
+
+/// Uniform-random feasible placement.
+#[derive(Clone, Debug)]
+pub struct RandomFit {
+    rng: Rng,
+    seed: u64,
+}
+
+impl RandomFit {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+}
+
+impl Scheduler for RandomFit {
+    fn name(&self) -> &str {
+        "RANDOM"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        // Reservoir-sample uniformly over feasible placements in one pass.
+        let mut chosen: Option<Placement> = None;
+        let mut count = 0u64;
+        for (gpu_id, g) in cluster.gpus().iter().enumerate() {
+            if g.free_slices() < profile.size() {
+                continue;
+            }
+            for idx in g.feasible_indexes(profile) {
+                count += 1;
+                if self.rng.below(count) == 0 {
+                    chosen = Some(Placement { gpu: gpu_id, profile, index: idx });
+                }
+            }
+        }
+        chosen
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::HardwareModel;
+    use crate::workload::WorkloadId;
+
+    #[test]
+    fn uniform_over_feasible_placements() {
+        let mut s = RandomFit::new(1);
+        let c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        // 2 GPUs × 3 anchors for 2g.20gb = 6 equally likely placements.
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..12_000 {
+            let pl = s.schedule(&c, Profile::P2g20gb).unwrap();
+            *counts.entry((pl.gpu, pl.index)).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 6);
+        for (&k, &v) in &counts {
+            let freq = v as f64 / 12_000.0;
+            assert!((freq - 1.0 / 6.0).abs() < 0.02, "{k:?}: {freq}");
+        }
+    }
+
+    #[test]
+    fn rejects_only_when_truly_infeasible() {
+        let mut s = RandomFit::new(2);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 1);
+        c.allocate(WorkloadId(0), Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 })
+            .unwrap();
+        // 4g is infeasible on the single GPU → reject.
+        assert_eq!(s.schedule(&c, Profile::P4g40gb), None);
+        // 3g still fits at 4.
+        assert_eq!(s.schedule(&c, Profile::P3g40gb).unwrap().index, 4);
+    }
+
+    #[test]
+    fn reset_restores_determinism() {
+        let mut s = RandomFit::new(42);
+        let c = Cluster::new(HardwareModel::a100_80gb(), 4);
+        let first: Vec<_> = (0..10).map(|_| s.schedule(&c, Profile::P1g10gb)).collect();
+        s.reset();
+        let second: Vec<_> = (0..10).map(|_| s.schedule(&c, Profile::P1g10gb)).collect();
+        assert_eq!(first, second);
+    }
+}

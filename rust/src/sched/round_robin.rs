@@ -1,0 +1,163 @@
+//! Round Robin (RR) — MIG-agnostic paper baseline.
+//!
+//! Distributes requests across GPUs with a rotating cursor: starting from
+//! the GPU after the previously selected one, commit to the first
+//! *non-full* GPU, then try the first available index there — rejecting
+//! when the profile does not fit (the Fig. 3 pathology). Unlike FF, whose
+//! description in the paper checks for "*enough* available resources", RR
+//! merely walks "the available GPUs", so the commit target is the next
+//! GPU with any free slice at all. This is what makes RR's acceptance
+//! "sharply deteriorate" at heavy load in the paper: once spreading has
+//! put some load on every GPU, the cursor GPU almost never has the 8/4
+//! contiguous slices a big profile needs.
+//!
+//! `RR-R` is the retrying ablation (see `first_fit.rs`).
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+
+/// The RR baseline.
+#[derive(Clone, Debug)]
+pub struct RoundRobin {
+    cursor: usize,
+    strict: bool,
+    name: &'static str,
+}
+
+impl RoundRobin {
+    /// Paper Round Robin (single-GPU commit, the evaluation default).
+    pub fn new() -> Self {
+        Self { cursor: 0, strict: true, name: "RR" }
+    }
+
+    /// Retrying variant (`RR-R`) — semantics ablation.
+    pub fn retry() -> Self {
+        Self { cursor: 0, strict: false, name: "RR-R" }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        let n = cluster.num_gpus();
+        for off in 0..n {
+            let gpu_id = (self.cursor + off) % n;
+            let g = cluster.gpus()[gpu_id];
+            if self.strict {
+                // Commit to the first non-full GPU; the cursor advances
+                // past it whether or not the placement succeeds.
+                if g.is_full() {
+                    continue;
+                }
+                self.cursor = (gpu_id + 1) % n;
+                if g.free_slices() < profile.size() {
+                    return None;
+                }
+                let index = g.first_feasible(profile)?;
+                return Some(Placement { gpu: gpu_id, profile, index });
+            }
+            if g.free_slices() < profile.size() {
+                continue;
+            }
+            if let Some(index) = g.first_feasible(profile) {
+                self.cursor = (gpu_id + 1) % n;
+                return Some(Placement { gpu: gpu_id, profile, index });
+            }
+        }
+        None
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::HardwareModel;
+    use crate::workload::WorkloadId;
+
+    #[test]
+    fn rotates_across_gpus() {
+        let mut s = RoundRobin::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        for i in 0..3 {
+            let pl = s.schedule(&c, Profile::P2g20gb).unwrap();
+            assert_eq!(pl.gpu, i, "request {i} should land on GPU {i}");
+            c.allocate(WorkloadId(i as u64), pl).unwrap();
+        }
+        // Fourth request wraps to GPU 0 again.
+        let pl = s.schedule(&c, Profile::P2g20gb).unwrap();
+        assert_eq!(pl.gpu, 0);
+    }
+
+    #[test]
+    fn skips_saturated_gpus() {
+        let mut s = RoundRobin::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        c.allocate(WorkloadId(0), Placement { gpu: 0, profile: Profile::P7g80gb, index: 0 })
+            .unwrap();
+        let pl = s.schedule(&c, Profile::P1g10gb).unwrap();
+        assert_eq!(pl.gpu, 1);
+    }
+
+    #[test]
+    fn commits_to_cursor_gpu_and_rejects_on_index_miss() {
+        let mut s = RoundRobin::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        // GPU 0 blocked for 4g (1g.10gb@1), GPU 1 empty.
+        c.allocate(WorkloadId(0), Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 })
+            .unwrap();
+        assert_eq!(s.schedule(&c, Profile::P4g40gb), None, "committed to GPU 0");
+        // The cursor advanced past GPU 0, so the NEXT attempt succeeds.
+        assert_eq!(s.schedule(&c, Profile::P4g40gb).unwrap().gpu, 1);
+    }
+
+    #[test]
+    fn retry_variant_falls_through() {
+        let mut s = RoundRobin::retry();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        c.allocate(WorkloadId(0), Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 })
+            .unwrap();
+        assert_eq!(s.schedule(&c, Profile::P4g40gb).unwrap().gpu, 1);
+        assert_eq!(s.name(), "RR-R");
+    }
+
+    #[test]
+    fn reset_rewinds_cursor() {
+        let mut s = RoundRobin::new();
+        let c = Cluster::new(HardwareModel::a100_80gb(), 4);
+        let _ = s.schedule(&c, Profile::P1g10gb);
+        let _ = s.schedule(&c, Profile::P1g10gb);
+        s.reset();
+        assert_eq!(s.schedule(&c, Profile::P1g10gb).unwrap().gpu, 0);
+    }
+
+    #[test]
+    fn rejects_when_no_gpu_has_capacity() {
+        let mut s = RoundRobin::new();
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        for g in 0..2 {
+            c.allocate(
+                WorkloadId(g as u64),
+                Placement { gpu: g, profile: Profile::P7g80gb, index: 0 },
+            )
+            .unwrap();
+        }
+        assert_eq!(s.schedule(&c, Profile::P1g10gb), None);
+    }
+}

@@ -1,0 +1,155 @@
+//! Worst Fit (WF-BI / WF-FI) — MIG-aware load-balancing paper baseline.
+//!
+//! Selects the single GPU maximizing remaining free slices after the
+//! allocation (the emptiest GPU, ties by id) and applies the configured
+//! [`IndexPolicy`] there. Committing to the fit-selected GPU means the
+//! Fig. 3b rejection pathology applies; spreading keeps early acceptance
+//! high but saturates many GPUs and accumulates fragmentation everywhere
+//! at once.
+//!
+//! `WF-*-R` are the retrying ablations (see `first_fit.rs`).
+
+use super::{IndexPolicy, Scheduler};
+use crate::cluster::Cluster;
+use crate::mig::{Placement, Profile};
+
+/// The WF baseline, parameterized by index policy.
+#[derive(Clone, Debug)]
+pub struct WorstFit {
+    policy: IndexPolicy,
+    strict: bool,
+    name: String,
+}
+
+impl WorstFit {
+    /// Paper Worst Fit (single-GPU commit, the evaluation default).
+    pub fn new(policy: IndexPolicy) -> Self {
+        Self { policy, strict: true, name: format!("WF-{}", policy.tag()) }
+    }
+
+    /// Retrying variant — semantics ablation.
+    pub fn retry(policy: IndexPolicy) -> Self {
+        Self { policy, strict: false, name: format!("WF-{}-R", policy.tag()) }
+    }
+
+    pub fn policy(&self) -> IndexPolicy {
+        self.policy
+    }
+}
+
+impl Scheduler for WorstFit {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        if self.strict {
+            // Max free slices among GPUs with capacity; ties → lowest id
+            // (reverse-id key because max_by_key keeps the LAST maximum).
+            let gpu_id = cluster
+                .gpus()
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.free_slices() >= profile.size())
+                .max_by_key(|(id, g)| (g.free_slices(), usize::MAX - *id))
+                .map(|(id, _)| id)?;
+            let index = self.policy.select(cluster.gpus()[gpu_id], profile)?;
+            return Some(Placement { gpu: gpu_id, profile, index });
+        }
+        let mut ranked: Vec<(std::cmp::Reverse<u8>, usize)> = cluster
+            .gpus()
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.free_slices() >= profile.size())
+            .map(|(id, g)| (std::cmp::Reverse(g.free_slices()), id))
+            .collect();
+        ranked.sort_unstable();
+        for &(_, gpu_id) in &ranked {
+            if let Some(index) = self.policy.select(cluster.gpus()[gpu_id], profile) {
+                return Some(Placement { gpu: gpu_id, profile, index });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::HardwareModel;
+    use crate::workload::WorkloadId;
+
+    fn commit(c: &mut Cluster, id: u64, gpu: usize, profile: Profile, index: u8) {
+        c.allocate(WorkloadId(id), Placement { gpu, profile, index }).unwrap();
+    }
+
+    #[test]
+    fn prefers_emptiest_gpu() {
+        let mut s = WorstFit::new(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        commit(&mut c, 0, 0, Profile::P4g40gb, 0);
+        commit(&mut c, 1, 1, Profile::P2g20gb, 0);
+        // GPU 2 empty → selected.
+        assert_eq!(s.schedule(&c, Profile::P2g20gb).unwrap().gpu, 2);
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_id() {
+        let mut s = WorstFit::new(IndexPolicy::BestIndex);
+        let c = Cluster::new(HardwareModel::a100_80gb(), 3);
+        assert_eq!(s.schedule(&c, Profile::P1g10gb).unwrap().gpu, 0);
+    }
+
+    #[test]
+    fn fig3b_rejection() {
+        // Load-balancing pathology: the emptiest GPU by slice count has
+        // infeasibly-arranged holes → reject despite a feasible busier GPU.
+        let mut s = WorstFit::new(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        // GPU 0: 1g.10gb at 1 and 5 → 6 free slices, 3g/4g infeasible.
+        commit(&mut c, 0, 0, Profile::P1g10gb, 1);
+        commit(&mut c, 1, 0, Profile::P1g10gb, 5);
+        // GPU 1: 4g.40gb at 0 → 4 free, 3g.40gb@4 feasible.
+        commit(&mut c, 2, 1, Profile::P4g40gb, 0);
+        assert!(c.gpu(1).unwrap().can_host(Profile::P3g40gb));
+        // WF picks GPU 0 (6 > 4 free) and fails its anchors.
+        assert_eq!(s.schedule(&c, Profile::P3g40gb), None);
+    }
+
+    #[test]
+    fn retry_variant_falls_through() {
+        let mut s = WorstFit::retry(IndexPolicy::BestIndex);
+        let mut c = Cluster::new(HardwareModel::a100_80gb(), 2);
+        commit(&mut c, 0, 0, Profile::P1g10gb, 1);
+        commit(&mut c, 1, 0, Profile::P1g10gb, 5);
+        commit(&mut c, 2, 1, Profile::P4g40gb, 0);
+        let pl = s.schedule(&c, Profile::P3g40gb).unwrap();
+        assert_eq!((pl.gpu, pl.index), (1, 4));
+        assert_eq!(s.name(), "WF-BI-R");
+    }
+
+    #[test]
+    fn index_policy_applied() {
+        let c = Cluster::new(HardwareModel::a100_80gb(), 1);
+        assert_eq!(
+            WorstFit::new(IndexPolicy::BestIndex).schedule(&c, Profile::P1g20gb).unwrap().index,
+            6
+        );
+        assert_eq!(
+            WorstFit::new(IndexPolicy::FirstIndex)
+                .schedule(&c, Profile::P1g20gb)
+                .unwrap()
+                .index,
+            0
+        );
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(WorstFit::new(IndexPolicy::BestIndex).name(), "WF-BI");
+        assert_eq!(WorstFit::new(IndexPolicy::FirstIndex).name(), "WF-FI");
+    }
+}

@@ -1,0 +1,339 @@
+//! The JSON control-plane API: request routing + schemas.
+
+use std::sync::{Arc, Mutex};
+
+use super::daemon::{DaemonState, Lease};
+use super::http::{Request, Response};
+use crate::cluster::ClusterMetrics;
+use crate::util::json::Json;
+use crate::workload::{TenantId, WorkloadId};
+
+/// Route a parsed request to its handler.
+pub fn dispatch(request: &Request, state: &Arc<Mutex<DaemonState>>) -> Response {
+    let segments = request.segments();
+    match (request.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => Response::text(200, "ok\n"),
+        ("POST", ["v1", "workloads"]) => submit(request, state),
+        ("GET", ["v1", "workloads", id]) => lookup(id, state),
+        ("DELETE", ["v1", "workloads", id]) => release(id, state),
+        ("POST", ["v1", "tick"]) => tick(request, state),
+        ("GET", ["v1", "stats"]) => stats(state),
+        ("GET", ["v1", "cluster"]) => cluster_snapshot(state),
+        ("GET", ["v1", "hardware"]) => hardware(state),
+        (method, _) if !matches!(method, "GET" | "POST" | "DELETE") => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, &format!("no route for {} {}", request.method, request.path)),
+    }
+}
+
+/// `POST /v1/workloads` — body `{"profile": "2g.20gb", "tenant": 3,
+/// "duration_slots": 10}` (tenant and duration optional). 201 on success
+/// with the placement, 409 when rejected by the scheduler.
+fn submit(request: &Request, state: &Arc<Mutex<DaemonState>>) -> Response {
+    let body = match request.body_str() {
+        Ok(b) if !b.trim().is_empty() => b,
+        Ok(_) => return Response::error(400, "missing JSON body"),
+        Err(e) => return Response::error(400, &e),
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("invalid JSON: {e}")),
+    };
+    let profile_name = match j.req_str("profile") {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, &e),
+    };
+    let tenant = TenantId(j.get("tenant").and_then(Json::as_u64).unwrap_or(0) as u32);
+    let duration = j.get("duration_slots").and_then(Json::as_u64);
+
+    let mut s = state.lock().unwrap();
+    let profile = match s.cluster.hardware().parse_profile(profile_name) {
+        Some(p) => p,
+        None => return Response::error(400, &format!("unknown profile '{profile_name}'")),
+    };
+    s.arrived_total += 1;
+    let DaemonState { scheduler, cluster, .. } = &mut *s;
+    let placement = match scheduler.schedule(cluster, profile) {
+        Some(p) => p,
+        None => {
+            return Response::json(
+                409,
+                &Json::obj()
+                    .with("rejected", true)
+                    .with("reason", "no feasible MIG placement (cluster fragmented or full)")
+                    .with("profile", profile.canonical_name()),
+            )
+        }
+    };
+    let id = WorkloadId(s.next_id);
+    s.next_id += 1;
+    if let Err(e) = s.cluster.allocate(id, placement) {
+        return Response::error(500, &format!("commit failed: {e}"));
+    }
+    s.accepted_total += 1;
+    let expires_at = duration.map(|d| s.clock_slot + d);
+    s.leases.insert(id, Lease { tenant, expires_at });
+    Response::json(
+        201,
+        &Json::obj()
+            .with("id", id.0)
+            .with("tenant", tenant.0 as u64)
+            .with("profile", profile.canonical_name())
+            .with("gpu", placement.gpu)
+            .with("index", placement.index as u64)
+            .with(
+                "expires_at_slot",
+                expires_at.map(Json::from).unwrap_or(Json::Null),
+            ),
+    )
+}
+
+/// `GET /v1/workloads/{id}`.
+fn lookup(id: &str, state: &Arc<Mutex<DaemonState>>) -> Response {
+    let id = match id.parse::<u64>() {
+        Ok(n) => WorkloadId(n),
+        Err(_) => return Response::error(400, "workload id must be an integer"),
+    };
+    let s = state.lock().unwrap();
+    match (s.cluster.placement_of(id), s.leases.get(&id)) {
+        (Some(p), Some(lease)) => Response::json(
+            200,
+            &Json::obj()
+                .with("id", id.0)
+                .with("tenant", lease.tenant.0 as u64)
+                .with("profile", p.profile.canonical_name())
+                .with("gpu", p.gpu)
+                .with("index", p.index as u64)
+                .with(
+                    "expires_at_slot",
+                    lease.expires_at.map(Json::from).unwrap_or(Json::Null),
+                ),
+        ),
+        _ => Response::error(404, &format!("workload {} not found", id.0)),
+    }
+}
+
+/// `DELETE /v1/workloads/{id}` — explicit release.
+fn release(id: &str, state: &Arc<Mutex<DaemonState>>) -> Response {
+    let id = match id.parse::<u64>() {
+        Ok(n) => WorkloadId(n),
+        Err(_) => return Response::error(400, "workload id must be an integer"),
+    };
+    let mut s = state.lock().unwrap();
+    match s.cluster.release(id) {
+        Ok(p) => {
+            s.leases.remove(&id);
+            s.released_total += 1;
+            Response::json(
+                200,
+                &Json::obj()
+                    .with("released", id.0)
+                    .with("gpu", p.gpu)
+                    .with("profile", p.profile.canonical_name()),
+            )
+        }
+        Err(e) => Response::error(404, &e.to_string()),
+    }
+}
+
+/// `POST /v1/tick` — body `{"slots": 1}` (default 1). Advances the logical
+/// clock, expiring leases.
+fn tick(request: &Request, state: &Arc<Mutex<DaemonState>>) -> Response {
+    let slots = match request.body_str() {
+        Ok(b) if !b.trim().is_empty() => match Json::parse(b) {
+            Ok(j) => j.get("slots").and_then(Json::as_u64).unwrap_or(1),
+            Err(e) => return Response::error(400, &format!("invalid JSON: {e}")),
+        },
+        _ => 1,
+    };
+    let mut s = state.lock().unwrap();
+    let released = s.tick(slots);
+    Response::json(
+        200,
+        &Json::obj()
+            .with("clock_slot", s.clock_slot)
+            .with("released", Json::Arr(released.iter().map(|id| Json::from(id.0)).collect())),
+    )
+}
+
+/// `GET /v1/stats` — the paper's metrics plus daemon counters.
+fn stats(state: &Arc<Mutex<DaemonState>>) -> Response {
+    let s = state.lock().unwrap();
+    let metrics =
+        ClusterMetrics::capture(&s.cluster, &s.scorer, s.accepted_total, s.arrived_total);
+    let mut j = metrics.to_json();
+    j.set("clock_slot", s.clock_slot);
+    j.set("released_total", s.released_total);
+    j.set("expired_total", s.expired_total);
+    j.set("num_gpus", s.cluster.num_gpus());
+    j.set("capacity_slices", s.cluster.capacity_slices());
+    j.set("scheduler", s.scheduler.name());
+    Response::json(200, &j)
+}
+
+/// `GET /v1/cluster` — full occupancy snapshot.
+fn cluster_snapshot(state: &Arc<Mutex<DaemonState>>) -> Response {
+    let s = state.lock().unwrap();
+    let mut j = crate::cluster::snapshot::to_json(&s.cluster);
+    j.set(
+        "diagrams",
+        Json::Arr(s.cluster.gpus().iter().map(|g| Json::from(g.diagram())).collect()),
+    );
+    Response::json(200, &j)
+}
+
+/// `GET /v1/hardware` — the Table I data for this deployment.
+fn hardware(state: &Arc<Mutex<DaemonState>>) -> Response {
+    let s = state.lock().unwrap();
+    let hw = s.cluster.hardware();
+    let profiles: Vec<Json> = hw
+        .profiles()
+        .map(|p| {
+            Json::obj()
+                .with("name", hw.profile_name(p))
+                .with("canonical", p.canonical_name())
+                .with("slices", p.size() as u64)
+                .with("compute_slices", p.compute_slices() as u64)
+                .with("mem_weight", p.mem_weight() as u64)
+                .with(
+                    "indexes",
+                    Json::Arr(p.starts().iter().map(|&s| Json::from(s as u64)).collect()),
+                )
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj()
+            .with("model", hw.name())
+            .with("num_slices", hw.num_slices())
+            .with("total_memory_gb", hw.total_memory_gb() as u64)
+            .with("profiles", Json::Arr(profiles)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::daemon::{Daemon, DaemonConfig};
+    use std::collections::HashMap;
+
+    fn daemon_state() -> Arc<Mutex<DaemonState>> {
+        Daemon::new(DaemonConfig { num_gpus: 2, workers: 1, ..DaemonConfig::default() }).state()
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: HashMap::new(),
+            headers: HashMap::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn json_of(r: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn submit_lookup_release_cycle() {
+        let state = daemon_state();
+        let r = dispatch(
+            &req("POST", "/v1/workloads", r#"{"profile":"3g.40gb","tenant":7}"#),
+            &state,
+        );
+        assert_eq!(r.status, 201, "{:?}", String::from_utf8_lossy(&r.body));
+        let j = json_of(&r);
+        let id = j.req_u64("id").unwrap();
+        assert_eq!(j.req_str("profile").unwrap(), "3g.40gb");
+
+        let r = dispatch(&req("GET", &format!("/v1/workloads/{id}"), ""), &state);
+        assert_eq!(r.status, 200);
+        assert_eq!(json_of(&r).req_u64("tenant").unwrap(), 7);
+
+        let r = dispatch(&req("DELETE", &format!("/v1/workloads/{id}"), ""), &state);
+        assert_eq!(r.status, 200);
+        let r = dispatch(&req("GET", &format!("/v1/workloads/{id}"), ""), &state);
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn submit_rejects_when_full() {
+        let state = daemon_state();
+        // Fill both GPUs.
+        for _ in 0..2 {
+            let r =
+                dispatch(&req("POST", "/v1/workloads", r#"{"profile":"7g.80gb"}"#), &state);
+            assert_eq!(r.status, 201);
+        }
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"profile":"1g.10gb"}"#), &state);
+        assert_eq!(r.status, 409);
+        assert_eq!(json_of(&r).get("rejected").unwrap().as_bool(), Some(true));
+        // Stats reflect 3 arrived / 2 accepted.
+        let stats = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        assert_eq!(stats.req_u64("arrived_total").unwrap(), 3);
+        assert_eq!(stats.req_u64("accepted_total").unwrap(), 2);
+    }
+
+    #[test]
+    fn lease_expiry_via_tick() {
+        let state = daemon_state();
+        let r = dispatch(
+            &req("POST", "/v1/workloads", r#"{"profile":"2g.20gb","duration_slots":2}"#),
+            &state,
+        );
+        let id = json_of(&r).req_u64("id").unwrap();
+        let r = dispatch(&req("POST", "/v1/tick", r#"{"slots":2}"#), &state);
+        let j = json_of(&r);
+        assert_eq!(j.req_u64("clock_slot").unwrap(), 2);
+        assert_eq!(j.get("released").unwrap().as_arr().unwrap().len(), 1);
+        let r = dispatch(&req("GET", &format!("/v1/workloads/{id}"), ""), &state);
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn bad_requests() {
+        let state = daemon_state();
+        assert_eq!(dispatch(&req("POST", "/v1/workloads", ""), &state).status, 400);
+        assert_eq!(dispatch(&req("POST", "/v1/workloads", "{not json"), &state).status, 400);
+        assert_eq!(
+            dispatch(&req("POST", "/v1/workloads", r#"{"profile":"9g.90gb"}"#), &state).status,
+            400
+        );
+        assert_eq!(dispatch(&req("GET", "/v1/workloads/abc", ""), &state).status, 400);
+        assert_eq!(dispatch(&req("DELETE", "/v1/workloads/42", ""), &state).status, 404);
+        assert_eq!(dispatch(&req("GET", "/v1/nope", ""), &state).status, 404);
+        assert_eq!(dispatch(&req("PUT", "/v1/workloads", ""), &state).status, 405);
+    }
+
+    #[test]
+    fn hardware_and_cluster_endpoints() {
+        let state = daemon_state();
+        let hw = json_of(&dispatch(&req("GET", "/v1/hardware", ""), &state));
+        assert_eq!(hw.req_str("model").unwrap(), "A100-80GB");
+        assert_eq!(hw.get("profiles").unwrap().as_arr().unwrap().len(), 6);
+
+        dispatch(&req("POST", "/v1/workloads", r#"{"profile":"1g.10gb"}"#), &state);
+        let snap = json_of(&dispatch(&req("GET", "/v1/cluster", ""), &state));
+        assert_eq!(snap.req_u64("num_gpus").unwrap(), 2);
+        assert_eq!(snap.get("diagrams").unwrap().as_arr().unwrap().len(), 2);
+
+        let health = dispatch(&req("GET", "/healthz", ""), &state);
+        assert_eq!(health.status, 200);
+    }
+
+    #[test]
+    fn profile_hardware_specific_names_accepted() {
+        // A100-40GB deployment accepts "3g.20gb".
+        let daemon = Daemon::new(DaemonConfig {
+            hardware: crate::mig::HardwareModel::a100_40gb(),
+            num_gpus: 1,
+            workers: 1,
+            ..DaemonConfig::default()
+        });
+        let state = daemon.state();
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"profile":"3g.20gb"}"#), &state);
+        assert_eq!(r.status, 201);
+    }
+}

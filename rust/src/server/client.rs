@@ -1,0 +1,90 @@
+//! Minimal blocking HTTP/1.1 client for the control-plane API — used by
+//! the load-generator example, the `migsched trace-replay --remote` mode
+//! and the integration tests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A simple per-request-connection HTTP client.
+pub struct HttpClient {
+    addr: String,
+    timeout: Duration,
+}
+
+/// A decoded response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl ClientResponse {
+    pub fn json(&self) -> Result<Json> {
+        Json::parse(&self.body).map_err(|e| anyhow::anyhow!("response JSON: {e}: {}", self.body))
+    }
+
+    pub fn is_success(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+impl HttpClient {
+    pub fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), timeout: Duration::from_secs(10) }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    pub fn get(&self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&self, path: &str, body: &Json) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body.to_string_compact()))
+    }
+
+    pub fn delete(&self, path: &str) -> Result<ClientResponse> {
+        self.request("DELETE", path, None)
+    }
+
+    fn request(&self, method: &str, path: &str, body: Option<String>) -> Result<ClientResponse> {
+        let mut stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let body = body.unwrap_or_default();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        )?;
+        stream.flush()?;
+
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).context("reading response")?;
+        let text = String::from_utf8_lossy(&raw);
+        let mut parts = text.splitn(2, "\r\n\r\n");
+        let head = parts.next().unwrap_or("");
+        let body = parts.next().unwrap_or("").to_string();
+        let status: u16 = head
+            .lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .context("malformed status line")?;
+        Ok(ClientResponse { status, body })
+    }
+}
+
+// Live-socket coverage is in rust/tests/server_api.rs (client + daemon
+// round-trips on an ephemeral port).

@@ -1,0 +1,253 @@
+//! Minimal HTTP/1.1 request parsing and response writing over blocking
+//! TCP streams — just enough protocol for the JSON control-plane API
+//! (no chunked encoding, no keep-alive pipelining, 1 MiB body cap).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Maximum accepted request body (1 MiB — control-plane payloads are tiny).
+pub const MAX_BODY: usize = 1 << 20;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: HashMap<String, String>,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Body as UTF-8 (empty string when absent).
+    pub fn body_str(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|_| "body is not valid UTF-8".to_string())
+    }
+
+    /// Split the path into non-empty segments.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: body.to_string_compact().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.as_bytes().to_vec() }
+    }
+
+    pub fn error(status: u16, message: &str) -> Self {
+        Self::json(status, &crate::util::json::Json::obj().with("error", message))
+    }
+
+    fn status_text(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize onto a stream.
+    pub fn write_to(&self, stream: &mut dyn Write) -> std::io::Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            Self::status_text(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Parse one request from a stream. Returns `Err(Response)` with the
+/// appropriate 4xx for malformed input.
+pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    reader
+        .read_line(&mut request_line)
+        .map_err(|e| Response::error(400, &format!("reading request line: {e}")))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| Response::error(400, "missing method"))?;
+    let target = parts.next().ok_or_else(|| Response::error(400, "missing path"))?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        return Err(Response::error(400, "unsupported HTTP version"));
+    }
+
+    let (path, query) = split_target(target);
+
+    let mut headers = HashMap::new();
+    loop {
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .map_err(|e| Response::error(400, &format!("reading headers: {e}")))?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+        if headers.len() > 100 {
+            return Err(Response::error(400, "too many headers"));
+        }
+    }
+
+    let content_length: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().map_err(|_| Response::error(400, "bad Content-Length")))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        return Err(Response::error(413, "body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader
+            .read_exact(&mut body)
+            .map_err(|e| Response::error(400, &format!("reading body: {e}")))?;
+    }
+
+    Ok(Request {
+        method: method.to_ascii_uppercase(),
+        path: path.to_string(),
+        query,
+        headers,
+        body,
+    })
+}
+
+fn split_target(target: &str) -> (&str, HashMap<String, String>) {
+    match target.split_once('?') {
+        None => (target, HashMap::new()),
+        Some((path, qs)) => {
+            let mut query = HashMap::new();
+            for pair in qs.split('&').filter(|p| !p.is_empty()) {
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                query.insert(percent_decode(k), percent_decode(v));
+            }
+            (path, query)
+        }
+    }
+}
+
+/// Percent-decoding for query strings ('+' → space, %XX → byte).
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                if let Some(hex) = bytes.get(i + 1..i + 3) {
+                    if let Ok(v) =
+                        u8::from_str_radix(std::str::from_utf8(hex).unwrap_or("zz"), 16)
+                    {
+                        out.push(v);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_serialization() {
+        let r = Response::json(200, &crate::util::json::Json::obj().with("ok", true));
+        let mut buf = Vec::new();
+        r.write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: application/json"));
+        assert!(text.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn status_texts() {
+        assert_eq!(Response::status_text(404), "Not Found");
+        assert_eq!(Response::status_text(409), "Conflict");
+        assert_eq!(Response::status_text(999), "Unknown");
+    }
+
+    #[test]
+    fn target_splitting_and_decoding() {
+        let (path, q) = split_target("/v1/stats?a=1&name=skew%2Dsmall&b=x+y");
+        assert_eq!(path, "/v1/stats");
+        assert_eq!(q.get("a").unwrap(), "1");
+        assert_eq!(q.get("name").unwrap(), "skew-small");
+        assert_eq!(q.get("b").unwrap(), "x y");
+    }
+
+    #[test]
+    fn percent_decode_edge_cases() {
+        assert_eq!(percent_decode("abc"), "abc");
+        assert_eq!(percent_decode("%41%42"), "AB");
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn request_helpers() {
+        let r = Request {
+            method: "GET".into(),
+            path: "/v1/workloads/42".into(),
+            query: HashMap::new(),
+            headers: HashMap::new(),
+            body: b"hello".to_vec(),
+        };
+        assert_eq!(r.segments(), vec!["v1", "workloads", "42"]);
+        assert_eq!(r.body_str().unwrap(), "hello");
+    }
+
+    // Socket-level parse_request coverage lives in rust/tests/server_api.rs.
+}

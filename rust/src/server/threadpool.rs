@@ -1,0 +1,122 @@
+//! Fixed-size worker pool (tokio replacement for the request path).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming jobs from a shared queue.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (panics if `size == 0`).
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "thread pool needs at least one worker");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let receiver = Arc::clone(&receiver);
+                std::thread::Builder::new()
+                    .name(format!("migsched-worker-{i}"))
+                    .spawn(move || loop {
+                        // Holding the lock only while receiving keeps
+                        // dispatch fair across workers.
+                        let job = match receiver.lock().unwrap().recv() {
+                            Ok(job) => job,
+                            Err(_) => break, // sender dropped → shutdown
+                        };
+                        job();
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Self { sender: Some(sender), workers }
+    }
+
+    /// Submit a job; panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.sender
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel, then join every worker.
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = mpsc::channel();
+        for _ in 0..100 {
+            let counter = Arc::clone(&counter);
+            let done = done_tx.clone();
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                done.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            done_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let counter = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must block until all 10 ran
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallelism_is_real() {
+        let pool = ThreadPool::new(4);
+        let (tx, rx) = mpsc::channel();
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        for _ in 0..4 {
+            let tx = tx.clone();
+            let barrier = Arc::clone(&barrier);
+            pool.execute(move || {
+                // Deadlocks unless 4 jobs run concurrently.
+                barrier.wait();
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..4 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+    }
+}

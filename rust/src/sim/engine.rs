@@ -1,0 +1,365 @@
+//! One slot-based Monte Carlo simulation run (paper Section VI protocol).
+//!
+//! An empty cluster of `M` GPUs is progressively loaded: one workload
+//! arrives per scheduling slot with a profile drawn from the configured
+//! Table II distribution, until the cumulative request volume reaches
+//! cluster capacity (that count is the horizon `T`). Lifespans are
+//! `U[1, T]` slots; terminations release slices at the start of their
+//! slot. Rejected workloads are dropped, never retried. Metrics are
+//! captured when cumulative demand crosses each configured checkpoint
+//! (10%…100% for Fig. 4; 85% is Fig. 5's operating point).
+
+use std::collections::BinaryHeap;
+
+use crate::cluster::{Cluster, ClusterMetrics};
+use crate::frag::{FragScorer, ScoreTable};
+use crate::mig::HardwareModel;
+use crate::sched::Scheduler;
+use crate::util::rng::Rng;
+use crate::workload::{Distribution, Trace, Workload, WorkloadGenerator};
+
+/// Configuration of a single simulation run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub hardware: HardwareModel,
+    /// Cluster size `M` (paper: 100).
+    pub num_gpus: usize,
+    pub distribution: Distribution,
+    /// Demand fractions at which metrics are captured, ascending in (0, 1].
+    pub checkpoints: Vec<f64>,
+    pub seed: u64,
+    /// Periodic rescheduling (the paper's future-work extension,
+    /// [`crate::defrag`]): every `interval` slots apply a migration plan
+    /// of at most `budget` moves. `None` = paper behavior (no migration).
+    pub defrag_every: Option<(u64, usize)>,
+}
+
+impl SimConfig {
+    /// The paper's setup: 100 A100-80GB GPUs, checkpoints at 10%…100%.
+    pub fn paper(distribution: Distribution, seed: u64) -> Self {
+        Self {
+            hardware: HardwareModel::a100_80gb(),
+            num_gpus: 100,
+            distribution,
+            checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
+            seed,
+            defrag_every: None,
+        }
+    }
+
+    /// A scaled-down variant for tests and quick CLI runs.
+    pub fn small(distribution: Distribution, seed: u64) -> Self {
+        Self { num_gpus: 10, ..Self::paper(distribution, seed) }
+    }
+
+    /// Enable periodic defragmentation (builder style).
+    pub fn with_defrag(mut self, interval: u64, budget: usize) -> Self {
+        assert!(interval > 0 && budget > 0);
+        self.defrag_every = Some((interval, budget));
+        self
+    }
+}
+
+/// Metrics captured at one demand checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointRecord {
+    /// Demand fraction this checkpoint corresponds to (e.g. 0.85).
+    pub demand: f64,
+    /// Slot at which the checkpoint fired.
+    pub slot: u64,
+    pub metrics: ClusterMetrics,
+}
+
+/// The outcome of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheme: String,
+    pub distribution: String,
+    pub seed: u64,
+    /// Horizon `T` (number of slots == arrivals).
+    pub horizon: u64,
+    pub records: Vec<CheckpointRecord>,
+    /// State at the end of the run (demand = 100%).
+    pub final_metrics: ClusterMetrics,
+    /// Time-averaged cluster-mean fragmentation score over all slots —
+    /// the Fig. 6 quantity.
+    pub time_avg_frag: f64,
+    /// Total accepted / arrived over the whole run.
+    pub accepted: u64,
+    pub arrived: u64,
+    /// Migrations performed by the periodic defragmenter (0 unless
+    /// `SimConfig::defrag_every` is set).
+    pub migrations: u64,
+}
+
+impl SimResult {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.arrived == 0 { 1.0 } else { self.accepted as f64 / self.arrived as f64 }
+    }
+
+    /// The record at (or nearest below) a demand fraction.
+    pub fn at_demand(&self, demand: f64) -> Option<&CheckpointRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.demand <= demand + 1e-9)
+            .max_by(|a, b| a.demand.partial_cmp(&b.demand).unwrap())
+    }
+}
+
+/// The simulation engine.
+pub struct SimEngine {
+    config: SimConfig,
+}
+
+impl SimEngine {
+    pub fn new(config: SimConfig) -> Self {
+        assert!(!config.checkpoints.is_empty(), "need at least one checkpoint");
+        assert!(
+            config.checkpoints.windows(2).all(|w| w[0] < w[1]),
+            "checkpoints must be strictly ascending"
+        );
+        assert!(
+            config.checkpoints.iter().all(|&c| c > 0.0 && c <= 1.0),
+            "checkpoints must lie in (0, 1]"
+        );
+        Self { config }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.config
+    }
+
+    /// Run one simulation with the given scheduler (reset beforehand).
+    pub fn run(&self, scheduler: &mut dyn Scheduler) -> SimResult {
+        let mut rng = Rng::new(self.config.seed);
+        let gen = WorkloadGenerator::new(self.config.distribution.clone());
+        let capacity =
+            (self.config.num_gpus * self.config.hardware.num_slices()) as u64;
+        let generated = gen.generate(capacity, &mut rng);
+        self.replay(scheduler, &generated.workloads)
+    }
+
+    /// Run one simulation over an explicit arrival sequence (trace replay).
+    /// Workloads must be in arrival-slot order, one per slot.
+    pub fn replay(&self, scheduler: &mut dyn Scheduler, workloads: &[Workload]) -> SimResult {
+        scheduler.reset();
+        let capacity =
+            (self.config.num_gpus * self.config.hardware.num_slices()) as u64;
+        let mut cluster = Cluster::new(self.config.hardware.clone(), self.config.num_gpus);
+        let scorer = ScoreTable::for_hardware(&self.config.hardware);
+
+        // Departure queue: min-heap on (slot, workload id).
+        let mut departures: BinaryHeap<std::cmp::Reverse<(u64, u64)>> = BinaryHeap::new();
+
+        // Precompute checkpoint slots from cumulative demand.
+        let mut cum = 0u64;
+        let mut checkpoint_slots: Vec<(u64, f64)> = Vec::new();
+        {
+            let mut targets = self.config.checkpoints.iter().copied().peekable();
+            for w in workloads {
+                cum += w.slices() as u64;
+                while let Some(&frac) = targets.peek() {
+                    if cum as f64 >= capacity as f64 * frac {
+                        checkpoint_slots.push((w.arrival_slot, frac));
+                        targets.next();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            // Any remaining targets (demand never reached them) fire at the
+            // final slot so sweeps stay rectangular.
+            let last_slot = workloads.last().map(|w| w.arrival_slot).unwrap_or(0);
+            for frac in targets {
+                checkpoint_slots.push((last_slot, frac));
+            }
+        }
+
+        let mut accepted = 0u64;
+        let mut arrived = 0u64;
+        let mut records = Vec::with_capacity(checkpoint_slots.len());
+        let mut frag_sum = 0.0f64;
+        let mut next_checkpoint = 0usize;
+        let mut migrations = 0u64;
+
+        for w in workloads {
+            let t = w.arrival_slot;
+            // 1. terminations scheduled at or before this slot.
+            while let Some(&std::cmp::Reverse((slot, id))) = departures.peek() {
+                if slot > t {
+                    break;
+                }
+                departures.pop();
+                cluster
+                    .release(crate::workload::WorkloadId(id))
+                    .expect("departure of allocated workload");
+            }
+            // 1b. periodic rescheduling (future-work extension).
+            if let Some((interval, budget)) = self.config.defrag_every {
+                if t > 0 && t % interval == 0 {
+                    let plan = crate::defrag::plan_defrag(&cluster, &scorer, budget);
+                    if !plan.is_empty() {
+                        migrations +=
+                            crate::defrag::apply_plan(&mut cluster, &plan)
+                                .expect("fresh plan applies") as u64;
+                    }
+                }
+            }
+            // 2. FIFO arrival → schedule → commit or reject.
+            arrived += 1;
+            if let Some(placement) = scheduler.schedule(&cluster, w.profile) {
+                cluster.allocate(w.id, placement).expect("scheduler proposed valid placement");
+                accepted += 1;
+                departures.push(std::cmp::Reverse((t + w.duration_slots, w.id.0)));
+            }
+            // 3. per-slot fragmentation sample (Fig. 6 time average).
+            frag_sum += scorer.mean_score(cluster.gpus());
+            // 4. checkpoint capture.
+            while next_checkpoint < checkpoint_slots.len()
+                && checkpoint_slots[next_checkpoint].0 == t
+            {
+                let (slot, frac) = checkpoint_slots[next_checkpoint];
+                records.push(CheckpointRecord {
+                    demand: frac,
+                    slot,
+                    metrics: ClusterMetrics::capture(&cluster, &scorer, accepted, arrived),
+                });
+                next_checkpoint += 1;
+            }
+        }
+
+        let horizon = workloads.len() as u64;
+        SimResult {
+            scheme: scheduler.name().to_string(),
+            distribution: self.config.distribution.name().to_string(),
+            seed: self.config.seed,
+            horizon,
+            records,
+            final_metrics: ClusterMetrics::capture(&cluster, &scorer, accepted, arrived),
+            time_avg_frag: if horizon == 0 { 0.0 } else { frag_sum / horizon as f64 },
+            accepted,
+            arrived,
+            migrations,
+        }
+    }
+
+    /// Run a trace through the engine (checkpoints still demand-based).
+    pub fn replay_trace(&self, scheduler: &mut dyn Scheduler, trace: &Trace) -> SimResult {
+        let arrivals = trace.arrivals();
+        self.replay(scheduler, &arrivals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::SchedulerKind;
+
+    fn run(kind: SchedulerKind, dist: Distribution, seed: u64) -> SimResult {
+        let cfg = SimConfig::small(dist, seed);
+        let engine = SimEngine::new(cfg.clone());
+        let mut sched = kind.build(&cfg.hardware);
+        engine.run(&mut *sched)
+    }
+
+    #[test]
+    fn produces_all_checkpoints() {
+        let r = run(SchedulerKind::Mfi, Distribution::Uniform, 1);
+        assert_eq!(r.records.len(), 10);
+        for (i, rec) in r.records.iter().enumerate() {
+            assert!((rec.demand - (i + 1) as f64 / 10.0).abs() < 1e-9);
+        }
+        assert!(r.horizon > 0);
+        assert_eq!(r.arrived, r.horizon);
+    }
+
+    #[test]
+    fn accounting_invariants() {
+        for kind in SchedulerKind::all() {
+            let r = run(kind, Distribution::Uniform, 7);
+            assert!(r.accepted <= r.arrived, "{kind}");
+            assert!(r.acceptance_rate() <= 1.0 && r.acceptance_rate() >= 0.0);
+            // Monotone cumulative counters across checkpoints.
+            for w in r.records.windows(2) {
+                assert!(w[1].metrics.arrived_total >= w[0].metrics.arrived_total);
+                assert!(w[1].metrics.accepted_total >= w[0].metrics.accepted_total);
+                assert!(w[1].slot >= w[0].slot);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(SchedulerKind::Mfi, Distribution::Bimodal, 42);
+        let b = run(SchedulerKind::Mfi, Distribution::Bimodal, 42);
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.horizon, b.horizon);
+        assert_eq!(a.time_avg_frag, b.time_avg_frag);
+    }
+
+    #[test]
+    fn mfi_acceptance_at_low_demand_is_perfect() {
+        let r = run(SchedulerKind::Mfi, Distribution::Uniform, 3);
+        let early = r.at_demand(0.3).unwrap();
+        assert!(
+            early.metrics.acceptance_rate() > 0.999,
+            "MFI should accept everything at low load, got {}",
+            early.metrics.acceptance_rate()
+        );
+    }
+
+    #[test]
+    fn mfi_beats_or_matches_baselines_on_acceptance() {
+        // Averaged over a few seeds to avoid flakes; the full statistical
+        // comparison is the fig5 bench.
+        let mut mfi = 0.0;
+        let mut ff = 0.0;
+        let mut rr = 0.0;
+        let seeds = [11u64, 22, 33, 44, 55];
+        for &s in &seeds {
+            mfi += run(SchedulerKind::Mfi, Distribution::Uniform, s).acceptance_rate();
+            ff += run(SchedulerKind::Ff, Distribution::Uniform, s).acceptance_rate();
+            rr += run(SchedulerKind::Rr, Distribution::Uniform, s).acceptance_rate();
+        }
+        assert!(mfi >= ff - 1e-9, "MFI {mfi} vs FF {ff}");
+        assert!(mfi >= rr - 1e-9, "MFI {mfi} vs RR {rr}");
+    }
+
+    #[test]
+    fn replay_trace_equals_generated_run() {
+        use crate::util::rng::Rng;
+        use crate::workload::{Trace, WorkloadGenerator};
+        let cfg = SimConfig::small(Distribution::Uniform, 5);
+        let engine = SimEngine::new(cfg.clone());
+        let gen = WorkloadGenerator::new(Distribution::Uniform);
+        let capacity = (cfg.num_gpus * cfg.hardware.num_slices()) as u64;
+        let generated = gen.generate(capacity, &mut Rng::new(5));
+        let trace = Trace::from_workloads("t", capacity, &generated.workloads);
+
+        let mut a = SchedulerKind::Mfi.build(&cfg.hardware);
+        let direct = engine.run(&mut *a);
+        let mut b = SchedulerKind::Mfi.build(&cfg.hardware);
+        let replayed = engine.replay_trace(&mut *b, &trace);
+        assert_eq!(direct.accepted, replayed.accepted);
+        assert_eq!(direct.time_avg_frag, replayed.time_avg_frag);
+    }
+
+    #[test]
+    fn utilization_never_exceeds_one() {
+        for kind in [SchedulerKind::Mfi, SchedulerKind::Ff, SchedulerKind::WfBi] {
+            let r = run(kind, Distribution::SkewBig, 9);
+            for rec in &r.records {
+                assert!(rec.metrics.utilization <= 1.0 + 1e-9, "{kind}");
+                assert!(rec.metrics.active_gpus <= 10, "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_bad_checkpoints() {
+        let mut cfg = SimConfig::small(Distribution::Uniform, 1);
+        cfg.checkpoints = vec![0.5, 0.3];
+        let _ = SimEngine::new(cfg);
+    }
+}

@@ -1,0 +1,297 @@
+//! Seed sweeps: many independent simulation runs aggregated into the
+//! statistics the paper's figures plot (500 runs per configuration,
+//! Section VI), parallelized across OS threads.
+
+use std::sync::Mutex;
+
+use super::engine::{SimConfig, SimEngine, SimResult};
+use crate::sched::SchedulerKind;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::OnlineStats;
+use crate::workload::Distribution;
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub hardware: crate::mig::HardwareModel,
+    pub num_gpus: usize,
+    /// Independent Monte Carlo runs per (scheme, distribution).
+    pub runs: usize,
+    pub schemes: Vec<SchedulerKind>,
+    pub distributions: Vec<Distribution>,
+    pub checkpoints: Vec<f64>,
+    pub base_seed: u64,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl ExperimentConfig {
+    /// The paper's full evaluation: M=100, 500 runs, 5 schemes, 4
+    /// distributions, checkpoints 10%…100%.
+    pub fn paper() -> Self {
+        Self {
+            hardware: crate::mig::HardwareModel::a100_80gb(),
+            num_gpus: 100,
+            runs: 500,
+            schemes: SchedulerKind::paper_set().to_vec(),
+            distributions: Distribution::paper_set().to_vec(),
+            // 10%…100% (Fig. 4) plus the 85% operating point of Fig. 5.
+            checkpoints: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 1.0],
+            base_seed: 0x4D49_4753, // "MIGS"
+            threads: 0,
+        }
+    }
+
+    /// A fast configuration for tests/CI smoke runs.
+    pub fn quick() -> Self {
+        Self { num_gpus: 20, runs: 20, ..Self::paper() }
+    }
+}
+
+/// Aggregated statistics for one metric at one checkpoint.
+#[derive(Clone, Debug, Default)]
+pub struct AggregatedCell {
+    pub accepted_workloads: OnlineStats,
+    pub acceptance_rate: OnlineStats,
+    pub utilization: OnlineStats,
+    pub active_gpus: OnlineStats,
+    pub mean_frag: OnlineStats,
+    pub allocated_workloads: OnlineStats,
+}
+
+impl AggregatedCell {
+    fn push(&mut self, m: &crate::cluster::ClusterMetrics) {
+        self.accepted_workloads.push(m.accepted_total as f64);
+        self.acceptance_rate.push(m.acceptance_rate());
+        self.utilization.push(m.utilization);
+        self.active_gpus.push(m.active_gpus as f64);
+        self.mean_frag.push(m.mean_frag_score);
+        self.allocated_workloads.push(m.allocated_workloads as f64);
+    }
+
+    fn merge(&mut self, other: &AggregatedCell) {
+        self.accepted_workloads.merge(&other.accepted_workloads);
+        self.acceptance_rate.merge(&other.acceptance_rate);
+        self.utilization.merge(&other.utilization);
+        self.active_gpus.merge(&other.active_gpus);
+        self.mean_frag.merge(&other.mean_frag);
+        self.allocated_workloads.merge(&other.allocated_workloads);
+    }
+}
+
+/// One (scheme, distribution) series across all checkpoints.
+#[derive(Clone, Debug)]
+pub struct SweepSeries {
+    pub scheme: SchedulerKind,
+    pub distribution: Distribution,
+    /// One cell per configured checkpoint, ascending demand.
+    pub checkpoints: Vec<AggregatedCell>,
+    /// Fig. 6 quantity: run-level time-averaged fragmentation score.
+    pub time_avg_frag: OnlineStats,
+    /// Whole-run acceptance.
+    pub final_acceptance: OnlineStats,
+    pub horizon: OnlineStats,
+}
+
+/// Results of a full sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub config_summary: String,
+    pub demands: Vec<f64>,
+    pub series: Vec<SweepSeries>,
+}
+
+impl SweepResult {
+    pub fn series_for(
+        &self,
+        scheme: SchedulerKind,
+        distribution: &Distribution,
+    ) -> Option<&SweepSeries> {
+        self.series
+            .iter()
+            .find(|s| s.scheme == scheme && &s.distribution == distribution)
+    }
+
+    /// Index of the checkpoint nearest a demand fraction.
+    pub fn checkpoint_index(&self, demand: f64) -> usize {
+        self.demands
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                (a.1 - demand).abs().partial_cmp(&(b.1 - demand).abs()).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Run the sweep. Deterministic: seeds are derived from
+/// `base_seed × run-index` via SplitMix64, identical for every scheme so
+/// all schemes face *the same* workload sequences (paired comparison, as
+/// in the paper).
+pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
+    let threads = if config.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        config.threads
+    };
+
+    // Per-run seeds shared across schemes (paired workload sequences).
+    let mut seed_gen = SplitMix64::new(config.base_seed);
+    let run_seeds: Vec<u64> = (0..config.runs).map(|_| seed_gen.next_u64()).collect();
+
+    let mut series_out: Vec<SweepSeries> = Vec::new();
+    for distribution in &config.distributions {
+        for &scheme in &config.schemes {
+            let agg = Mutex::new((
+                vec![AggregatedCell::default(); config.checkpoints.len()],
+                OnlineStats::new(), // time_avg_frag
+                OnlineStats::new(), // final acceptance
+                OnlineStats::new(), // horizon
+            ));
+            let next_run = std::sync::atomic::AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..threads.min(config.runs).max(1) {
+                    scope.spawn(|| {
+                        loop {
+                            let i = next_run
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= config.runs {
+                                break;
+                            }
+                            let sim_cfg = SimConfig {
+                                hardware: config.hardware.clone(),
+                                num_gpus: config.num_gpus,
+                                distribution: distribution.clone(),
+                                checkpoints: config.checkpoints.clone(),
+                                seed: run_seeds[i],
+                                defrag_every: None,
+                            };
+                            let engine = SimEngine::new(sim_cfg);
+                            let mut sched = scheme.build(&config.hardware);
+                            let result = engine.run(&mut *sched);
+                            let mut guard = agg.lock().unwrap();
+                            accumulate(&mut guard.0, &result);
+                            guard.1.push(result.time_avg_frag);
+                            guard.2.push(result.acceptance_rate());
+                            guard.3.push(result.horizon as f64);
+                        }
+                    });
+                }
+            });
+            let (cells, frag, acc, horizon) = agg.into_inner().unwrap();
+            series_out.push(SweepSeries {
+                scheme,
+                distribution: distribution.clone(),
+                checkpoints: cells,
+                time_avg_frag: frag,
+                final_acceptance: acc,
+                horizon,
+            });
+        }
+    }
+
+    SweepResult {
+        config_summary: format!(
+            "M={} runs={} schemes={} distributions={}",
+            config.num_gpus,
+            config.runs,
+            config.schemes.len(),
+            config.distributions.len()
+        ),
+        demands: config.checkpoints.clone(),
+        series: series_out,
+    }
+}
+
+fn accumulate(cells: &mut [AggregatedCell], result: &SimResult) {
+    assert_eq!(cells.len(), result.records.len(), "checkpoint arity mismatch");
+    for (cell, rec) in cells.iter_mut().zip(&result.records) {
+        cell.push(&rec.metrics);
+    }
+}
+
+/// Merge per-thread partial aggregations (exposed for the bench harness).
+pub fn merge_cells(into: &mut [AggregatedCell], from: &[AggregatedCell]) {
+    assert_eq!(into.len(), from.len());
+    for (a, b) in into.iter_mut().zip(from) {
+        a.merge(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> ExperimentConfig {
+        ExperimentConfig {
+            num_gpus: 8,
+            runs: 6,
+            schemes: vec![SchedulerKind::Mfi, SchedulerKind::Ff],
+            distributions: vec![Distribution::Uniform],
+            checkpoints: vec![0.5, 0.85, 1.0],
+            threads: 2,
+            ..ExperimentConfig::paper()
+        }
+    }
+
+    #[test]
+    fn sweep_shape() {
+        let r = run_sweep(&tiny_config());
+        assert_eq!(r.series.len(), 2);
+        for s in &r.series {
+            assert_eq!(s.checkpoints.len(), 3);
+            assert_eq!(s.time_avg_frag.count(), 6);
+            for c in &s.checkpoints {
+                assert_eq!(c.acceptance_rate.count(), 6);
+            }
+        }
+        assert_eq!(r.checkpoint_index(0.85), 1);
+        assert_eq!(r.checkpoint_index(0.1), 0);
+    }
+
+    #[test]
+    fn sweep_deterministic_across_thread_counts() {
+        let mut c1 = tiny_config();
+        c1.threads = 1;
+        let mut c4 = tiny_config();
+        c4.threads = 4;
+        let r1 = run_sweep(&c1);
+        let r4 = run_sweep(&c4);
+        for (a, b) in r1.series.iter().zip(&r4.series) {
+            assert_eq!(a.scheme, b.scheme);
+            // Welford merge order differs, so compare with tolerance.
+            assert!(
+                (a.final_acceptance.mean() - b.final_acceptance.mean()).abs() < 1e-12,
+                "{}",
+                a.scheme
+            );
+            assert!((a.time_avg_frag.mean() - b.time_avg_frag.mean()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn paired_seeds_across_schemes() {
+        // Both schemes must see identical horizons per run (same workload
+        // sequences), so horizon stats match exactly.
+        let r = run_sweep(&tiny_config());
+        let a = r.series_for(SchedulerKind::Mfi, &Distribution::Uniform).unwrap();
+        let b = r.series_for(SchedulerKind::Ff, &Distribution::Uniform).unwrap();
+        assert_eq!(a.horizon.mean(), b.horizon.mean());
+        assert_eq!(a.horizon.min(), b.horizon.min());
+        assert_eq!(a.horizon.max(), b.horizon.max());
+    }
+
+    #[test]
+    fn mfi_dominates_ff_in_sweep() {
+        let r = run_sweep(&tiny_config());
+        let mfi = r.series_for(SchedulerKind::Mfi, &Distribution::Uniform).unwrap();
+        let ff = r.series_for(SchedulerKind::Ff, &Distribution::Uniform).unwrap();
+        assert!(
+            mfi.final_acceptance.mean() >= ff.final_acceptance.mean() - 1e-9,
+            "MFI {} vs FF {}",
+            mfi.final_acceptance.mean(),
+            ff.final_acceptance.mean()
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Monte Carlo evaluation harness (paper Section VI).
+//!
+//! * [`engine`] — one slot-based simulation run: arrivals, FIFO scheduling,
+//!   terminations, metric capture at demand checkpoints.
+//! * [`experiment`] — seed sweeps: N independent runs per (scheme,
+//!   distribution) aggregated with mean/CI statistics, parallelized over
+//!   OS threads.
+//! * [`report`] — regenerates the paper's figures as tables + CSV:
+//!   Fig. 4 (metrics vs demand, uniform), Fig. 5 (metrics @85% across
+//!   distributions), Fig. 6 (average fragmentation score).
+
+pub mod engine;
+pub mod experiment;
+pub mod report;
+
+pub use engine::{CheckpointRecord, SimConfig, SimEngine, SimResult};
+pub use experiment::{AggregatedCell, ExperimentConfig, SweepResult};
+pub use report::{fig4_report, fig5_report, fig6_report, FigureReport};
+
+pub use crate::workload::Distribution;

@@ -1,0 +1,340 @@
+//! Figure regeneration: renders sweep results as the same rows/series the
+//! paper's figures plot, plus raw-value CSV exports under `results/`.
+//!
+//! * **Fig. 4** (a–d): allocated workloads, acceptance rate, resource
+//!   utilization, active GPUs as functions of GPU demand (10%…100%) under
+//!   the uniform distribution, all five schemes.
+//! * **Fig. 5** (a–d): the same four metrics at 85% demand across the four
+//!   Table II distributions.
+//! * **Fig. 6**: average fragmentation score per scheme per distribution.
+//!
+//! The paper normalizes each metric by its maximum over the compared
+//! schemes; reports include both normalized (paper-comparable) and raw
+//! values.
+
+use super::experiment::{SweepResult, SweepSeries};
+use crate::sched::SchedulerKind;
+use crate::util::csv::Csv;
+use crate::util::stats::normalize_by_max;
+use crate::util::table::Table;
+use crate::workload::Distribution;
+
+/// One rendered figure: titled tables (one per sub-figure) + CSVs.
+#[derive(Debug, Default)]
+pub struct FigureReport {
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub csvs: Vec<(String, Csv)>,
+}
+
+impl FigureReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("==== {} ====\n\n", self.title));
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSVs under `results/<stem>.csv`.
+    pub fn save_csvs(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        for (stem, csv) in &self.csvs {
+            csv.save(&dir.join(format!("{stem}.csv")))?;
+        }
+        Ok(())
+    }
+}
+
+/// The four Fig. 4/5 metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    AcceptedWorkloads,
+    AcceptanceRate,
+    Utilization,
+    ActiveGpus,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 4] = [
+        Metric::AcceptedWorkloads,
+        Metric::AcceptanceRate,
+        Metric::Utilization,
+        Metric::ActiveGpus,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Metric::AcceptedWorkloads => "allocated workloads",
+            Metric::AcceptanceRate => "acceptance rate",
+            Metric::Utilization => "resource utilization",
+            Metric::ActiveGpus => "active GPUs",
+        }
+    }
+
+    pub fn subfig(self) -> char {
+        match self {
+            Metric::AcceptedWorkloads => 'a',
+            Metric::AcceptanceRate => 'b',
+            Metric::Utilization => 'c',
+            Metric::ActiveGpus => 'd',
+        }
+    }
+
+    fn value(self, series: &SweepSeries, checkpoint: usize) -> f64 {
+        let cell = &series.checkpoints[checkpoint];
+        match self {
+            Metric::AcceptedWorkloads => cell.accepted_workloads.mean(),
+            Metric::AcceptanceRate => cell.acceptance_rate.mean(),
+            Metric::Utilization => cell.utilization.mean(),
+            Metric::ActiveGpus => cell.active_gpus.mean(),
+        }
+    }
+}
+
+/// Fig. 4: metric vs demand under one distribution (paper: uniform).
+pub fn fig4_report(sweep: &SweepResult, distribution: &Distribution) -> FigureReport {
+    let mut report = FigureReport {
+        title: format!(
+            "Fig. 4 — scheduling performance vs GPU demand ({} distribution; {})",
+            distribution.name(),
+            sweep.config_summary
+        ),
+        ..Default::default()
+    };
+    let schemes = schemes_in(sweep);
+    for metric in Metric::ALL {
+        let mut header = vec!["scheme".to_string()];
+        header.extend(sweep.demands.iter().map(|d| format!("{:.0}%", d * 100.0)));
+        let mut table = Table::new(&header)
+            .title(&format!("Fig. 4{} — {} (mean over runs)", metric.subfig(), metric.label()));
+        let mut csv_header = vec!["scheme".to_string()];
+        csv_header.extend(sweep.demands.iter().map(|d| format!("demand_{d}")));
+        let mut csv = Csv::new(&csv_header);
+        let mut csv_norm = Csv::new(&csv_header);
+
+        // Collect raw matrix for normalization across schemes+demands.
+        let mut rows: Vec<(SchedulerKind, Vec<f64>)> = Vec::new();
+        for &scheme in &schemes {
+            if let Some(series) = sweep.series_for(scheme, distribution) {
+                let vals: Vec<f64> =
+                    (0..sweep.demands.len()).map(|c| metric.value(series, c)).collect();
+                rows.push((scheme, vals));
+            }
+        }
+        let flat: Vec<f64> = rows.iter().flat_map(|(_, v)| v.iter().copied()).collect();
+        let max = flat.iter().cloned().fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+        for (scheme, vals) in &rows {
+            table.row_keyed(scheme.name(), vals, 3);
+            csv.row_keyed(scheme.name(), vals);
+            let normed: Vec<f64> = vals.iter().map(|v| v / max).collect();
+            csv_norm.row_keyed(scheme.name(), &normed);
+        }
+        report.tables.push(table);
+        report.csvs.push((
+            format!("fig4{}_{}_{}", metric.subfig(), metric.label().replace(' ', "_"),
+                    distribution.name()),
+            csv,
+        ));
+        report.csvs.push((
+            format!("fig4{}_{}_{}_normalized", metric.subfig(),
+                    metric.label().replace(' ', "_"), distribution.name()),
+            csv_norm,
+        ));
+    }
+    report
+}
+
+/// Fig. 5: the four metrics at one demand point (paper: 85%) across
+/// distributions.
+pub fn fig5_report(sweep: &SweepResult, demand: f64) -> FigureReport {
+    let idx = sweep.checkpoint_index(demand);
+    let mut report = FigureReport {
+        title: format!(
+            "Fig. 5 — scheduling performance at {:.0}% GPU demand across distributions ({})",
+            sweep.demands[idx] * 100.0,
+            sweep.config_summary
+        ),
+        ..Default::default()
+    };
+    let schemes = schemes_in(sweep);
+    let dists = distributions_in(sweep);
+    for metric in Metric::ALL {
+        let mut header = vec!["scheme".to_string()];
+        header.extend(dists.iter().map(|d| d.name().to_string()));
+        let mut table = Table::new(&header).title(&format!(
+            "Fig. 5{} — {} @ {:.0}% demand (mean over runs; normalized in parentheses)",
+            metric.subfig(),
+            metric.label(),
+            sweep.demands[idx] * 100.0
+        ));
+        let mut csv = Csv::new(&header);
+
+        let mut rows: Vec<(SchedulerKind, Vec<f64>)> = Vec::new();
+        for &scheme in &schemes {
+            let vals: Vec<f64> = dists
+                .iter()
+                .map(|d| {
+                    sweep
+                        .series_for(scheme, d)
+                        .map(|s| metric.value(s, idx))
+                        .unwrap_or(f64::NAN)
+                })
+                .collect();
+            rows.push((scheme, vals));
+        }
+        // Normalize per distribution column (max across schemes), as the
+        // paper's bar groups do.
+        let ncols = dists.len();
+        let mut col_max = vec![f64::MIN_POSITIVE; ncols];
+        for (_, vals) in &rows {
+            for (j, v) in vals.iter().enumerate() {
+                if v.is_finite() {
+                    col_max[j] = col_max[j].max(*v);
+                }
+            }
+        }
+        for (scheme, vals) in &rows {
+            let cells: Vec<String> = vals
+                .iter()
+                .enumerate()
+                .map(|(j, v)| format!("{:.3} ({:.2})", v, v / col_max[j]))
+                .collect();
+            let mut row = vec![scheme.name().to_string()];
+            row.extend(cells);
+            table.row(&row);
+            csv.row_keyed(scheme.name(), vals);
+        }
+        report.tables.push(table);
+        report.csvs.push((
+            format!("fig5{}_{}", metric.subfig(), metric.label().replace(' ', "_")),
+            csv,
+        ));
+    }
+    report
+}
+
+/// Fig. 6: time-averaged fragmentation score per scheme per distribution.
+pub fn fig6_report(sweep: &SweepResult) -> FigureReport {
+    let mut report = FigureReport {
+        title: format!(
+            "Fig. 6 — average fragmentation score by scheme and distribution ({})",
+            sweep.config_summary
+        ),
+        ..Default::default()
+    };
+    let schemes = schemes_in(sweep);
+    let dists = distributions_in(sweep);
+    let mut header = vec!["scheme".to_string()];
+    header.extend(dists.iter().map(|d| d.name().to_string()));
+    let mut table = Table::new(&header)
+        .title("mean over runs of the per-run time-averaged cluster fragmentation score");
+    let mut csv = Csv::new(&header);
+    for &scheme in &schemes {
+        let vals: Vec<f64> = dists
+            .iter()
+            .map(|d| {
+                sweep
+                    .series_for(scheme, d)
+                    .map(|s| s.time_avg_frag.mean())
+                    .unwrap_or(f64::NAN)
+            })
+            .collect();
+        table.row_keyed(scheme.name(), &vals, 3);
+        csv.row_keyed(scheme.name(), &vals);
+    }
+    report.tables.push(table);
+    report.csvs.push(("fig6_fragmentation_score".to_string(), csv));
+
+    // Normalized companion (paper normalizes by max).
+    let mut norm_table = Table::new(&header).title("normalized by column max");
+    for &scheme in &schemes {
+        let vals: Vec<f64> = dists
+            .iter()
+            .map(|d| sweep.series_for(scheme, d).map(|s| s.time_avg_frag.mean()).unwrap_or(0.0))
+            .collect();
+        norm_table.row_keyed(scheme.name(), &normalize_by_max(&vals), 3);
+    }
+    report.tables.push(norm_table);
+    report
+}
+
+fn schemes_in(sweep: &SweepResult) -> Vec<SchedulerKind> {
+    let mut out = Vec::new();
+    for s in &sweep.series {
+        if !out.contains(&s.scheme) {
+            out.push(s.scheme);
+        }
+    }
+    out
+}
+
+fn distributions_in(sweep: &SweepResult) -> Vec<Distribution> {
+    let mut out: Vec<Distribution> = Vec::new();
+    for s in &sweep.series {
+        if !out.contains(&s.distribution) {
+            out.push(s.distribution.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::experiment::{run_sweep, ExperimentConfig};
+
+    fn tiny_sweep() -> SweepResult {
+        run_sweep(&ExperimentConfig {
+            num_gpus: 8,
+            runs: 4,
+            schemes: vec![SchedulerKind::Mfi, SchedulerKind::Ff, SchedulerKind::Rr],
+            distributions: vec![Distribution::Uniform, Distribution::Bimodal],
+            checkpoints: vec![0.5, 0.85, 1.0],
+            threads: 2,
+            ..ExperimentConfig::paper()
+        })
+    }
+
+    #[test]
+    fn fig4_has_four_subfigures() {
+        let sweep = tiny_sweep();
+        let r = fig4_report(&sweep, &Distribution::Uniform);
+        assert_eq!(r.tables.len(), 4);
+        assert_eq!(r.csvs.len(), 8); // raw + normalized per metric
+        let text = r.render();
+        assert!(text.contains("Fig. 4a"));
+        assert!(text.contains("MFI"));
+        assert!(text.contains("50%"));
+    }
+
+    #[test]
+    fn fig5_selects_85_percent() {
+        let sweep = tiny_sweep();
+        let r = fig5_report(&sweep, 0.85);
+        assert!(r.title.contains("85%"));
+        assert_eq!(r.tables.len(), 4);
+        let text = r.render();
+        assert!(text.contains("uniform"));
+        assert!(text.contains("bimodal"));
+    }
+
+    #[test]
+    fn fig6_rows_per_scheme() {
+        let sweep = tiny_sweep();
+        let r = fig6_report(&sweep);
+        assert_eq!(r.tables.len(), 2); // raw + normalized
+        assert_eq!(r.tables[0].n_rows(), 3);
+        assert_eq!(r.csvs.len(), 1);
+    }
+
+    #[test]
+    fn csvs_save(){
+        let sweep = tiny_sweep();
+        let dir = std::env::temp_dir().join(format!("migsched-report-{}", std::process::id()));
+        fig6_report(&sweep).save_csvs(&dir).unwrap();
+        assert!(dir.join("fig6_fragmentation_score.csv").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

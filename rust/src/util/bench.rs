@@ -1,0 +1,237 @@
+//! Criterion-replacement micro/macro benchmark harness.
+//!
+//! The offline crate set has no `criterion`, so the `harness = false` bench
+//! binaries under `rust/benches/` use this module: calibrated warmup, batched
+//! timed iterations, robust statistics (median of batch means), throughput
+//! reporting, and a `--quick` mode honored via the `MIGSCHED_BENCH_QUICK`
+//! environment variable so CI can smoke-run every bench cheaply.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Sample;
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Target wall time spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Target wall time spent warming up.
+    pub warmup_time: Duration,
+    /// Number of measurement batches (each batch's mean is one sample).
+    pub batches: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if quick_mode() {
+            Self {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                batches: 10,
+            }
+        } else {
+            Self {
+                measure_time: Duration::from_secs(2),
+                warmup_time: Duration::from_millis(300),
+                batches: 20,
+            }
+        }
+    }
+}
+
+/// True when `MIGSCHED_BENCH_QUICK` is set (CI smoke mode).
+pub fn quick_mode() -> bool {
+    std::env::var("MIGSCHED_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+    pub iterations: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p05 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p05_ns),
+            fmt_ns(self.p95_ns),
+            self.iterations
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// A named group of benchmarks that prints results as it goes and can dump
+/// a CSV at the end.
+pub struct BenchRunner {
+    group: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchRunner {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        Self { group: group.to_string(), config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(group: &str, config: BenchConfig) -> Self {
+        println!("== bench group: {group} ==");
+        Self { group: group.to_string(), config, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    /// The return value is black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + per-iteration cost estimate.
+        let warmup_start = Instant::now();
+        let mut warmup_iters: u64 = 0;
+        while warmup_start.elapsed() < self.config.warmup_time {
+            black_box(f());
+            warmup_iters += 1;
+        }
+        let est_ns =
+            (warmup_start.elapsed().as_nanos() as f64 / warmup_iters.max(1) as f64).max(1.0);
+
+        // Choose a batch size so each batch takes measure_time / batches.
+        let per_batch_ns =
+            self.config.measure_time.as_nanos() as f64 / self.config.batches as f64;
+        let batch_iters = ((per_batch_ns / est_ns).ceil() as u64).max(1);
+
+        let mut sample = Sample::new();
+        let mut total_iters = 0u64;
+        for _ in 0..self.config.batches {
+            let t0 = Instant::now();
+            for _ in 0..batch_iters {
+                black_box(f());
+            }
+            let elapsed = t0.elapsed().as_nanos() as f64;
+            sample.push(elapsed / batch_iters as f64);
+            total_iters += batch_iters;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            median_ns: sample.percentile(50.0),
+            p05_ns: sample.percentile(5.0),
+            p95_ns: sample.percentile(95.0),
+            iterations: total_iters,
+        };
+        println!("{}", result.summary());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single execution of a long-running scenario (macro-bench):
+    /// runs it `reps` times and records per-run wall time.
+    pub fn bench_once<T, F: FnMut() -> T>(&mut self, name: &str, reps: usize, mut f: F) -> &BenchResult {
+        let reps = if quick_mode() { reps.min(2).max(1) } else { reps };
+        let mut sample = Sample::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            black_box(f());
+            sample.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            median_ns: sample.percentile(50.0),
+            p05_ns: sample.percentile(5.0),
+            p95_ns: sample.percentile(95.0),
+            iterations: reps as u64,
+        };
+        println!("{}", result.summary());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Save `name,median_ns,p05_ns,p95_ns,iters` rows under `results/bench/`.
+    pub fn save_csv(&self) {
+        use super::csv::Csv;
+        let mut csv = Csv::new(&["name", "median_ns", "p05_ns", "p95_ns", "iterations"]);
+        for r in &self.results {
+            csv.row(&[
+                r.name.clone(),
+                format!("{:.1}", r.median_ns),
+                format!("{:.1}", r.p05_ns),
+                format!("{:.1}", r.p95_ns),
+                r.iterations.to_string(),
+            ]);
+        }
+        let path = std::path::Path::new("results/bench").join(format!("{}.csv", self.group));
+        if let Err(e) = csv.save(&path) {
+            eprintln!("warning: could not save {}: {e}", path.display());
+        } else {
+            println!("-- saved {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("MIGSCHED_BENCH_QUICK", "1");
+        let cfg = BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            batches: 4,
+        };
+        let mut runner = BenchRunner::with_config("selftest", cfg);
+        let r = runner.bench("sum", || (0..1000u64).sum::<u64>()).clone();
+        assert!(r.median_ns > 0.0);
+        assert!(r.iterations > 0);
+        assert!(r.p05_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200 s");
+    }
+
+    #[test]
+    fn bench_once_reps() {
+        std::env::set_var("MIGSCHED_BENCH_QUICK", "1");
+        let mut runner = BenchRunner::with_config(
+            "selftest2",
+            BenchConfig {
+                measure_time: Duration::from_millis(5),
+                warmup_time: Duration::from_millis(1),
+                batches: 2,
+            },
+        );
+        let r = runner.bench_once("noop", 3, || 42).clone();
+        assert!(r.iterations >= 1);
+    }
+}

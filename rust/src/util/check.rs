@@ -1,0 +1,182 @@
+//! Property-based testing mini-harness (proptest replacement).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing seed and case index so the exact case can be re-run with
+//! `MIGSCHED_CHECK_SEED=<seed>`. A light greedy shrinker is provided for
+//! integer-vector inputs (the dominant input shape here: occupancy patterns
+//! and workload sequences).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `MIGSCHED_CHECK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("MIGSCHED_CHECK_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(256)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("MIGSCHED_CHECK_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `default_cases()` random cases. `gen` builds a case from
+/// an RNG; `prop` returns `Err(description)` on failure.
+///
+/// Panics with the seed + case rendering on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let seed = base_seed();
+    let mut master = Rng::new(seed ^ hash_name(name));
+    for case_idx in 0..cases {
+        let mut case_rng = master.fork();
+        let case = gen(&mut case_rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed at case {case_idx}/{cases} (seed {seed}):\n  \
+                 case: {case:?}\n  error: {msg}\n  \
+                 re-run with MIGSCHED_CHECK_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// `forall` with greedy shrinking for `Vec<u64>`-shaped cases: on failure,
+/// tries removing elements and decrementing values to find a smaller
+/// counterexample before panicking.
+pub fn forall_shrink_vec(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> Vec<u64>,
+    prop: impl Fn(&[u64]) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let seed = base_seed();
+    let mut master = Rng::new(seed ^ hash_name(name));
+    for case_idx in 0..cases {
+        let mut case_rng = master.fork();
+        let case = gen(&mut case_rng);
+        if let Err(first_msg) = prop(&case) {
+            let (shrunk, msg) = shrink_vec(case, &prop, first_msg);
+            panic!(
+                "property '{name}' failed at case {case_idx}/{cases} (seed {seed}):\n  \
+                 shrunk case: {shrunk:?}\n  error: {msg}\n  \
+                 re-run with MIGSCHED_CHECK_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn shrink_vec(
+    mut case: Vec<u64>,
+    prop: &impl Fn(&[u64]) -> Result<(), String>,
+    mut msg: String,
+) -> (Vec<u64>, String) {
+    // Pass 1: greedily drop elements while the property still fails.
+    let mut improved = true;
+    while improved {
+        improved = false;
+        let mut i = 0;
+        while i < case.len() {
+            let mut smaller = case.clone();
+            smaller.remove(i);
+            if let Err(m) = prop(&smaller) {
+                case = smaller;
+                msg = m;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Pass 2: decrement values toward zero.
+        for i in 0..case.len() {
+            while case[i] > 0 {
+                let mut smaller = case.clone();
+                smaller[i] -= 1;
+                if let Err(m) = prop(&smaller) {
+                    case = smaller;
+                    msg = m;
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    (case, msg)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, enough to decorrelate properties sharing a seed.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f64 values are close (absolute + relative tolerance), with a
+/// readable failure message. Used by the runtime-vs-native numeric checks.
+pub fn assert_close(a: f64, b: f64, tol: f64, context: &str) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        diff <= tol * scale,
+        "{context}: {a} vs {b} differ by {diff} (tol {tol}, scale {scale})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        forall(
+            "sum-commutative",
+            |rng| (rng.below(100), rng.below(100)),
+            |&(a, b)| {
+                **counter.borrow_mut() += 1;
+                if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+            },
+        );
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk case: [3]")]
+    fn shrinker_finds_minimal_counterexample() {
+        // Property: no element is >= 3. Minimal counterexample is [3].
+        forall_shrink_vec(
+            "no-threes",
+            |rng| (0..rng.index(20)).map(|_| rng.below(10)).collect(),
+            |xs| {
+                if xs.iter().any(|&x| x >= 3) {
+                    Err("found >= 3".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn assert_close_accepts_near() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, "near");
+    }
+
+    #[test]
+    #[should_panic(expected = "differ")]
+    fn assert_close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-9, "far");
+    }
+}

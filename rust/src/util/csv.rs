@@ -1,0 +1,144 @@
+//! Minimal CSV writer (RFC 4180 quoting) for experiment result exports.
+//!
+//! Every bench/figure harness writes its raw series to `results/*.csv` so
+//! the numbers behind EXPERIMENTS.md can be re-plotted externally.
+
+use std::fmt::Write as _;
+use std::io::{self, Write};
+use std::path::Path;
+
+/// In-memory CSV document builder.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: AsRef<str>>(header: &[S]) -> Self {
+        Self { header: header.iter().map(|s| s.as_ref().to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; must match the header arity.
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "CSV row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.iter().map(|s| s.as_ref().to_string()).collect());
+    }
+
+    /// Append a row of f64 values formatted with 6 significant digits.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        let formatted: Vec<String> = cells.iter().map(|v| format_f64(*v)).collect();
+        self.row(&formatted);
+    }
+
+    /// Mixed convenience: a string key column followed by numeric columns.
+    pub fn row_keyed(&mut self, key: &str, cells: &[f64]) {
+        let mut formatted = vec![key.to_string()];
+        formatted.extend(cells.iter().map(|v| format_f64(*v)));
+        self.row(&formatted);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    pub fn write_to(&self, w: &mut dyn Write) -> io::Result<()> {
+        w.write_all(self.render().as_bytes())
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn format_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        // Fixed 6-decimal precision with trailing zeros trimmed, so values
+        // like 0.85 render exactly and diffs stay stable.
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            out.push('"');
+            let _ = write!(out, "{}", cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic() {
+        let mut c = Csv::new(&["scheme", "demand", "acceptance"]);
+        c.row(&["MFI", "0.85", "0.99"]);
+        c.row_keyed("FF", &[0.85, 0.91]);
+        assert_eq!(c.render(), "scheme,demand,acceptance\nMFI,0.85,0.99\nFF,0.85,0.91\n");
+        assert_eq!(c.n_rows(), 2);
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["x,y", "he said \"hi\""]);
+        assert_eq!(c.render(), "a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn f64_formatting() {
+        let mut c = Csv::new(&["v"]);
+        c.row_f64(&[800.0]);
+        c.row_f64(&[0.123456789]);
+        assert_eq!(c.render(), "v\n800\n0.123457\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one"]);
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("migsched-csv-{}", std::process::id()));
+        let path = dir.join("nested/out.csv");
+        let mut c = Csv::new(&["x"]);
+        c.row(&["1"]);
+        c.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,31 @@
+//! General-purpose substrates used across the scheduler, simulator, server
+//! and benchmark harness.
+//!
+//! The build environment is fully offline and the vendored crate set is the
+//! transitive closure of the `xla` crate only, so the usual ecosystem crates
+//! (`rand`, `serde`/`serde_json`, `tokio`, `criterion`, `clap`, `proptest`)
+//! are unavailable. Each submodule here is a small, tested, dependency-free
+//! replacement for the subset of functionality this project needs:
+//!
+//! * [`rng`] — deterministic, seedable PRNG (SplitMix64 / xoshiro256**) and
+//!   the sampling distributions used by the workload generator.
+//! * [`json`] — a JSON value type with parser and writer (config files,
+//!   traces, snapshots, the HTTP API).
+//! * [`csv`] — a CSV writer for experiment result exports.
+//! * [`stats`] — streaming statistics (Welford), percentiles, confidence
+//!   intervals and histograms for the experiment harness.
+//! * [`logging`] — leveled stderr logger controlled by `MIGSCHED_LOG`.
+//! * [`table`] — aligned plain-text table rendering for figure/report output.
+//! * [`bench`] — a micro/macro benchmark harness (criterion replacement) used
+//!   by the `harness = false` bench binaries.
+//! * [`check`] — a property-based testing mini-harness (proptest replacement)
+//!   with seeded case generation and failure reporting.
+
+pub mod bench;
+pub mod check;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,312 @@
+//! Streaming statistics for the experiment harness.
+//!
+//! Every paper figure is an average over 500 independent Monte Carlo runs;
+//! we aggregate metric series with Welford's online algorithm (numerically
+//! stable, single pass, O(1) memory per series) and report mean, standard
+//! deviation and a 95% confidence interval half-width.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the 95% confidence interval for the mean (normal
+    /// approximation; the sweep sizes here are hundreds of samples).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::NAN;
+        }
+        1.96 * self.std_dev() / (self.n as f64).sqrt()
+    }
+}
+
+/// Exact percentile over a stored sample (used for latency reporting where
+/// tails matter and sample counts are modest).
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        self.ensure_sorted();
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+}
+
+/// Fixed-bucket histogram for distribution summaries in reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(hi > lo && nbuckets > 0);
+        Self { lo, hi, buckets: vec![0; nbuckets], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Compact ASCII sparkline for log output.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        self.buckets
+            .iter()
+            .map(|&c| GLYPHS[(c as usize * (GLYPHS.len() - 1)) / max as usize])
+            .collect()
+    }
+}
+
+/// Normalize a series by its maximum absolute value (the paper normalizes
+/// every metric by its maximum to compare schemes). Zero-max series are
+/// returned unchanged.
+pub fn normalize_by_max(values: &[f64]) -> Vec<f64> {
+    let max = values.iter().cloned().fold(0.0_f64, |a, b| a.max(b.abs()));
+    if max == 0.0 {
+        values.to_vec()
+    } else {
+        values.iter().map(|v| v / max).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic sequence is 32/7.
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut all = OnlineStats::new();
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for i in 0..100 {
+            let x = (i as f64).sin() * 10.0;
+            all.push(x);
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = OnlineStats::new();
+        a.push(1.0);
+        let empty = OnlineStats::new();
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        let mut e2 = OnlineStats::new();
+        e2.merge(&a);
+        assert_eq!(e2.count(), 1);
+        assert_eq!(e2.mean(), 1.0);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let mut small = OnlineStats::new();
+        let mut large = OnlineStats::new();
+        for i in 0..10 {
+            small.push((i % 3) as f64);
+        }
+        for i in 0..1000 {
+            large.push((i % 3) as f64);
+        }
+        assert!(large.ci95() < small.ci95());
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Sample::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn percentile_single_value() {
+        let mut s = Sample::new();
+        s.push(7.0);
+        assert_eq!(s.percentile(0.0), 7.0);
+        assert_eq!(s.percentile(100.0), 7.0);
+        assert_eq!(s.percentile(50.0), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(11.0);
+        assert_eq!(h.bucket_counts(), &[1u64; 10][..]);
+        assert_eq!(h.total(), 12);
+        assert_eq!(h.sparkline().chars().count(), 10);
+    }
+
+    #[test]
+    fn normalization() {
+        assert_eq!(normalize_by_max(&[1.0, 2.0, 4.0]), vec![0.25, 0.5, 1.0]);
+        assert_eq!(normalize_by_max(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Aligned plain-text table rendering.
+//!
+//! The figure/report harnesses print the same rows/series the paper reports;
+//! this module renders them as column-aligned tables with optional
+//! right-alignment for numeric columns, matching the look of the paper's
+//! tabular output in a terminal.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A text table with a header row and uniform column alignment rules.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new<S: AsRef<str>>(header: &[S]) -> Self {
+        let header: Vec<String> = header.iter().map(|s| s.as_ref().to_string()).collect();
+        // Default: first column left (labels), the rest right (numbers).
+        let aligns = header
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Self { header, aligns, rows: Vec::new(), title: None }
+    }
+
+    pub fn title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells.iter().map(|s| s.as_ref().to_string()).collect());
+    }
+
+    /// Label + numeric row with fixed precision.
+    pub fn row_keyed(&mut self, key: &str, values: &[f64], precision: usize) {
+        let mut cells = vec![key.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.precision$}")));
+        self.row(&cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let render_row = |out: &mut String, cells: &[String]| {
+            for i in 0..ncols {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let cell = &cells[i];
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                match self.aligns[i] {
+                    Align::Left => {
+                        out.push_str(cell);
+                        if i + 1 < ncols {
+                            out.extend(std::iter::repeat(' ').take(pad));
+                        }
+                    }
+                    Align::Right => {
+                        out.extend(std::iter::repeat(' ').take(pad));
+                        out.push_str(cell);
+                    }
+                }
+            }
+            out.push('\n');
+        };
+        render_row(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.extend(std::iter::repeat('-').take(total));
+        out.push('\n');
+        for row in &self.rows {
+            render_row(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["scheme", "acc", "gpus"]);
+        t.row(&["MFI", "0.99", "93"]);
+        t.row(&["first-fit", "0.91", "88"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("scheme"));
+        assert!(lines[1].chars().all(|c| c == '-'));
+        // Numeric columns right-aligned: both data rows end at same width.
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn keyed_rows_precision() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row_keyed("x", &[0.123456], 3);
+        assert!(t.render().contains("0.123"));
+        assert_eq!(t.n_rows(), 1);
+    }
+
+    #[test]
+    fn title_prepended() {
+        let t = Table::new(&["a"]).title("Fig. 4a");
+        assert!(t.render().starts_with("Fig. 4a\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only"]);
+    }
+}

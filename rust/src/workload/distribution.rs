@@ -1,0 +1,204 @@
+//! The paper's Table II MIG-profile request distributions.
+
+use crate::mig::profile::{Profile, ALL_PROFILES, NUM_PROFILES};
+use crate::util::rng::{AliasTable, Rng};
+
+/// A probability distribution over the six MIG profile shapes.
+///
+/// The four named distributions are Table II verbatim; `Custom` supports
+/// user-supplied mixes via config/CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Distribution {
+    /// Every profile equally likely — the paper's baseline scenario.
+    Uniform,
+    /// Small profiles dominate: severe fragmentation pressure.
+    SkewSmall,
+    /// Large profiles dominate: rigid placements, less fragmentation head-room.
+    SkewBig,
+    /// Mixture of large and small profiles with conflicting constraints.
+    Bimodal,
+    /// User-supplied probabilities in Table I profile order.
+    Custom([f64; NUM_PROFILES]),
+}
+
+impl Distribution {
+    /// Table II probability density, in Table I profile order
+    /// (7g.80gb, 4g.40gb, 3g.40gb, 2g.20gb, 1g.20gb, 1g.10gb).
+    pub fn pdf(&self) -> [f64; NUM_PROFILES] {
+        match self {
+            Distribution::Uniform => [1.0 / 6.0; 6],
+            Distribution::SkewSmall => [0.05, 0.10, 0.10, 0.20, 0.25, 0.30],
+            Distribution::SkewBig => [0.30, 0.25, 0.20, 0.10, 0.10, 0.05],
+            Distribution::Bimodal => [0.30, 0.15, 0.05, 0.05, 0.15, 0.30],
+            Distribution::Custom(p) => *p,
+        }
+    }
+
+    /// The four named Table II distributions, in paper order.
+    pub fn paper_set() -> [Distribution; 4] {
+        [
+            Distribution::Uniform,
+            Distribution::SkewSmall,
+            Distribution::SkewBig,
+            Distribution::Bimodal,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::SkewSmall => "skew-small",
+            Distribution::SkewBig => "skew-big",
+            Distribution::Bimodal => "bimodal",
+            Distribution::Custom(_) => "custom",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Distribution> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "uniform" => Some(Distribution::Uniform),
+            "skew-small" | "skewsmall" | "small" => Some(Distribution::SkewSmall),
+            "skew-big" | "skewbig" | "big" => Some(Distribution::SkewBig),
+            "bimodal" => Some(Distribution::Bimodal),
+            _ => None,
+        }
+    }
+
+    /// Build a custom distribution; weights are normalized. Errors when
+    /// the arity is wrong or the sum is non-positive.
+    pub fn custom(weights: &[f64]) -> Result<Distribution, String> {
+        if weights.len() != NUM_PROFILES {
+            return Err(format!("need {NUM_PROFILES} weights, got {}", weights.len()));
+        }
+        let sum: f64 = weights.iter().sum();
+        if !(sum > 0.0 && sum.is_finite()) || weights.iter().any(|w| *w < 0.0) {
+            return Err("weights must be non-negative with positive finite sum".into());
+        }
+        let mut p = [0.0; NUM_PROFILES];
+        for (i, w) in weights.iter().enumerate() {
+            p[i] = w / sum;
+        }
+        Ok(Distribution::Custom(p))
+    }
+
+    /// O(1) sampler for this distribution.
+    pub fn sampler(&self) -> ProfileSampler {
+        ProfileSampler { alias: AliasTable::new(&self.pdf()) }
+    }
+
+    /// Expected slice footprint of one request — determines how many
+    /// arrivals saturate a cluster (`T ≈ capacity / E[slices]`).
+    pub fn mean_slices(&self) -> f64 {
+        self.pdf()
+            .iter()
+            .zip(ALL_PROFILES.iter())
+            .map(|(p, prof)| p * prof.size() as f64)
+            .sum()
+    }
+}
+
+impl std::fmt::Display for Distribution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Precomputed alias-method sampler over profiles.
+#[derive(Clone, Debug)]
+pub struct ProfileSampler {
+    alias: AliasTable,
+}
+
+impl ProfileSampler {
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> Profile {
+        ALL_PROFILES[self.alias.sample(rng)]
+    }
+}
+
+/// Render Table II (the `inspect --distributions` CLI output).
+pub fn table_ii() -> crate::util::table::Table {
+    let mut t = crate::util::table::Table::new(&[
+        "MIG profile", "uniform", "skew-small", "skew-big", "bimodal",
+    ])
+    .title("MIG profile distributions (paper Table II)");
+    let dists = Distribution::paper_set();
+    for (i, p) in ALL_PROFILES.iter().enumerate() {
+        let mut row = vec![p.canonical_name().to_string()];
+        for d in &dists {
+            row.push(format!("{:.4}", d.pdf()[i]));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II, asserted verbatim (experiment id T2 in DESIGN.md §4).
+    #[test]
+    fn table_ii_data() {
+        assert_eq!(Distribution::SkewSmall.pdf(), [0.05, 0.10, 0.10, 0.20, 0.25, 0.30]);
+        assert_eq!(Distribution::SkewBig.pdf(), [0.30, 0.25, 0.20, 0.10, 0.10, 0.05]);
+        assert_eq!(Distribution::Bimodal.pdf(), [0.30, 0.15, 0.05, 0.05, 0.15, 0.30]);
+        for d in Distribution::paper_set() {
+            let sum: f64 = d.pdf().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "{d} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn mean_slices_ordering() {
+        // skew-big requests more slices per workload than skew-small.
+        assert!(Distribution::SkewBig.mean_slices() > Distribution::Uniform.mean_slices());
+        assert!(Distribution::Uniform.mean_slices() > Distribution::SkewSmall.mean_slices());
+        // Uniform: (8+4+4+2+2+1)/6 = 3.5.
+        assert!((Distribution::Uniform.mean_slices() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_matches_pdf() {
+        let d = Distribution::Bimodal;
+        let sampler = d.sampler();
+        let mut rng = Rng::new(7);
+        let trials = 120_000;
+        let mut counts = [0f64; NUM_PROFILES];
+        for _ in 0..trials {
+            counts[sampler.sample(&mut rng).index()] += 1.0;
+        }
+        for (i, &p) in d.pdf().iter().enumerate() {
+            let freq = counts[i] / trials as f64;
+            assert!((freq - p).abs() < 0.01, "profile {i}: {freq} vs {p}");
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Distribution::parse("uniform"), Some(Distribution::Uniform));
+        assert_eq!(Distribution::parse("skew_small"), Some(Distribution::SkewSmall));
+        assert_eq!(Distribution::parse("SKEW-BIG"), Some(Distribution::SkewBig));
+        assert_eq!(Distribution::parse("bimodal"), Some(Distribution::Bimodal));
+        assert_eq!(Distribution::parse("zipf"), None);
+    }
+
+    #[test]
+    fn custom_normalizes() {
+        let d = Distribution::custom(&[1.0, 1.0, 0.0, 0.0, 0.0, 2.0]).unwrap();
+        let pdf = d.pdf();
+        assert!((pdf[0] - 0.25).abs() < 1e-12);
+        assert!((pdf[5] - 0.5).abs() < 1e-12);
+        assert!(Distribution::custom(&[1.0]).is_err());
+        assert!(Distribution::custom(&[0.0; 6]).is_err());
+        assert!(Distribution::custom(&[-1.0, 2.0, 0.0, 0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn table_ii_renders() {
+        let s = table_ii().render();
+        assert!(s.contains("skew-small"));
+        assert!(s.contains("1g.10gb"));
+        assert!(s.contains("0.3000"));
+    }
+}

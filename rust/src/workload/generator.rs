@@ -1,0 +1,246 @@
+//! Synthetic workload generation following the paper's evaluation protocol
+//! (Section VI):
+//!
+//! 1. one workload arrives per scheduling slot, its profile drawn i.i.d.
+//!    from a Table II distribution;
+//! 2. arrivals continue until the cumulative requested slice count reaches
+//!    the cluster capacity — that arrival count defines the horizon `T`
+//!    ("the number of scheduling slots required to saturate the cluster
+//!    capacity");
+//! 3. every workload's lifespan is then drawn uniformly from `[1, T]`
+//!    slots, giving heterogeneous lifetimes synchronized with the
+//!    scheduling procedure.
+
+use super::distribution::Distribution;
+use super::spec::{TenantId, Workload, WorkloadId};
+use crate::util::rng::Rng;
+
+/// Generator configuration + state.
+#[derive(Clone, Debug)]
+pub struct WorkloadGenerator {
+    distribution: Distribution,
+    /// Number of tenants to attribute requests to (round-robin attribution;
+    /// tenancy does not influence scheduling, only accounting/isolation).
+    num_tenants: u32,
+}
+
+/// The output of one generation pass: the arrival sequence and the horizon.
+#[derive(Clone, Debug)]
+pub struct GeneratedWorkloads {
+    /// Workloads in arrival order; `workloads[t].arrival_slot == t`.
+    pub workloads: Vec<Workload>,
+    /// The saturation horizon `T` (== `workloads.len()`).
+    pub horizon: u64,
+    /// Total requested slices (≥ capacity by construction).
+    pub total_slices: u64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(distribution: Distribution) -> Self {
+        Self { distribution, num_tenants: 1 }
+    }
+
+    pub fn with_tenants(mut self, n: u32) -> Self {
+        assert!(n > 0, "need at least one tenant");
+        self.num_tenants = n;
+        self
+    }
+
+    pub fn distribution(&self) -> &Distribution {
+        &self.distribution
+    }
+
+    /// Generate the paper's arrival sequence for a cluster with
+    /// `capacity_slices` total slices (M GPUs × 8).
+    ///
+    /// Durations are assigned in a second pass because `T` is only known
+    /// once the cumulative demand reaches capacity.
+    pub fn generate(&self, capacity_slices: u64, rng: &mut Rng) -> GeneratedWorkloads {
+        assert!(capacity_slices > 0);
+        let sampler = self.distribution.sampler();
+
+        // Pass 1: arrivals until saturation.
+        let mut profiles = Vec::new();
+        let mut total: u64 = 0;
+        while total < capacity_slices {
+            let p = sampler.sample(rng);
+            total += p.size() as u64;
+            profiles.push(p);
+        }
+        let horizon = profiles.len() as u64;
+
+        // Pass 2: lifespans ~ U[1, T], tenants round-robin.
+        let workloads = profiles
+            .into_iter()
+            .enumerate()
+            .map(|(t, profile)| Workload {
+                id: WorkloadId(t as u64),
+                tenant: TenantId(t as u32 % self.num_tenants),
+                profile,
+                arrival_slot: t as u64,
+                duration_slots: rng.range_inclusive(1, horizon),
+            })
+            .collect();
+
+        GeneratedWorkloads { workloads, horizon, total_slices: total }
+    }
+
+    /// Generate an *open-ended* stream for the serving daemon's load
+    /// generator: `n` workloads with exponential(λ) inter-arrival times
+    /// mapped onto integer slots, durations U[1, max_duration].
+    pub fn generate_stream(
+        &self,
+        n: usize,
+        mean_interarrival_slots: f64,
+        max_duration: u64,
+        rng: &mut Rng,
+    ) -> Vec<Workload> {
+        assert!(mean_interarrival_slots > 0.0 && max_duration >= 1);
+        let sampler = self.distribution.sampler();
+        let mut slot_f = 0.0f64;
+        (0..n)
+            .map(|i| {
+                slot_f += rng.exponential(1.0 / mean_interarrival_slots);
+                Workload {
+                    id: WorkloadId(i as u64),
+                    tenant: TenantId(i as u32 % self.num_tenants),
+                    profile: sampler.sample(rng),
+                    arrival_slot: slot_f as u64,
+                    duration_slots: rng.range_inclusive(1, max_duration),
+                }
+            })
+            .collect()
+    }
+}
+
+impl GeneratedWorkloads {
+    /// Cumulative requested slices after each arrival — used to locate
+    /// the paper's "GPU demand" checkpoints (50% = the slot where the
+    /// running sum crosses half the capacity).
+    pub fn cumulative_slices(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.workloads.len());
+        let mut acc = 0u64;
+        for w in &self.workloads {
+            acc += w.slices() as u64;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// First slot index at which cumulative demand reaches
+    /// `fraction` × capacity (fraction in (0, 1]).
+    pub fn demand_checkpoint_slot(&self, capacity_slices: u64, fraction: f64) -> u64 {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        let target = (capacity_slices as f64 * fraction).ceil() as u64;
+        let mut acc = 0u64;
+        for w in &self.workloads {
+            acc += w.slices() as u64;
+            if acc >= target {
+                return w.arrival_slot;
+            }
+        }
+        self.horizon.saturating_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::ALL_PROFILES;
+
+    #[test]
+    fn saturates_capacity_exactly_once() {
+        let gen = WorkloadGenerator::new(Distribution::Uniform);
+        let mut rng = Rng::new(1);
+        let g = gen.generate(800, &mut rng);
+        assert!(g.total_slices >= 800);
+        // Removing the last arrival drops below capacity (minimality).
+        let last = g.workloads.last().unwrap();
+        assert!(g.total_slices - last.slices() as u64 <= 800);
+        assert_eq!(g.horizon, g.workloads.len() as u64);
+    }
+
+    #[test]
+    fn arrival_slots_are_consecutive() {
+        let gen = WorkloadGenerator::new(Distribution::SkewSmall);
+        let mut rng = Rng::new(2);
+        let g = gen.generate(800, &mut rng);
+        for (t, w) in g.workloads.iter().enumerate() {
+            assert_eq!(w.arrival_slot, t as u64);
+            assert_eq!(w.id, WorkloadId(t as u64));
+        }
+    }
+
+    #[test]
+    fn durations_within_horizon() {
+        let gen = WorkloadGenerator::new(Distribution::Bimodal);
+        let mut rng = Rng::new(3);
+        let g = gen.generate(800, &mut rng);
+        for w in &g.workloads {
+            assert!(w.duration_slots >= 1 && w.duration_slots <= g.horizon, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn horizon_tracks_mean_profile_size() {
+        // skew-small needs many more arrivals to saturate than skew-big.
+        let mut rng = Rng::new(4);
+        let small =
+            WorkloadGenerator::new(Distribution::SkewSmall).generate(8000, &mut rng).horizon;
+        let big =
+            WorkloadGenerator::new(Distribution::SkewBig).generate(8000, &mut rng).horizon;
+        // E[slices]: skew-small 2.4, skew-big 4.65 → ratio ≈ 1.94.
+        assert!(small as f64 > big as f64 * 1.8, "small={small} big={big}");
+        // And both roughly match capacity / E[slices].
+        let expect_small = 8000.0 / Distribution::SkewSmall.mean_slices();
+        assert!((small as f64 - expect_small).abs() / expect_small < 0.1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = WorkloadGenerator::new(Distribution::Uniform);
+        let a = gen.generate(800, &mut Rng::new(99));
+        let b = gen.generate(800, &mut Rng::new(99));
+        assert_eq!(a.workloads, b.workloads);
+    }
+
+    #[test]
+    fn tenants_round_robin() {
+        let gen = WorkloadGenerator::new(Distribution::Uniform).with_tenants(3);
+        let g = gen.generate(200, &mut Rng::new(5));
+        for w in &g.workloads {
+            assert_eq!(w.tenant.0, w.id.0 as u32 % 3);
+        }
+    }
+
+    #[test]
+    fn cumulative_and_checkpoints() {
+        let gen = WorkloadGenerator::new(Distribution::Uniform);
+        let g = gen.generate(800, &mut Rng::new(10));
+        let cum = g.cumulative_slices();
+        assert_eq!(cum.len(), g.workloads.len());
+        assert!(cum.windows(2).all(|w| w[1] > w[0]));
+        let half = g.demand_checkpoint_slot(800, 0.5);
+        assert!(cum[half as usize] >= 400);
+        assert!(half == 0 || cum[half as usize - 1] < 400);
+        let full = g.demand_checkpoint_slot(800, 1.0);
+        assert_eq!(full, g.horizon - 1);
+    }
+
+    #[test]
+    fn stream_generation() {
+        let gen = WorkloadGenerator::new(Distribution::Uniform).with_tenants(4);
+        let mut rng = Rng::new(11);
+        let ws = gen.generate_stream(500, 2.0, 50, &mut rng);
+        assert_eq!(ws.len(), 500);
+        // Arrivals are non-decreasing.
+        assert!(ws.windows(2).all(|p| p[0].arrival_slot <= p[1].arrival_slot));
+        // All profiles eventually appear.
+        for p in ALL_PROFILES {
+            assert!(ws.iter().any(|w| w.profile == p), "{p}");
+        }
+        // Mean inter-arrival roughly 2 slots.
+        let span = ws.last().unwrap().arrival_slot as f64;
+        assert!((span / 500.0 - 2.0).abs() < 0.4, "span={span}");
+    }
+}

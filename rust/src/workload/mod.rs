@@ -1,0 +1,14 @@
+//! Workloads: requests for MIG profiles with arrival times and lifespans
+//! (paper Section IV system model), the Table II request distributions,
+//! the synthetic generator behind the Monte Carlo evaluation, and a
+//! JSON-lines trace format for record/replay.
+
+pub mod distribution;
+pub mod generator;
+pub mod spec;
+pub mod trace;
+
+pub use distribution::Distribution;
+pub use generator::{GeneratedWorkloads, WorkloadGenerator};
+pub use spec::{TenantId, Workload, WorkloadId};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,127 @@
+//! Workload descriptors.
+
+use crate::mig::Profile;
+use crate::util::json::Json;
+
+/// Unique workload identifier (assigned by generator / API, monotone).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkloadId(pub u64);
+
+impl std::fmt::Display for WorkloadId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "w{}", self.0)
+    }
+}
+
+/// Tenant identifier — the multi-tenant dimension of the serving daemon.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// A workload request: one MIG profile, an arrival slot, and a lifespan in
+/// scheduling slots (paper Section IV: `r_w(p)` plus timing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Workload {
+    pub id: WorkloadId,
+    pub tenant: TenantId,
+    /// Requested MIG profile `p ∈ P`.
+    pub profile: Profile,
+    /// Arrival scheduling slot (one arrival per slot in the paper's model).
+    pub arrival_slot: u64,
+    /// Lifespan in scheduling slots, sampled from U[1, T].
+    pub duration_slots: u64,
+}
+
+impl Workload {
+    /// Slot at which the workload terminates and releases its slices
+    /// (exclusive: resources free at the *start* of this slot).
+    pub fn departure_slot(&self) -> u64 {
+        self.arrival_slot + self.duration_slots
+    }
+
+    /// Requested slice count — the `r_w(p)` resource vector collapses to
+    /// the memory-slice footprint in the 8-position model.
+    pub fn slices(&self) -> u8 {
+        self.profile.size()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id.0)
+            .with("tenant", self.tenant.0 as u64)
+            .with("profile", self.profile.canonical_name())
+            .with("arrival_slot", self.arrival_slot)
+            .with("duration_slots", self.duration_slots)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload, String> {
+        let profile_name = j.req_str("profile")?;
+        let profile = Profile::parse(profile_name)
+            .ok_or_else(|| format!("unknown profile '{profile_name}'"))?;
+        Ok(Workload {
+            id: WorkloadId(j.req_u64("id")?),
+            tenant: TenantId(j.req_u64("tenant").unwrap_or(0) as u32),
+            profile,
+            arrival_slot: j.req_u64("arrival_slot")?,
+            duration_slots: j.req_u64("duration_slots")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Workload {
+        Workload {
+            id: WorkloadId(17),
+            tenant: TenantId(3),
+            profile: Profile::P3g40gb,
+            arrival_slot: 42,
+            duration_slots: 10,
+        }
+    }
+
+    #[test]
+    fn departure_and_slices() {
+        let w = sample();
+        assert_eq!(w.departure_slot(), 52);
+        assert_eq!(w.slices(), 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = sample();
+        let j = w.to_json();
+        assert_eq!(Workload::from_json(&j).unwrap(), w);
+    }
+
+    #[test]
+    fn json_rejects_bad_profile() {
+        let j = sample().to_json();
+        let mut j2 = j.clone();
+        j2.set("profile", "42g.1gb");
+        assert!(Workload::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn json_tenant_defaults_to_zero() {
+        let j = Json::obj()
+            .with("id", 1u64)
+            .with("profile", "1g.10gb")
+            .with("arrival_slot", 0u64)
+            .with("duration_slots", 5u64);
+        assert_eq!(Workload::from_json(&j).unwrap().tenant, TenantId(0));
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(WorkloadId(9).to_string(), "w9");
+        assert_eq!(TenantId(2).to_string(), "t2");
+    }
+}

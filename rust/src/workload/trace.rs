@@ -1,0 +1,234 @@
+//! JSON-lines workload trace format: record synthetic runs, replay them
+//! byte-identically, and import external traces into the simulator.
+//!
+//! Format: one JSON object per line. The first line is a header object
+//! (`{"type":"header",...}`), subsequent lines are events. Two event kinds
+//! exist — `arrival` carries the full workload spec, `departure` is
+//! derivable from arrivals and optional (written for human inspection,
+//! ignored on load).
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use super::spec::Workload;
+use crate::util::json::Json;
+
+/// A trace event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Arrival(Workload),
+    /// (workload id, slot) — informational.
+    Departure(u64, u64),
+}
+
+/// An in-memory workload trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// Free-form description (distribution name, seed, generator version).
+    pub description: String,
+    /// Cluster capacity in slices the trace was generated against.
+    pub capacity_slices: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(description: &str, capacity_slices: u64) -> Self {
+        Self { description: description.to_string(), capacity_slices, events: Vec::new() }
+    }
+
+    /// Build a trace from an arrival sequence (departures synthesized).
+    pub fn from_workloads(
+        description: &str,
+        capacity_slices: u64,
+        workloads: &[Workload],
+    ) -> Self {
+        let mut t = Self::new(description, capacity_slices);
+        for w in workloads {
+            t.events.push(TraceEvent::Arrival(*w));
+        }
+        // Synthesize departures in slot order for readability.
+        let mut departures: Vec<(u64, u64)> =
+            workloads.iter().map(|w| (w.id.0, w.departure_slot())).collect();
+        departures.sort_by_key(|&(_, slot)| slot);
+        for (id, slot) in departures {
+            t.events.push(TraceEvent::Departure(id, slot));
+        }
+        t
+    }
+
+    /// The arrival sequence in arrival-slot order.
+    pub fn arrivals(&self) -> Vec<Workload> {
+        let mut ws: Vec<Workload> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Arrival(w) => Some(*w),
+                TraceEvent::Departure(..) => None,
+            })
+            .collect();
+        ws.sort_by_key(|w| (w.arrival_slot, w.id));
+        ws
+    }
+
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        let header = Json::obj()
+            .with("type", "header")
+            .with("format", "migsched-trace-v1")
+            .with("description", self.description.as_str())
+            .with("capacity_slices", self.capacity_slices);
+        out.push_str(&header.to_string_compact());
+        out.push('\n');
+        for e in &self.events {
+            let j = match e {
+                TraceEvent::Arrival(w) => {
+                    let mut j = w.to_json();
+                    j.set("type", "arrival");
+                    j
+                }
+                TraceEvent::Departure(id, slot) => Json::obj()
+                    .with("type", "departure")
+                    .with("id", *id)
+                    .with("slot", *slot),
+            };
+            out.push_str(&j.to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn parse_jsonl(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().ok_or("empty trace")?;
+        let header = Json::parse(header_line).map_err(|e| format!("header: {e}"))?;
+        if header.req_str("type")? != "header" {
+            return Err("first line must be the header object".into());
+        }
+        let format = header.req_str("format")?;
+        if format != "migsched-trace-v1" {
+            return Err(format!("unsupported trace format '{format}'"));
+        }
+        let mut trace = Trace::new(
+            header.get("description").and_then(Json::as_str).unwrap_or(""),
+            header.req_u64("capacity_slices")?,
+        );
+        for (lineno, line) in lines.enumerate() {
+            let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 2))?;
+            match j.req_str("type")? {
+                "arrival" => trace.events.push(TraceEvent::Arrival(Workload::from_json(&j)?)),
+                "departure" => trace
+                    .events
+                    .push(TraceEvent::Departure(j.req_u64("id")?, j.req_u64("slot")?)),
+                other => return Err(format!("line {}: unknown event '{other}'", lineno + 2)),
+            }
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render_jsonl().as_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut text = String::new();
+        let mut reader = std::io::BufReader::new(f);
+        loop {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) => break,
+                Ok(_) => text.push_str(&line),
+                Err(e) => return Err(format!("{}: {e}", path.display())),
+            }
+        }
+        Self::parse_jsonl(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+    use crate::workload::spec::{TenantId, WorkloadId};
+
+    fn sample_workloads() -> Vec<Workload> {
+        vec![
+            Workload {
+                id: WorkloadId(0),
+                tenant: TenantId(0),
+                profile: Profile::P2g20gb,
+                arrival_slot: 0,
+                duration_slots: 3,
+            },
+            Workload {
+                id: WorkloadId(1),
+                tenant: TenantId(1),
+                profile: Profile::P7g80gb,
+                arrival_slot: 1,
+                duration_slots: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Trace::from_workloads("unit test", 64, &sample_workloads());
+        let text = t.render_jsonl();
+        let back = Trace::parse_jsonl(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.arrivals(), sample_workloads());
+    }
+
+    #[test]
+    fn departures_sorted_by_slot() {
+        let t = Trace::from_workloads("d", 64, &sample_workloads());
+        // w1 departs at slot 2, w0 at slot 3.
+        let deps: Vec<(u64, u64)> = t
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Departure(id, slot) => Some((*id, *slot)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(deps, vec![(1, 2), (0, 3)]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::parse_jsonl("").is_err());
+        assert!(Trace::parse_jsonl("{\"type\":\"arrival\"}").is_err());
+        let bad_format = r#"{"type":"header","format":"v999","capacity_slices":8}"#;
+        assert!(Trace::parse_jsonl(bad_format).is_err());
+        let good_header =
+            r#"{"type":"header","format":"migsched-trace-v1","capacity_slices":8}"#;
+        let with_bad_event = format!("{good_header}\n{{\"type\":\"explode\"}}");
+        assert!(Trace::parse_jsonl(&with_bad_event).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = Trace::from_workloads("file test", 800, &sample_workloads());
+        let path = std::env::temp_dir()
+            .join(format!("migsched-trace-{}.jsonl", std::process::id()));
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn generator_trace_replay_identity() {
+        use crate::util::rng::Rng;
+        use crate::workload::{Distribution, WorkloadGenerator};
+        let gen = WorkloadGenerator::new(Distribution::Uniform);
+        let g = gen.generate(800, &mut Rng::new(2024));
+        let t = Trace::from_workloads("gen", 800, &g.workloads);
+        let replayed = Trace::parse_jsonl(&t.render_jsonl()).unwrap().arrivals();
+        assert_eq!(replayed, g.workloads);
+    }
+}

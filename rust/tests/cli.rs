@@ -1,0 +1,107 @@
+//! CLI smoke tests: run the built `migsched` binary end-to-end for every
+//! offline subcommand and assert on its output and exit codes.
+
+use std::process::Command;
+
+fn migsched(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_migsched"))
+        .args(args)
+        .output()
+        .expect("spawn migsched");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = migsched(&["help"]);
+    assert!(ok);
+    for cmd in ["sim", "sweep", "figures", "serve", "inspect", "trace-record"] {
+        assert!(stdout.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (_, stderr, ok) = migsched(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn sim_small_run() {
+    let (stdout, _, ok) = migsched(&[
+        "sim", "--gpus", "8", "--seed", "7", "--scheduler", "MFI",
+        "--distribution", "skew-small",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("scheme=MFI"));
+    assert!(stdout.contains("distribution=skew-small"));
+    assert!(stdout.contains("100%"));
+    assert!(stdout.contains("whole-run acceptance"));
+}
+
+#[test]
+fn sim_rejects_bad_flags() {
+    let (_, stderr, ok) = migsched(&["sim", "--scheduler", "SLURM"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown scheduler"));
+    let (_, stderr, ok) = migsched(&["sim", "--gpus", "not-a-number"]);
+    assert!(!ok);
+    assert!(stderr.contains("integer"));
+}
+
+#[test]
+fn inspect_outputs() {
+    let (stdout, _, ok) = migsched(&["inspect", "--hardware", "a100-80gb"]);
+    assert!(ok);
+    assert!(stdout.contains("7g.80gb"));
+    let (stdout, _, ok) = migsched(&["inspect", "--distributions"]);
+    assert!(ok);
+    assert!(stdout.contains("skew-small"));
+    let (stdout, _, ok) = migsched(&["inspect", "--candidates"]);
+    assert!(ok);
+    assert!(stdout.contains("\"mask\""));
+    let (_, stderr, ok) = migsched(&["inspect"]);
+    assert!(!ok);
+    assert!(stderr.contains("inspect needs"));
+}
+
+#[test]
+fn trace_record_and_replay_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("migsched-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("t.jsonl");
+    let (stdout, _, ok) = migsched(&[
+        "trace-record", "--out", trace.to_str().unwrap(), "--gpus", "8", "--seed", "3",
+        "--distribution", "bimodal",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("wrote"));
+    let (stdout, _, ok) = migsched(&[
+        "trace-replay", "--trace", trace.to_str().unwrap(), "--scheduler", "BF-BI",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("\"scheme\": \"BF-BI\""));
+    assert!(stdout.contains("acceptance_rate"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn figures_quick() {
+    let dir = std::env::temp_dir().join(format!("migsched-cli-fig-{}", std::process::id()));
+    let (stdout, _, ok) = migsched(&[
+        "figures", "--fig", "6", "--runs", "3", "--gpus", "8",
+        "--schemes", "MFI,FF", "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Fig. 6"));
+    assert!(dir.join("fig6_fragmentation_score.csv").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+    let (_, stderr, ok) = migsched(&["figures", "--fig", "9"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown figure"));
+}

@@ -1,0 +1,263 @@
+//! Cross-module property-based tests (the `util::check` mini-harness):
+//! system-level invariants that hold for ANY workload sequence, scheduler
+//! and cluster size.
+
+use migsched::cluster::Cluster;
+use migsched::frag::{score_direct_rule, FragScorer, OverlapRule, ScoreTable};
+use migsched::mig::{GpuState, HardwareModel, ALL_PROFILES, NUM_SLICES};
+use migsched::sched::SchedulerKind;
+use migsched::util::check::{assert_close, forall};
+use migsched::util::rng::Rng;
+use migsched::workload::{Distribution, WorkloadGenerator, WorkloadId};
+
+/// A random episode: interleaved arrivals (random profiles) and releases.
+#[derive(Debug, Clone)]
+struct Episode {
+    seed: u64,
+    gpus: usize,
+    steps: usize,
+}
+
+fn random_episode(rng: &mut Rng) -> Episode {
+    Episode { seed: rng.next_u64(), gpus: 1 + rng.index(8), steps: 20 + rng.index(150) }
+}
+
+fn drive(episode: &Episode, kind: SchedulerKind) -> (Cluster, u64, u64) {
+    let hw = HardwareModel::a100_80gb();
+    let mut rng = Rng::new(episode.seed);
+    let mut cluster = Cluster::new(hw.clone(), episode.gpus);
+    let mut sched = kind.build(&hw);
+    let mut next_id = 0u64;
+    let mut accepted = 0u64;
+    let mut arrived = 0u64;
+    for _ in 0..episode.steps {
+        if rng.chance(0.65) {
+            arrived += 1;
+            let p = *rng.choose(&ALL_PROFILES);
+            if let Some(pl) = sched.schedule(&cluster, p) {
+                cluster.allocate(WorkloadId(next_id), pl).expect("valid placement");
+                accepted += 1;
+                next_id += 1;
+            }
+        } else if cluster.allocated_workloads() > 0 {
+            let ids: Vec<_> = cluster.allocations().map(|(id, _)| id).collect();
+            cluster.release(*rng.choose(&ids)).unwrap();
+        }
+    }
+    (cluster, accepted, arrived)
+}
+
+#[test]
+fn prop_no_overlap_ever_and_accounting_consistent() {
+    forall("no-overlap", random_episode, |ep| {
+        for kind in SchedulerKind::all() {
+            let (cluster, accepted, arrived) = drive(ep, kind);
+            if accepted > arrived {
+                return Err(format!("{kind}: accepted {accepted} > arrived {arrived}"));
+            }
+            // Per-GPU used slices equals the sum of allocation footprints.
+            let mut per_gpu = vec![0u32; cluster.num_gpus()];
+            for (_, pl) in cluster.allocations() {
+                per_gpu[pl.gpu] += pl.profile.size() as u32;
+            }
+            for (gpu_id, g) in cluster.gpus().iter().enumerate() {
+                if g.used_slices() as u32 != per_gpu[gpu_id] {
+                    return Err(format!(
+                        "{kind}: gpu {gpu_id} occupancy {} != allocation sum {}",
+                        g.used_slices(),
+                        per_gpu[gpu_id]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_release_all_restores_empty_cluster() {
+    forall("release-restores", random_episode, |ep| {
+        let (mut cluster, ..) = drive(ep, SchedulerKind::Mfi);
+        let ids: Vec<_> = cluster.allocations().map(|(id, _)| id).collect();
+        for id in ids {
+            cluster.release(id).map_err(|e| e.to_string())?;
+        }
+        if cluster.used_slices() != 0 || cluster.active_gpus() != 0 {
+            return Err("cluster not empty after releasing everything".into());
+        }
+        if cluster.gpus().iter().any(|g| !g.is_empty()) {
+            return Err("stale occupancy bits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mfi_completeness() {
+    // MFI rejects iff NO feasible placement exists cluster-wide.
+    forall("mfi-complete", random_episode, |ep| {
+        let hw = HardwareModel::a100_80gb();
+        let (cluster, ..) = drive(ep, SchedulerKind::Mfi);
+        let mut mfi = SchedulerKind::Mfi.build(&hw);
+        for p in ALL_PROFILES {
+            let feasible = cluster.gpus().iter().any(|g| g.can_host(p));
+            let proposed = mfi.schedule(&cluster, p).is_some();
+            if feasible != proposed {
+                return Err(format!("{p}: feasible={feasible} proposed={proposed}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mfi_statistically_dominates_ff_under_churn() {
+    // MFI is an online greedy policy, so per-sequence dominance is NOT a
+    // theorem, and in *static* arrival-only packing (no terminations) MFI
+    // and FF are statistically indistinguishable (we measured MFI ~2%
+    // BELOW FF on tiny clusters — greedy ΔF-minimization is not a
+    // bin-packing heuristic). The paper's claim is specifically about the
+    // ONLINE setting, where continuous arrivals+terminations fragment the
+    // cluster: there MFI must dominate in aggregate. Assert exactly that,
+    // via the paper's own simulation protocol on many seeds.
+    use migsched::sim::{SimConfig, SimEngine};
+    let hw = HardwareModel::a100_80gb();
+    let mut master = Rng::new(0xD0D0);
+    let (mut mfi_total, mut ff_total) = (0u64, 0u64);
+    for _ in 0..60 {
+        let seed = master.next_u64();
+        let cfg = SimConfig {
+            num_gpus: 6,
+            ..SimConfig::paper(Distribution::Uniform, seed)
+        };
+        let engine = SimEngine::new(cfg);
+        let mut mfi = SchedulerKind::Mfi.build(&hw);
+        mfi_total += engine.run(&mut *mfi).accepted;
+        let mut ff = SchedulerKind::Ff.build(&hw);
+        ff_total += engine.run(&mut *ff).accepted;
+    }
+    assert!(
+        mfi_total >= ff_total,
+        "MFI accepted {mfi_total} < FF {ff_total} over 60 churn runs"
+    );
+}
+
+#[test]
+fn prop_score_table_equals_direct_for_all_hardware() {
+    for hw in [
+        HardwareModel::a100_80gb(),
+        HardwareModel::a100_40gb(),
+        HardwareModel::h100_80gb(),
+        HardwareModel::h200_141gb(),
+    ] {
+        for rule in [OverlapRule::Partial, OverlapRule::Any] {
+            let table = ScoreTable::for_hardware_rule(&hw, rule);
+            for occ in 0u16..=255 {
+                let g = GpuState::from_mask(occ as u8);
+                assert_eq!(table.score(g), score_direct_rule(g, &hw, rule));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_frag_score_zero_iff_no_partially_blocked_window() {
+    let hw = HardwareModel::a100_80gb();
+    for occ in 0u16..=255 {
+        let g = GpuState::from_mask(occ as u8);
+        let score = score_direct_rule(g, &hw, OverlapRule::Partial);
+        let has_waste = ALL_PROFILES.iter().any(|&p| {
+            p.size() <= g.free_slices()
+                && p.starts().iter().any(|&s| {
+                    let w = p.mask_at(s);
+                    g.mask() & w != 0 && g.mask() & w != w
+                })
+        });
+        assert_eq!(score > 0, has_waste, "occ={occ:#010b}");
+    }
+}
+
+#[test]
+fn prop_generator_capacity_invariant() {
+    forall(
+        "generator-saturates",
+        |rng| (rng.next_u64(), 1 + rng.index(4)),
+        |&(seed, scale)| {
+            let capacity = 200 * scale as u64;
+            for dist in Distribution::paper_set() {
+                let gen = WorkloadGenerator::new(dist.clone());
+                let g = gen.generate(capacity, &mut Rng::new(seed));
+                let total: u64 = g.workloads.iter().map(|w| w.slices() as u64).sum();
+                if total < capacity {
+                    return Err(format!("{dist}: total {total} < capacity {capacity}"));
+                }
+                let last = g.workloads.last().unwrap().slices() as u64;
+                if total - last >= capacity {
+                    return Err(format!("{dist}: over-generated past saturation"));
+                }
+                for w in &g.workloads {
+                    if w.duration_slots == 0 || w.duration_slots > g.horizon {
+                        return Err(format!("{dist}: duration {} out of [1, T]", w.duration_slots));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mean_score_linear_in_cluster() {
+    // mean_score over the concatenation of clusters == weighted mean —
+    // sanity for the Fig. 6 metric aggregation.
+    let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
+    forall(
+        "mean-score-linearity",
+        |rng| {
+            let a: Vec<u8> = (0..1 + rng.index(6)).map(|_| rng.next_u64() as u8).collect();
+            let b: Vec<u8> = (0..1 + rng.index(6)).map(|_| rng.next_u64() as u8).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let ga: Vec<GpuState> = a.iter().map(|&m| GpuState::from_mask(m)).collect();
+            let gb: Vec<GpuState> = b.iter().map(|&m| GpuState::from_mask(m)).collect();
+            let all: Vec<GpuState> = ga.iter().chain(gb.iter()).copied().collect();
+            let expect = (table.mean_score(&ga) * ga.len() as f64
+                + table.mean_score(&gb) * gb.len() as f64)
+                / all.len() as f64;
+            assert_close(table.mean_score(&all), expect, 1e-12, "linearity");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_slices_conserved_during_sim() {
+    // At every checkpoint: utilization × capacity == Σ profile sizes of
+    // currently allocated workloads ≤ capacity.
+    use migsched::sim::{SimConfig, SimEngine};
+    forall(
+        "sim-conservation",
+        |rng| rng.next_u64(),
+        |&seed| {
+            let cfg = SimConfig::small(Distribution::Uniform, seed);
+            let engine = SimEngine::new(cfg.clone());
+            let hw = cfg.hardware.clone();
+            for kind in [SchedulerKind::Mfi, SchedulerKind::Ff, SchedulerKind::WfBi] {
+                let mut sched = kind.build(&hw);
+                let result = engine.run(&mut *sched);
+                let capacity = (cfg.num_gpus * NUM_SLICES) as f64;
+                for rec in &result.records {
+                    let used = rec.metrics.utilization * capacity;
+                    if used < -1e-9 || used > capacity + 1e-9 {
+                        return Err(format!("{kind}: used {used} out of range"));
+                    }
+                    if rec.metrics.active_gpus > cfg.num_gpus {
+                        return Err(format!("{kind}: active GPUs exceed cluster"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,153 @@
+//! Live-socket integration tests: daemon + HTTP client over an ephemeral
+//! port, covering the full request path (accept → parse → schedule →
+//! respond) including concurrent submissions.
+
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::json::Json;
+
+fn start_daemon(num_gpus: usize) -> (migsched::server::ServerHandle, HttpClient) {
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus,
+        workers: 4,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind ephemeral port");
+    let client = HttpClient::new(&handle.addr().to_string());
+    (handle, client)
+}
+
+#[test]
+fn health_and_stats() {
+    let (handle, client) = start_daemon(4);
+    let r = client.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body, "ok\n");
+
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("num_gpus").unwrap(), 4);
+    assert_eq!(stats.req_u64("capacity_slices").unwrap(), 32);
+    assert_eq!(stats.req_str("scheduler").unwrap(), "MFI");
+    handle.shutdown();
+}
+
+#[test]
+fn submit_and_release_over_the_wire() {
+    let (handle, client) = start_daemon(2);
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "3g.40gb").with("tenant", 9u64))
+        .unwrap();
+    assert_eq!(r.status, 201, "{}", r.body);
+    let j = r.json().unwrap();
+    let id = j.req_u64("id").unwrap();
+    assert_eq!(j.req_str("profile").unwrap(), "3g.40gb");
+
+    let lookup = client.get(&format!("/v1/workloads/{id}")).unwrap();
+    assert_eq!(lookup.status, 200);
+    assert_eq!(lookup.json().unwrap().req_u64("tenant").unwrap(), 9);
+
+    let del = client.delete(&format!("/v1/workloads/{id}")).unwrap();
+    assert_eq!(del.status, 200);
+    let lookup2 = client.get(&format!("/v1/workloads/{id}")).unwrap();
+    assert_eq!(lookup2.status, 404);
+    handle.shutdown();
+}
+
+#[test]
+fn rejection_when_fragmented_or_full() {
+    let (handle, client) = start_daemon(1);
+    // Fill the single GPU.
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "7g.80gb"))
+        .unwrap();
+    assert_eq!(r.status, 201);
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "1g.10gb"))
+        .unwrap();
+    assert_eq!(r.status, 409);
+    assert_eq!(r.json().unwrap().get("rejected").unwrap().as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn lease_expiry_via_tick_endpoint() {
+    let (handle, client) = start_daemon(2);
+    let r = client
+        .post_json(
+            "/v1/workloads",
+            &Json::obj().with("profile", "2g.20gb").with("duration_slots", 3u64),
+        )
+        .unwrap();
+    assert_eq!(r.status, 201);
+    let tick = client.post_json("/v1/tick", &Json::obj().with("slots", 3u64)).unwrap();
+    let j = tick.json().unwrap();
+    assert_eq!(j.req_u64("clock_slot").unwrap(), 3);
+    assert_eq!(j.get("released").unwrap().as_arr().unwrap().len(), 1);
+
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("allocated_workloads").unwrap(), 0);
+    assert_eq!(stats.req_u64("expired_total").unwrap(), 1);
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_submissions_stay_consistent() {
+    let (handle, client) = start_daemon(8);
+    let addr = handle.addr().to_string();
+    let threads: Vec<_> = (0..8)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let client = HttpClient::new(&addr);
+                let mut accepted = 0u64;
+                for _ in 0..8 {
+                    let r = client
+                        .post_json("/v1/workloads", &Json::obj().with("profile", "1g.10gb"))
+                        .unwrap();
+                    if r.status == 201 {
+                        accepted += 1;
+                    }
+                }
+                accepted
+            })
+        })
+        .collect();
+    let total: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    // 8 GPUs × 7 1g-anchors = 56 feasible slots; 64 submissions.
+    assert_eq!(total, 56, "exactly the feasible capacity must be accepted");
+
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("accepted_total").unwrap(), 56);
+    assert_eq!(stats.req_u64("arrived_total").unwrap(), 64);
+    // Occupancy diagrams line up with 7 slices used per GPU.
+    let cluster = client.get("/v1/cluster").unwrap().json().unwrap();
+    let diagrams = cluster.get("diagrams").unwrap().as_arr().unwrap();
+    for d in diagrams {
+        assert_eq!(d.as_str().unwrap().matches('#').count(), 7);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_4xx() {
+    let (handle, client) = start_daemon(1);
+    let r = client.post_json("/v1/workloads", &Json::obj()).unwrap();
+    assert_eq!(r.status, 400);
+    let r = client.get("/v1/definitely/not/a/route").unwrap();
+    assert_eq!(r.status, 404);
+    let r = client.get("/v1/workloads/not-a-number").unwrap();
+    assert_eq!(r.status, 400);
+    handle.shutdown();
+}
+
+#[test]
+fn hardware_endpoint_reports_table_i() {
+    let (handle, client) = start_daemon(1);
+    let hw = client.get("/v1/hardware").unwrap().json().unwrap();
+    assert_eq!(hw.req_str("model").unwrap(), "A100-80GB");
+    let profiles = hw.get("profiles").unwrap().as_arr().unwrap();
+    assert_eq!(profiles.len(), 6);
+    let p7 = &profiles[0];
+    assert_eq!(p7.req_str("name").unwrap(), "7g.80gb");
+    assert_eq!(p7.req_u64("slices").unwrap(), 8);
+    handle.shutdown();
+}
