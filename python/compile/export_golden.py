@@ -1,0 +1,78 @@
+"""Export the golden fragmentation fixture consumed by
+``rust/tests/golden_frag.rs``.
+
+Evaluates the pure-jnp oracle (``kernels/ref.py`` — the specification the
+Pallas kernel and the AOT artifact are verified against) over **all 256**
+GPU occupancy masks and writes scores under both overlap rules, the
+partial-rule ΔF matrix (with the 1e9 infeasible sentinel) and the
+feasibility matrix, so the rust engines can be held to the python oracle
+bit-for-bit without python in the test loop.
+
+Run from the repository root:
+
+    python python/compile/export_golden.py
+
+and commit the regenerated ``rust/tests/golden/frag_golden.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
+from compile.kernels import ref
+
+OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "rust", "tests", "golden", "frag_golden.json",
+)
+
+SENTINEL = 1000000000  # == ref.INFEASIBLE as an exact integer
+
+
+def main() -> None:
+    masks = list(range(256))
+    occ = ref.occ_from_masks(masks)
+
+    scores_partial = np.asarray(ref.frag_scores(occ, "partial")).astype(int).tolist()
+    scores_any = np.asarray(ref.frag_scores(occ, "any")).astype(int).tolist()
+    _, deltas_f, feasible_f = ref.frag_program(occ, "partial")
+    deltas_f = np.asarray(deltas_f)
+    feasible_f = np.asarray(feasible_f)
+    deltas = [
+        [int(d) if f > 0.5 else SENTINEL for d, f in zip(drow, frow)]
+        for drow, frow in zip(deltas_f, feasible_f)
+    ]
+    feasible = [[int(f > 0.5) for f in frow] for frow in feasible_f]
+
+    # The oracle must reproduce the paper's worked examples before we let it
+    # pin the rust implementation (Section V-B: F(GPU 2)=16, F(GPU 1)=8).
+    assert scores_partial[0b0010_0011] == 16, scores_partial[0b0010_0011]
+    assert scores_partial[0b0010_0000] == 8
+    assert scores_partial[0x00] == 0 and scores_partial[0xFF] == 0
+    assert scores_any[0b0010_0011] == 23
+    assert max(scores_any) <= 41  # max_score(A100-80GB)
+
+    fixture = {
+        "format": "migsched-golden-frag-v1",
+        "source": "python/compile/kernels/ref.py (jnp oracle for Algorithm 1)",
+        "num_slices": ref.NUM_SLICES,
+        "num_candidates": ref.NUM_CANDIDATES,
+        "infeasible_sentinel": SENTINEL,
+        "scores_partial": scores_partial,
+        "scores_any": scores_any,
+        "deltas_partial": deltas,
+        "feasible": feasible,
+    }
+    with open(OUT, "w") as fh:
+        json.dump(fixture, fh, separators=(",", ":"))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

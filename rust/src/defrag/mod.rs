@@ -98,16 +98,13 @@ pub fn plan_defrag(
                         continue;
                     }
                     // ΔF = (remove from source) + (add to target host).
+                    // For same-GPU moves `host` IS the lifted state, so
+                    // `add_delta` is measured against it and the sum stays
+                    // exact in both cases.
                     let placed = host.with_placement(profile, start);
                     let add_delta =
                         table.score(placed) as i64 - table.score(host) as i64;
-                    let delta = if gpu_id == from.gpu {
-                        // Same-GPU move: lifted_delta already counts the
-                        // removal on this GPU; add_delta is vs `lifted`.
-                        lifted_delta + add_delta
-                    } else {
-                        lifted_delta + add_delta
-                    };
+                    let delta = lifted_delta + add_delta;
                     let candidate = (ai, Placement { gpu: gpu_id, profile, index: start }, delta);
                     if delta < best.map(|b| b.2).unwrap_or(0) {
                         best = Some(candidate);

@@ -21,9 +21,9 @@
 //! baseline schedulers ([`sched`]), the Table II workload distributions and
 //! trace tooling ([`workload`]), the slot-based Monte Carlo simulator and
 //! the experiment/figure harness ([`sim`]), an online serving daemon with a
-//! JSON-over-HTTP API ([`server`]), and a PJRT runtime that executes the
-//! AOT-compiled JAX/Pallas fragmentation program from the rust hot path
-//! ([`runtime`]).
+//! JSON-over-HTTP API ([`server`]), and the batched evaluation runtime
+//! ([`runtime`]): pure rust by default, or a PJRT runtime executing the
+//! AOT-compiled JAX/Pallas fragmentation program behind the `xla` feature.
 //!
 //! ## Quick start
 //!
@@ -43,8 +43,11 @@
 //!
 //! Python (JAX + Pallas) exists only at build time: `make artifacts` lowers
 //! the batched fragmentation program to HLO text under `artifacts/`, and
-//! [`runtime::FragEngine`] loads + compiles it once through PJRT. The serve
-//! and simulation request paths are pure rust.
+//! `runtime::FragEngine` (under `--features xla`) loads + compiles it once
+//! through PJRT. The serve and simulation request paths are pure rust, and
+//! the default build substitutes [`runtime::NativeFragEngine`] — the same
+//! batched contract computed from the 256-entry score table, held to the
+//! python oracle bit-for-bit by `tests/golden_frag.rs`.
 
 pub mod cluster;
 pub mod defrag;

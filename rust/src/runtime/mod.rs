@@ -1,16 +1,32 @@
-//! The PJRT runtime bridge: load AOT-compiled HLO artifacts produced by the
-//! python build path (`make artifacts`) and execute them from rust.
+//! The batched fragmentation-evaluation runtime.
 //!
-//! Python/JAX/Pallas never runs on the request path — `python/compile/aot.py`
-//! lowers the batched fragmentation program to **HLO text** once, and this
-//! module compiles it with the PJRT CPU client at startup. HLO text (not a
-//! serialized `HloModuleProto`) is the interchange format because jax ≥ 0.5
-//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see `/opt/xla-example/README.md`
-//! and DESIGN.md §1).
+//! Two interchangeable engines implement the same contract (for a batch of
+//! GPU occupancy masks: Algorithm 1 scores, per-candidate ΔF with an
+//! infeasible sentinel, and feasibility flags — see [`FragBatch`]):
+//!
+//! * [`NativeFragEngine`] (always available) — pure rust, built on the
+//!   256-entry [`crate::frag::ScoreTable`]; this is the default build's
+//!   engine and the numeric reference.
+//! * `FragEngine` (behind the off-by-default `xla` cargo feature) — loads
+//!   the AOT-compiled HLO artifact produced by the python build path
+//!   (`python/compile/aot.py`, `make artifacts`) and executes it through
+//!   the PJRT CPU client. Python/JAX/Pallas never runs on the request
+//!   path: the program is lowered to **HLO text** once and compiled at
+//!   startup (HLO text rather than a serialized `HloModuleProto` because
+//!   jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! `rust/tests/runtime_vs_native.rs` pins the contract: the native engine
+//! against the score table exhaustively, and (under `--features xla`) the
+//! artifact against the native engine bit-for-bit.
 
 pub mod frag_engine;
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
-pub use frag_engine::{FragBatch, FragEngine};
+pub use frag_engine::{FragBatch, NativeFragEngine, INFEASIBLE_DELTA};
+
+#[cfg(feature = "xla")]
+pub use frag_engine::FragEngine;
+#[cfg(feature = "xla")]
 pub use pjrt::{artifacts_dir, CompiledModule, PjrtRuntime};

@@ -21,6 +21,7 @@ pub mod best_fit;
 pub mod first_fit;
 pub mod index_policy;
 pub mod mfi;
+#[cfg(feature = "xla")]
 pub mod mfi_xla;
 pub mod random;
 pub mod round_robin;
@@ -30,6 +31,7 @@ pub use best_fit::BestFit;
 pub use first_fit::FirstFit;
 pub use index_policy::IndexPolicy;
 pub use mfi::Mfi;
+#[cfg(feature = "xla")]
 pub use mfi_xla::MfiXla;
 pub use random::RandomFit;
 pub use round_robin::RoundRobin;

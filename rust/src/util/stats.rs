@@ -6,13 +6,22 @@
 //! deviation and a 95% confidence interval half-width.
 
 /// Welford online mean/variance accumulator.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct OnlineStats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for OnlineStats {
+    /// Same as [`OnlineStats::new`] — a derived default would start
+    /// `min`/`max` at 0.0 and silently poison extrema of accumulators
+    /// built via `Default` (e.g. the sweep's `AggregatedCell`s).
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl OnlineStats {

@@ -1,0 +1,223 @@
+//! Error-path coverage for `Cluster::allocate` / `Cluster::release`: the
+//! property suite exercises happy paths (every proposed placement is
+//! valid); these tests pin the failure modes the serving daemon maps to
+//! 4xx responses — double release, overlapping placements, infeasible
+//! anchors, unsupported profiles, out-of-range GPUs — and assert that a
+//! failed operation never corrupts the accounting.
+
+use migsched::cluster::{AllocError, Cluster};
+use migsched::mig::gpu::PlacementError;
+use migsched::mig::{HardwareModel, Placement, Profile, ALL_PROFILES};
+use migsched::util::check::forall;
+use migsched::util::rng::Rng;
+use migsched::workload::WorkloadId;
+
+fn cluster(gpus: usize) -> Cluster {
+    Cluster::new(HardwareModel::a100_80gb(), gpus)
+}
+
+fn pl(gpu: usize, profile: Profile, index: u8) -> Placement {
+    Placement { gpu, profile, index }
+}
+
+/// Snapshot of the observable accounting, for before/after comparisons.
+fn accounting(c: &Cluster) -> (u64, usize, usize, Vec<u8>) {
+    (c.used_slices(), c.allocated_workloads(), c.active_gpus(), c.occupancy_masks())
+}
+
+#[test]
+fn double_release_is_unknown_workload() {
+    let mut c = cluster(2);
+    c.allocate(WorkloadId(1), pl(0, Profile::P2g20gb, 2)).unwrap();
+    c.release(WorkloadId(1)).unwrap();
+    let before = accounting(&c);
+    assert_eq!(c.release(WorkloadId(1)), Err(AllocError::UnknownWorkload(WorkloadId(1))));
+    assert_eq!(accounting(&c), before, "failed release must not mutate state");
+    // The slices really are free again.
+    assert_eq!(c.used_slices(), 0);
+    c.allocate(WorkloadId(2), pl(0, Profile::P2g20gb, 2)).unwrap();
+}
+
+#[test]
+fn overlapping_placement_rejected_without_corruption() {
+    let mut c = cluster(1);
+    c.allocate(WorkloadId(1), pl(0, Profile::P4g40gb, 0)).unwrap();
+    let before = accounting(&c);
+    // Full overlap, partial overlap, and exact-window overlap.
+    for bad in [
+        pl(0, Profile::P4g40gb, 0),
+        pl(0, Profile::P3g40gb, 0),
+        pl(0, Profile::P2g20gb, 2),
+        pl(0, Profile::P1g10gb, 3),
+        pl(0, Profile::P7g80gb, 0),
+    ] {
+        let err = c.allocate(WorkloadId(99), bad).unwrap_err();
+        assert!(
+            matches!(err, AllocError::Placement(PlacementError::Occupied { .. })),
+            "{bad}: {err}"
+        );
+        assert_eq!(accounting(&c), before, "{bad}: failed allocate mutated state");
+    }
+    // Disjoint window still works and the original allocation survives.
+    c.allocate(WorkloadId(2), pl(0, Profile::P3g40gb, 4)).unwrap();
+    assert_eq!(c.placement_of(WorkloadId(1)), Some(pl(0, Profile::P4g40gb, 0)));
+}
+
+#[test]
+fn infeasible_anchor_rejected_before_any_mutation() {
+    let mut c = cluster(1);
+    let before = accounting(&c);
+    // Index 1 is not a Table I anchor for 2g.20gb; 4 is not one for 4g.40gb.
+    for (profile, index) in
+        [(Profile::P2g20gb, 1u8), (Profile::P4g40gb, 4), (Profile::P7g80gb, 1), (Profile::P3g40gb, 2)]
+    {
+        let err = c.allocate(WorkloadId(7), pl(0, profile, index)).unwrap_err();
+        assert_eq!(
+            err,
+            AllocError::Placement(PlacementError::InfeasibleIndex { profile, start: index }),
+        );
+    }
+    // Out-of-range index is equally an infeasible anchor, not a panic.
+    let err = c.allocate(WorkloadId(7), pl(0, Profile::P1g10gb, 7)).unwrap_err();
+    assert!(matches!(err, AllocError::Placement(PlacementError::InfeasibleIndex { .. })));
+    assert_eq!(accounting(&c), before);
+}
+
+#[test]
+fn unsupported_profile_rejected_by_policy() {
+    // An operator fleet policy disabling full-GPU rentals must reject the
+    // profile BEFORE feasibility is consulted.
+    let hw = HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb, Profile::P2g20gb]);
+    let mut c = Cluster::new(hw, 1);
+    assert_eq!(
+        c.allocate(WorkloadId(0), pl(0, Profile::P7g80gb, 0)),
+        Err(AllocError::UnsupportedProfile(Profile::P7g80gb))
+    );
+    assert_eq!(
+        c.allocate(WorkloadId(0), pl(0, Profile::P3g40gb, 0)),
+        Err(AllocError::UnsupportedProfile(Profile::P3g40gb))
+    );
+    assert_eq!(c.used_slices(), 0);
+    c.allocate(WorkloadId(0), pl(0, Profile::P2g20gb, 0)).unwrap();
+}
+
+#[test]
+fn unknown_gpu_and_duplicate_workload() {
+    let mut c = cluster(3);
+    assert_eq!(
+        c.allocate(WorkloadId(0), pl(3, Profile::P1g10gb, 0)),
+        Err(AllocError::UnknownGpu { gpu: 3, cluster_size: 3 })
+    );
+    assert_eq!(
+        c.allocate(WorkloadId(0), pl(usize::MAX, Profile::P1g10gb, 0)),
+        Err(AllocError::UnknownGpu { gpu: usize::MAX, cluster_size: 3 })
+    );
+    c.allocate(WorkloadId(0), pl(0, Profile::P1g10gb, 0)).unwrap();
+    // Same id again — even on a different, free GPU — is a duplicate.
+    assert_eq!(
+        c.allocate(WorkloadId(0), pl(1, Profile::P1g10gb, 0)),
+        Err(AllocError::DuplicateWorkload(WorkloadId(0)))
+    );
+    // The first placement is untouched by the failed duplicate.
+    assert_eq!(c.placement_of(WorkloadId(0)), Some(pl(0, Profile::P1g10gb, 0)));
+    assert_eq!(c.allocated_workloads(), 1);
+}
+
+#[test]
+fn error_display_is_actionable() {
+    let mut c = cluster(1);
+    c.allocate(WorkloadId(1), pl(0, Profile::P4g40gb, 0)).unwrap();
+    let occupied = c.allocate(WorkloadId(2), pl(0, Profile::P3g40gb, 0)).unwrap_err();
+    assert!(occupied.to_string().contains("cannot place"), "{occupied}");
+    let unknown = c.release(WorkloadId(9)).unwrap_err();
+    assert!(unknown.to_string().contains("not allocated"), "{unknown}");
+    let gpu = c.allocate(WorkloadId(3), pl(9, Profile::P1g10gb, 0)).unwrap_err();
+    assert!(gpu.to_string().contains("out of range"), "{gpu}");
+}
+
+#[test]
+fn prop_invalid_operations_never_corrupt_accounting() {
+    // Interleave valid operations with systematically injected invalid
+    // ones; after every step the incremental accounting must equal the
+    // ground truth recomputed from the occupancy masks, and every invalid
+    // operation must (a) error and (b) leave the state byte-identical.
+    forall(
+        "cluster-error-paths",
+        |rng| (rng.next_u64(), 2 + rng.index(4), 40 + rng.index(80)),
+        |&(seed, gpus, steps)| {
+            let hw = HardwareModel::a100_80gb();
+            let mut rng = Rng::new(seed);
+            let mut c = Cluster::new(hw, gpus);
+            let mut next_id = 0u64;
+            for _ in 0..steps {
+                match rng.index(5) {
+                    // Valid allocate at a random feasible spot.
+                    0 | 1 => {
+                        let p = *rng.choose(&ALL_PROFILES);
+                        let gpu = rng.index(c.num_gpus());
+                        let feasible: Vec<u8> =
+                            c.gpu(gpu).unwrap().feasible_indexes(p).collect();
+                        if let Some(&idx) = feasible.first() {
+                            c.allocate(WorkloadId(next_id), pl(gpu, p, idx))
+                                .map_err(|e| format!("valid allocate failed: {e}"))?;
+                            next_id += 1;
+                        }
+                    }
+                    // Valid release.
+                    2 => {
+                        if c.allocated_workloads() > 0 {
+                            let ids: Vec<WorkloadId> =
+                                c.allocations().map(|(id, _)| id).collect();
+                            c.release(*rng.choose(&ids)).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    // Injected invalid allocate (occupied window / bad gpu
+                    // / bad anchor) — must error, must not mutate.
+                    3 => {
+                        let before = accounting(&c);
+                        let p = *rng.choose(&ALL_PROFILES);
+                        let bad = match rng.index(3) {
+                            0 => pl(c.num_gpus() + rng.index(3), p, p.starts()[0]),
+                            1 => pl(rng.index(c.num_gpus()), p, 7),
+                            _ => {
+                                // Aim at an occupied window when one exists.
+                                match c.allocations().next() {
+                                    Some((_, taken)) => {
+                                        pl(taken.gpu, taken.profile, taken.index)
+                                    }
+                                    None => pl(c.num_gpus(), p, p.starts()[0]),
+                                }
+                            }
+                        };
+                        if c.allocate(WorkloadId(next_id), bad).is_ok() {
+                            return Err(format!("invalid allocate {bad} was accepted"));
+                        }
+                        if accounting(&c) != before {
+                            return Err(format!("failed allocate {bad} mutated state"));
+                        }
+                    }
+                    // Injected invalid release — must error, must not mutate.
+                    _ => {
+                        let before = accounting(&c);
+                        if c.release(WorkloadId(next_id + 1_000_000)).is_ok() {
+                            return Err("release of unknown workload succeeded".into());
+                        }
+                        if accounting(&c) != before {
+                            return Err("failed release mutated state".into());
+                        }
+                    }
+                }
+                // Ground truth: per-GPU masks vs incremental counters.
+                let mask_slices: u64 =
+                    c.gpus().iter().map(|g| g.used_slices() as u64).sum();
+                if c.used_slices() != mask_slices {
+                    return Err(format!(
+                        "incremental used_slices {} != mask ground truth {mask_slices}",
+                        c.used_slices()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,160 @@
+//! Golden-oracle conformance: the rust fragmentation engines must match
+//! the python reference kernel (`python/compile/kernels/ref.py`, the jnp
+//! specification the Pallas kernel and the AOT artifact are verified
+//! against) **bit-for-bit** on every one of the 256 occupancy patterns.
+//!
+//! The fixture `tests/golden/frag_golden.json` is exported from the python
+//! oracle (see README "Regenerating the golden fixture") and checked in,
+//! so the cross-language contract is enforced without python in the test
+//! loop:
+//!
+//! * `scores_partial[m]` / `scores_any[m]` — Algorithm 1 scores of mask
+//!   `m` under both overlap rules;
+//! * `deltas_partial[m][k]` — ΔF of candidate `k` ([`CANDIDATES`] order)
+//!   under the default rule, `1e9` sentinel when infeasible;
+//! * `feasible[m][k]` — 1 iff candidate `k`'s window is free on mask `m`.
+
+use migsched::frag::{score_direct_rule, FragScorer, OverlapRule, ScoreTable};
+use migsched::mig::{GpuState, HardwareModel, Profile, CANDIDATES, NUM_CANDIDATES};
+use migsched::runtime::{NativeFragEngine, INFEASIBLE_DELTA};
+use migsched::util::json::Json;
+
+const FIXTURE: &str = include_str!("golden/frag_golden.json");
+
+fn fixture() -> Json {
+    let j = Json::parse(FIXTURE).expect("golden fixture parses");
+    assert_eq!(j.req_str("format").unwrap(), "migsched-golden-frag-v1");
+    assert_eq!(j.req_u64("num_slices").unwrap(), 8);
+    assert_eq!(j.req_u64("num_candidates").unwrap() as usize, NUM_CANDIDATES);
+    j
+}
+
+fn u32_vec(j: &Json, key: &str) -> Vec<u32> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("fixture missing '{key}'"))
+        .iter()
+        .map(|v| v.as_u64().expect("integral score") as u32)
+        .collect()
+}
+
+#[test]
+fn score_table_matches_python_oracle_bit_for_bit() {
+    let j = fixture();
+    let hw = HardwareModel::a100_80gb();
+    for (key, rule) in [("scores_partial", OverlapRule::Partial), ("scores_any", OverlapRule::Any)]
+    {
+        let golden = u32_vec(&j, key);
+        assert_eq!(golden.len(), 256, "{key}");
+        let table = ScoreTable::for_hardware_rule(&hw, rule);
+        for (mask, &expect) in golden.iter().enumerate() {
+            let g = GpuState::from_mask(mask as u8);
+            assert_eq!(
+                table.score(g),
+                expect,
+                "{key}: ScoreTable disagrees with python oracle at occ={mask:#010b}"
+            );
+            assert_eq!(
+                score_direct_rule(g, &hw, rule),
+                expect,
+                "{key}: score_direct disagrees with python oracle at occ={mask:#010b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_worked_examples_present_in_fixture() {
+    // The fixture itself must encode the paper's Section V-B narrative —
+    // guards against regenerating it from a drifted oracle.
+    let j = fixture();
+    let partial = u32_vec(&j, "scores_partial");
+    let any = u32_vec(&j, "scores_any");
+    // GPU 2 of Fig. 3a: {2g.20gb@0, 1g.10gb@5} → occupied slices 0,1,5.
+    assert_eq!(partial[0b0010_0011], 16, "paper: F(GPU 2) = 16");
+    // GPU 1: {1g.10gb@5}.
+    assert_eq!(partial[0b0010_0000], 8, "paper: F(GPU 1) = 8");
+    // Misplaced 1g.10gb at index 1 (Section V-B motivation).
+    assert_eq!(partial[0b0000_0010], 12);
+    // Saturated and empty GPUs are unfragmented under both rules.
+    assert_eq!(partial[0x00], 0);
+    assert_eq!(partial[0xFF], 0);
+    assert_eq!(any[0x00], 0);
+    assert_eq!(any[0xFF], 0);
+    // The literal any-overlap rule diverges on the worked example.
+    assert_eq!(any[0b0010_0011], 23);
+    // Bound: F ≤ max_score(A100) = 41 everywhere.
+    assert!(partial.iter().chain(any.iter()).all(|&f| f <= 41));
+}
+
+#[test]
+fn deltas_and_feasibility_match_python_oracle() {
+    let j = fixture();
+    let sentinel = j.req_u64("infeasible_sentinel").unwrap() as f64;
+    assert_eq!(sentinel as f32, INFEASIBLE_DELTA);
+    let deltas = j.get("deltas_partial").and_then(Json::as_arr).expect("deltas_partial");
+    let feasible = j.get("feasible").and_then(Json::as_arr).expect("feasible");
+    assert_eq!(deltas.len(), 256);
+    assert_eq!(feasible.len(), 256);
+
+    let hw = HardwareModel::a100_80gb();
+    let table = ScoreTable::for_hardware(&hw);
+    let engine = NativeFragEngine::new(&hw);
+    let masks: Vec<u8> = (0..=255u8).collect();
+    let batch = engine.evaluate(&masks).expect("native evaluate");
+
+    for mask in 0..256usize {
+        let g = GpuState::from_mask(mask as u8);
+        let drow = deltas[mask].as_arr().expect("delta row");
+        let frow = feasible[mask].as_arr().expect("feasible row");
+        assert_eq!(drow.len(), NUM_CANDIDATES);
+        assert_eq!(frow.len(), NUM_CANDIDATES);
+        for (c, cand) in CANDIDATES.iter().enumerate() {
+            let oracle_feasible = frow[c].as_u64().expect("0/1") == 1;
+            assert_eq!(
+                g.fits_at(cand.profile, cand.start),
+                oracle_feasible,
+                "feasibility occ={mask:#010b} cand={c}"
+            );
+            assert_eq!(batch.feasible[mask][c], oracle_feasible);
+            let oracle_delta = drow[c].as_f64().expect("numeric delta");
+            if oracle_feasible {
+                let native = table.delta(g, cand.profile, cand.start);
+                assert_eq!(
+                    native as f64, oracle_delta,
+                    "ΔF occ={mask:#010b} cand={}@{}",
+                    cand.profile, cand.start
+                );
+                assert_eq!(batch.deltas[mask][c] as f64, oracle_delta);
+            } else {
+                assert_eq!(oracle_delta, sentinel, "occ={mask:#010b} cand={c}");
+                assert_eq!(batch.deltas[mask][c], INFEASIBLE_DELTA);
+            }
+        }
+    }
+}
+
+#[test]
+fn fixture_is_internally_consistent() {
+    // Partial-rule scores must satisfy F(m ∪ w) - F(m) == deltas[m][k]
+    // for feasible candidates — i.e. the fixture's two tables agree with
+    // each other, independent of the rust implementation.
+    let j = fixture();
+    let scores = u32_vec(&j, "scores_partial");
+    let deltas = j.get("deltas_partial").and_then(Json::as_arr).unwrap();
+    let feasible = j.get("feasible").and_then(Json::as_arr).unwrap();
+    for mask in 0..256usize {
+        let drow = deltas[mask].as_arr().unwrap();
+        let frow = feasible[mask].as_arr().unwrap();
+        for (c, cand) in CANDIDATES.iter().enumerate() {
+            if frow[c].as_u64().unwrap() != 1 {
+                continue;
+            }
+            let after = mask | cand.mask as usize;
+            let expect = scores[after] as f64 - scores[mask] as f64;
+            assert_eq!(drow[c].as_f64().unwrap(), expect, "occ={mask:#010b} cand={c}");
+        }
+    }
+    // And the profile used by the worked examples really is Table I's.
+    assert_eq!(Profile::P1g10gb.mask_at(5), 0b0010_0000);
+}

@@ -3,10 +3,10 @@
 //! and cluster size.
 
 use migsched::cluster::Cluster;
-use migsched::frag::{score_direct_rule, FragScorer, OverlapRule, ScoreTable};
+use migsched::frag::{evaluate_cluster, score_direct_rule, FragScorer, OverlapRule, ScoreTable};
 use migsched::mig::{GpuState, HardwareModel, ALL_PROFILES, NUM_SLICES};
 use migsched::sched::SchedulerKind;
-use migsched::util::check::{assert_close, forall};
+use migsched::util::check::{assert_close, forall, forall_shrink_vec};
 use migsched::util::rng::Rng;
 use migsched::workload::{Distribution, WorkloadGenerator, WorkloadId};
 
@@ -226,6 +226,62 @@ fn prop_mean_score_linear_in_cluster() {
                 + table.mean_score(&gb) * gb.len() as f64)
                 / all.len() as f64;
             assert_close(table.mean_score(&all), expect, 1e-12, "linearity");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mfi_placement_is_exhaustive_argmin() {
+    // Algorithm 2 correctness: the placement MFI commits must equal the
+    // exhaustive argmin of ΔF over ALL feasible (gpu, index) candidates,
+    // with the documented deterministic tie-break (lowest ΔF, then lowest
+    // GPU id, then lowest anchor index). Cases are raw occupancy-mask
+    // vectors — one u64 per GPU, masked to 8 bits — so shrunk
+    // counterexamples are minimal occupancy patterns, not episodes.
+    let hw = HardwareModel::a100_80gb();
+    let table = ScoreTable::for_hardware(&hw);
+    forall_shrink_vec(
+        "mfi-argmin-exhaustive",
+        |rng| (0..1 + rng.index(8)).map(|_| rng.next_u64() & 0xFF).collect(),
+        |masks| {
+            let gpus: Vec<GpuState> =
+                masks.iter().map(|&m| GpuState::from_mask((m & 0xFF) as u8)).collect();
+            for p in ALL_PROFILES {
+                let got = evaluate_cluster(&table, &gpus, p);
+                // Exhaustive reference: every (gpu, anchor) pair, ordered
+                // lexicographically by (ΔF, gpu, anchor).
+                let mut best: Option<(i32, usize, u8)> = None;
+                for (gid, g) in gpus.iter().enumerate() {
+                    for &s in p.starts() {
+                        if !g.fits_at(p, s) {
+                            continue;
+                        }
+                        let d = table.delta(*g, p, s);
+                        if best.is_none() || (d, gid, s) < best.unwrap() {
+                            best = Some((d, gid, s));
+                        }
+                    }
+                }
+                match (got, best) {
+                    (None, None) => {}
+                    (Some(pl), Some((d, gid, s))) => {
+                        if (pl.gpu, pl.index) != (gid, s) {
+                            return Err(format!(
+                                "{p}: MFI chose gpu {} index {}, exhaustive argmin is \
+                                 gpu {gid} index {s} (ΔF {d})",
+                                pl.gpu, pl.index
+                            ));
+                        }
+                        if pl.profile != p {
+                            return Err(format!("{p}: placement changed profile to {}", pl.profile));
+                        }
+                    }
+                    (a, b) => {
+                        return Err(format!("{p}: feasibility disagreement {a:?} vs {b:?}"))
+                    }
+                }
+            }
             Ok(())
         },
     );

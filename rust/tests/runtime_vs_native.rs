@@ -1,30 +1,20 @@
-//! End-to-end numeric validation of the three-layer stack: the AOT
-//! artifact (JAX + Pallas, compiled through PJRT) must agree bit-for-bit
-//! with the native rust fragmentation engine, and the `MfiXla` scheduler
-//! must take decision-for-decision the same actions as native `Mfi`.
+//! Engine-contract validation.
 //!
-//! Requires `make artifacts`; tests skip (with a loud message) when the
-//! artifacts directory is missing so `cargo test` works pre-build.
+//! Default build: the pure-rust [`NativeFragEngine`] must agree bit-for-bit
+//! with the 256-entry score table and with the checked-in python-oracle
+//! golden fixture semantics (scores, ΔF, feasibility, sentinel).
+//!
+//! With `--features xla` (requires the PJRT-binding crate and
+//! `make artifacts`): the AOT artifact (JAX + Pallas, compiled through
+//! PJRT) must agree bit-for-bit with the native engine, and the `MfiXla`
+//! scheduler must take decision-for-decision the same actions as native
+//! `Mfi`. Those tests skip with a loud message when the artifacts
+//! directory is missing so `cargo test --features xla` works pre-build.
 
 use migsched::frag::{FragScorer, ScoreTable};
 use migsched::mig::{GpuState, HardwareModel, CANDIDATES, NUM_CANDIDATES};
-use migsched::runtime::{artifacts_dir, FragEngine, PjrtRuntime};
-use migsched::sched::{Mfi, MfiXla, Scheduler};
+use migsched::runtime::{FragBatch, NativeFragEngine, INFEASIBLE_DELTA};
 use migsched::util::rng::Rng;
-
-fn engine_or_skip() -> Option<(PjrtRuntime, FragEngine)> {
-    let dir = artifacts_dir();
-    if !dir.join("frag.hlo.txt").exists() {
-        eprintln!(
-            "SKIP: {}/frag.hlo.txt missing — run `make artifacts` first",
-            dir.display()
-        );
-        return None;
-    }
-    let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
-    let engine = FragEngine::load_default(&runtime).expect("loading artifact");
-    Some((runtime, engine))
-}
 
 fn random_reachable_state(rng: &mut Rng) -> GpuState {
     let mut g = GpuState::empty();
@@ -39,28 +29,11 @@ fn random_reachable_state(rng: &mut Rng) -> GpuState {
     g
 }
 
-#[test]
-fn artifact_scores_match_native_exhaustively() {
-    let Some((_rt, engine)) = engine_or_skip() else { return };
-    let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
-    // All 256 occupancy masks in one batched evaluation.
-    let masks: Vec<u8> = (0..=255u8).collect();
-    let batch = engine.evaluate(&masks).expect("evaluate");
-    assert_eq!(batch.scores.len(), 256);
-    for (i, &mask) in masks.iter().enumerate() {
-        let native = table.score(GpuState::from_mask(mask)) as f32;
-        assert_eq!(batch.scores[i], native, "score mismatch at occ={mask:#010b}");
-    }
-}
-
-#[test]
-fn artifact_deltas_and_feasibility_match_native() {
-    let Some((_rt, engine)) = engine_or_skip() else { return };
-    let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
-    let masks: Vec<u8> = (0..=255u8).collect();
-    let batch = engine.evaluate(&masks).expect("evaluate");
+fn assert_batch_matches_table(batch: &FragBatch, masks: &[u8], table: &ScoreTable) {
+    assert_eq!(batch.scores.len(), masks.len());
     for (i, &mask) in masks.iter().enumerate() {
         let g = GpuState::from_mask(mask);
+        assert_eq!(batch.scores[i], table.score(g) as f32, "score mismatch occ={mask:#010b}");
         for (c, cand) in CANDIDATES.iter().enumerate() {
             let native_feasible = g.fits_at(cand.profile, cand.start);
             assert_eq!(
@@ -68,86 +41,162 @@ fn artifact_deltas_and_feasibility_match_native() {
                 "feasibility mismatch occ={mask:#010b} cand={c}"
             );
             if native_feasible {
-                let native_delta = table.delta(g, cand.profile, cand.start) as f32;
                 assert_eq!(
-                    batch.deltas[i][c], native_delta,
+                    batch.deltas[i][c],
+                    table.delta(g, cand.profile, cand.start) as f32,
                     "delta mismatch occ={mask:#010b} cand={}@{}",
-                    cand.profile, cand.start
+                    cand.profile,
+                    cand.start
                 );
             } else {
-                assert!(batch.deltas[i][c] > 1e8, "infeasible sentinel missing");
+                assert_eq!(batch.deltas[i][c], INFEASIBLE_DELTA, "sentinel missing");
             }
         }
     }
 }
 
 #[test]
-fn chunking_handles_clusters_larger_than_batch() {
-    let Some((_rt, engine)) = engine_or_skip() else { return };
-    let b = engine.batch_size();
-    // A cluster 2.5× the artifact batch exercises the chunk+pad path.
-    let mut rng = Rng::new(99);
-    let masks: Vec<u8> = (0..b * 5 / 2).map(|_| random_reachable_state(&mut rng).mask()).collect();
-    let batch = engine.evaluate(&masks).expect("evaluate");
-    assert_eq!(batch.scores.len(), masks.len());
+fn native_engine_matches_table_exhaustively() {
+    let engine = NativeFragEngine::new(&HardwareModel::a100_80gb());
     let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
-    for (i, &mask) in masks.iter().enumerate() {
-        assert_eq!(batch.scores[i], table.score(GpuState::from_mask(mask)) as f32);
-    }
+    let masks: Vec<u8> = (0..=255u8).collect();
+    let batch = engine.evaluate(&masks).expect("native evaluate");
+    assert_batch_matches_table(&batch, &masks, &table);
 }
 
 #[test]
-fn mfi_xla_matches_native_mfi_decisions() {
-    let Some((rt, _)) = engine_or_skip() else { return };
-    let hw = HardwareModel::a100_80gb();
-    let mut native = Mfi::for_hardware(&hw);
-    let mut xla = MfiXla::load_default(&rt).expect("loading MfiXla");
-
-    let mut rng = Rng::new(0xABCD);
-    for round in 0..30 {
-        // Drive BOTH schedulers through an identical random episode.
-        let mut cluster = migsched::cluster::Cluster::new(hw.clone(), 6);
-        let mut next_id = 0u64;
-        for step in 0..80 {
-            let p = *rng.choose(&migsched::mig::ALL_PROFILES);
-            let a = native.schedule(&cluster, p);
-            let b = xla.schedule(&cluster, p);
-            assert_eq!(a, b, "round {round} step {step}: decision divergence for {p}");
-            if let Some(pl) = a {
-                cluster
-                    .allocate(migsched::workload::WorkloadId(next_id), pl)
-                    .expect("valid placement");
-                next_id += 1;
-            }
-            if rng.chance(0.3) && cluster.allocated_workloads() > 0 {
-                let ids: Vec<_> = cluster.allocations().map(|(id, _)| id).collect();
-                cluster.release(*rng.choose(&ids)).unwrap();
-            }
-        }
-    }
-}
-
-#[test]
-fn frag_engine_metadata() {
-    let Some((_rt, engine)) = engine_or_skip() else { return };
-    assert!(engine.batch_size() >= 1);
-    assert_eq!(engine.rule(), "partial");
-    // NUM_CANDIDATES is frozen between the two languages.
-    assert_eq!(NUM_CANDIDATES, 18);
-}
-
-#[test]
-fn mean_score_agreement_on_random_clusters() {
-    let Some((_rt, engine)) = engine_or_skip() else { return };
+fn native_engine_on_random_clusters() {
+    let engine = NativeFragEngine::new(&HardwareModel::a100_80gb());
     let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
     let mut rng = Rng::new(2025);
     for _ in 0..10 {
         let gpus: Vec<GpuState> = (0..100).map(|_| random_reachable_state(&mut rng)).collect();
         let masks: Vec<u8> = gpus.iter().map(|g| g.mask()).collect();
         let batch = engine.evaluate(&masks).unwrap();
-        let xla_mean =
+        assert_batch_matches_table(&batch, &masks, &table);
+        let batch_mean =
             batch.scores.iter().map(|&s| s as f64).sum::<f64>() / gpus.len() as f64;
-        let native_mean = table.mean_score(&gpus);
-        assert!((xla_mean - native_mean).abs() < 1e-9, "{xla_mean} vs {native_mean}");
+        assert!((batch_mean - table.mean_score(&gpus)).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn native_engine_metadata() {
+    let engine = NativeFragEngine::new(&HardwareModel::a100_80gb());
+    assert_eq!(engine.rule(), "partial");
+    // NUM_CANDIDATES is frozen between the rust and python layers.
+    assert_eq!(NUM_CANDIDATES, 18);
+}
+
+// ---------------------------------------------------------------------------
+// XLA artifact vs native engine (requires `--features xla` + `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use migsched::runtime::{artifacts_dir, FragEngine, PjrtRuntime};
+    use migsched::sched::{Mfi, MfiXla, Scheduler};
+
+    fn engine_or_skip() -> Option<(PjrtRuntime, FragEngine)> {
+        let dir = artifacts_dir();
+        if !dir.join("frag.hlo.txt").exists() {
+            eprintln!(
+                "SKIP: {}/frag.hlo.txt missing — run `make artifacts` first",
+                dir.display()
+            );
+            return None;
+        }
+        let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
+        let engine = FragEngine::load_default(&runtime).expect("loading artifact");
+        Some((runtime, engine))
+    }
+
+    #[test]
+    fn artifact_scores_and_deltas_match_native_exhaustively() {
+        let Some((_rt, engine)) = engine_or_skip() else { return };
+        let table = ScoreTable::for_hardware(&HardwareModel::a100_80gb());
+        let masks: Vec<u8> = (0..=255u8).collect();
+        let batch = engine.evaluate(&masks).expect("evaluate");
+        assert_eq!(batch.scores.len(), 256);
+        for (i, &mask) in masks.iter().enumerate() {
+            let g = GpuState::from_mask(mask);
+            assert_eq!(
+                batch.scores[i],
+                table.score(g) as f32,
+                "score mismatch at occ={mask:#010b}"
+            );
+            for (c, cand) in CANDIDATES.iter().enumerate() {
+                let native_feasible = g.fits_at(cand.profile, cand.start);
+                assert_eq!(batch.feasible[i][c], native_feasible);
+                if native_feasible {
+                    assert_eq!(batch.deltas[i][c], table.delta(g, cand.profile, cand.start) as f32);
+                } else {
+                    assert!(batch.deltas[i][c] > 1e8, "infeasible sentinel missing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_agrees_with_native_engine_batch() {
+        let Some((_rt, engine)) = engine_or_skip() else { return };
+        let native = NativeFragEngine::new(&HardwareModel::a100_80gb());
+        let mut rng = Rng::new(99);
+        let b = engine.batch_size();
+        // A cluster 2.5× the artifact batch exercises the chunk+pad path.
+        let masks: Vec<u8> =
+            (0..b * 5 / 2).map(|_| random_reachable_state(&mut rng).mask()).collect();
+        let a = engine.evaluate(&masks).expect("xla evaluate");
+        let n = native.evaluate(&masks).expect("native evaluate");
+        assert_eq!(a.scores, n.scores);
+        assert_eq!(a.feasible, n.feasible);
+        for (ra, rn) in a.deltas.iter().zip(&n.deltas) {
+            for (c, (&da, &dn)) in ra.iter().zip(rn.iter()).enumerate() {
+                if dn == INFEASIBLE_DELTA {
+                    assert!(da > 1e8, "cand {c}");
+                } else {
+                    assert_eq!(da, dn, "cand {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mfi_xla_matches_native_mfi_decisions() {
+        let Some((rt, _)) = engine_or_skip() else { return };
+        let hw = HardwareModel::a100_80gb();
+        let mut native = Mfi::for_hardware(&hw);
+        let mut xla = MfiXla::load_default(&rt).expect("loading MfiXla");
+
+        let mut rng = Rng::new(0xABCD);
+        for round in 0..30 {
+            // Drive BOTH schedulers through an identical random episode.
+            let mut cluster = migsched::cluster::Cluster::new(hw.clone(), 6);
+            let mut next_id = 0u64;
+            for step in 0..80 {
+                let p = *rng.choose(&migsched::mig::ALL_PROFILES);
+                let a = native.schedule(&cluster, p);
+                let b = xla.schedule(&cluster, p);
+                assert_eq!(a, b, "round {round} step {step}: decision divergence for {p}");
+                if let Some(pl) = a {
+                    cluster
+                        .allocate(migsched::workload::WorkloadId(next_id), pl)
+                        .expect("valid placement");
+                    next_id += 1;
+                }
+                if rng.chance(0.3) && cluster.allocated_workloads() > 0 {
+                    let ids: Vec<_> = cluster.allocations().map(|(id, _)| id).collect();
+                    cluster.release(*rng.choose(&ids)).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frag_engine_metadata() {
+        let Some((_rt, engine)) = engine_or_skip() else { return };
+        assert!(engine.batch_size() >= 1);
+        assert_eq!(engine.rule(), "partial");
     }
 }

@@ -1,0 +1,240 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The migsched build environment has no crates.io access, so this vendored
+//! crate provides exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a context-chained error value (no backtraces);
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a default;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!   any standard error.
+//!
+//! Formatting mirrors upstream: `{}` prints the outermost message, `{:#}`
+//! prints the whole chain joined by `": "`, and `{:?}` prints the chain as
+//! a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error. Outermost message first.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) message;
+    /// the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (the `anyhow!` macro body).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    fn push_context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain on one line.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error with an outer message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated outer message.
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).push_context(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).push_context(context()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.push_context(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.push_context(context()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = r
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing field").unwrap_err().to_string(), "missing field");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}
