@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Diff the quick-mode figure CSVs (Fig. 4/5/6 harnesses) against the
+# checked-in references under ci/reference/. The figure CSVs are metric
+# series (acceptance, utilization, fragmentation — no wall-clock timing),
+# fully determined by the seeds and MIGSCHED_BENCH_QUICK=1, so any drift
+# is a behavioral change of the scheduler/simulator, not noise.
+#
+# Bootstrap (or intentionally re-baseline) with:
+#
+#     MIGSCHED_BENCH_QUICK=1 cargo bench --bench fig4_uniform \
+#         --bench fig5_distributions --bench fig6_fragscore
+#     ./ci/check_bench_refs.sh --update
+#
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REF_DIR=ci/reference
+GEN_DIR=""
+# cargo runs bench binaries with cwd = the package root (rust/), but allow
+# a repo-root results/ too for manual runs.
+for d in rust/results results; do
+    if compgen -G "$d/fig*.csv" > /dev/null; then
+        GEN_DIR="$d"
+        break
+    fi
+done
+if [ -z "$GEN_DIR" ]; then
+    echo "error: no generated fig*.csv found (run the fig4/fig5/fig6 benches first)" >&2
+    exit 1
+fi
+
+if [ "${1:-}" = "--update" ]; then
+    mkdir -p "$REF_DIR"
+    cp "$GEN_DIR"/fig*.csv "$REF_DIR/"
+    echo "re-baselined $(ls "$REF_DIR" | wc -l) reference CSVs from $GEN_DIR"
+    exit 0
+fi
+
+if ! compgen -G "$REF_DIR/fig*.csv" > /dev/null; then
+    echo "no references under $REF_DIR yet — bootstrap with: $0 --update"
+    echo "(generated CSVs are in $GEN_DIR; passing trivially)"
+    exit 0
+fi
+
+status=0
+for ref in "$REF_DIR"/fig*.csv; do
+    name=$(basename "$ref")
+    gen="$GEN_DIR/$name"
+    if [ ! -f "$gen" ]; then
+        echo "MISSING: $name was not regenerated"
+        status=1
+        continue
+    fi
+    if ! diff -u "$ref" "$gen"; then
+        echo "DRIFT: $name differs from the checked-in reference"
+        status=1
+    fi
+done
+if [ "$status" = 0 ]; then
+    echo "all figure CSVs match the checked-in references"
+fi
+exit $status

@@ -34,6 +34,24 @@ OUT = os.path.join(
 
 SENTINEL = 1000000000  # == ref.INFEASIBLE as an exact integer
 
+# Restricted hardware profile set for the ΔF-bucket-bound table: the same
+# subset rust pins in ``ScoreTable`` tests via
+# ``HardwareModel::with_profiles(&[P1g10gb, P3g40gb])``. The exported max
+# score is the bucket offset ``frag::index::FragIndex`` derives for such a
+# table, so the index's bucket bounds are held to the python oracle.
+RESTRICTED = ("3g.40gb", "1g.10gb")
+
+
+def delta_table(deltas_f, feasible_f):
+    deltas_f = np.asarray(deltas_f)
+    feasible_f = np.asarray(feasible_f)
+    deltas = [
+        [int(d) if f > 0.5 else SENTINEL for d, f in zip(drow, frow)]
+        for drow, frow in zip(deltas_f, feasible_f)
+    ]
+    feasible = [[int(f > 0.5) for f in frow] for frow in feasible_f]
+    return deltas, feasible
+
 
 def main() -> None:
     masks = list(range(256))
@@ -42,13 +60,13 @@ def main() -> None:
     scores_partial = np.asarray(ref.frag_scores(occ, "partial")).astype(int).tolist()
     scores_any = np.asarray(ref.frag_scores(occ, "any")).astype(int).tolist()
     _, deltas_f, feasible_f = ref.frag_program(occ, "partial")
-    deltas_f = np.asarray(deltas_f)
-    feasible_f = np.asarray(feasible_f)
-    deltas = [
-        [int(d) if f > 0.5 else SENTINEL for d, f in zip(drow, frow)]
-        for drow, frow in zip(deltas_f, feasible_f)
-    ]
-    feasible = [[int(f > 0.5) for f in frow] for frow in feasible_f]
+    deltas, feasible = delta_table(deltas_f, feasible_f)
+
+    scores_restricted = (
+        np.asarray(ref.frag_scores(occ, "partial", RESTRICTED)).astype(int).tolist()
+    )
+    _, rdeltas_f, rfeasible_f = ref.frag_program(occ, "partial", RESTRICTED)
+    deltas_restricted, feasible_restricted = delta_table(rdeltas_f, rfeasible_f)
 
     # The oracle must reproduce the paper's worked examples before we let it
     # pin the rust implementation (Section V-B: F(GPU 2)=16, F(GPU 1)=8).
@@ -58,8 +76,18 @@ def main() -> None:
     assert scores_any[0b0010_0011] == 23
     assert max(scores_any) <= 41  # max_score(A100-80GB)
 
+    # Restricted-set sanity: the subset score can never exceed the full
+    # set's (fewer Algorithm 1 summands), every feasible restricted ΔF is
+    # bounded by the restricted max score (the index's bucket offset), and
+    # an empty/full GPU is never fragmented.
+    assert scores_restricted[0x00] == 0 and scores_restricted[0xFF] == 0
+    assert all(r <= f for r, f in zip(scores_restricted, scores_partial))
+    max_restricted = max(scores_restricted)
+    for drow in deltas_restricted:
+        assert all(abs(d) <= max_restricted for d in drow if d != SENTINEL)
+
     fixture = {
-        "format": "migsched-golden-frag-v1",
+        "format": "migsched-golden-frag-v2",
         "source": "python/compile/kernels/ref.py (jnp oracle for Algorithm 1)",
         "num_slices": ref.NUM_SLICES,
         "num_candidates": ref.NUM_CANDIDATES,
@@ -68,6 +96,12 @@ def main() -> None:
         "scores_any": scores_any,
         "deltas_partial": deltas,
         "feasible": feasible,
+        "restricted_profiles": list(RESTRICTED),
+        "restricted_candidates": ref.candidate_indices(RESTRICTED),
+        "scores_restricted": scores_restricted,
+        "deltas_restricted": deltas_restricted,
+        "feasible_restricted": feasible_restricted,
+        "max_score_restricted": max_restricted,
     }
     with open(OUT, "w") as fh:
         json.dump(fixture, fh, separators=(",", ":"))

@@ -75,43 +75,62 @@ SIZES = np.array([size for (_, _, size, _) in CANDIDATES], dtype=np.float32)
 WEIGHTS = np.array([w for (_, _, _, w) in CANDIDATES], dtype=np.float32)
 
 
-def frag_scores(occ: jnp.ndarray, rule: str = "partial") -> jnp.ndarray:
+def candidate_indices(profiles=None) -> list[int]:
+    """Candidate-table row indices for a profile subset (``None`` = all
+    18), in frozen Table I order — mirrors ``mig::candidate_range``."""
+    if profiles is None:
+        return list(range(NUM_CANDIDATES))
+    unknown = set(profiles) - {name for (name, _, _, _) in CANDIDATES}
+    if unknown:
+        raise ValueError(f"unknown profiles {sorted(unknown)}")
+    return [k for k, (name, _, _, _) in enumerate(CANDIDATES) if name in profiles]
+
+
+def frag_scores(occ: jnp.ndarray, rule: str = "partial", profiles=None) -> jnp.ndarray:
     """Fragmentation score F(m) for each row of ``occ`` ([M, 8] of 0/1).
 
     ``rule`` is "partial" (default, paper worked example) or "any"
-    (literal Algorithm 1 text).
+    (literal Algorithm 1 text). ``profiles`` optionally restricts
+    Algorithm 1's outer sum to a hardware profile subset (the
+    ``HardwareModel::with_profiles`` knob on the rust side); ``None``
+    means the full A100 Table I set.
     """
+    sel = candidate_indices(profiles)
+    windows, sizes, weights = WINDOWS[sel], SIZES[sel], WEIGHTS[sel]
     occ = occ.astype(jnp.float32)
     free = NUM_SLICES - jnp.sum(occ, axis=-1)  # [M]
-    overlap = occ @ WINDOWS.T  # [M, 18] occupied count in each window
+    overlap = occ @ windows.T  # [M, K] occupied count in each window
     blocked_any = overlap > 0.0
     if rule == "partial":
-        blocked = blocked_any & (overlap < SIZES[None, :])
+        blocked = blocked_any & (overlap < sizes[None, :])
     elif rule == "any":
         blocked = blocked_any
     else:
         raise ValueError(f"unknown rule {rule!r}")
-    eligible = SIZES[None, :] <= free[:, None]
-    return jnp.sum(WEIGHTS[None, :] * blocked * eligible, axis=-1)
+    eligible = sizes[None, :] <= free[:, None]
+    return jnp.sum(weights[None, :] * blocked * eligible, axis=-1)
 
 
-def frag_program(occ: jnp.ndarray, rule: str = "partial"):
+def frag_program(occ: jnp.ndarray, rule: str = "partial", profiles=None):
     """The full batched program: scores, deltas and feasibility.
 
-    Returns ``(scores [M], deltas [M, 18], feasible [M, 18])`` where
+    Returns ``(scores [M], deltas [M, K], feasible [M, K])`` where
     ``deltas[m, k] = F(occ[m] | window_k) - F(occ[m])`` for feasible
-    candidates (window entirely free) and ``INFEASIBLE`` otherwise.
+    candidates (window entirely free) and ``INFEASIBLE`` otherwise; K is
+    the candidate count of the profile subset (18 for ``profiles=None``).
     ``feasible`` is 1.0/0.0.
     """
+    sel = candidate_indices(profiles)
+    windows = WINDOWS[sel]
     occ = occ.astype(jnp.float32)
-    scores = frag_scores(occ, rule)
-    overlap = occ @ WINDOWS.T  # [M, 18]
+    scores = frag_scores(occ, rule, profiles)
+    overlap = occ @ windows.T  # [M, K]
     feasible = (overlap == 0.0).astype(jnp.float32)
-    # Hypothetical occupancies: [M, 18, 8]. For infeasible candidates the
+    # Hypothetical occupancies: [M, K, 8]. For infeasible candidates the
     # union is clamped, producing garbage scores that are masked out below.
-    occ_hyp = jnp.clip(occ[:, None, :] + WINDOWS[None, :, :], 0.0, 1.0)
-    hyp_scores = frag_scores(occ_hyp.reshape(-1, NUM_SLICES), rule).reshape(
-        occ.shape[0], NUM_CANDIDATES
+    occ_hyp = jnp.clip(occ[:, None, :] + windows[None, :, :], 0.0, 1.0)
+    hyp_scores = frag_scores(occ_hyp.reshape(-1, NUM_SLICES), rule, profiles).reshape(
+        occ.shape[0], len(sel)
     )
     deltas = hyp_scores - scores[:, None]
     deltas = jnp.where(feasible > 0.0, deltas, INFEASIBLE)

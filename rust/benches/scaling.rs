@@ -1,42 +1,93 @@
 //! Complexity validation (experiment X1): the paper claims MFI decides in
-//! O(k·M). Sweep the cluster size M from 25 to 1600 and verify the
-//! per-decision latency grows linearly (doubling M ≈ doubles the cost),
-//! and that end-to-end simulation throughput scales accordingly.
+//! O(k·M); the incremental engine (`MFI-IDX`, `frag::index`) claims
+//! amortized O(k) per commit/release and ~O(1) per decision.
+//!
+//! Two sweeps over the cluster size M:
+//!
+//! * flat `MFI` decisions M ∈ {25 … 1600}: verify the O(k·M) law
+//!   (doubling M ≈ doubles the cost);
+//! * flat vs indexed at M ∈ {1000, 10000, 50000}: steady-state decision
+//!   latency AND a full churn cycle (release → decide → commit with
+//!   hooks), where the indexed engine must stay sublinear in M —
+//!   the acceptance bar is ≥5× over flat at M = 10000.
+//!
+//! Besides the usual CSV, the run is recorded machine-readably in
+//! `BENCH_scaling.json` at the repository root so the perf trajectory is
+//! tracked across PRs (schema: `{format, bench, quick_mode, results:
+//! [{name, m, scheme, median_ns, p05_ns, p95_ns, iterations}], summary:
+//! {speedup_decision_m10000, speedup_churn_m10000, ...}}`).
 
 use migsched::cluster::Cluster;
-use migsched::mig::{HardwareModel, ALL_PROFILES};
+use migsched::mig::{HardwareModel, Placement, Profile, ALL_PROFILES};
 use migsched::sched::SchedulerKind;
 use migsched::sim::{SimConfig, SimEngine};
-use migsched::util::bench::BenchRunner;
+use migsched::util::bench::{quick_mode, BenchRunner};
+use migsched::util::json::Json;
 use migsched::util::rng::Rng;
 use migsched::workload::{Distribution, WorkloadId};
 
+/// Fill a cluster to ~`target` utilization with random feasible
+/// placements, O(M) (direct per-GPU placement; no scheduler scans).
 fn loaded_cluster(num_gpus: usize, target: f64) -> Cluster {
     let hw = HardwareModel::a100_80gb();
-    let mut cluster = Cluster::new(hw.clone(), num_gpus);
-    let mut sched = SchedulerKind::Random.build(&hw);
+    let mut cluster = Cluster::new(hw, num_gpus);
     let mut rng = Rng::new(33);
     let mut id = 0u64;
-    while cluster.utilization() < target {
-        let p = *rng.choose(&ALL_PROFILES);
-        match sched.schedule(&cluster, p) {
-            Some(pl) => {
-                cluster.allocate(WorkloadId(id), pl).unwrap();
-                id += 1;
+    for gpu in 0..num_gpus {
+        for _ in 0..6 {
+            let state = cluster.gpu(gpu).unwrap();
+            if f64::from(state.used_slices()) >= 8.0 * target {
+                break;
             }
-            None => break,
+            let profile = *rng.choose(&ALL_PROFILES);
+            let feasible: Vec<u8> = state.feasible_indexes(profile).collect();
+            if feasible.is_empty() {
+                continue;
+            }
+            let index = *rng.choose(&feasible);
+            cluster.allocate(WorkloadId(id), Placement { gpu, profile, index }).unwrap();
+            id += 1;
         }
     }
     cluster
 }
 
+struct Recorder {
+    rows: Vec<Json>,
+}
+
+impl Recorder {
+    fn push(&mut self, result: &migsched::util::bench::BenchResult, m: usize, scheme: &str) {
+        self.rows.push(
+            Json::obj()
+                .with("name", result.name.as_str())
+                .with("m", m as u64)
+                .with("scheme", scheme)
+                .with("median_ns", result.median_ns)
+                .with("p05_ns", result.p05_ns)
+                .with("p95_ns", result.p95_ns)
+                .with("iterations", result.iterations),
+        );
+    }
+
+    fn median_of(&self, name: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|r| r.get("median_ns"))
+            .and_then(Json::as_f64)
+    }
+}
+
 fn main() {
     let mut runner = BenchRunner::new("scaling");
+    let mut rec = Recorder { rows: Vec::new() };
     let hw = HardwareModel::a100_80gb();
 
-    let sizes = [25usize, 50, 100, 200, 400, 800, 1600];
+    // --- O(k·M) law for the flat scan --------------------------------------
+    let flat_sizes = [25usize, 50, 100, 200, 400, 800, 1600];
     let mut medians = Vec::new();
-    for &m in &sizes {
+    for &m in &flat_sizes {
         let cluster = loaded_cluster(m, 0.5);
         let mut mfi = SchedulerKind::Mfi.build(&hw);
         let mut rng = Rng::new(1);
@@ -45,6 +96,7 @@ fn main() {
             mfi.schedule(&cluster, p)
         });
         medians.push((m, r.median_ns));
+        rec.push(r, m, "MFI");
     }
 
     println!("\n== O(k·M) check: per-decision cost ratio when doubling M ==");
@@ -58,17 +110,89 @@ fn main() {
         );
     }
 
-    // End-to-end simulation throughput at two scales.
+    // --- flat vs indexed at fleet scale ------------------------------------
+    println!("\n== flat O(k·M) rescan vs incremental index (frag::index) ==");
+    let big_sizes = [1_000usize, 10_000, 50_000];
+    for &m in &big_sizes {
+        // Steady-state decision latency (no mutations between queries).
+        let cluster = loaded_cluster(m, 0.5);
+        for kind in [SchedulerKind::Mfi, SchedulerKind::MfiIdx] {
+            let mut sched = kind.build(&hw);
+            let mut rng = Rng::new(2);
+            let r = runner.bench(&format!("decision_M{m}_{}", kind.name()), || {
+                let p = ALL_PROFILES[rng.index(6)];
+                sched.schedule(&cluster, p)
+            });
+            rec.push(r, m, kind.name());
+        }
+
+        // Full churn cycle: release one workload, schedule the same
+        // profile, commit — hooks wired, so the indexed engine pays its
+        // O(k) update inside the measured loop.
+        for kind in [SchedulerKind::Mfi, SchedulerKind::MfiIdx] {
+            let mut cluster = loaded_cluster(m, 0.5);
+            // Sorted so the victim cycle (and the recorded medians) are
+            // reproducible — HashMap iteration order is per-process random.
+            let mut victims: Vec<(WorkloadId, Profile)> =
+                cluster.allocations().map(|(id, pl)| (id, pl.profile)).collect();
+            victims.sort();
+            let mut sched = kind.build(&hw);
+            let mut cursor = 0usize;
+            let r = runner.bench(&format!("churn_M{m}_{}", kind.name()), || {
+                let (id, profile) = victims[cursor % victims.len()];
+                cursor += 1;
+                let freed = cluster.release(id).unwrap();
+                sched.on_release(&cluster, freed);
+                let placement =
+                    sched.schedule(&cluster, profile).expect("feasible after freeing");
+                cluster.allocate(id, placement).unwrap();
+                sched.on_commit(&cluster, placement);
+            });
+            rec.push(r, m, kind.name());
+        }
+    }
+
+    // --- end-to-end simulation throughput ----------------------------------
     for &m in &[100usize, 400] {
-        let cfg = SimConfig {
-            num_gpus: m,
-            ..SimConfig::paper(Distribution::Uniform, 11)
-        };
+        let cfg = SimConfig { num_gpus: m, ..SimConfig::paper(Distribution::Uniform, 11) };
         let engine = SimEngine::new(cfg);
-        runner.bench_once(&format!("full_sim_run_M{m}_uniform"), 5, || {
+        let r = runner.bench_once(&format!("full_sim_run_M{m}_uniform"), 5, || {
             let mut sched = SchedulerKind::Mfi.build(&hw);
             engine.run(&mut *sched)
         });
+        rec.push(r, m, "MFI");
+    }
+
+    // --- machine-readable record -------------------------------------------
+    let mut summary = Json::obj();
+    for &m in &big_sizes {
+        for phase in ["decision", "churn"] {
+            let flat = rec.median_of(&format!("{phase}_M{m}_MFI"));
+            let idx = rec.median_of(&format!("{phase}_M{m}_MFI-IDX"));
+            if let (Some(flat), Some(idx)) = (flat, idx) {
+                let speedup = flat / idx;
+                summary.set(&format!("speedup_{phase}_m{m}"), speedup);
+                println!("  {phase} M={m}: MFI-IDX is {speedup:.1}x faster than flat MFI");
+            }
+        }
+    }
+    if let Some(s) =
+        summary.get("speedup_decision_m10000").and_then(Json::as_f64)
+    {
+        let verdict = if s >= 5.0 { "PASS" } else { "FAIL" };
+        println!("\nacceptance (>=5x at M=10000): {s:.1}x — {verdict}");
+    }
+
+    let doc = Json::obj()
+        .with("format", "migsched-bench-scaling-v1")
+        .with("bench", "scaling")
+        .with("quick_mode", quick_mode())
+        .with("results", Json::Arr(rec.rows.clone()))
+        .with("summary", summary);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scaling.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-- saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
     }
     runner.save_csv();
 }

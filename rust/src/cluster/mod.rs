@@ -1,10 +1,12 @@
 //! Cluster state management: the authoritative view of every GPU's
 //! occupancy plus the workload → placement registry, with point-in-time
-//! metrics and JSON snapshots.
+//! metrics, JSON snapshots, and an event-driven change feed (generation
+//! counter + bounded commit/release log) that lets incremental consumers
+//! track "which GPU changed" without rescanning the occupancy vector.
 
 pub mod metrics;
 pub mod snapshot;
 pub mod state;
 
 pub use metrics::ClusterMetrics;
-pub use state::{AllocError, Cluster};
+pub use state::{AllocError, ChangeKind, Cluster, ClusterEvent, CHANGE_LOG_CAPACITY};

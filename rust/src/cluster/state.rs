@@ -1,9 +1,37 @@
 //! The cluster state: GPU occupancy vector + workload allocation registry.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::mig::{GpuState, HardwareModel, Placement, Profile};
 use crate::workload::WorkloadId;
+
+/// Direction of one cluster mutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChangeKind {
+    /// A placement was committed ([`Cluster::allocate`]).
+    Commit,
+    /// A placement was released ([`Cluster::release`]).
+    Release,
+}
+
+/// One entry of the cluster's change log: which GPU changed, how, and the
+/// generation the cluster reached by applying it.
+///
+/// A commit or release touches exactly one GPU, so incremental consumers
+/// (the [`crate::frag::FragIndex`] behind `MFI-IDX`) can re-derive just
+/// that GPU's state in O(k) instead of rescanning all `M` GPUs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterEvent {
+    /// Generation counter value AFTER this event was applied.
+    pub generation: u64,
+    pub kind: ChangeKind,
+    /// The placement committed or released (carries the GPU id).
+    pub placement: Placement,
+}
+
+/// How many events the change log retains. Consumers further behind than
+/// this must rebuild from the occupancy vector (`events_since` → `None`).
+pub const CHANGE_LOG_CAPACITY: usize = 4096;
 
 /// A homogeneous MIG GPU cluster (paper Section IV: set `M` of GPUs of the
 /// same hardware model).
@@ -21,6 +49,12 @@ pub struct Cluster {
     /// Slices currently allocated (kept incrementally; equals the sum of
     /// per-GPU used slices — asserted in debug builds).
     used_slices: u64,
+    /// Monotone mutation counter: bumped by every successful allocate /
+    /// release / clear. Lets consumers detect staleness in O(1).
+    generation: u64,
+    /// Bounded log of the most recent mutations, consecutive generations
+    /// ending at `generation`. Emptied (discontinuity) by `clear()`.
+    log: VecDeque<ClusterEvent>,
 }
 
 /// Errors from committing or releasing allocations.
@@ -60,7 +94,48 @@ impl Cluster {
             hw,
             allocations: HashMap::new(),
             used_slices: 0,
+            generation: 0,
+            log: VecDeque::new(),
         }
+    }
+
+    // ----- change observation ----------------------------------------------
+
+    /// Monotone mutation counter (0 for a fresh cluster). Two clusters (or
+    /// one cluster at two points in time) with equal generation and shared
+    /// history have identical occupancy.
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The events that advanced the cluster from `generation` to the
+    /// current state, oldest first. `None` when the consumer is too far
+    /// behind (more than [`CHANGE_LOG_CAPACITY`] events, or a `clear()`
+    /// discontinuity) — then the consumer must rebuild from
+    /// [`Cluster::gpus`].
+    ///
+    /// Generations are meaningful only within ONE cluster's timeline: a
+    /// generation obtained from an unrelated `Cluster` is indistinguishable
+    /// from a legitimate one, so consumers tracking multiple clusters must
+    /// key their state per cluster (see `sched::mfi_indexed` module docs).
+    pub fn events_since(&self, generation: u64) -> Option<Vec<ClusterEvent>> {
+        if generation > self.generation {
+            return None;
+        }
+        let missed = (self.generation - generation) as usize;
+        if missed > self.log.len() {
+            return None;
+        }
+        Some(self.log.iter().skip(self.log.len() - missed).copied().collect())
+    }
+
+    fn record(&mut self, kind: ChangeKind, placement: Placement) {
+        self.generation += 1;
+        if self.log.len() == CHANGE_LOG_CAPACITY {
+            self.log.pop_front();
+        }
+        self.log.push_back(ClusterEvent { generation: self.generation, kind, placement });
     }
 
     // ----- read access ----------------------------------------------------
@@ -155,6 +230,7 @@ impl Cluster {
             .map_err(AllocError::Placement)?;
         self.used_slices += placement.profile.size() as u64;
         self.allocations.insert(id, placement);
+        self.record(ChangeKind::Commit, placement);
         Ok(())
     }
 
@@ -166,16 +242,21 @@ impl Cluster {
             .release(placement.profile, placement.index)
             .map_err(AllocError::Placement)?;
         self.used_slices -= placement.profile.size() as u64;
+        self.record(ChangeKind::Release, placement);
         Ok(placement)
     }
 
     /// Drop every allocation (simulation reset without reallocating).
+    /// This is a change-log discontinuity: incremental consumers observe a
+    /// generation bump with no replayable events and must rebuild.
     pub fn clear(&mut self) {
         for g in &mut self.gpus {
             *g = GpuState::empty();
         }
         self.allocations.clear();
         self.used_slices = 0;
+        self.generation += 1;
+        self.log.clear();
     }
 }
 
@@ -278,6 +359,73 @@ mod tests {
         assert_eq!(c.used_slices(), 0);
         assert_eq!(c.allocated_workloads(), 0);
         assert_eq!(c.active_gpus(), 0);
+    }
+
+    #[test]
+    fn generation_counts_mutations_only() {
+        let mut c = cluster();
+        assert_eq!(c.generation(), 0);
+        c.allocate(wid(1), pl(0, Profile::P2g20gb, 0)).unwrap();
+        assert_eq!(c.generation(), 1);
+        // Failed mutations must not advance the generation.
+        assert!(c.allocate(wid(1), pl(0, Profile::P2g20gb, 2)).is_err());
+        assert!(c.allocate(wid(2), pl(0, Profile::P2g20gb, 0)).is_err());
+        assert!(c.release(wid(9)).is_err());
+        assert_eq!(c.generation(), 1);
+        c.release(wid(1)).unwrap();
+        assert_eq!(c.generation(), 2);
+    }
+
+    #[test]
+    fn change_log_replays_missed_events() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P3g40gb, 4)).unwrap();
+        let observed = c.generation();
+        c.allocate(wid(2), pl(1, Profile::P1g10gb, 6)).unwrap();
+        c.release(wid(1)).unwrap();
+
+        assert_eq!(c.events_since(c.generation()), Some(vec![]));
+        let events = c.events_since(observed).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, ChangeKind::Commit);
+        assert_eq!(events[0].placement, pl(1, Profile::P1g10gb, 6));
+        assert_eq!(events[0].generation, observed + 1);
+        assert_eq!(events[1].kind, ChangeKind::Release);
+        assert_eq!(events[1].placement, pl(0, Profile::P3g40gb, 4));
+        assert_eq!(events[1].generation, c.generation());
+        // Replaying the events over the old occupancy reproduces the new.
+        let mut masks = vec![0b1111_0000u8, 0, 0];
+        for e in &events {
+            let m = e.placement.profile.mask_at(e.placement.index);
+            match e.kind {
+                ChangeKind::Commit => masks[e.placement.gpu] |= m,
+                ChangeKind::Release => masks[e.placement.gpu] &= !m,
+            }
+        }
+        assert_eq!(masks, c.occupancy_masks());
+    }
+
+    #[test]
+    fn events_since_rejects_unreachable_generations() {
+        let mut c = cluster();
+        c.allocate(wid(1), pl(0, Profile::P1g10gb, 0)).unwrap();
+        // From the future (e.g. a different cluster's generation).
+        assert_eq!(c.events_since(c.generation() + 1), None);
+        // Across a clear() discontinuity.
+        let observed = c.generation();
+        c.clear();
+        assert!(c.generation() > observed);
+        assert_eq!(c.events_since(observed), None);
+        // Too far behind: more than the log capacity.
+        let mut c = cluster();
+        let observed = c.generation();
+        for _ in 0..=(CHANGE_LOG_CAPACITY / 2) {
+            c.allocate(wid(7), pl(0, Profile::P1g10gb, 0)).unwrap();
+            c.release(wid(7)).unwrap();
+        }
+        assert_eq!(c.events_since(observed), None);
+        // But a consumer within the window can still catch up.
+        assert!(c.events_since(c.generation() - CHANGE_LOG_CAPACITY as u64).is_some());
     }
 
     #[test]

@@ -21,8 +21,14 @@
 //! * `runtime::FragEngine` — the AOT-compiled JAX/Pallas program executed
 //!   through PJRT (built from the same candidate table; see
 //!   `python/compile/model.py`).
+//!
+//! On top of the score engines, [`index::FragIndex`] maintains the
+//! cluster-wide argmin-ΔF *incrementally* (O(k) per commit/release, ~O(1)
+//! per decision) — the event-driven alternative to the O(M·k)
+//! [`evaluate_cluster`] rescan, with identical tie-breaking.
 
 pub mod delta;
+pub mod index;
 pub mod score;
 pub mod table;
 
@@ -30,6 +36,7 @@ pub use delta::{
     best_delta_on_gpu, delta_f, evaluate_cluster, evaluate_cluster_full, DeltaOutcome,
     EvaluatedCandidate,
 };
+pub use index::FragIndex;
 pub use score::{
     max_score, score_direct, score_direct_rule, DirectScorer, FragScorer, OverlapRule,
 };

@@ -62,12 +62,12 @@ pub mod workload;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
-    pub use crate::cluster::{Cluster, ClusterMetrics};
-    pub use crate::frag::{FragScorer, ScoreTable};
+    pub use crate::cluster::{ChangeKind, Cluster, ClusterEvent, ClusterMetrics};
+    pub use crate::frag::{FragIndex, FragScorer, ScoreTable};
     pub use crate::mig::{GpuState, HardwareModel, Placement, Profile};
     pub use crate::sched::{
-        BestFit, FirstFit, IndexPolicy, Mfi, RandomFit, RoundRobin, Scheduler, SchedulerKind,
-        WorstFit,
+        BestFit, FirstFit, IndexPolicy, Mfi, MfiIndexed, RandomFit, RoundRobin, Scheduler,
+        SchedulerKind, WorstFit,
     };
     pub use crate::sim::{Distribution, ExperimentConfig, SimConfig, SimEngine};
     pub use crate::util::rng::Rng;

@@ -64,7 +64,7 @@ USAGE:
 
 COMMANDS:
   sim           one Monte Carlo run
-                  --scheduler MFI|FF|RR|BF-BI|WF-BI|...  (default MFI)
+                  --scheduler MFI|MFI-IDX|FF|RR|BF-BI|WF-BI|...  (default MFI)
                   --distribution uniform|skew-small|skew-big|bimodal
                   --gpus N (default 100)   --seed N   --hardware a100-80gb
   sweep         full experiment (paper setup: 500 runs x 5 schemes x 4 dists)
@@ -72,7 +72,7 @@ COMMANDS:
                   --out DIR (CSV exports, default results/)
   figures       regenerate a paper figure: --fig 4|5|6 [sweep flags]
   serve         online serving daemon
-                  --addr 127.0.0.1:8080   --gpus N   --scheduler MFI
+                  --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
   inspect       --hardware a100-80gb | --distributions | --candidates
   trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
   trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N]

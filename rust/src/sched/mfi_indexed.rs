@@ -1,0 +1,209 @@
+//! MFI on the incremental argmin-ΔF index (`MFI-IDX`).
+//!
+//! Placement-for-placement identical to [`Mfi`](super::Mfi) — same
+//! ΔF values (one [`ScoreTable`]), same tie-breaking — but the decision
+//! is a ~O(1) amortized index query instead of [`Mfi`]'s O(M·k) rescan
+//! (see [`crate::frag::index`] for the complexity table).
+//!
+//! The scheduler stays correct under **any** driver discipline:
+//!
+//! * Drivers that call the [`Scheduler::on_commit`]/[`Scheduler::on_release`]
+//!   hooks after every cluster mutation (the simulation engine and the
+//!   serving daemon) pay O(k) per event and the next decision is a pure
+//!   query.
+//! * Drivers that drop some or all hooks are detected on the next
+//!   `schedule` call via the cluster's generation counter: the index
+//!   catches up from the bounded change log (O(k) per missed event) or,
+//!   when the log cannot bridge the gap, rebuilds from the occupancy
+//!   vector (O(M·k)) — never silently diverging. The
+//!   [`MfiIndexed::rebuilds`]/[`MfiIndexed::replayed_events`] counters
+//!   expose which path ran (used by the stale-index tests).
+//!
+//! One scheduler instance tracks ONE cluster's timeline: generations of
+//! unrelated `Cluster` values are not comparable, so call
+//! [`Scheduler::reset`] when switching clusters (the simulation engine
+//! does this at the start of every run; a size mismatch is additionally
+//! detected and rebuilt, and any divergence panics in debug builds).
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::frag::{FragIndex, OverlapRule, ScoreTable};
+use crate::mig::{HardwareModel, Placement, Profile};
+
+/// The incremental MFI scheduler (see module docs).
+#[derive(Clone, Debug)]
+pub struct MfiIndexed {
+    table: ScoreTable,
+    index: Option<FragIndex>,
+    name: String,
+    rebuilds: u64,
+    replayed_events: u64,
+}
+
+impl MfiIndexed {
+    /// MFI-IDX for the default hardware model (A100-80GB).
+    pub fn new() -> Self {
+        Self::for_hardware(&HardwareModel::a100_80gb())
+    }
+
+    /// MFI-IDX for a specific hardware model, default overlap rule.
+    pub fn for_hardware(hw: &HardwareModel) -> Self {
+        Self::with_table(ScoreTable::for_hardware(hw), "MFI-IDX".to_string())
+    }
+
+    /// MFI-IDX under an explicit fragmentation overlap rule (ablation).
+    pub fn with_rule(hw: &HardwareModel, rule: OverlapRule) -> Self {
+        let name = if rule == OverlapRule::default() {
+            "MFI-IDX".to_string()
+        } else {
+            format!("MFI-IDX-{}", rule.name())
+        };
+        Self::with_table(ScoreTable::for_hardware_rule(hw, rule), name)
+    }
+
+    fn with_table(table: ScoreTable, name: String) -> Self {
+        Self { table, index: None, name, rebuilds: 0, replayed_events: 0 }
+    }
+
+    pub fn score_table(&self) -> &ScoreTable {
+        &self.table
+    }
+
+    /// Full index (re)builds performed, including the initial one.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Change-log events replayed incrementally (hook calls count one
+    /// each; a dropped hook shows up here when `schedule` catches up).
+    pub fn replayed_events(&self) -> u64 {
+        self.replayed_events
+    }
+
+    /// Bring the index in line with `cluster` (build, catch up, or
+    /// rebuild as needed).
+    fn sync(&mut self, cluster: &Cluster) {
+        match &mut self.index {
+            None => {
+                self.index = Some(FragIndex::for_cluster(self.table.clone(), cluster));
+                self.rebuilds += 1;
+            }
+            Some(index) => match index.sync(cluster) {
+                Some(replayed) => self.replayed_events += replayed as u64,
+                None => self.rebuilds += 1,
+            },
+        }
+    }
+}
+
+impl Default for MfiIndexed {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for MfiIndexed {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if !cluster.hardware().supports(profile) {
+            return None;
+        }
+        self.sync(cluster);
+        self.index.as_ref().expect("index built by sync").best(profile)
+    }
+
+    fn on_commit(&mut self, cluster: &Cluster, _placement: Placement) {
+        if self.index.is_some() {
+            self.sync(cluster);
+        }
+    }
+
+    fn on_release(&mut self, cluster: &Cluster, _placement: Placement) {
+        if self.index.is_some() {
+            self.sync(cluster);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.index = None;
+        self.rebuilds = 0;
+        self.replayed_events = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Mfi;
+    use crate::util::rng::Rng;
+    use crate::workload::WorkloadId;
+
+    /// Drive both schedulers through the same random interleaving with
+    /// hooks wired; placements must be identical at every step.
+    #[test]
+    fn hooked_interleaving_matches_mfi_exactly() {
+        let hw = HardwareModel::a100_80gb();
+        let mut flat = Mfi::for_hardware(&hw);
+        let mut indexed = MfiIndexed::for_hardware(&hw);
+        let mut cluster = Cluster::new(hw.clone(), 5);
+        let mut rng = Rng::new(0x1DE8);
+        let mut next_id = 0u64;
+        for step in 0..800 {
+            if rng.chance(0.6) {
+                let p = *rng.choose(&crate::mig::profile::ALL_PROFILES);
+                let a = flat.schedule(&cluster, p);
+                let b = indexed.schedule(&cluster, p);
+                assert_eq!(a, b, "step {step}: {p}");
+                if let Some(pl) = a {
+                    cluster.allocate(WorkloadId(next_id), pl).unwrap();
+                    indexed.on_commit(&cluster, pl);
+                    next_id += 1;
+                }
+            } else if cluster.allocated_workloads() > 0 {
+                // Sort: HashMap iteration order would make the episode
+                // irreproducible across runs of the same seed.
+                let mut ids: Vec<WorkloadId> = cluster.allocations().map(|(id, _)| id).collect();
+                ids.sort();
+                let freed = cluster.release(*rng.choose(&ids)).unwrap();
+                indexed.on_release(&cluster, freed);
+            }
+        }
+        assert_eq!(indexed.rebuilds(), 1, "hooked driver never forces a rebuild");
+    }
+
+    #[test]
+    fn unsupported_profile_rejected_without_index_work() {
+        let hw = HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let mut s = MfiIndexed::for_hardware(&hw);
+        let cluster = Cluster::new(hw, 2);
+        assert_eq!(s.schedule(&cluster, Profile::P7g80gb), None);
+        assert_eq!(s.rebuilds(), 0);
+        assert!(s.schedule(&cluster, Profile::P1g10gb).is_some());
+        assert_eq!(s.rebuilds(), 1);
+    }
+
+    #[test]
+    fn reset_drops_the_index() {
+        let hw = HardwareModel::a100_80gb();
+        let mut s = MfiIndexed::for_hardware(&hw);
+        let cluster = Cluster::new(hw.clone(), 2);
+        s.schedule(&cluster, Profile::P1g10gb);
+        assert_eq!(s.rebuilds(), 1);
+        s.reset();
+        assert_eq!(s.rebuilds(), 0);
+        // A different cluster after reset: index rebuilt cleanly.
+        let other = Cluster::new(hw, 7);
+        assert!(s.schedule(&other, Profile::P7g80gb).is_some());
+        assert_eq!(s.rebuilds(), 1);
+    }
+
+    #[test]
+    fn names_and_rules() {
+        assert_eq!(MfiIndexed::new().name(), "MFI-IDX");
+        let any = MfiIndexed::with_rule(&HardwareModel::a100_80gb(), OverlapRule::Any);
+        assert_eq!(any.name(), "MFI-IDX-any");
+    }
+}

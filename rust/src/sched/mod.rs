@@ -15,12 +15,19 @@
 //! | [`WorstFit`]   | aware    | max free slices after alloc | best (policy) |
 //! | [`RandomFit`]  | agnostic | uniform among feasible      | uniform |
 //! | [`Mfi`]        | aware    | argmin ΔF (Algorithm 2)     | argmin ΔF |
+//! | [`MfiIndexed`] | aware    | argmin ΔF via incremental index | argmin ΔF |
 //! | [`MfiXla`]     | aware    | argmin ΔF via PJRT artifact | argmin ΔF |
+//!
+//! [`MfiIndexed`] is placement-for-placement identical to [`Mfi`] but
+//! decides in ~O(1) amortized instead of O(M·k), consuming the cluster's
+//! change feed through the [`Scheduler::on_commit`]/[`Scheduler::on_release`]
+//! hooks (see [`crate::frag::index`]).
 
 pub mod best_fit;
 pub mod first_fit;
 pub mod index_policy;
 pub mod mfi;
+pub mod mfi_indexed;
 #[cfg(feature = "xla")]
 pub mod mfi_xla;
 pub mod random;
@@ -31,6 +38,7 @@ pub use best_fit::BestFit;
 pub use first_fit::FirstFit;
 pub use index_policy::IndexPolicy;
 pub use mfi::Mfi;
+pub use mfi_indexed::MfiIndexed;
 #[cfg(feature = "xla")]
 pub use mfi_xla::MfiXla;
 pub use random::RandomFit;
@@ -48,6 +56,21 @@ pub trait Scheduler {
     /// Propose a placement for `profile` on `cluster`, or `None` to reject.
     /// Must NOT mutate the cluster (the caller commits).
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement>;
+
+    /// Observe a committed placement, called by the owning loop right
+    /// after [`crate::cluster::Cluster::allocate`] succeeds. Default
+    /// no-op; incremental schedulers ([`MfiIndexed`]) use it to update
+    /// their index in O(k) instead of rescanning on the next decision.
+    ///
+    /// Hooks are an optimization, never a correctness requirement: a
+    /// driver that drops them only costs the scheduler a change-log
+    /// catch-up (or index rebuild) on its next `schedule` call — the
+    /// cluster's generation counter makes staleness detectable.
+    fn on_commit(&mut self, _cluster: &Cluster, _placement: Placement) {}
+
+    /// Observe a released placement, called right after
+    /// [`crate::cluster::Cluster::release`] succeeds. Default no-op.
+    fn on_release(&mut self, _cluster: &Cluster, _placement: Placement) {}
 
     /// Reset internal policy state between simulation runs (cursors, RNG).
     fn reset(&mut self) {}
@@ -70,6 +93,9 @@ pub enum SchedulerKind {
     WfFi,
     /// Minimum Fragmentation Increment — the paper's contribution.
     Mfi,
+    /// MFI on the incremental argmin-ΔF index — same placements as
+    /// [`SchedulerKind::Mfi`], sublinear per decision (not in the paper).
+    MfiIdx,
     /// Random feasible placement — sanity floor (not in the paper).
     Random,
     /// Retrying FF: falls through to the next GPU when the
@@ -97,9 +123,10 @@ impl SchedulerKind {
     }
 
     /// Everything, for exhaustive sweeps/ablations.
-    pub fn all() -> [SchedulerKind; 12] {
+    pub fn all() -> [SchedulerKind; 13] {
         [
             SchedulerKind::Mfi,
+            SchedulerKind::MfiIdx,
             SchedulerKind::Ff,
             SchedulerKind::Rr,
             SchedulerKind::BfBi,
@@ -122,6 +149,7 @@ impl SchedulerKind {
         matches!(
             self,
             SchedulerKind::Mfi
+                | SchedulerKind::MfiIdx
                 | SchedulerKind::Random
                 | SchedulerKind::FfRetry
                 | SchedulerKind::RrRetry
@@ -139,6 +167,7 @@ impl SchedulerKind {
             SchedulerKind::WfBi => "WF-BI",
             SchedulerKind::WfFi => "WF-FI",
             SchedulerKind::Mfi => "MFI",
+            SchedulerKind::MfiIdx => "MFI-IDX",
             SchedulerKind::Random => "RANDOM",
             SchedulerKind::FfRetry => "FF-R",
             SchedulerKind::RrRetry => "RR-R",
@@ -156,6 +185,7 @@ impl SchedulerKind {
             "WF-BI" | "WORST-FIT" => Some(SchedulerKind::WfBi),
             "WF-FI" => Some(SchedulerKind::WfFi),
             "MFI" => Some(SchedulerKind::Mfi),
+            "MFI-IDX" | "MFI-INDEXED" => Some(SchedulerKind::MfiIdx),
             "RANDOM" | "RAND" => Some(SchedulerKind::Random),
             "FF-R" => Some(SchedulerKind::FfRetry),
             "RR-R" => Some(SchedulerKind::RrRetry),
@@ -175,6 +205,7 @@ impl SchedulerKind {
             SchedulerKind::WfBi => Box::new(WorstFit::new(IndexPolicy::BestIndex)),
             SchedulerKind::WfFi => Box::new(WorstFit::new(IndexPolicy::FirstIndex)),
             SchedulerKind::Mfi => Box::new(Mfi::for_hardware(hw)),
+            SchedulerKind::MfiIdx => Box::new(MfiIndexed::for_hardware(hw)),
             SchedulerKind::Random => Box::new(RandomFit::new(0x5EED)),
             SchedulerKind::FfRetry => Box::new(FirstFit::retry()),
             SchedulerKind::RrRetry => Box::new(RoundRobin::retry()),

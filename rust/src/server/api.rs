@@ -71,6 +71,10 @@ fn submit(request: &Request, state: &Arc<Mutex<DaemonState>>) -> Response {
     if let Err(e) = s.cluster.allocate(id, placement) {
         return Response::error(500, &format!("commit failed: {e}"));
     }
+    {
+        let DaemonState { scheduler, cluster, .. } = &mut *s;
+        scheduler.on_commit(cluster, placement);
+    }
     s.accepted_total += 1;
     let expires_at = duration.map(|d| s.clock_slot + d);
     s.leases.insert(id, Lease { tenant, expires_at });
@@ -123,6 +127,10 @@ fn release(id: &str, state: &Arc<Mutex<DaemonState>>) -> Response {
     let mut s = state.lock().unwrap();
     match s.cluster.release(id) {
         Ok(p) => {
+            {
+                let DaemonState { scheduler, cluster, .. } = &mut *s;
+                scheduler.on_release(cluster, p);
+            }
             s.leases.remove(&id);
             s.released_total += 1;
             Response::json(
@@ -321,6 +329,64 @@ mod tests {
 
         let health = dispatch(&req("GET", "/healthz", ""), &state);
         assert_eq!(health.status, 200);
+    }
+
+    #[test]
+    fn indexed_daemon_places_like_mfi_daemon() {
+        // The serving daemon's allocate/release/tick paths drive the
+        // incremental scheduler through its hooks; every placement must
+        // match the flat-MFI daemon on the same request sequence.
+        use crate::sched::SchedulerKind;
+        let mk = |kind| {
+            Daemon::new(DaemonConfig {
+                num_gpus: 3,
+                workers: 1,
+                scheduler: kind,
+                ..DaemonConfig::default()
+            })
+            .state()
+        };
+        let flat = mk(SchedulerKind::Mfi);
+        let indexed = mk(SchedulerKind::MfiIdx);
+        let sequence = [
+            r#"{"profile":"2g.20gb","duration_slots":2}"#,
+            r#"{"profile":"1g.10gb","duration_slots":5}"#,
+            r#"{"profile":"3g.40gb"}"#,
+            r#"{"profile":"1g.20gb","duration_slots":1}"#,
+            r#"{"profile":"7g.80gb"}"#,
+            r#"{"profile":"1g.10gb","duration_slots":3}"#,
+            r#"{"profile":"4g.40gb"}"#,
+            r#"{"profile":"2g.20gb"}"#,
+        ];
+        for (i, body) in sequence.iter().enumerate() {
+            let ra = dispatch(&req("POST", "/v1/workloads", body), &flat);
+            let rb = dispatch(&req("POST", "/v1/workloads", body), &indexed);
+            assert_eq!(ra.status, rb.status, "request {i}");
+            if ra.status == 201 {
+                let (ja, jb) = (json_of(&ra), json_of(&rb));
+                assert_eq!(ja.req_u64("gpu").unwrap(), jb.req_u64("gpu").unwrap(), "request {i}");
+                assert_eq!(
+                    ja.req_u64("index").unwrap(),
+                    jb.req_u64("index").unwrap(),
+                    "request {i}"
+                );
+            }
+            if i == 3 {
+                // Expire some leases mid-sequence (exercises tick's
+                // on_release plumbing) and explicitly release a live one.
+                for state in [&flat, &indexed] {
+                    dispatch(&req("POST", "/v1/tick", r#"{"slots":2}"#), state);
+                    dispatch(&req("DELETE", "/v1/workloads/1", ""), state);
+                }
+            }
+        }
+        let sa = json_of(&dispatch(&req("GET", "/v1/stats", ""), &flat));
+        let sb = json_of(&dispatch(&req("GET", "/v1/stats", ""), &indexed));
+        assert_eq!(sa.req_u64("accepted_total").unwrap(), sb.req_u64("accepted_total").unwrap());
+        assert_eq!(
+            sa.get("utilization").and_then(Json::as_f64),
+            sb.get("utilization").and_then(Json::as_f64)
+        );
     }
 
     #[test]

@@ -72,7 +72,9 @@ impl DaemonState {
         let mut released = expired;
         released.sort();
         for id in &released {
-            self.cluster.release(*id).expect("lease registry consistent with cluster");
+            let freed =
+                self.cluster.release(*id).expect("lease registry consistent with cluster");
+            self.scheduler.on_release(&self.cluster, freed);
             self.leases.remove(id);
             self.expired_total += 1;
         }

@@ -190,11 +190,15 @@ impl SimEngine {
                     break;
                 }
                 departures.pop();
-                cluster
+                let freed = cluster
                     .release(crate::workload::WorkloadId(id))
                     .expect("departure of allocated workload");
+                scheduler.on_release(&cluster, freed);
             }
-            // 1b. periodic rescheduling (future-work extension).
+            // 1b. periodic rescheduling (future-work extension). Migration
+            // moves go through allocate/release and thus the cluster's
+            // change log, so incremental schedulers catch up on their next
+            // decision without explicit hook calls here.
             if let Some((interval, budget)) = self.config.defrag_every {
                 if t > 0 && t % interval == 0 {
                     let plan = crate::defrag::plan_defrag(&cluster, &scorer, budget);
@@ -209,6 +213,7 @@ impl SimEngine {
             arrived += 1;
             if let Some(placement) = scheduler.schedule(&cluster, w.profile) {
                 cluster.allocate(w.id, placement).expect("scheduler proposed valid placement");
+                scheduler.on_commit(&cluster, placement);
                 accepted += 1;
                 departures.push(std::cmp::Reverse((t + w.duration_slots, w.id.0)));
             }
@@ -284,6 +289,27 @@ mod tests {
                 assert!(w[1].metrics.arrived_total >= w[0].metrics.arrived_total);
                 assert!(w[1].metrics.accepted_total >= w[0].metrics.accepted_total);
                 assert!(w[1].slot >= w[0].slot);
+            }
+        }
+    }
+
+    #[test]
+    fn mfi_indexed_reproduces_mfi_run_exactly() {
+        // The incremental engine must be placement-for-placement identical
+        // to the flat rescan through the full driver (arrivals, departures,
+        // checkpoint capture), not just per isolated decision.
+        for (dist, seed) in [
+            (Distribution::Uniform, 21u64),
+            (Distribution::Bimodal, 99),
+            (Distribution::SkewBig, 7),
+        ] {
+            let a = run(SchedulerKind::Mfi, dist.clone(), seed);
+            let b = run(SchedulerKind::MfiIdx, dist, seed);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.arrived, b.arrived);
+            assert_eq!(a.time_avg_frag, b.time_avg_frag);
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(ra.metrics, rb.metrics, "checkpoint {}", ra.demand);
             }
         }
     }

@@ -1,8 +1,14 @@
 //! Seed sweeps: many independent simulation runs aggregated into the
 //! statistics the paper's figures plot (500 runs per configuration,
 //! Section VI), parallelized across OS threads.
-
-use std::sync::Mutex;
+//!
+//! The hot loop is lock-free: work items are (cell, run-chunk) pairs
+//! handed out by one atomic counter, every worker accumulates into
+//! *private* partial [`AggregatedCell`]s, and the partials are merged
+//! after the join in a fixed (cell, chunk) order via [`merge_cells`].
+//! Because chunk boundaries depend only on the config (not on the thread
+//! count or scheduling), sweep results are **bit-identical** for any
+//! `threads` setting — asserted by `sweep_deterministic_across_thread_counts`.
 
 use super::engine::{SimConfig, SimEngine, SimResult};
 use crate::sched::SchedulerKind;
@@ -125,10 +131,35 @@ impl SweepResult {
     }
 }
 
+/// Runs per work item. Small enough that a tiny test config still spans
+/// several chunks (exercising the merge), big enough that chunk-claim
+/// overhead is negligible against hundreds of simulated slots per run.
+const RUN_CHUNK: usize = 4;
+
+/// One worker's private partial aggregation for one (cell, chunk) item.
+struct CellPartial {
+    checkpoints: Vec<AggregatedCell>,
+    time_avg_frag: OnlineStats,
+    final_acceptance: OnlineStats,
+    horizon: OnlineStats,
+}
+
+impl CellPartial {
+    fn new(num_checkpoints: usize) -> Self {
+        Self {
+            checkpoints: vec![AggregatedCell::default(); num_checkpoints],
+            time_avg_frag: OnlineStats::new(),
+            final_acceptance: OnlineStats::new(),
+            horizon: OnlineStats::new(),
+        }
+    }
+}
+
 /// Run the sweep. Deterministic: seeds are derived from
 /// `base_seed × run-index` via SplitMix64, identical for every scheme so
 /// all schemes face *the same* workload sequences (paired comparison, as
-/// in the paper).
+/// in the paper). Aggregation is bit-identical across thread counts (see
+/// module docs).
 pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
     let threads = if config.threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -140,55 +171,80 @@ pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
     let mut seed_gen = SplitMix64::new(config.base_seed);
     let run_seeds: Vec<u64> = (0..config.runs).map(|_| seed_gen.next_u64()).collect();
 
-    let mut series_out: Vec<SweepSeries> = Vec::new();
-    for distribution in &config.distributions {
-        for &scheme in &config.schemes {
-            let agg = Mutex::new((
-                vec![AggregatedCell::default(); config.checkpoints.len()],
-                OnlineStats::new(), // time_avg_frag
-                OnlineStats::new(), // final acceptance
-                OnlineStats::new(), // horizon
-            ));
-            let next_run = std::sync::atomic::AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..threads.min(config.runs).max(1) {
-                    scope.spawn(|| {
-                        loop {
-                            let i = next_run
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if i >= config.runs {
-                                break;
-                            }
-                            let sim_cfg = SimConfig {
-                                hardware: config.hardware.clone(),
-                                num_gpus: config.num_gpus,
-                                distribution: distribution.clone(),
-                                checkpoints: config.checkpoints.clone(),
-                                seed: run_seeds[i],
-                                defrag_every: None,
-                            };
-                            let engine = SimEngine::new(sim_cfg);
-                            let mut sched = scheme.build(&config.hardware);
-                            let result = engine.run(&mut *sched);
-                            let mut guard = agg.lock().unwrap();
-                            accumulate(&mut guard.0, &result);
-                            guard.1.push(result.time_avg_frag);
-                            guard.2.push(result.acceptance_rate());
-                            guard.3.push(result.horizon as f64);
-                        }
-                    });
+    // Cells in output order; work items are (cell, chunk-of-runs) pairs so
+    // the queue scales past a handful of cells.
+    let cells: Vec<(Distribution, SchedulerKind)> = config
+        .distributions
+        .iter()
+        .flat_map(|d| config.schemes.iter().map(move |&s| (d.clone(), s)))
+        .collect();
+    let num_chunks = config.runs.div_ceil(RUN_CHUNK);
+    let total_items = cells.len() * num_chunks;
+
+    let next_item = std::sync::atomic::AtomicUsize::new(0);
+    let mut partials: Vec<(usize, CellPartial)> = Vec::with_capacity(total_items);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..threads.min(total_items).max(1) {
+            handles.push(scope.spawn(|| {
+                let mut out: Vec<(usize, CellPartial)> = Vec::new();
+                loop {
+                    let item =
+                        next_item.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if item >= total_items {
+                        break;
+                    }
+                    let (distribution, scheme) = &cells[item / num_chunks];
+                    let lo = (item % num_chunks) * RUN_CHUNK;
+                    let hi = (lo + RUN_CHUNK).min(config.runs);
+                    let mut partial = CellPartial::new(config.checkpoints.len());
+                    for run in lo..hi {
+                        let sim_cfg = SimConfig {
+                            hardware: config.hardware.clone(),
+                            num_gpus: config.num_gpus,
+                            distribution: distribution.clone(),
+                            checkpoints: config.checkpoints.clone(),
+                            seed: run_seeds[run],
+                            defrag_every: None,
+                        };
+                        let engine = SimEngine::new(sim_cfg);
+                        let mut sched = scheme.build(&config.hardware);
+                        let result = engine.run(&mut *sched);
+                        accumulate(&mut partial.checkpoints, &result);
+                        partial.time_avg_frag.push(result.time_avg_frag);
+                        partial.final_acceptance.push(result.acceptance_rate());
+                        partial.horizon.push(result.horizon as f64);
+                    }
+                    out.push((item, partial));
                 }
-            });
-            let (cells, frag, acc, horizon) = agg.into_inner().unwrap();
-            series_out.push(SweepSeries {
-                scheme,
-                distribution: distribution.clone(),
-                checkpoints: cells,
-                time_avg_frag: frag,
-                final_acceptance: acc,
-                horizon,
-            });
+                out
+            }));
         }
+        for handle in handles {
+            partials.extend(handle.join().expect("sweep worker panicked"));
+        }
+    });
+
+    // Merge in ascending (cell, chunk) order — independent of which worker
+    // produced which partial.
+    partials.sort_unstable_by_key(|(item, _)| *item);
+    let mut series_out: Vec<SweepSeries> = cells
+        .iter()
+        .map(|(distribution, scheme)| SweepSeries {
+            scheme: *scheme,
+            distribution: distribution.clone(),
+            checkpoints: vec![AggregatedCell::default(); config.checkpoints.len()],
+            time_avg_frag: OnlineStats::new(),
+            final_acceptance: OnlineStats::new(),
+            horizon: OnlineStats::new(),
+        })
+        .collect();
+    for (item, partial) in &partials {
+        let series = &mut series_out[item / num_chunks];
+        merge_cells(&mut series.checkpoints, &partial.checkpoints);
+        series.time_avg_frag.merge(&partial.time_avg_frag);
+        series.final_acceptance.merge(&partial.final_acceptance);
+        series.horizon.merge(&partial.horizon);
     }
 
     SweepResult {
@@ -252,6 +308,10 @@ mod tests {
 
     #[test]
     fn sweep_deterministic_across_thread_counts() {
+        // Chunk boundaries and the merge order depend only on the config,
+        // so results are BIT-identical across thread counts (the tiny
+        // config's 6 runs span two RUN_CHUNK=4 chunks, exercising both a
+        // full and a ragged chunk).
         let mut c1 = tiny_config();
         c1.threads = 1;
         let mut c4 = tiny_config();
@@ -260,13 +320,15 @@ mod tests {
         let r4 = run_sweep(&c4);
         for (a, b) in r1.series.iter().zip(&r4.series) {
             assert_eq!(a.scheme, b.scheme);
-            // Welford merge order differs, so compare with tolerance.
-            assert!(
-                (a.final_acceptance.mean() - b.final_acceptance.mean()).abs() < 1e-12,
-                "{}",
-                a.scheme
-            );
-            assert!((a.time_avg_frag.mean() - b.time_avg_frag.mean()).abs() < 1e-9);
+            assert_eq!(a.distribution, b.distribution);
+            assert_eq!(a.final_acceptance.mean(), b.final_acceptance.mean(), "{}", a.scheme);
+            assert_eq!(a.time_avg_frag.mean(), b.time_avg_frag.mean(), "{}", a.scheme);
+            assert_eq!(a.horizon.mean(), b.horizon.mean());
+            for (ca, cb) in a.checkpoints.iter().zip(&b.checkpoints) {
+                assert_eq!(ca.acceptance_rate.mean(), cb.acceptance_rate.mean());
+                assert_eq!(ca.utilization.mean(), cb.utilization.mean());
+                assert_eq!(ca.mean_frag.mean(), cb.mean_frag.mean());
+            }
         }
     }
 

@@ -23,7 +23,7 @@ const FIXTURE: &str = include_str!("golden/frag_golden.json");
 
 fn fixture() -> Json {
     let j = Json::parse(FIXTURE).expect("golden fixture parses");
-    assert_eq!(j.req_str("format").unwrap(), "migsched-golden-frag-v1");
+    assert_eq!(j.req_str("format").unwrap(), "migsched-golden-frag-v2");
     assert_eq!(j.req_u64("num_slices").unwrap(), 8);
     assert_eq!(j.req_u64("num_candidates").unwrap() as usize, NUM_CANDIDATES);
     j
@@ -129,6 +129,89 @@ fn deltas_and_feasibility_match_python_oracle() {
             } else {
                 assert_eq!(oracle_delta, sentinel, "occ={mask:#010b} cand={c}");
                 assert_eq!(batch.deltas[mask][c], INFEASIBLE_DELTA);
+            }
+        }
+    }
+}
+
+/// The restricted-profile-set tables (fixture v2): scores and ΔF under
+/// `HardwareModel::with_profiles(&[3g.40gb, 1g.10gb])` — the subset knob
+/// the python oracle grew for exactly this export — must match the rust
+/// `ScoreTable` bit-for-bit, and every feasible ΔF must respect the
+/// exported `max_score_restricted` bound. That bound is precisely the
+/// bucket offset `frag::FragIndex` derives from the table
+/// (`max(ScoreTable::raw())`), so the index's bucket range for restricted
+/// profile sets is pinned against the oracle.
+#[test]
+fn restricted_profile_set_matches_python_oracle() {
+    let j = fixture();
+    let names: Vec<&str> = j
+        .get("restricted_profiles")
+        .and_then(Json::as_arr)
+        .expect("restricted_profiles")
+        .iter()
+        .map(|v| v.as_str().expect("profile name"))
+        .collect();
+    let profiles: Vec<Profile> =
+        names.iter().map(|n| Profile::parse(n).expect("known profile")).collect();
+    let hw = HardwareModel::a100_80gb().with_profiles(&profiles);
+    let table = ScoreTable::for_hardware(&hw);
+
+    // Candidate columns of the restricted table, in frozen CANDIDATES order.
+    let cand_idx: Vec<usize> = j
+        .get("restricted_candidates")
+        .and_then(Json::as_arr)
+        .expect("restricted_candidates")
+        .iter()
+        .map(|v| v.as_u64().expect("index") as usize)
+        .collect();
+    for &c in &cand_idx {
+        assert!(profiles.contains(&CANDIDATES[c].profile), "candidate {c} outside subset");
+    }
+    assert_eq!(
+        cand_idx.len(),
+        profiles.iter().map(|p| p.starts().len()).sum::<usize>(),
+        "subset candidate count"
+    );
+
+    let scores = u32_vec(&j, "scores_restricted");
+    let full = u32_vec(&j, "scores_partial");
+    assert_eq!(scores.len(), 256);
+    let max_restricted = j.req_u64("max_score_restricted").unwrap() as u32;
+    let sentinel = j.req_u64("infeasible_sentinel").unwrap() as i64;
+    let deltas = j.get("deltas_restricted").and_then(Json::as_arr).expect("deltas_restricted");
+    let feasible =
+        j.get("feasible_restricted").and_then(Json::as_arr).expect("feasible_restricted");
+
+    // The bucket offset the index derives for this table == the oracle max.
+    assert_eq!(*table.raw().iter().max().unwrap() as u32, max_restricted);
+
+    for mask in 0..256usize {
+        let g = GpuState::from_mask(mask as u8);
+        assert_eq!(
+            table.score(g),
+            scores[mask],
+            "restricted score disagrees with oracle at occ={mask:#010b}"
+        );
+        assert!(scores[mask] <= full[mask], "subset score exceeds full-set score");
+        let drow = deltas[mask].as_arr().expect("delta row");
+        let frow = feasible[mask].as_arr().expect("feasible row");
+        assert_eq!(drow.len(), cand_idx.len());
+        for (col, &c) in cand_idx.iter().enumerate() {
+            let cand = &CANDIDATES[c];
+            let oracle_feasible = frow[col].as_u64().expect("0/1") == 1;
+            assert_eq!(g.fits_at(cand.profile, cand.start), oracle_feasible);
+            let oracle_delta = drow[col].as_f64().expect("numeric") as i64;
+            if oracle_feasible {
+                let native = table.delta(g, cand.profile, cand.start) as i64;
+                assert_eq!(native, oracle_delta, "occ={mask:#010b} cand={c}");
+                // ΔF stays inside the index's bucket range [-max, +max].
+                assert!(
+                    oracle_delta.unsigned_abs() <= max_restricted as u64,
+                    "ΔF {oracle_delta} escapes bucket bound {max_restricted}"
+                );
+            } else {
+                assert_eq!(oracle_delta, sentinel);
             }
         }
     }

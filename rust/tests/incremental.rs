@@ -1,0 +1,152 @@
+//! Incremental-engine conformance: on ANY interleaving of schedule /
+//! commit / release operations, the indexed scheduler (`MFI-IDX`) must
+//! produce bit-identical placements to the flat-rescan reference (`MFI` /
+//! `evaluate_cluster`) — with the driver calling the `on_commit` /
+//! `on_release` hooks, with the hooks dropped entirely (change-log
+//! catch-up), and across change-log discontinuities (index rebuild).
+
+use migsched::cluster::{Cluster, CHANGE_LOG_CAPACITY};
+use migsched::frag::evaluate_cluster;
+use migsched::mig::{HardwareModel, Placement, Profile, ALL_PROFILES};
+use migsched::sched::{Mfi, MfiIndexed, Scheduler, SchedulerKind};
+use migsched::util::check::forall_shrink_vec;
+use migsched::workload::WorkloadId;
+
+/// Replay an op-encoded episode against both schedulers on one shared
+/// cluster; every proposal must match. Encoding (shrinkable `Vec<u64>`):
+/// `op % 4 < 3` → arrival of profile `(op / 4) % 6`; `op % 4 == 3` →
+/// release of the `(op / 4) % live`-th oldest live workload.
+fn drive_and_compare(ops: &[u64], gpus: usize, hooks: bool) -> Result<(), String> {
+    let hw = HardwareModel::a100_80gb();
+    let mut flat = Mfi::for_hardware(&hw);
+    let mut indexed = MfiIndexed::for_hardware(&hw);
+    let mut cluster = Cluster::new(hw, gpus);
+    let mut live: Vec<WorkloadId> = Vec::new();
+    let mut next_id = 0u64;
+    for (step, &op) in ops.iter().enumerate() {
+        if op % 4 < 3 || live.is_empty() {
+            let profile = Profile::from_index(((op / 4) % 6) as usize).unwrap();
+            let a = flat.schedule(&cluster, profile);
+            let b = indexed.schedule(&cluster, profile);
+            if a != b {
+                return Err(format!(
+                    "step {step}: {profile} → MFI {a:?} vs MFI-IDX {b:?} (hooks={hooks})"
+                ));
+            }
+            if let Some(placement) = a {
+                let id = WorkloadId(next_id);
+                next_id += 1;
+                cluster.allocate(id, placement).map_err(|e| format!("step {step}: {e}"))?;
+                if hooks {
+                    indexed.on_commit(&cluster, placement);
+                }
+                live.push(id);
+            }
+        } else {
+            let victim = live.remove(((op / 4) as usize) % live.len());
+            let freed = cluster.release(victim).map_err(|e| format!("step {step}: {e}"))?;
+            if hooks {
+                indexed.on_release(&cluster, freed);
+            }
+        }
+    }
+    // Terminal state: every profile's argmin must still agree.
+    for p in ALL_PROFILES {
+        let want = evaluate_cluster(flat.score_table(), cluster.gpus(), p);
+        let got = indexed.schedule(&cluster, p);
+        if got != want {
+            return Err(format!("terminal {p}: {got:?} vs {want:?} (hooks={hooks})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_indexed_equals_flat_with_hooks() {
+    forall_shrink_vec(
+        "mfi-idx-equivalence-hooked",
+        |rng| (0..rng.index(120)).map(|_| rng.next_u64()).collect(),
+        |ops| drive_and_compare(ops, 4, true),
+    );
+}
+
+#[test]
+fn prop_indexed_equals_flat_with_hooks_dropped() {
+    // Same property with the hooks never called: the scheduler must fall
+    // back to change-log catch-up inside `schedule` and stay identical.
+    forall_shrink_vec(
+        "mfi-idx-equivalence-hookless",
+        |rng| (0..rng.index(120)).map(|_| rng.next_u64()).collect(),
+        |ops| drive_and_compare(ops, 3, false),
+    );
+}
+
+#[test]
+fn kind_built_indexed_matches_reference_through_sim_driver() {
+    // `SchedulerKind::MfiIdx` (the flag-selectable construction) through
+    // the real simulation driver: identical aggregate results to MFI.
+    use migsched::sim::{Distribution, SimConfig, SimEngine};
+    let cfg = SimConfig::small(Distribution::Bimodal, 0xD1CE);
+    let engine = SimEngine::new(cfg.clone());
+    let mut flat = SchedulerKind::Mfi.build(&cfg.hardware);
+    let mut indexed = SchedulerKind::MfiIdx.build(&cfg.hardware);
+    let a = engine.run(&mut *flat);
+    let b = engine.run(&mut *indexed);
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.time_avg_frag, b.time_avg_frag);
+    assert_eq!(a.final_metrics, b.final_metrics);
+}
+
+#[test]
+fn stale_index_resyncs_instead_of_diverging() {
+    let hw = HardwareModel::a100_80gb();
+    let mut indexed = MfiIndexed::for_hardware(&hw);
+    let mut cluster = Cluster::new(hw.clone(), 4);
+
+    // Build once.
+    let first = indexed.schedule(&cluster, Profile::P2g20gb).unwrap();
+    cluster.allocate(WorkloadId(0), first).unwrap();
+    indexed.on_commit(&cluster, first);
+    assert_eq!(indexed.rebuilds(), 1);
+
+    // (a) Hooks dropped for a burst of mutations: the next schedule call
+    // detects the generation gap and replays the change log — no rebuild.
+    let mut id = 1u64;
+    for i in 0..10u64 {
+        let gpu = (i % 4) as usize;
+        let anchor = (i % 7) as u8;
+        if cluster.gpu(gpu).unwrap().fits_at(Profile::P1g10gb, anchor) {
+            let pl = Placement { gpu, profile: Profile::P1g10gb, index: anchor };
+            cluster.allocate(WorkloadId(id), pl).unwrap();
+            id += 1;
+        }
+    }
+    let replayed_before = indexed.replayed_events();
+    let got = indexed.schedule(&cluster, Profile::P3g40gb);
+    assert_eq!(got, evaluate_cluster(indexed.score_table(), cluster.gpus(), Profile::P3g40gb));
+    assert!(indexed.replayed_events() > replayed_before, "catch-up must use the change log");
+    assert_eq!(indexed.rebuilds(), 1, "no rebuild while the log bridges the gap");
+
+    // (b) A clear() discontinuity cannot be replayed: generation mismatch
+    // with an unbridgeable log must force a rebuild, not silent reuse.
+    cluster.clear();
+    cluster
+        .allocate(WorkloadId(id), Placement { gpu: 2, profile: Profile::P4g40gb, index: 0 })
+        .unwrap();
+    id += 1;
+    let got = indexed.schedule(&cluster, Profile::P7g80gb);
+    assert_eq!(got, evaluate_cluster(indexed.score_table(), cluster.gpus(), Profile::P7g80gb));
+    assert_eq!(indexed.rebuilds(), 2, "discontinuity must trigger a rebuild");
+
+    // (c) Falling further behind than the log capacity also rebuilds.
+    for _ in 0..=(CHANGE_LOG_CAPACITY / 2) {
+        cluster
+            .allocate(WorkloadId(id), Placement { gpu: 0, profile: Profile::P1g10gb, index: 0 })
+            .unwrap();
+        cluster.release(WorkloadId(id)).unwrap();
+        id += 1;
+    }
+    let got = indexed.schedule(&cluster, Profile::P1g10gb);
+    assert_eq!(got, evaluate_cluster(indexed.score_table(), cluster.gpus(), Profile::P1g10gb));
+    assert_eq!(indexed.rebuilds(), 3, "log overflow must trigger a rebuild");
+}
