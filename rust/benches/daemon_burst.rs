@@ -1,0 +1,139 @@
+//! Daemon burst throughput (experiment D1): end-to-end requests/sec of
+//! the serving daemon over live HTTP at shards ∈ {1, 4, 16} × workers ∈
+//! {1, 8}, with 8 concurrent client threads submitting across many
+//! tenants and releasing their backlog as they go — the ROADMAP's
+//! "profile the daemon's JSON/accept path at burst rates" follow-up.
+//!
+//! Single-shard numbers measure the old single-mutex daemon (shards = 1
+//! is response-identical to it); the multi-shard rows show what tenant
+//! routing buys once the per-request work no longer serializes on one
+//! lock. The run is recorded machine-readably in `BENCH_daemon.json` at
+//! the repository root (schema: `{format, bench, quick_mode, gpus,
+//! clients, submits_per_config, results: [{shards, workers, requests,
+//! wall_ms, reqs_per_sec}]}`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use migsched::sched::SchedulerKind;
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::bench::quick_mode;
+use migsched::util::json::Json;
+
+const GPUS: usize = 64;
+
+/// Run one configuration; returns (total HTTP requests, wall seconds).
+fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usize, f64) {
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: GPUS,
+        scheduler: SchedulerKind::MfiIdx,
+        workers,
+        shards,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = handle.addr().to_string();
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let next = Arc::clone(&next);
+            std::thread::spawn(move || -> usize {
+                let client = HttpClient::new(&addr);
+                let mut ops = 0usize;
+                let mut live: Vec<u64> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= submits {
+                        break;
+                    }
+                    let tenant = (c * 131 + i % 17) as u64;
+                    let r = client
+                        .post_json(
+                            "/v1/workloads",
+                            &Json::obj().with("profile", "1g.10gb").with("tenant", tenant),
+                        )
+                        .expect("submit");
+                    ops += 1;
+                    match r.status {
+                        201 => live.push(r.json().unwrap().req_u64("id").unwrap()),
+                        409 => {}
+                        other => panic!("unexpected status {other}: {}", r.body),
+                    }
+                    // Keep the fleet from saturating: drain the oldest of
+                    // our backlog so submits keep finding free anchors.
+                    if live.len() > 8 {
+                        let id = live.remove(0);
+                        client.delete(&format!("/v1/workloads/{id}")).expect("release");
+                        ops += 1;
+                    }
+                }
+                for id in live {
+                    if client.delete(&format!("/v1/workloads/{id}")).is_ok() {
+                        ops += 1;
+                    }
+                }
+                ops
+            })
+        })
+        .collect();
+    let total_ops: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+    (total_ops, wall)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let clients = 8usize;
+    let submits = if quick { 400 } else { 3000 };
+    println!("== daemon burst throughput ({clients} clients, {submits} submits/config) ==");
+    let mut results: Vec<Json> = Vec::new();
+    let mut rps_by_key: Vec<(usize, usize, f64)> = Vec::new();
+    for &shards in &[1usize, 4, 16] {
+        for &workers in &[1usize, 8] {
+            let (ops, wall) = burst(shards, workers, clients, submits);
+            let rps = ops as f64 / wall;
+            println!(
+                "  shards={shards:<2} workers={workers}: {rps:>9.0} req/s \
+                 ({ops} requests in {:.0} ms)",
+                wall * 1e3
+            );
+            rps_by_key.push((shards, workers, rps));
+            results.push(
+                Json::obj()
+                    .with("shards", shards)
+                    .with("workers", workers)
+                    .with("requests", ops as u64)
+                    .with("wall_ms", wall * 1e3)
+                    .with("reqs_per_sec", rps),
+            );
+        }
+    }
+    // Headline: sharding speedup at full worker pool.
+    let rps_of = |s: usize, w: usize| {
+        rps_by_key.iter().find(|&&(a, b, _)| a == s && b == w).map(|&(_, _, r)| r)
+    };
+    if let (Some(one), Some(sixteen)) = (rps_of(1, 8), rps_of(16, 8)) {
+        println!(
+            "\n16-shard daemon vs single mutex (8 workers): {:.2}x",
+            sixteen / one
+        );
+    }
+
+    let doc = Json::obj()
+        .with("format", "migsched-bench-daemon-v1")
+        .with("bench", "daemon_burst")
+        .with("quick_mode", quick)
+        .with("gpus", GPUS as u64)
+        .with("clients", clients as u64)
+        .with("submits_per_config", submits as u64)
+        .with("results", Json::Arr(results));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_daemon.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-- saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
+    }
+}

@@ -8,26 +8,49 @@ use crate::workload::WorkloadId;
 
 /// Serialize the cluster: hardware name, occupancy masks, allocations.
 pub fn to_json(cluster: &Cluster) -> Json {
-    let mut allocs: Vec<(WorkloadId, Placement)> = cluster.allocations().collect();
-    allocs.sort_by_key(|(id, _)| *id);
+    let mut allocs: Vec<(WorkloadId, usize, Profile, u8)> = cluster
+        .allocations()
+        .map(|(id, p)| (id, p.gpu, p.profile, p.index))
+        .collect();
+    allocs.sort_by_key(|&(id, ..)| id);
+    parts_to_json(
+        cluster.hardware().name(),
+        cluster.num_gpus(),
+        &cluster.occupancy_masks(),
+        &allocs,
+    )
+}
+
+/// The canonical snapshot wire format from raw parts — the single
+/// definition shared by [`to_json`] and the daemon's sharded
+/// `/v1/cluster` merge (which concatenates per-shard masks and rebases
+/// GPU ids to fleet-global before calling this). `allocs` entries are
+/// `(workload, global gpu, profile, index)` and must be pre-sorted by
+/// workload id.
+pub fn parts_to_json(
+    hardware: &str,
+    num_gpus: usize,
+    masks: &[u8],
+    allocs: &[(WorkloadId, usize, Profile, u8)],
+) -> Json {
     Json::obj()
-        .with("hardware", cluster.hardware().name())
-        .with("num_gpus", cluster.num_gpus())
+        .with("hardware", hardware)
+        .with("num_gpus", num_gpus)
         .with(
             "gpu_masks",
-            Json::Arr(cluster.occupancy_masks().iter().map(|&m| Json::Num(m as f64)).collect()),
+            Json::Arr(masks.iter().map(|&m| Json::Num(f64::from(m))).collect()),
         )
         .with(
             "allocations",
             Json::Arr(
                 allocs
                     .iter()
-                    .map(|(id, p)| {
+                    .map(|&(id, gpu, profile, index)| {
                         Json::obj()
                             .with("workload", id.0)
-                            .with("gpu", p.gpu)
-                            .with("profile", p.profile.canonical_name())
-                            .with("index", p.index as u64)
+                            .with("gpu", gpu)
+                            .with("profile", profile.canonical_name())
+                            .with("index", index as u64)
                     })
                     .collect(),
             ),

@@ -137,24 +137,37 @@ fn lifted_score_delta(
 }
 
 /// Apply a plan to a live cluster (release + allocate per move, in order).
-/// Fails atomically per move; on error the cluster retains all moves
-/// applied so far (callers treat plans as advisory).
+/// Each move is atomic: when it cannot complete — the released placement
+/// does not match the plan (stale plan), or the target allocate fails —
+/// the workload is put back where it was released from before the error
+/// returns, so a live allocation is never dropped. Earlier moves stay
+/// applied (callers treat plans as advisory).
 pub fn apply_plan(cluster: &mut Cluster, plan: &MigrationPlan) -> Result<usize, String> {
     for (i, mv) in plan.moves.iter().enumerate() {
         let freed = cluster
             .release(mv.workload)
             .map_err(|e| format!("move {i}: release failed: {e}"))?;
         if freed != mv.from {
+            restore(cluster, mv.workload, freed);
             return Err(format!(
                 "move {i}: plan is stale (expected {}, found {})",
                 mv.from, freed
             ));
         }
-        cluster
-            .allocate(mv.workload, mv.to)
-            .map_err(|e| format!("move {i}: allocate failed: {e}"))?;
+        if let Err(e) = cluster.allocate(mv.workload, mv.to) {
+            restore(cluster, mv.workload, freed);
+            return Err(format!("move {i}: allocate failed: {e}"));
+        }
     }
     Ok(plan.moves.len())
+}
+
+/// Undo a mid-move release: the slices were freed a moment ago under the
+/// caller's exclusive access, so re-placing them cannot fail.
+fn restore(cluster: &mut Cluster, workload: WorkloadId, placement: Placement) {
+    cluster
+        .allocate(workload, placement)
+        .expect("re-placing a just-released workload");
 }
 
 #[cfg(test)]
@@ -257,6 +270,39 @@ mod tests {
         // Mutate the cluster behind the plan's back.
         cluster.release(WorkloadId(0)).unwrap();
         alloc(&mut cluster, 0, 0, Profile::P1g10gb, 2);
-        assert!(apply_plan(&mut cluster, &plan).is_err());
+        let err = apply_plan(&mut cluster, &plan).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+        // Regression: the aborted move must not drop the live workload —
+        // it stays at the placement it actually occupied.
+        assert_eq!(
+            cluster.placement_of(WorkloadId(0)),
+            Some(Placement { gpu: 0, profile: Profile::P1g10gb, index: 2 })
+        );
+    }
+
+    #[test]
+    fn failed_apply_restores_the_moving_workload() {
+        // Regression: apply_plan used to release the workload and then
+        // error out of the failing allocate, silently dropping a live
+        // allocation from the cluster.
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        let plan = plan_defrag(&cluster, &table, 1);
+        assert_eq!(plan.moves.len(), 1);
+        let mv = plan.moves[0];
+        // Deliberately stale target: occupy it behind the plan's back
+        // (the source placement still matches, so the release succeeds
+        // and the subsequent allocate is what fails).
+        cluster.allocate(WorkloadId(99), mv.to).unwrap();
+        let err = apply_plan(&mut cluster, &plan).unwrap_err();
+        assert!(err.contains("allocate failed"), "{err}");
+        assert_eq!(
+            cluster.placement_of(mv.workload),
+            Some(mv.from),
+            "the moving workload must survive at its source placement"
+        );
+        assert_eq!(cluster.allocated_workloads(), 2);
+        // Accounting stayed intact: both workloads' slices are live.
+        assert_eq!(cluster.used_slices(), 2);
     }
 }

@@ -73,6 +73,7 @@ COMMANDS:
   figures       regenerate a paper figure: --fig 4|5|6 [sweep flags]
   serve         online serving daemon
                   --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
+                  --shards N (disjoint sub-clusters, default 1)   --workers N
   inspect       --hardware a100-80gb | --distributions | --candidates
   trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
   trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N]
@@ -257,7 +258,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         num_gpus: flag_usize(flags, "gpus", 100)?,
         scheduler: flag_scheduler(flags)?,
         workers: flag_usize(flags, "workers", 8)?,
+        shards: flag_usize(flags, "shards", 1)?,
     };
+    if config.shards == 0 || config.shards > config.num_gpus {
+        return Err(format!(
+            "--shards must be in 1..={} (got {})",
+            config.num_gpus, config.shards
+        ));
+    }
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".to_string());
     let daemon = Daemon::new(config);
     let handle = daemon.serve(&addr).map_err(|e| format!("binding {addr}: {e}"))?;

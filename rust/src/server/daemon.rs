@@ -1,18 +1,17 @@
-//! The serving daemon: cluster state + scheduler behind an HTTP listener.
+//! The serving daemon: sharded cluster state + schedulers behind an HTTP
+//! listener (see [`super::shard`] for the partitioning/routing model).
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api;
 use super::http::parse_request;
+use super::shard::ShardSet;
 use super::threadpool::ThreadPool;
-use crate::cluster::Cluster;
-use crate::frag::ScoreTable;
 use crate::mig::HardwareModel;
-use crate::sched::{Scheduler, SchedulerKind};
-use crate::workload::{TenantId, WorkloadId};
+use crate::sched::SchedulerKind;
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
@@ -22,6 +21,10 @@ pub struct DaemonConfig {
     pub scheduler: SchedulerKind,
     /// HTTP worker threads.
     pub workers: usize,
+    /// Disjoint sub-clusters, each behind its own lock (tenants are
+    /// consistent-hash routed). `1` (the default) is the single-mutex
+    /// daemon with byte-for-byte identical responses to earlier versions.
+    pub shards: usize,
 }
 
 impl Default for DaemonConfig {
@@ -31,83 +34,25 @@ impl Default for DaemonConfig {
             num_gpus: 100,
             scheduler: SchedulerKind::Mfi,
             workers: 8,
+            shards: 1,
         }
-    }
-}
-
-/// A lease attached to an allocated workload (logical-slot expiry).
-#[derive(Clone, Copy, Debug)]
-pub struct Lease {
-    pub tenant: TenantId,
-    /// Slot at which the lease expires (None = until explicit release).
-    pub expires_at: Option<u64>,
-}
-
-/// Shared daemon state (single mutex: decisions are microseconds).
-pub struct DaemonState {
-    pub cluster: Cluster,
-    pub scheduler: Box<dyn Scheduler + Send>,
-    pub scorer: ScoreTable,
-    pub leases: std::collections::HashMap<WorkloadId, Lease>,
-    pub next_id: u64,
-    pub clock_slot: u64,
-    pub accepted_total: u64,
-    pub arrived_total: u64,
-    pub released_total: u64,
-    pub expired_total: u64,
-}
-
-impl DaemonState {
-    /// Advance the logical slot clock, releasing expired leases.
-    /// Returns the ids released.
-    pub fn tick(&mut self, slots: u64) -> Vec<WorkloadId> {
-        self.clock_slot += slots;
-        let now = self.clock_slot;
-        let expired: Vec<WorkloadId> = self
-            .leases
-            .iter()
-            .filter(|(_, lease)| lease.expires_at.is_some_and(|t| t <= now))
-            .map(|(id, _)| *id)
-            .collect();
-        let mut released = expired;
-        released.sort();
-        for id in &released {
-            let freed =
-                self.cluster.release(*id).expect("lease registry consistent with cluster");
-            self.scheduler.on_release(&self.cluster, freed);
-            self.leases.remove(id);
-            self.expired_total += 1;
-        }
-        released
     }
 }
 
 /// The daemon object; create then [`Daemon::serve`].
 pub struct Daemon {
-    state: Arc<Mutex<DaemonState>>,
+    shards: Arc<ShardSet>,
     config: DaemonConfig,
 }
 
 impl Daemon {
     pub fn new(config: DaemonConfig) -> Self {
-        let state = DaemonState {
-            cluster: Cluster::new(config.hardware.clone(), config.num_gpus),
-            scheduler: config.scheduler.build(&config.hardware),
-            scorer: ScoreTable::for_hardware(&config.hardware),
-            leases: std::collections::HashMap::new(),
-            next_id: 0,
-            clock_slot: 0,
-            accepted_total: 0,
-            arrived_total: 0,
-            released_total: 0,
-            expired_total: 0,
-        };
-        Self { state: Arc::new(Mutex::new(state)), config }
+        Self { shards: Arc::new(ShardSet::new(&config)), config }
     }
 
-    /// Shared state handle (used by the API layer and tests).
-    pub fn state(&self) -> Arc<Mutex<DaemonState>> {
-        Arc::clone(&self.state)
+    /// Shared shard-set handle (used by the API layer and tests).
+    pub fn shards(&self) -> Arc<ShardSet> {
+        Arc::clone(&self.shards)
     }
 
     pub fn config(&self) -> &DaemonConfig {
@@ -119,7 +64,7 @@ impl Daemon {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(false)?;
-        let state = Arc::clone(&self.state);
+        let shards = Arc::clone(&self.shards);
         let workers = self.config.workers;
         let shutdown = Arc::new(AtomicBool::new(false));
         let shutdown_flag = Arc::clone(&shutdown);
@@ -128,15 +73,14 @@ impl Daemon {
             .name("migsched-accept".into())
             .spawn(move || {
                 let pool = ThreadPool::new(workers);
-                // Poll with a read timeout so shutdown is prompt.
                 for stream in listener.incoming() {
                     if shutdown_flag.load(Ordering::SeqCst) {
                         break;
                     }
                     match stream {
                         Ok(stream) => {
-                            let state = Arc::clone(&state);
-                            pool.execute(move || handle_connection(stream, state));
+                            let shards = Arc::clone(&shards);
+                            pool.execute(move || handle_connection(stream, shards));
                         }
                         Err(e) => {
                             crate::log_warn!("accept error: {e}");
@@ -146,20 +90,21 @@ impl Daemon {
             })?;
 
         crate::log_info!(
-            "serving on {local_addr} ({} GPUs, scheduler {})",
+            "serving on {local_addr} ({} GPUs over {} shard(s), scheduler {})",
             self.config.num_gpus,
+            self.config.shards,
             self.config.scheduler.name()
         );
         Ok(ServerHandle { addr: local_addr, shutdown, accept_thread: Some(accept_thread) })
     }
 }
 
-fn handle_connection(mut stream: TcpStream, state: Arc<Mutex<DaemonState>>) {
+fn handle_connection(mut stream: TcpStream, shards: Arc<ShardSet>) {
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
     let response = match parse_request(&mut stream) {
         Ok(request) => {
             crate::log_debug!("{} {}", request.method, request.path);
-            api::dispatch(&request, &state)
+            api::dispatch(&request, &shards)
         }
         Err(resp) => resp,
     };
@@ -167,6 +112,19 @@ fn handle_connection(mut stream: TcpStream, state: Arc<Mutex<DaemonState>>) {
         crate::log_debug!("write response: {e}");
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// The address to dial when waking the accept loop: `addr` itself, unless
+/// the daemon is bound to the unspecified address (`0.0.0.0` / `[::]`),
+/// which is not a connectable destination on every platform — then the
+/// matching loopback address reaches the same listener.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    let ip = match addr.ip() {
+        IpAddr::V4(ip) if ip.is_unspecified() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(ip) if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        ip => ip,
+    };
+    SocketAddr::new(ip, addr.port())
 }
 
 /// Handle to a running server; shuts down on `shutdown()` or drop.
@@ -188,8 +146,12 @@ impl ServerHandle {
 
     fn shutdown_inner(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept loop with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
+        // Unblock the accept loop with a dummy connection (via loopback
+        // when bound to 0.0.0.0/[::]; bounded so shutdown never hangs).
+        let _ = TcpStream::connect_timeout(
+            &wake_addr(self.addr),
+            std::time::Duration::from_secs(1),
+        );
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -208,6 +170,8 @@ impl Drop for ServerHandle {
 mod tests {
     use super::*;
     use crate::mig::Profile;
+    use crate::server::shard::{Lease, ShardState};
+    use crate::workload::{TenantId, WorkloadId};
 
     #[test]
     fn tick_releases_expired_leases() {
@@ -216,10 +180,10 @@ mod tests {
             workers: 1,
             ..DaemonConfig::default()
         });
-        let state = daemon.state();
-        let mut s = state.lock().unwrap();
+        let shards = daemon.shards();
+        let mut s = shards.shard(0).unwrap().state.lock().unwrap();
         // Manually admit two workloads, one with a lease of 3 slots.
-        let DaemonState { scheduler, cluster, .. } = &mut *s;
+        let ShardState { scheduler, cluster, .. } = &mut *s;
         let placement = scheduler.schedule(cluster, Profile::P2g20gb).unwrap();
         cluster.allocate(WorkloadId(0), placement).unwrap();
         let placement = scheduler.schedule(cluster, Profile::P1g10gb).unwrap();
@@ -235,6 +199,21 @@ mod tests {
         assert_eq!(s.expired_total, 1);
         // Permanent lease survives arbitrarily long.
         assert!(s.tick(1000).is_empty());
+    }
+
+    #[test]
+    fn wake_addr_resolves_unspecified_to_loopback() {
+        // Regression: shutdown used to dial the bind address verbatim,
+        // which hangs forever on some platforms when bound to 0.0.0.0.
+        let w = wake_addr("0.0.0.0:8080".parse().unwrap());
+        assert_eq!(w, "127.0.0.1:8080".parse().unwrap());
+        let w = wake_addr("[::]:9090".parse().unwrap());
+        assert_eq!(w, "[::1]:9090".parse().unwrap());
+        // Concrete addresses pass through untouched.
+        let w = wake_addr("192.0.2.7:80".parse().unwrap());
+        assert_eq!(w, "192.0.2.7:80".parse().unwrap());
+        let w = wake_addr("127.0.0.1:81".parse().unwrap());
+        assert_eq!(w, "127.0.0.1:81".parse().unwrap());
     }
 
     // Socket-level serve/shutdown coverage is in rust/tests/server_api.rs.

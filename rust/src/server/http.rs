@@ -1,6 +1,7 @@
 //! Minimal HTTP/1.1 request parsing and response writing over blocking
 //! TCP streams — just enough protocol for the JSON control-plane API
-//! (no chunked encoding, no keep-alive pipelining, 1 MiB body cap).
+//! (no chunked encoding, no keep-alive pipelining, 1 MiB body cap,
+//! 8 KiB request-/header-line cap).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -8,6 +9,11 @@ use std::net::TcpStream;
 
 /// Maximum accepted request body (1 MiB — control-plane payloads are tiny).
 pub const MAX_BODY: usize = 1 << 20;
+
+/// Maximum accepted request-line / header-line length. Lines are read
+/// incrementally, so a client streaming one endless line is cut off at
+/// this bound (413) instead of growing the buffer without limit.
+pub const MAX_LINE: usize = 8 << 10;
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -68,6 +74,7 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             413 => "Payload Too Large",
+            414 => "URI Too Long",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
@@ -94,10 +101,9 @@ impl Response {
 /// appropriate 4xx for malformed input.
 pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
     let mut reader = BufReader::new(stream);
-    let mut request_line = String::new();
-    reader
-        .read_line(&mut request_line)
-        .map_err(|e| Response::error(400, &format!("reading request line: {e}")))?;
+    // RFC 9110: an overlong request target is 414, overlong header
+    // fields are 413 (we cap per line rather than per field set).
+    let request_line = read_line_capped(&mut reader, "request line", 414)?;
     let mut parts = request_line.split_whitespace();
     let method = parts.next().ok_or_else(|| Response::error(400, "missing method"))?;
     let target = parts.next().ok_or_else(|| Response::error(400, "missing path"))?;
@@ -109,20 +115,22 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
     let (path, query) = split_target(target);
 
     let mut headers = HashMap::new();
+    let mut header_lines = 0usize;
     loop {
-        let mut line = String::new();
-        reader
-            .read_line(&mut line)
-            .map_err(|e| Response::error(400, &format!("reading headers: {e}")))?;
+        let line = read_line_capped(&mut reader, "headers", 413)?;
         let line = line.trim_end();
         if line.is_empty() {
             break;
         }
+        // Count LINES read, not parsed entries: colon-less or
+        // duplicate-name lines must also hit the bound, or a client
+        // streaming junk lines under the length cap pins a worker forever.
+        header_lines += 1;
+        if header_lines > 100 {
+            return Err(Response::error(400, "too many headers"));
+        }
         if let Some((name, value)) = line.split_once(':') {
             headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
-        }
-        if headers.len() > 100 {
-            return Err(Response::error(400, "too many headers"));
         }
     }
 
@@ -148,6 +156,30 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
         headers,
         body,
     })
+}
+
+/// Read one newline-terminated line, refusing to buffer more than
+/// [`MAX_LINE`] bytes of it: the `take` adapter bounds how much a single
+/// line can pull off the socket, and overlong lines become
+/// `too_long_status` (414 for the request line, 413 for header lines)
+/// without the unread remainder ever being allocated.
+fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    what: &str,
+    too_long_status: u16,
+) -> Result<String, Response> {
+    let mut line = String::new();
+    reader
+        .take(MAX_LINE as u64 + 1)
+        .read_line(&mut line)
+        .map_err(|e| Response::error(400, &format!("reading {what}: {e}")))?;
+    if line.len() > MAX_LINE {
+        return Err(Response::error(
+            too_long_status,
+            &format!("{what} too long (limit {MAX_LINE} bytes)"),
+        ));
+    }
+    Ok(line)
 }
 
 fn split_target(target: &str) -> (&str, HashMap<String, String>) {

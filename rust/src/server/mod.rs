@@ -4,30 +4,38 @@
 //! The offline crate set has no async runtime, so the daemon is built on
 //! `std::net` + a fixed worker [`threadpool`]: an accept loop hands each
 //! connection to a worker, which parses HTTP/1.1 ([`http`]), dispatches to
-//! the JSON API ([`api`]), and synchronously serves the response. The
-//! scheduler and cluster state sit behind a single mutex — scheduling
-//! decisions are microseconds (see `benches/sched_latency.rs`), so the
-//! lock is never the bottleneck at the request rates a control plane sees.
+//! the JSON API ([`api`]), and synchronously serves the response.
+//!
+//! The fleet is partitioned into disjoint **shards** ([`shard`]): each
+//! shard owns a sub-cluster, its own scheduler + incremental frag index
+//! and its own mutex, and tenants are consistent-hash routed to shards —
+//! so the data plane on different tenants never contends on one lock.
+//! `shards = 1` (the default) is the original single-mutex daemon,
+//! response-identical byte for byte. `benches/daemon_burst.rs` measures
+//! the requests/sec across shard × worker configurations.
 //!
 //! Endpoints (see [`api`] for schemas):
 //!
-//! | method & path            | purpose                                   |
-//! |--------------------------|-------------------------------------------|
-//! | `POST /v1/workloads`     | submit a workload (profile, tenant, lease)|
-//! | `DELETE /v1/workloads/N` | terminate + release                       |
-//! | `GET /v1/workloads/N`    | placement lookup                          |
-//! | `POST /v1/tick`          | advance the logical slot clock (leases)   |
-//! | `GET /v1/stats`          | paper metrics (acceptance, frag, util…)   |
-//! | `GET /v1/cluster`        | full occupancy snapshot                   |
-//! | `GET /healthz`           | liveness                                  |
+//! | method & path                 | purpose                                   |
+//! |-------------------------------|-------------------------------------------|
+//! | `POST /v1/workloads`          | submit a workload (profile, tenant, lease)|
+//! | `DELETE /v1/workloads/N`      | terminate + release                       |
+//! | `GET /v1/workloads/N`         | placement lookup                          |
+//! | `POST /v1/tick`               | advance the logical slot clock (leases)   |
+//! | `GET /v1/stats`               | paper metrics (acceptance, frag, util…)   |
+//! | `GET /v1/cluster`             | full occupancy snapshot                   |
+//! | `POST /v1/maintenance/defrag` | plan + apply migrations (per shard)       |
+//! | `GET /healthz`                | liveness                                  |
 
 pub mod api;
 pub mod client;
 pub mod daemon;
 pub mod http;
+pub mod shard;
 pub mod threadpool;
 
 pub use client::HttpClient;
 pub use daemon::{Daemon, DaemonConfig, ServerHandle};
 pub use http::{Request, Response};
+pub use shard::{Lease, Shard, ShardRouter, ShardSet, ShardState};
 pub use threadpool::ThreadPool;

@@ -1,0 +1,351 @@
+//! Daemon sharding: the GPU fleet is partitioned into disjoint
+//! sub-clusters ("shards"), each behind its **own** mutex, so
+//! submit/release/tick on different tenants never contend — the
+//! multi-tenant scale story the ROADMAP names, built on the per-GPU
+//! change feed from the incremental decision core.
+//!
+//! * **Routing** — tenants map to shards via a consistent-hash ring
+//!   ([`ShardRouter`]: 64 virtual nodes per shard, splitmix64), so
+//!   resizing the shard count remaps only ~1/S of the tenant space and a
+//!   tenant's workloads always land in one sub-cluster.
+//! * **Ids** — the wire-visible workload id encodes its shard
+//!   (`id ≡ shard (mod num_shards)`), so lookup/release route in O(1)
+//!   without any global registry or cross-shard lock.
+//! * **GPU numbering** — each shard owns the global GPU range
+//!   `gpu_offset .. gpu_offset + size`; responses always report global
+//!   ids, so `/v1/cluster` concatenated across shards reads like one
+//!   fleet.
+//!
+//! With `shards = 1` (the default) the daemon collapses to the previous
+//! single-mutex design and its responses are byte-for-byte unchanged.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::daemon::DaemonConfig;
+use crate::cluster::Cluster;
+use crate::frag::ScoreTable;
+use crate::sched::Scheduler;
+use crate::workload::{TenantId, WorkloadId};
+
+/// A lease attached to an allocated workload (logical-slot expiry).
+#[derive(Clone, Copy, Debug)]
+pub struct Lease {
+    pub tenant: TenantId,
+    /// Slot at which the lease expires (None = until explicit release).
+    pub expires_at: Option<u64>,
+}
+
+/// Per-shard serving state: one mutex' worth of cluster + scheduler +
+/// lease registry + counters. With `shards = 1` this is exactly the old
+/// whole-daemon state.
+pub struct ShardState {
+    pub cluster: Cluster,
+    pub scheduler: Box<dyn Scheduler + Send>,
+    pub scorer: ScoreTable,
+    pub leases: HashMap<WorkloadId, Lease>,
+    /// Local submission sequence; the wire-visible id is
+    /// `seq * num_shards + shard_index` (see [`ShardSet::workload_id`]).
+    pub next_seq: u64,
+    pub clock_slot: u64,
+    pub accepted_total: u64,
+    pub arrived_total: u64,
+    /// Explicit `DELETE /v1/workloads/{id}` releases only.
+    pub released_total: u64,
+    /// Lease expiries observed by `tick` only.
+    pub expired_total: u64,
+}
+
+impl ShardState {
+    /// Advance the logical slot clock, releasing expired leases.
+    /// Returns the ids released (ascending).
+    pub fn tick(&mut self, slots: u64) -> Vec<WorkloadId> {
+        self.clock_slot += slots;
+        let now = self.clock_slot;
+        let expired: Vec<WorkloadId> = self
+            .leases
+            .iter()
+            .filter(|(_, lease)| lease.expires_at.is_some_and(|t| t <= now))
+            .map(|(id, _)| *id)
+            .collect();
+        let mut released = expired;
+        released.sort();
+        for id in &released {
+            let freed =
+                self.cluster.release(*id).expect("lease registry consistent with cluster");
+            self.scheduler.on_release(&self.cluster, freed);
+            self.leases.remove(id);
+            self.expired_total += 1;
+        }
+        released
+    }
+}
+
+/// One shard: its state mutex plus the immutable partition geometry.
+pub struct Shard {
+    /// Position in [`ShardSet::shards`]; also `id mod num_shards` for
+    /// every workload this shard owns.
+    pub index: usize,
+    /// Global id of this shard's first GPU: the sub-cluster's local GPU
+    /// `g` is the fleet's GPU `gpu_offset + g`.
+    pub gpu_offset: usize,
+    pub state: Mutex<ShardState>,
+}
+
+/// The daemon's shard collection: disjoint sub-clusters + tenant router.
+/// Handlers lock exactly one shard for data-plane requests; scatter-gather
+/// endpoints visit shards in index order (one lock at a time, so the lock
+/// order is globally consistent and deadlock-free).
+pub struct ShardSet {
+    shards: Vec<Shard>,
+    router: ShardRouter,
+    total_gpus: usize,
+    scheduler_name: &'static str,
+}
+
+impl ShardSet {
+    /// Partition `config.num_gpus` GPUs into `config.shards` sub-clusters
+    /// (sizes differing by at most one, larger shards first).
+    pub fn new(config: &DaemonConfig) -> Self {
+        assert!(config.shards >= 1, "daemon needs at least one shard");
+        assert!(
+            config.shards <= config.num_gpus,
+            "more shards ({}) than GPUs ({})",
+            config.shards,
+            config.num_gpus
+        );
+        let base = config.num_gpus / config.shards;
+        let rem = config.num_gpus % config.shards;
+        let mut shards = Vec::with_capacity(config.shards);
+        let mut offset = 0usize;
+        for index in 0..config.shards {
+            let size = base + usize::from(index < rem);
+            let state = ShardState {
+                cluster: Cluster::new(config.hardware.clone(), size),
+                scheduler: config.scheduler.build(&config.hardware),
+                scorer: ScoreTable::for_hardware(&config.hardware),
+                leases: HashMap::new(),
+                next_seq: 0,
+                clock_slot: 0,
+                accepted_total: 0,
+                arrived_total: 0,
+                released_total: 0,
+                expired_total: 0,
+            };
+            shards.push(Shard { index, gpu_offset: offset, state: Mutex::new(state) });
+            offset += size;
+        }
+        Self {
+            shards,
+            router: ShardRouter::new(config.shards),
+            total_gpus: config.num_gpus,
+            scheduler_name: config.scheduler.name(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fleet size across all shards.
+    pub fn total_gpus(&self) -> usize {
+        self.total_gpus
+    }
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler_name
+    }
+
+    /// All shards in index order — the stable merge order used by every
+    /// scatter-gather endpoint.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn shard(&self, index: usize) -> Option<&Shard> {
+        self.shards.get(index)
+    }
+
+    /// The shard serving `tenant` (consistent-hash routing).
+    pub fn route(&self, tenant: TenantId) -> &Shard {
+        &self.shards[self.router.route(tenant)]
+    }
+
+    /// The shard owning workload `id` (ids encode their shard).
+    pub fn shard_of(&self, id: WorkloadId) -> &Shard {
+        &self.shards[(id.0 % self.shards.len() as u64) as usize]
+    }
+
+    /// Wire-visible workload id for local sequence `seq` on `shard`.
+    pub fn workload_id(&self, shard: &Shard, seq: u64) -> WorkloadId {
+        WorkloadId(seq * self.shards.len() as u64 + shard.index as u64)
+    }
+}
+
+/// Virtual nodes per shard on the consistent-hash ring. 64 keeps the
+/// worst-case tenant imbalance small without making ring construction or
+/// the binary-search lookup noticeable.
+const VNODES: usize = 64;
+
+/// SplitMix64 finalizer — a cheap, well-mixed, deterministic 64-bit hash
+/// (and a bijection, so distinct vnode seeds never collide on the ring).
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Consistent-hash ring mapping `TenantId → shard index`. Deterministic
+/// across processes (no per-process seeding), so a tenant always lands on
+/// the same shard for a given shard count.
+pub struct ShardRouter {
+    /// `(ring point, shard index)`, sorted by point.
+    ring: Vec<(u64, usize)>,
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0, "router needs at least one shard");
+        let mut ring: Vec<(u64, usize)> = (0..shards)
+            .flat_map(|s| {
+                (0..VNODES).map(move |v| (splitmix64(((s as u64) << 16) | v as u64), s))
+            })
+            .collect();
+        ring.sort_unstable();
+        Self { ring }
+    }
+
+    /// Shard index for `tenant`: the first ring point at or after the
+    /// tenant's hash, wrapping past the top of the ring.
+    pub fn route(&self, tenant: TenantId) -> usize {
+        let h = splitmix64(0x7E4A_4E7E ^ u64::from(tenant.0));
+        let i = self.ring.partition_point(|&(point, _)| point < h);
+        self.ring[i % self.ring.len()].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+
+    fn config(num_gpus: usize, shards: usize) -> DaemonConfig {
+        DaemonConfig { num_gpus, shards, workers: 1, ..DaemonConfig::default() }
+    }
+
+    #[test]
+    fn single_shard_router_routes_everything_to_zero() {
+        let router = ShardRouter::new(1);
+        for t in 0..100 {
+            assert_eq!(router.route(TenantId(t)), 0);
+        }
+    }
+
+    #[test]
+    fn router_is_deterministic_and_covers_all_shards() {
+        let a = ShardRouter::new(8);
+        let b = ShardRouter::new(8);
+        let mut hit = vec![false; 8];
+        for t in 0..10_000 {
+            let s = a.route(TenantId(t));
+            assert_eq!(s, b.route(TenantId(t)), "tenant {t}");
+            assert!(s < 8);
+            hit[s] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "10k tenants should touch all 8 shards: {hit:?}");
+    }
+
+    #[test]
+    fn router_balance_is_reasonable() {
+        // Consistent hashing is not perfectly uniform, but 64 vnodes keep
+        // every shard within a loose factor of its fair share.
+        let router = ShardRouter::new(4);
+        let mut counts = [0usize; 4];
+        for t in 0..40_000 {
+            counts[router.route(TenantId(t))] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (2_000..=25_000).contains(&c),
+                "shard {s} got {c} of 40000 tenants: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn resharding_moves_a_minority_of_tenants() {
+        // The consistent-ring property: going 4 → 5 shards remaps roughly
+        // 1/5 of the tenant space, not all of it (hash-mod would remap ~4/5).
+        let four = ShardRouter::new(4);
+        let five = ShardRouter::new(5);
+        let n = 20_000u32;
+        let moved = (0..n)
+            .filter(|&t| four.route(TenantId(t)) != five.route(TenantId(t)))
+            .count();
+        assert!(
+            moved < (n as usize) / 2,
+            "only a minority may move on reshard, moved {moved}/{n}"
+        );
+    }
+
+    #[test]
+    fn partition_is_disjoint_and_exhaustive() {
+        let set = ShardSet::new(&config(10, 3));
+        // 10 GPUs over 3 shards: sizes 4, 3, 3 at offsets 0, 4, 7.
+        let sizes: Vec<usize> = set
+            .shards()
+            .iter()
+            .map(|s| s.state.lock().unwrap().cluster.num_gpus())
+            .collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        let offsets: Vec<usize> = set.shards().iter().map(|s| s.gpu_offset).collect();
+        assert_eq!(offsets, vec![0, 4, 7]);
+        assert_eq!(set.total_gpus(), 10);
+    }
+
+    #[test]
+    fn workload_ids_encode_their_shard() {
+        let set = ShardSet::new(&config(8, 4));
+        for shard in set.shards() {
+            for seq in 0..5 {
+                let id = set.workload_id(shard, seq);
+                assert_eq!(set.shard_of(id).index, shard.index);
+                assert_eq!(id.0, seq * 4 + shard.index as u64);
+            }
+        }
+        // shards = 1 reproduces the legacy dense id sequence 0, 1, 2, …
+        let set = ShardSet::new(&config(2, 1));
+        let shard = set.shard(0).unwrap();
+        for seq in 0..5 {
+            assert_eq!(set.workload_id(shard, seq).0, seq);
+        }
+    }
+
+    #[test]
+    fn shard_tick_releases_expired_leases() {
+        let set = ShardSet::new(&config(2, 1));
+        let shard = set.shard(0).unwrap();
+        let mut s = shard.state.lock().unwrap();
+        let ShardState { scheduler, cluster, .. } = &mut *s;
+        let placement = scheduler.schedule(cluster, Profile::P2g20gb).unwrap();
+        cluster.allocate(WorkloadId(0), placement).unwrap();
+        s.leases
+            .insert(WorkloadId(0), Lease { tenant: TenantId(0), expires_at: Some(3) });
+        assert!(s.tick(2).is_empty(), "nothing expires at slot 2");
+        assert_eq!(s.tick(1), vec![WorkloadId(0)]);
+        assert_eq!(s.expired_total, 1);
+        assert_eq!(s.cluster.allocated_workloads(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "more shards")]
+    fn rejects_more_shards_than_gpus() {
+        let _ = ShardSet::new(&config(2, 3));
+    }
+
+    #[test]
+    fn default_config_is_single_shard() {
+        assert_eq!(DaemonConfig::default().shards, 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Concurrency soak: client threads hammer submit/release/tick against a
+//! live multi-shard daemon over real sockets, then the counters must
+//! conserve exactly and the fleet must drain back to blank.
+//!
+//! Counter semantics under test (see README "Sharded serving daemon"):
+//!   arrived_total   = accepted_total + rejections (409s)
+//!   allocated       = accepted_total − released_total − expired_total
+//!   released_total  counts explicit DELETEs only
+//!   expired_total   counts lease expiries via /v1/tick only
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::json::Json;
+
+#[test]
+fn multi_shard_soak_conserves_counters_and_drains() {
+    let n_threads: usize = 6;
+    let per_thread: usize = 40;
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 12,
+        workers: 8,
+        shards: 4,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    let accepted = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+
+    let threads: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let addr = addr.clone();
+            let accepted = Arc::clone(&accepted);
+            let rejected = Arc::clone(&rejected);
+            std::thread::spawn(move || {
+                let client = HttpClient::new(&addr);
+                let profiles = ["1g.10gb", "2g.20gb", "3g.40gb", "1g.20gb"];
+                let mut live: Vec<u64> = Vec::new();
+                for i in 0..per_thread {
+                    let profile = profiles[(t + i) % profiles.len()];
+                    let tenant = (t * 31 + i % 5) as u64;
+                    let mut body =
+                        Json::obj().with("profile", profile).with("tenant", tenant);
+                    if i % 3 == 0 {
+                        body = body.with("duration_slots", 2 + (i % 4) as u64);
+                    }
+                    let r = client.post_json("/v1/workloads", &body).expect("submit");
+                    match r.status {
+                        201 => {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                            live.push(r.json().unwrap().req_u64("id").unwrap());
+                        }
+                        409 => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("unexpected submit status {other}: {}", r.body),
+                    }
+                    // Churn: release one of ours now and then. It may have
+                    // expired under a concurrent tick — then 404 is the
+                    // correct answer and expired_total took the count.
+                    if i % 4 == 3 {
+                        if let Some(id) = live.pop() {
+                            let r = client
+                                .delete(&format!("/v1/workloads/{id}"))
+                                .expect("release");
+                            assert!(
+                                r.status == 200 || r.status == 404,
+                                "unexpected delete status {}: {}",
+                                r.status,
+                                r.body
+                            );
+                        }
+                    }
+                    if i % 16 == 7 {
+                        let r = client
+                            .post_json("/v1/tick", &Json::obj().with("slots", 1u64))
+                            .expect("tick");
+                        assert_eq!(r.status, 200);
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let client = HttpClient::new(&addr);
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    let arrived = stats.req_u64("arrived_total").unwrap();
+    let acc = stats.req_u64("accepted_total").unwrap();
+    let rel = stats.req_u64("released_total").unwrap();
+    let exp = stats.req_u64("expired_total").unwrap();
+    let allocated = stats.req_u64("allocated_workloads").unwrap();
+    assert_eq!(stats.req_u64("shards").unwrap(), 4);
+    assert_eq!(arrived, (n_threads * per_thread) as u64, "every submit was counted");
+    assert_eq!(acc, accepted.load(Ordering::Relaxed), "server/client accepted agree");
+    assert_eq!(
+        arrived,
+        acc + rejected.load(Ordering::Relaxed),
+        "arrived = accepted + rejected"
+    );
+    assert_eq!(allocated, acc - rel - exp, "allocated = accepted - released - expired");
+
+    // Full drain: everything the fleet still hosts releases cleanly.
+    let snap = client.get("/v1/cluster").unwrap().json().unwrap();
+    let allocs = snap.get("allocations").unwrap().as_arr().unwrap();
+    assert_eq!(allocs.len() as u64, allocated, "snapshot agrees with stats");
+    for a in allocs {
+        let id = a.req_u64("workload").unwrap();
+        let r = client.delete(&format!("/v1/workloads/{id}")).unwrap();
+        assert_eq!(r.status, 200, "draining {id}: {}", r.body);
+    }
+
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("allocated_workloads").unwrap(), 0);
+    assert_eq!(stats.get("utilization").unwrap().as_f64(), Some(0.0));
+    assert_eq!(
+        stats.req_u64("accepted_total").unwrap(),
+        stats.req_u64("released_total").unwrap() + stats.req_u64("expired_total").unwrap(),
+        "after the drain every acceptance was released or expired"
+    );
+    // Every GPU is blank again.
+    let snap = client.get("/v1/cluster").unwrap().json().unwrap();
+    for mask in snap.get("gpu_masks").unwrap().as_arr().unwrap() {
+        assert_eq!(mask.as_u64(), Some(0), "drained fleet has empty occupancy");
+    }
+    handle.shutdown();
+}

@@ -2,6 +2,8 @@
 //! port, covering the full request path (accept → parse → schedule →
 //! respond) including concurrent submissions.
 
+use std::io::{Read, Write};
+
 use migsched::server::{Daemon, DaemonConfig, HttpClient};
 use migsched::util::json::Json;
 
@@ -15,6 +17,27 @@ fn start_daemon(num_gpus: usize) -> (migsched::server::ServerHandle, HttpClient)
     let client = HttpClient::new(&handle.addr().to_string());
     (handle, client)
 }
+
+/// Write raw bytes to the daemon, half-close, and return whatever it
+/// sends back — for protocol-level tests below the `HttpClient`
+/// abstraction. The write side is shut down so the server sees EOF on
+/// unterminated requests (and has consumed every byte before it closes,
+/// keeping the response safe from a reset-with-unread-data).
+fn raw_request(addr: &str, bytes: &[u8]) -> String {
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    stream.write_all(bytes).expect("write request");
+    stream.flush().unwrap();
+    stream.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// 8 KiB — mirror of `migsched::server::http::MAX_LINE`.
+const MAX_LINE: usize = migsched::server::http::MAX_LINE;
 
 #[test]
 fn health_and_stats() {
@@ -149,5 +172,205 @@ fn hardware_endpoint_reports_table_i() {
     let p7 = &profiles[0];
     assert_eq!(p7.req_str("name").unwrap(), "7g.80gb");
     assert_eq!(p7.req_u64("slices").unwrap(), 8);
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_request_line_is_rejected_with_414() {
+    // Regression: the request line used to be read without any bound, so
+    // one endless line could allocate without limit — and this capped
+    // request (no newline, one byte past the limit) was buffered whole
+    // and answered 404 instead of 414 URI Too Long.
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    // "GET /aaaa…" of exactly MAX_LINE + 1 bytes, never newline-terminated.
+    let request = format!("GET /{}", "a".repeat(MAX_LINE + 1 - 5));
+    let reply = raw_request(&addr, request.as_bytes());
+    assert!(
+        reply.starts_with("HTTP/1.1 414 URI Too Long"),
+        "want 414, got: {}",
+        &reply[..reply.len().min(120)]
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_header_line_is_rejected_with_413() {
+    // Pre-fix the whole junk header was buffered and answered 200.
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    let head = "GET /healthz HTTP/1.1\r\n";
+    // One header line of exactly MAX_LINE + 1 bytes, never terminated.
+    let junk = format!("x-junk: {}", "b".repeat(MAX_LINE + 1 - 8));
+    let reply = raw_request(&addr, format!("{head}{junk}").as_bytes());
+    assert!(
+        reply.starts_with("HTTP/1.1 413"),
+        "want 413, got: {}",
+        &reply[..reply.len().min(120)]
+    );
+    // Lines within the cap still parse fine.
+    let ok = raw_request(
+        &addr,
+        format!("GET /healthz HTTP/1.1\r\nx-pad: {}\r\n\r\n", "c".repeat(1024)).as_bytes(),
+    );
+    assert!(ok.starts_with("HTTP/1.1 200"), "{}", &ok[..ok.len().min(120)]);
+    handle.shutdown();
+}
+
+#[test]
+fn header_line_flood_is_rejected_with_400() {
+    // Regression: the 100-header cap used to count parsed entries, so a
+    // stream of colon-less (or duplicate-name) lines under the length cap
+    // looped forever and pinned a worker. Now every header LINE counts —
+    // the 101st junk line below trips the cap (pre-fix: parsed 0 headers
+    // and kept reading; with a terminated request it answered 200).
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    // Exactly 101 junk lines and no terminating blank line: the server
+    // rejects on the 101st with every sent byte consumed.
+    let flood = format!("GET /healthz HTTP/1.1\r\n{}", "junk-no-colon\r\n".repeat(101));
+    let reply = raw_request(&addr, flood.as_bytes());
+    assert!(
+        reply.starts_with("HTTP/1.1 400"),
+        "want 400, got: {}",
+        &reply[..reply.len().min(120)]
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_completes_when_bound_to_unspecified_address() {
+    // Regression: shutdown wakes the accept loop with a dummy connect to
+    // the bind address — dialing 0.0.0.0 hangs forever on some platforms,
+    // so the wake-up must go through loopback.
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 1,
+        workers: 1,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("0.0.0.0:0").expect("bind 0.0.0.0");
+    let port = handle.addr().port();
+    let client = HttpClient::new(&format!("127.0.0.1:{port}"));
+    assert_eq!(client.get("/healthz").unwrap().status, 200);
+
+    let shutdown = std::thread::spawn(move || handle.shutdown());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while !shutdown.is_finished() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "shutdown hung while bound to 0.0.0.0"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    shutdown.join().unwrap();
+}
+
+#[test]
+fn sharded_daemon_serves_disjoint_subclusters() {
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 8,
+        workers: 4,
+        shards: 4,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let client = HttpClient::new(&handle.addr().to_string());
+    // 8 GPUs over 4 shards → 2 GPUs per shard; the reported (global) gpu
+    // id reveals the shard. A tenant must stay on one shard, and the id
+    // must encode that shard (id mod 4).
+    let mut shard_of_tenant = std::collections::HashMap::new();
+    let mut ids = Vec::new();
+    for tenant in 0..7u64 {
+        for _ in 0..2 {
+            let r = client
+                .post_json(
+                    "/v1/workloads",
+                    &Json::obj().with("profile", "1g.10gb").with("tenant", tenant),
+                )
+                .unwrap();
+            assert_eq!(r.status, 201, "{}", r.body);
+            let j = r.json().unwrap();
+            let gpu = j.req_u64("gpu").unwrap() as usize;
+            let id = j.req_u64("id").unwrap();
+            let shard = gpu / 2;
+            assert_eq!(id as usize % 4, shard, "ids encode their shard");
+            if let Some(prev) = shard_of_tenant.insert(tenant, shard) {
+                assert_eq!(prev, shard, "tenant {tenant} hopped shards");
+            }
+            ids.push(id);
+        }
+    }
+    // Fleet-wide views merge all shards in a stable order.
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("num_gpus").unwrap(), 8);
+    assert_eq!(stats.req_u64("shards").unwrap(), 4);
+    assert_eq!(stats.req_u64("accepted_total").unwrap(), 14);
+    let snap = client.get("/v1/cluster").unwrap().json().unwrap();
+    assert_eq!(snap.get("gpu_masks").unwrap().as_arr().unwrap().len(), 8);
+    let allocs = snap.get("allocations").unwrap().as_arr().unwrap();
+    assert_eq!(allocs.len(), 14);
+    // Stable merge order: allocations sorted by workload id.
+    let listed: Vec<u64> = allocs.iter().map(|a| a.req_u64("workload").unwrap()).collect();
+    let mut sorted = listed.clone();
+    sorted.sort_unstable();
+    assert_eq!(listed, sorted, "merged allocations must be id-sorted");
+    // Cross-shard lookup + release by id.
+    for id in ids {
+        assert_eq!(client.get(&format!("/v1/workloads/{id}")).unwrap().status, 200);
+        assert_eq!(client.delete(&format!("/v1/workloads/{id}")).unwrap().status, 200);
+    }
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.req_u64("allocated_workloads").unwrap(), 0);
+    handle.shutdown();
+}
+
+#[test]
+fn defrag_endpoint_repairs_fragmentation_and_rehosts_rejected_profile() {
+    // Build a fragmented fleet through the serving path: fill all 1g
+    // anchors on 3 GPUs, then terminate everything except the workload at
+    // index 4 on each GPU. Every GPU then hosts one stranded 1g slice, so
+    // a 7g.80gb is rejected — until the defrag endpoint consolidates.
+    let (handle, client) = start_daemon(3);
+    let mut keep = Vec::new();
+    let mut drop = Vec::new();
+    for _ in 0..21 {
+        let r = client
+            .post_json("/v1/workloads", &Json::obj().with("profile", "1g.10gb"))
+            .unwrap();
+        assert_eq!(r.status, 201, "{}", r.body);
+        let j = r.json().unwrap();
+        if j.req_u64("index").unwrap() == 4 {
+            keep.push(j.req_u64("id").unwrap());
+        } else {
+            drop.push(j.req_u64("id").unwrap());
+        }
+    }
+    assert_eq!(keep.len(), 3, "one index-4 anchor per GPU");
+    for id in drop {
+        assert_eq!(client.delete(&format!("/v1/workloads/{id}")).unwrap().status, 200);
+    }
+    // Fragmented: the full-GPU profile has nowhere to go.
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "7g.80gb"))
+        .unwrap();
+    assert_eq!(r.status, 409, "fragmented fleet must reject 7g.80gb");
+
+    // Maintenance: plan + apply migrations, report ΔF < 0.
+    let r = client.post_json("/v1/maintenance/defrag", &Json::obj()).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let j = r.json().unwrap();
+    assert!(j.req_u64("migrations").unwrap() > 0, "{}", r.body);
+    let delta = j.get("delta_f").unwrap().as_f64().unwrap();
+    assert!(delta < 0.0, "defrag must lower total F, got {delta}");
+
+    // The previously rejected profile now fits.
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "7g.80gb"))
+        .unwrap();
+    assert_eq!(r.status, 201, "defragged fleet re-hosts 7g.80gb: {}", r.body);
+    // The three survivors are still alive (migrated, not dropped).
+    for id in keep {
+        assert_eq!(client.get(&format!("/v1/workloads/{id}")).unwrap().status, 200);
+    }
     handle.shutdown();
 }
