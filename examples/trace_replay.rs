@@ -1,71 +1,59 @@
-//! Trace workflow demo: record a synthetic multi-tenant trace, replay it
-//! through every scheduling policy, and print a side-by-side comparison —
-//! the workflow an operator would use to evaluate a policy change against
-//! production history before rolling it out.
+//! Real-trace workflow demo: ingest the bundled Alibaba- and Philly-style
+//! sample job logs, inspect their shape, and replay them open-loop through
+//! every scheduling policy — the workflow an operator would use to size a
+//! MIG fleet against production history before committing to a policy.
 //!
-//! Run: `cargo run --release --example trace_replay -- [gpus] [seed]`
+//! Run: `cargo run --release --example trace_replay -- [gpus]`
+
+use std::path::Path;
 
 use migsched::prelude::*;
-use migsched::sim::{SimConfig, SimEngine};
-use migsched::workload::Trace;
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::workload::ingest::{ingest_path, IngestConfig, TraceFormat};
 
 fn main() {
-    let gpus: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(50);
-    let seed: u64 = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(2025);
+    let gpus: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let traces_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/traces");
     let hw = HardwareModel::a100_80gb();
-    let capacity = (gpus * hw.num_slices()) as u64;
 
-    // 1. Record: synthesize a skew-small trace (worst case for packing).
-    let gen = WorkloadGenerator::new(Distribution::SkewSmall).with_tenants(12);
-    let generated = gen.generate(capacity, &mut Rng::new(seed));
-    let trace = Trace::from_workloads(
-        &format!("skew-small demo (gpus={gpus} seed={seed})"),
-        capacity,
-        &generated.workloads,
-    );
-    let path = std::env::temp_dir().join("migsched-demo-trace.jsonl");
-    trace.save(&path).expect("save trace");
-    println!(
-        "recorded {} arrivals (horizon T={}) to {}\n",
-        generated.workloads.len(),
-        generated.horizon,
-        path.display()
-    );
+    for (file, format) in [
+        ("sample_alibaba.csv", TraceFormat::Alibaba),
+        ("sample_philly.csv", TraceFormat::Philly),
+    ] {
+        // 1. Ingest: raw CSV → canonical trace + per-file report.
+        let config = IngestConfig::new(format).with_gpus(gpus);
+        let (trace, report) =
+            ingest_path(&traces_dir.join(file), &config).expect("ingest bundled sample");
+        println!("{}", report.render());
 
-    // 2. Replay the SAME trace through every policy.
-    let loaded = Trace::load(&path).expect("load trace");
-    let config = SimConfig {
-        hardware: hw.clone(),
-        num_gpus: gpus,
-        distribution: Distribution::SkewSmall,
-        checkpoints: vec![0.5, 0.85, 1.0],
-        seed,
-        defrag_every: None,
-    };
-    let engine = SimEngine::new(config);
+        // 2. Stats: what does this workload look like on the slot axis?
+        println!("{}", trace.stats().render());
 
-    let mut table = migsched::util::table::Table::new(&[
-        "scheme",
-        "accepted",
-        "acceptance %",
-        "util@85% %",
-        "GPUs@85%",
-        "avg frag",
-    ]);
-    for kind in SchedulerKind::all() {
-        let mut sched = kind.build(&hw);
-        let result = engine.replay_trace(&mut *sched, &loaded);
-        let at85 = result.at_demand(0.85).expect("85% checkpoint");
-        table.row(&[
-            kind.name().to_string(),
-            format!("{}", result.accepted),
-            format!("{:.2}", result.acceptance_rate() * 100.0),
-            format!("{:.1}", at85.metrics.utilization * 100.0),
-            format!("{}", at85.metrics.active_gpus),
-            format!("{:.2}", result.time_avg_frag),
+        // 3. Replay: identical open-loop arrivals through every policy.
+        let rcfg = ReplayConfig { hardware: hw.clone(), ..ReplayConfig::new(gpus) };
+        let mut table = migsched::util::table::Table::new(&[
+            "scheme",
+            "accepted",
+            "rejected",
+            "acceptance %",
+            "peak GPUs",
+            "avg frag",
         ]);
+        for kind in SchedulerKind::paper_set() {
+            let mut sched = kind.build(&hw);
+            let r = replay::run(&trace, &mut *sched, &rcfg);
+            assert!(r.conserved());
+            table.row(&[
+                kind.name().to_string(),
+                r.accepted.to_string(),
+                r.rejected.to_string(),
+                format!("{:.2}", r.acceptance_rate() * 100.0),
+                r.peak_active_gpus.to_string(),
+                format!("{:.2}", r.time_avg_frag),
+            ]);
+        }
+        println!("replay on M={gpus} GPUs:");
+        println!("{}", table.render());
     }
-    println!("{}", table.render());
     println!("(identical arrivals for every scheme — differences are pure policy)");
-    std::fs::remove_file(&path).ok();
 }

@@ -1,0 +1,119 @@
+//! Trace-replay throughput (experiment T1): end-to-end scheduler
+//! performance on a real-shaped workload — ingest the bundled ~2k-row
+//! Alibaba-style trace (`examples/traces/bench_alibaba_2k.csv`) and
+//! replay it open-loop through each scheduler, recording events/sec and
+//! acceptance.
+//!
+//! Unlike the synthetic benches this measures the full production path
+//! (raw CSV → canonical trace → replay with hooks), so it catches
+//! regressions in ingest cost as well as decision cost. The run is
+//! recorded machine-readably in `BENCH_trace.json` at the repository
+//! root (schema: `{format, bench, quick_mode, trace: {rows, arrivals,
+//! span_slots}, gpus, results: [{scheme, arrived, accepted,
+//! acceptance_rate, median_ms, events_per_sec}]}`).
+
+use std::path::Path;
+
+use migsched::sched::SchedulerKind;
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::util::bench::{fmt_ns, quick_mode, BenchRunner};
+use migsched::util::json::Json;
+use migsched::workload::ingest::{ingest_path, IngestConfig, TraceFormat};
+
+const GPUS: usize = 16;
+
+fn main() {
+    let quick = quick_mode();
+    let csv = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/bench_alibaba_2k.csv");
+
+    // Ingest once up front (also timed — it is part of the pipeline).
+    let t0 = std::time::Instant::now();
+    let config = IngestConfig::new(TraceFormat::Alibaba).with_gpus(GPUS);
+    let (trace, report) = ingest_path(&csv, &config).expect("ingest bundled bench trace");
+    let ingest_ns = t0.elapsed().as_nanos() as f64;
+    let arrivals = trace.arrivals().len() as u64;
+    let stats = trace.stats();
+    println!(
+        "== trace replay bench: {} rows → {} workloads ({} span slots), ingest {} ==",
+        report.rows_total,
+        arrivals,
+        stats.span_slots,
+        fmt_ns(ingest_ns)
+    );
+
+    let hw = migsched::mig::HardwareModel::a100_80gb();
+    let rcfg = ReplayConfig::new(GPUS);
+    let schemes = [
+        SchedulerKind::Mfi,
+        SchedulerKind::MfiIdx,
+        SchedulerKind::Ff,
+        SchedulerKind::BfBi,
+        SchedulerKind::WfBi,
+    ];
+
+    let mut runner = BenchRunner::new("trace_replay");
+    let mut results: Vec<Json> = Vec::new();
+    let mut acceptance_of = Vec::new();
+    for kind in schemes {
+        let mut sched = kind.build(&hw);
+        let mut last = None;
+        let reps = if quick { 2 } else { 7 };
+        let r = runner
+            .bench_once(&format!("replay/{kind}/M{GPUS}"), reps, || {
+                last = Some(replay::run(&trace, &mut *sched, &rcfg));
+            })
+            .clone();
+        let outcome = last.expect("at least one rep ran");
+        assert!(outcome.conserved(), "{kind}: counters must conserve");
+        let events_per_sec = arrivals as f64 / (r.median_ns * 1e-9);
+        println!(
+            "   {kind}: acceptance {:.4} ({} / {}), {:.0} events/s",
+            outcome.acceptance_rate(),
+            outcome.accepted,
+            outcome.arrived,
+            events_per_sec
+        );
+        acceptance_of.push((kind, outcome.accepted));
+        results.push(
+            Json::obj()
+                .with("scheme", kind.name())
+                .with("arrived", outcome.arrived)
+                .with("accepted", outcome.accepted)
+                .with("acceptance_rate", outcome.acceptance_rate())
+                .with("median_ms", r.median_ns / 1e6)
+                .with("events_per_sec", events_per_sec),
+        );
+    }
+
+    // The index-equivalence invariant, asserted on every bench run.
+    let accepted = |k: SchedulerKind| {
+        acceptance_of.iter().find(|&&(a, _)| a == k).map(|&(_, n)| n).unwrap()
+    };
+    assert_eq!(
+        accepted(SchedulerKind::Mfi),
+        accepted(SchedulerKind::MfiIdx),
+        "MFI and MFI-IDX must accept identically on the bench trace"
+    );
+
+    runner.save_csv();
+    let doc = Json::obj()
+        .with("format", "migsched-bench-trace-v1")
+        .with("bench", "trace_replay")
+        .with("quick_mode", quick)
+        .with(
+            "trace",
+            Json::obj()
+                .with("source", "examples/traces/bench_alibaba_2k.csv")
+                .with("rows", report.rows_total)
+                .with("arrivals", arrivals)
+                .with("span_slots", stats.span_slots)
+                .with("ingest_ms", ingest_ns / 1e6),
+        )
+        .with("gpus", GPUS as u64)
+        .with("results", Json::Arr(results));
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_trace.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-- saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
+    }
+}

@@ -8,8 +8,11 @@
 //! * `figures`      — regenerate one paper figure (`--fig 4|5|6`)
 //! * `serve`        — run the online serving daemon (JSON over HTTP)
 //! * `inspect`      — hardware spec tables / Table II / candidate table
-//! * `trace-record` — generate + save a workload trace
-//! * `trace-replay` — replay a trace through a scheduler
+//! * `trace ingest` — import an Alibaba/Philly-style CSV job log
+//! * `trace stats`  — profile histogram + arrival/lifespan percentiles
+//! * `trace replay` — open-loop replay of a trace through a scheduler
+//! * `trace-record` — generate + save a synthetic workload trace
+//! * `trace-replay` — replay a trace through the saturation-protocol engine
 //!
 //! `migsched help` prints usage. Flags are `--key value` pairs.
 
@@ -19,7 +22,9 @@ use std::process::ExitCode;
 use migsched::prelude::*;
 use migsched::sim::{fig4_report, fig5_report, fig6_report};
 use migsched::sim::experiment::run_sweep;
+use migsched::sim::replay::{self, ReplayConfig};
 use migsched::util::json::Json;
+use migsched::workload::ingest::{self, IngestConfig, MappingPolicy, TraceFormat};
 use migsched::workload::Trace;
 
 fn main() -> ExitCode {
@@ -38,6 +43,12 @@ fn main() -> ExitCode {
         "figures" => cmd_figures(&flags),
         "serve" => cmd_serve(&flags),
         "inspect" => cmd_inspect(&flags),
+        "trace ingest" => cmd_trace_ingest(&flags),
+        "trace stats" => cmd_trace_stats(&flags),
+        "trace replay" => cmd_trace_open_replay(&flags),
+        "trace" => Err(
+            "trace needs a subcommand: ingest, stats or replay (see `migsched help`)".into()
+        ),
         "trace-record" => cmd_trace_record(&flags),
         "trace-replay" => cmd_trace_replay(&flags),
         "help" | "--help" | "-h" | "" => {
@@ -75,6 +86,16 @@ COMMANDS:
                   --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
                   --shards N (disjoint sub-clusters, default 1)   --workers N
   inspect       --hardware a100-80gb | --distributions | --candidates
+  trace ingest  import a real-cluster CSV job log as a canonical trace
+                  --format alibaba|philly   --in jobs.csv   --out trace.jsonl
+                  [--policy nearest-up|strict] [--slot-secs 300] [--gpus N]
+                  [--max-duration-slots N] [--report report.json]
+  trace stats   profile histogram, inter-arrival + lifespan percentiles
+                  --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
+  trace replay  open-loop replay (arrivals continue past rejections)
+                  --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
+                  [--sched MFI|MFI-IDX|...] [--gpus N] [--every N]
+                  [--max-events N] [--csv out.csv] [--json]
   trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
   trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N]
   help          this message
@@ -87,8 +108,15 @@ type Flags = HashMap<String, String>;
 
 fn parse_args(args: &[String]) -> Result<(String, Flags), String> {
     let mut flags = HashMap::new();
-    let command = args.first().cloned().unwrap_or_default();
-    let mut i = 1;
+    // The command is every leading bare word ("trace ingest" is one
+    // command of two words); flags start at the first `--`.
+    let mut i = 0;
+    let mut words: Vec<&str> = Vec::new();
+    while i < args.len() && !args[i].starts_with("--") {
+        words.push(&args[i]);
+        i += 1;
+    }
+    let command = words.join(" ");
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
@@ -122,7 +150,12 @@ fn flag_u64(flags: &Flags, key: &str, default: u64) -> Result<u64, String> {
 }
 
 fn flag_scheduler(flags: &Flags) -> Result<SchedulerKind, String> {
-    let name = flags.get("scheduler").map(String::as_str).unwrap_or("MFI");
+    // `--sched` is the short form used by the trace subcommands.
+    let name = flags
+        .get("scheduler")
+        .or_else(|| flags.get("sched"))
+        .map(String::as_str)
+        .unwrap_or("MFI");
     SchedulerKind::parse(name).ok_or_else(|| format!("unknown scheduler '{name}'"))
 }
 
@@ -318,6 +351,178 @@ fn cmd_trace_record(flags: &Flags) -> Result<(), String> {
         generated.workloads.len(),
         generated.horizon
     );
+    Ok(())
+}
+
+/// Build an [`IngestConfig`] from the shared `trace` flags.
+fn ingest_config(flags: &Flags) -> Result<IngestConfig, String> {
+    let format_name = flags
+        .get("format")
+        .ok_or("ingesting a CSV requires --format alibaba|philly")?;
+    let format = TraceFormat::parse(format_name)
+        .ok_or_else(|| format!("unknown trace format '{format_name}'"))?;
+    let policy_name = flags.get("policy").map(String::as_str).unwrap_or("nearest-up");
+    let policy = MappingPolicy::parse(policy_name)
+        .ok_or_else(|| format!("unknown mapping policy '{policy_name}'"))?;
+    let slot_secs = flag_u64(flags, "slot-secs", 300)?;
+    if slot_secs == 0 {
+        return Err("--slot-secs must be positive".into());
+    }
+    let gpus = flag_usize(flags, "gpus", 100)?;
+    if gpus == 0 {
+        return Err("--gpus must be positive".into());
+    }
+    let mut config = IngestConfig::new(format)
+        .with_policy(policy)
+        .with_gpus(gpus)
+        .with_slot_secs(slot_secs)
+        .with_max_duration_slots(flag_u64(flags, "max-duration-slots", 0)?);
+    config.hardware = flag_hardware(flags)?;
+    Ok(config)
+}
+
+/// Load the trace named by `--trace`, or ingest `--in` + `--format`.
+/// Ingest reports go to stderr so stdout stays machine-readable.
+fn load_or_ingest_trace(flags: &Flags) -> Result<Trace, String> {
+    match (flags.get("trace"), flags.get("in")) {
+        (Some(path), None) => {
+            // Ingest knobs cannot apply to an already-normalized trace —
+            // silently dropping them would let users attribute results to
+            // a configuration that never ran.
+            for knob in ["format", "policy", "slot-secs", "max-duration-slots", "report"] {
+                if flags.contains_key(knob) {
+                    return Err(format!(
+                        "--{knob} applies to CSV ingestion (--in); \
+                         it has no effect on an existing --trace"
+                    ));
+                }
+            }
+            Trace::load(std::path::Path::new(path))
+        }
+        (None, Some(path)) => {
+            let config = ingest_config(flags)?;
+            let (trace, report) = ingest::ingest_path(std::path::Path::new(path), &config)?;
+            eprintln!("{}", report.render());
+            if let Some(report_path) = flags.get("report") {
+                std::fs::write(report_path, report.to_json().to_string_pretty())
+                    .map_err(|e| format!("saving {report_path}: {e}"))?;
+                eprintln!("report saved to {report_path}");
+            }
+            Ok(trace)
+        }
+        (Some(_), Some(_)) => Err("--trace and --in are mutually exclusive".into()),
+        (None, None) => Err("need --trace trace.jsonl or --in jobs.csv --format F".into()),
+    }
+}
+
+fn cmd_trace_ingest(flags: &Flags) -> Result<(), String> {
+    let input = flags.get("in").ok_or("trace ingest requires --in FILE")?;
+    let out = flags.get("out").ok_or("trace ingest requires --out FILE")?;
+    let config = ingest_config(flags)?;
+    let (trace, report) =
+        ingest::ingest_path(std::path::Path::new(input), &config)?;
+    trace
+        .save(std::path::Path::new(out))
+        .map_err(|e| format!("saving {out}: {e}"))?;
+    println!("{}", report.render());
+    println!(
+        "wrote {} workloads ({} events) to {out}",
+        trace.arrivals().len(),
+        trace.events.len()
+    );
+    if let Some(report_path) = flags.get("report") {
+        std::fs::write(report_path, report.to_json().to_string_pretty())
+            .map_err(|e| format!("saving {report_path}: {e}"))?;
+        println!("report saved to {report_path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace_stats(flags: &Flags) -> Result<(), String> {
+    let trace = load_or_ingest_trace(flags)?;
+    let stats = trace.stats();
+    if flags.contains_key("json") {
+        println!("{}", stats.to_json().to_string_pretty());
+    } else {
+        println!("{}", stats.render());
+    }
+    Ok(())
+}
+
+fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
+    let trace = load_or_ingest_trace(flags)?;
+    let kind = flag_scheduler(flags)?;
+    let hw = flag_hardware(flags)?;
+    let num_gpus = flag_usize(
+        flags,
+        "gpus",
+        (trace.capacity_slices as usize / hw.num_slices()).max(1),
+    )?;
+    if num_gpus == 0 {
+        return Err("--gpus must be positive".into());
+    }
+    let config = ReplayConfig {
+        hardware: hw.clone(),
+        num_gpus,
+        record_every: flag_u64(flags, "every", 0)?,
+        max_events: flag_u64(flags, "max-events", 0)?,
+    };
+    let mut sched = kind.build(&hw);
+    let t0 = std::time::Instant::now();
+    let result = replay::run(&trace, &mut *sched, &config);
+    let elapsed = t0.elapsed();
+
+    if !flags.contains_key("json") {
+        let mut table = migsched::util::table::Table::new(&[
+            "slot", "arrived", "accepted", "acceptance", "utilization", "active GPUs", "frag",
+        ]);
+        for s in &result.samples {
+            table.row(&[
+                s.slot.to_string(),
+                s.metrics.arrived_total.to_string(),
+                s.metrics.accepted_total.to_string(),
+                format!("{:.4}", s.metrics.acceptance_rate()),
+                format!("{:.4}", s.metrics.utilization),
+                s.metrics.active_gpus.to_string(),
+                format!("{:.2}", s.metrics.mean_frag_score),
+            ]);
+        }
+        println!(
+            "scheme={} M={num_gpus} events={} span={} slots [{elapsed:.2?}]",
+            result.scheme, result.arrived, result.span_slots
+        );
+        println!("{}", table.render());
+    }
+    println!("{}", result.to_json().to_string_pretty());
+
+    if let Some(csv_path) = flags.get("csv") {
+        let mut csv = migsched::util::csv::Csv::new(&[
+            "slot", "arrived", "accepted", "acceptance", "utilization", "active_gpus", "frag",
+        ]);
+        for s in &result.samples {
+            csv.row(&[
+                s.slot.to_string(),
+                s.metrics.arrived_total.to_string(),
+                s.metrics.accepted_total.to_string(),
+                format!("{:.6}", s.metrics.acceptance_rate()),
+                format!("{:.6}", s.metrics.utilization),
+                s.metrics.active_gpus.to_string(),
+                format!("{:.6}", s.metrics.mean_frag_score),
+            ]);
+        }
+        csv.save(std::path::Path::new(csv_path))
+            .map_err(|e| format!("saving {csv_path}: {e}"))?;
+        // stderr: stdout carries the machine-readable summary JSON.
+        eprintln!("trajectory saved to {csv_path}");
+    }
+
+    // Conservation is the smoke-level invariant CI relies on.
+    if !result.conserved() {
+        return Err(format!(
+            "counter conservation violated: arrived={} accepted={} rejected={}",
+            result.arrived, result.accepted, result.rejected
+        ));
+    }
     Ok(())
 }
 

@@ -407,6 +407,7 @@ mod tests {
             query: HashMap::new(),
             headers: HashMap::new(),
             body: body.as_bytes().to_vec(),
+            keep_alive: false,
         }
     }
 

@@ -7,11 +7,24 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api;
-use super::http::parse_request;
+use super::http::parse_request_from;
 use super::shard::ShardSet;
 use super::threadpool::ThreadPool;
 use crate::mig::HardwareModel;
 use crate::sched::SchedulerKind;
+
+/// Requests served over one kept-alive connection before the daemon
+/// forces a close — bounds how long a chatty client can pin a worker.
+pub const MAX_REQUESTS_PER_CONN: usize = 32;
+
+/// Socket read timeout after the first response: bounds both the idle
+/// wait for the next request line and each read while receiving that
+/// request (one knob — a kept-alive peer trickling bytes is
+/// indistinguishable from an idle one at this layer).
+pub const KEEP_ALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// Read timeout while receiving the FIRST request of a connection.
+const REQUEST_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
@@ -80,7 +93,8 @@ impl Daemon {
                     match stream {
                         Ok(stream) => {
                             let shards = Arc::clone(&shards);
-                            pool.execute(move || handle_connection(stream, shards));
+                            let shutdown = Arc::clone(&shutdown_flag);
+                            pool.execute(move || handle_connection(stream, shards, shutdown));
                         }
                         Err(e) => {
                             crate::log_warn!("accept error: {e}");
@@ -99,17 +113,86 @@ impl Daemon {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, shards: Arc<ShardSet>) {
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
-    let response = match parse_request(&mut stream) {
-        Ok(request) => {
-            crate::log_debug!("{} {}", request.method, request.path);
-            api::dispatch(&request, &shards)
+/// Serve one connection: up to [`MAX_REQUESTS_PER_CONN`] requests when
+/// the client negotiates keep-alive (HTTP/1.1 default), with
+/// [`KEEP_ALIVE_IDLE`] between requests. One `BufReader` lives for the
+/// whole connection so pipelined request bytes survive across turns.
+///
+/// The daemon's shutdown flag is honored between requests (and folded
+/// into the keep decision), so an actively-polling kept-alive client
+/// cannot stretch `ServerHandle::shutdown` beyond one in-flight request
+/// plus one read-timeout window.
+fn handle_connection(
+    mut stream: TcpStream,
+    shards: Arc<ShardSet>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(REQUEST_TIMEOUT));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            crate::log_warn!("clone connection for reading: {e}");
+            return;
         }
-        Err(resp) => resp,
     };
-    if let Err(e) = response.write_to(&mut stream) {
-        crate::log_debug!("write response: {e}");
+    let mut reader = std::io::BufReader::new(reader_stream);
+    let mut served = 0usize;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match parse_request_from(&mut reader) {
+            Ok(None) => break, // clean EOF / idle timeout between requests
+            Ok(Some(request)) => {
+                crate::log_debug!("{} {}", request.method, request.path);
+                served += 1;
+                let keep = request.keep_alive
+                    && served < MAX_REQUESTS_PER_CONN
+                    && !shutdown.load(Ordering::SeqCst);
+                let response = api::dispatch(&request, &shards);
+                if let Err(e) = response.write_conn(&mut stream, keep) {
+                    crate::log_debug!("write response: {e}");
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+                // Idle clock: subsequent requests get the (shorter)
+                // keep-alive window. SO_RCVTIMEO lives on the shared
+                // socket, so setting it on either handle is enough.
+                let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+            }
+            Err(response) => {
+                // Malformed input: answer (best effort) and hang up.
+                if let Err(e) = response.write_conn(&mut stream, false) {
+                    crate::log_debug!("write error response: {e}");
+                }
+                break;
+            }
+        }
+    }
+    // Graceful close: half-close our side, then briefly drain whatever
+    // the peer pipelined past the last served request — closing with
+    // unread bytes in the receive queue makes the kernel RST the
+    // connection, which can discard the final response before the client
+    // reads it. Bounded in volume AND by a wall-clock deadline (the
+    // per-read timeout alone would let a byte-trickling peer pin the
+    // worker indefinitely).
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
+    let mut sink = [0u8; 4096];
+    let mut drained = 0usize;
+    while std::time::Instant::now() < deadline {
+        match std::io::Read::read(&mut reader, &mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                drained += n;
+                if drained > 64 * 1024 {
+                    break;
+                }
+            }
+        }
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }

@@ -1,11 +1,18 @@
 //! Minimal HTTP/1.1 request parsing and response writing over blocking
 //! TCP streams — just enough protocol for the JSON control-plane API
-//! (no chunked encoding, no keep-alive pipelining, 1 MiB body cap,
-//! 8 KiB request-/header-line cap).
+//! (no chunked encoding, 1 MiB body cap, 8 KiB request-/header-line cap).
+//!
+//! Persistent connections ARE supported: [`parse_request_from`] reads
+//! sequential requests off one shared `BufRead` (so pipelined bytes
+//! buffered past the first request are never dropped), [`Request`]
+//! carries the negotiated `keep_alive` flag (HTTP/1.1 default-on,
+//! HTTP/1.0 opt-in, `Connection: close` always wins) and
+//! [`Response::write_conn`] emits the matching `Connection:` header. The
+//! per-connection loop — request cap, idle timeout — lives in
+//! [`super::daemon`].
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
+use std::io::{BufRead, Read, Write};
 
 /// Maximum accepted request body (1 MiB — control-plane payloads are tiny).
 pub const MAX_BODY: usize = 1 << 20;
@@ -25,6 +32,9 @@ pub struct Request {
     pub query: HashMap<String, String>,
     pub headers: HashMap<String, String>,
     pub body: Vec<u8>,
+    /// Whether the client's version + `Connection` header allow reusing
+    /// the connection for another request after the response.
+    pub keep_alive: bool,
 }
 
 impl Request {
@@ -77,33 +87,65 @@ impl Response {
             414 => "URI Too Long",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
+            501 => "Not Implemented",
             503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
 
-    /// Serialize onto a stream.
+    /// Serialize onto a stream, closing the connection afterwards.
     pub fn write_to(&self, stream: &mut dyn Write) -> std::io::Result<()> {
+        self.write_conn(stream, false)
+    }
+
+    /// Serialize onto a stream with an explicit connection disposition.
+    /// Responses always carry `Content-Length`, so a kept-alive peer
+    /// knows exactly where the next response begins.
+    pub fn write_conn(&self, stream: &mut dyn Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
             self.status,
             Self::status_text(self.status),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
         )?;
         stream.write_all(&self.body)?;
         stream.flush()
     }
 }
 
-/// Parse one request from a stream. Returns `Err(Response)` with the
-/// appropriate 4xx for malformed input.
-pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
-    let mut reader = BufReader::new(stream);
+/// Parse one request from a shared buffered reader — the daemon's only
+/// parse entry point. `Ok(None)` means the client closed (or went idle
+/// past the read timeout) *between* requests: nothing to answer, close
+/// quietly. A connection that dies mid-request is still an error.
+///
+/// The reader must be reused across calls on one connection: pipelined
+/// clients send request N+1's bytes before response N, and those bytes
+/// live in this reader's buffer.
+pub fn parse_request_from<R: BufRead>(reader: &mut R) -> Result<Option<Request>, Response> {
     // RFC 9110: an overlong request target is 414, overlong header
     // fields are 413 (we cap per line rather than per field set).
-    let request_line = read_line_capped(&mut reader, "request line", 414)?;
+    // RFC 9112 §2.2 robustness: ignore a couple of empty lines before the
+    // request line (clients historically terminate bodies with a stray
+    // CRLF not counted in Content-Length).
+    let mut request_line = None;
+    for _ in 0..3 {
+        match read_line_capped(reader, "request line", 414) {
+            Ok(line) if line.is_empty() => return Ok(None), // clean EOF
+            Ok(line) if line.trim_end().is_empty() => continue, // bare CRLF
+            Ok(line) => {
+                request_line = Some(line);
+                break;
+            }
+            // Nothing of a request seen yet → idle close, not an error.
+            Err(LineError::Io { partial: false, .. }) => return Ok(None),
+            Err(e) => return Err(e.into_response()),
+        }
+    }
+    let request_line =
+        request_line.ok_or_else(|| Response::error(400, "missing method"))?;
     let mut parts = request_line.split_whitespace();
     let method = parts.next().ok_or_else(|| Response::error(400, "missing method"))?;
     let target = parts.next().ok_or_else(|| Response::error(400, "missing path"))?;
@@ -111,13 +153,16 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
     if !version.starts_with("HTTP/1.") {
         return Err(Response::error(400, "unsupported HTTP version"));
     }
+    // HTTP/1.1 defaults to persistent connections; 1.0 must opt in.
+    let http_11 = version != "HTTP/1.0";
 
     let (path, query) = split_target(target);
 
     let mut headers = HashMap::new();
     let mut header_lines = 0usize;
     loop {
-        let line = read_line_capped(&mut reader, "headers", 413)?;
+        let line = read_line_capped(reader, "headers", 413)
+            .map_err(LineError::into_response)?;
         let line = line.trim_end();
         if line.is_empty() {
             break;
@@ -130,10 +175,33 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
             return Err(Response::error(400, "too many headers"));
         }
         if let Some((name, value)) = line.split_once(':') {
-            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            // RFC 9112 §6.3: conflicting Content-Length values are
+            // unrecoverable — last-wins would desync a kept-alive
+            // connection from any front proxy honoring the first value
+            // (CL.CL request smuggling).
+            if name == "content-length" {
+                if let Some(prev) = headers.get(&name) {
+                    if *prev != value {
+                        return Err(Response::error(
+                            400,
+                            "conflicting Content-Length headers",
+                        ));
+                    }
+                }
+            }
+            headers.insert(name, value);
         }
     }
 
+    // No chunked decoding here — and with persistent connections an
+    // unconsumed chunked body would be re-parsed as the next "request"
+    // (request smuggling), so Transfer-Encoding must be refused outright,
+    // not ignored.
+    if headers.contains_key("transfer-encoding") {
+        return Err(Response::error(501, "Transfer-Encoding is not supported"));
+    }
     let content_length: usize = headers
         .get("content-length")
         .map(|v| v.parse().map_err(|_| Response::error(400, "bad Content-Length")))
@@ -149,35 +217,70 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request, Response> {
             .map_err(|e| Response::error(400, &format!("reading body: {e}")))?;
     }
 
-    Ok(Request {
+    let keep_alive = match headers.get("connection") {
+        Some(v) => {
+            let tokens: Vec<String> =
+                v.split(',').map(|t| t.trim().to_ascii_lowercase()).collect();
+            if tokens.iter().any(|t| t == "close") {
+                false
+            } else if tokens.iter().any(|t| t == "keep-alive") {
+                true
+            } else {
+                http_11
+            }
+        }
+        None => http_11,
+    };
+
+    Ok(Some(Request {
         method: method.to_ascii_uppercase(),
         path: path.to_string(),
         query,
         headers,
         body,
-    })
+        keep_alive,
+    }))
+}
+
+/// A failed line read, keeping enough context for the caller to decide
+/// between "idle peer went away" (no response owed) and a 4xx.
+enum LineError {
+    TooLong { what: &'static str, status: u16 },
+    Io { what: &'static str, partial: bool, err: std::io::Error },
+}
+
+impl LineError {
+    fn into_response(self) -> Response {
+        match self {
+            LineError::TooLong { what, status } => Response::error(
+                status,
+                &format!("{what} too long (limit {MAX_LINE} bytes)"),
+            ),
+            LineError::Io { what, err, .. } => {
+                Response::error(400, &format!("reading {what}: {err}"))
+            }
+        }
+    }
 }
 
 /// Read one newline-terminated line, refusing to buffer more than
 /// [`MAX_LINE`] bytes of it: the `take` adapter bounds how much a single
 /// line can pull off the socket, and overlong lines become
 /// `too_long_status` (414 for the request line, 413 for header lines)
-/// without the unread remainder ever being allocated.
+/// without the unread remainder ever being allocated. A clean EOF yields
+/// an empty string.
 fn read_line_capped<R: BufRead>(
     reader: &mut R,
-    what: &str,
+    what: &'static str,
     too_long_status: u16,
-) -> Result<String, Response> {
+) -> Result<String, LineError> {
     let mut line = String::new();
-    reader
-        .take(MAX_LINE as u64 + 1)
-        .read_line(&mut line)
-        .map_err(|e| Response::error(400, &format!("reading {what}: {e}")))?;
+    let result = reader.take(MAX_LINE as u64 + 1).read_line(&mut line);
+    if let Err(err) = result {
+        return Err(LineError::Io { what, partial: !line.is_empty(), err });
+    }
     if line.len() > MAX_LINE {
-        return Err(Response::error(
-            too_long_status,
-            &format!("{what} too long (limit {MAX_LINE} bytes)"),
-        ));
+        return Err(LineError::TooLong { what, status: too_long_status });
     }
     Ok(line)
 }
@@ -276,10 +379,116 @@ mod tests {
             query: HashMap::new(),
             headers: HashMap::new(),
             body: b"hello".to_vec(),
+            keep_alive: true,
         };
         assert_eq!(r.segments(), vec!["v1", "workloads", "42"]);
         assert_eq!(r.body_str().unwrap(), "hello");
     }
 
-    // Socket-level parse_request coverage lives in rust/tests/server_api.rs.
+    fn parse_bytes(bytes: &[u8]) -> Result<Option<Request>, Response> {
+        parse_request_from(&mut &bytes[..])
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        // HTTP/1.1 defaults to keep-alive.
+        let r = parse_bytes(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert!(r.keep_alive);
+        // Explicit close wins.
+        let r = parse_bytes(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+        // Token lists are scanned ("keep-alive, TE"), case-insensitive.
+        let r = parse_bytes(b"GET / HTTP/1.0\r\nConnection: Keep-Alive, TE\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive);
+        // HTTP/1.0 without opt-in closes.
+        let r = parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive);
+        // close beats keep-alive if a confused client sends both.
+        let r = parse_bytes(b"GET / HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn eof_between_requests_is_none_not_an_error() {
+        assert!(parse_bytes(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn transfer_encoding_is_refused_not_desynced() {
+        // A chunked body the parser would never consume must close the
+        // connection with 501, not linger in the buffer to be smuggled as
+        // the next pipelined request.
+        let err = parse_bytes(
+            b"POST /v1/workloads HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              2A\r\nGET /v1/maintenance/defrag HTTP/1.1\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 501);
+    }
+
+    #[test]
+    fn conflicting_content_length_is_rejected() {
+        let err = parse_bytes(
+            b"POST /x HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 31\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 400);
+        // Identical repeated values are tolerated (RFC 9110 §8.6).
+        let r = parse_bytes(
+            b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.body, b"hi");
+    }
+
+    #[test]
+    fn leading_bare_crlf_is_skipped_per_rfc_9112() {
+        let r = parse_bytes(b"\r\nGET /x HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.path, "/x");
+        let r = parse_bytes(b"\r\n\r\nGET /y HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.path, "/y");
+        // A blank-line-only connection is a clean close, not a 400.
+        assert!(parse_bytes(b"\r\n").unwrap().is_none());
+        // But an endless stream of blank lines is not tolerated.
+        assert!(parse_bytes(b"\r\n\r\n\r\n\r\nGET /z HTTP/1.1\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially_from_one_reader() {
+        let bytes: &[u8] =
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut reader = &bytes[..];
+        let a = parse_request_from(&mut reader).unwrap().unwrap();
+        assert_eq!((a.method.as_str(), a.path.as_str()), ("GET", "/a"));
+        assert!(a.keep_alive);
+        let b = parse_request_from(&mut reader).unwrap().unwrap();
+        assert_eq!((b.method.as_str(), b.path.as_str()), ("POST", "/b"));
+        assert_eq!(b.body, b"hi");
+        let c = parse_request_from(&mut reader).unwrap().unwrap();
+        assert_eq!(c.path, "/c");
+        assert!(!c.keep_alive);
+        assert!(parse_request_from(&mut reader).unwrap().is_none());
+    }
+
+    #[test]
+    fn write_conn_sets_the_connection_header() {
+        let r = Response::text(200, "ok");
+        let mut buf = Vec::new();
+        r.write_conn(&mut buf, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        let mut buf = Vec::new();
+        r.write_conn(&mut buf, false).unwrap();
+        assert!(String::from_utf8(buf).unwrap().contains("Connection: close\r\n"));
+    }
+
+    // Socket-level coverage of the daemon's connection loop (keep-alive,
+    // pipelining, caps) lives in rust/tests/server_api.rs.
 }

@@ -8,13 +8,18 @@
 //! * [`report`] — regenerates the paper's figures as tables + CSV:
 //!   Fig. 4 (metrics vs demand, uniform), Fig. 5 (metrics @85% across
 //!   distributions), Fig. 6 (average fragmentation score).
+//! * [`replay`] — the open-loop trace-replay driver: runs any scheduler
+//!   over an ingested real-cluster trace (bursts, gaps, arrivals that
+//!   continue past rejections) and emits the same report metrics.
 
 pub mod engine;
 pub mod experiment;
+pub mod replay;
 pub mod report;
 
 pub use engine::{CheckpointRecord, SimConfig, SimEngine, SimResult};
 pub use experiment::{AggregatedCell, ExperimentConfig, SweepResult};
+pub use replay::{ReplayConfig, ReplayResult, ReplaySample};
 pub use report::{fig4_report, fig5_report, fig6_report, FigureReport};
 
 pub use crate::workload::Distribution;

@@ -69,6 +69,62 @@ impl Csv {
     }
 }
 
+/// Split one CSV record line into fields (RFC 4180: `"`-quoting with `""`
+/// escapes). The inverse of [`Csv::render`]'s row encoding, used by the
+/// trace importers ([`crate::workload::ingest`]) — which must tolerate
+/// real-world logs, so errors are descriptive values, never panics.
+///
+/// Embedded newlines inside quoted fields are NOT supported (the record
+/// boundary here is the physical line, as in every GPU-cluster job log we
+/// import); a quote left open at end-of-line is an error.
+pub fn parse_line(line: &str) -> Result<Vec<String>, String> {
+    let line = line.strip_suffix('\n').unwrap_or(line);
+    let line = line.strip_suffix('\r').unwrap_or(line);
+    let mut fields = Vec::new();
+    let mut field = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    let mut was_quoted = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                ',' => {
+                    fields.push(std::mem::take(&mut field));
+                    was_quoted = false;
+                }
+                '"' => {
+                    if !field.is_empty() || was_quoted {
+                        return Err("quote in the middle of an unquoted field".into());
+                    }
+                    in_quotes = true;
+                    was_quoted = true;
+                }
+                _ if was_quoted => {
+                    return Err("data after closing quote".into());
+                }
+                _ => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    fields.push(field);
+    Ok(fields)
+}
+
 fn format_f64(v: f64) -> String {
     if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
@@ -129,6 +185,35 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut c = Csv::new(&["a", "b"]);
         c.row(&["only-one"]);
+    }
+
+    #[test]
+    fn parse_line_plain_and_quoted() {
+        assert_eq!(parse_line("a,b,c\n").unwrap(), vec!["a", "b", "c"]);
+        assert_eq!(parse_line("a,,c").unwrap(), vec!["a", "", "c"]);
+        assert_eq!(parse_line("").unwrap(), vec![""]);
+        assert_eq!(
+            parse_line("\"x,y\",\"he said \"\"hi\"\"\"\r\n").unwrap(),
+            vec!["x,y", "he said \"hi\""]
+        );
+        assert_eq!(parse_line("\"\",b").unwrap(), vec!["", "b"]);
+    }
+
+    #[test]
+    fn parse_line_roundtrips_render() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["x,y", "plain"]);
+        let rendered = c.render();
+        let mut lines = rendered.lines();
+        assert_eq!(parse_line(lines.next().unwrap()).unwrap(), vec!["a", "b"]);
+        assert_eq!(parse_line(lines.next().unwrap()).unwrap(), vec!["x,y", "plain"]);
+    }
+
+    #[test]
+    fn parse_line_rejects_malformed_quoting() {
+        assert!(parse_line("\"unterminated").is_err());
+        assert!(parse_line("ab\"cd").is_err());
+        assert!(parse_line("\"a\"b,c").is_err());
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! The supported raw trace schemas and their row parsers.
+//!
+//! Both importers are **header-driven**: the first non-empty line names the
+//! columns, so column order is free and unknown columns are ignored — the
+//! tolerance real exports need (the public dumps ship with supersets of the
+//! documented schemas). Each data row parses independently into a
+//! [`RawJob`] or a row-local error; one bad row never aborts the file.
+//!
+//! * **Alibaba** — `cluster-trace-gpu-v2020` task-table style. Required
+//!   columns: `job_name`, `status`, `start_time`, `end_time`, `plan_gpu`
+//!   (percent of one GPU: 50 = half). Optional: `plan_mem` (GB),
+//!   `inst_num` (instance count; a row expands into that many workloads),
+//!   `user` (tenant attribution). Only `Terminated` rows are imported —
+//!   other statuses lack a meaningful start/end pair and are counted as
+//!   filtered.
+//! * **Philly** — Microsoft Philly job-log style. Required: `jobid`,
+//!   `status`, `start_time`, `finished_time`, `num_gpus` (device count).
+//!   Optional: `vc` (tenant), `mem_gb`, `submitted_time`. Single-device
+//!   jobs with an explicit `mem_gb` are sized by the memory request
+//!   (MIG-ifying a whole-device cluster); single-device jobs without one
+//!   pin a full GPU, and multi-device jobs expand into one full-GPU
+//!   workload per device so their demand is preserved.
+//!   `Pass`/`Killed`/`Failed` rows all occupied GPUs for their lifetime,
+//!   so all three import; rows that never started (empty start/finish)
+//!   are filtered.
+//!
+//! Timestamps accept integer/float epoch seconds or
+//! `YYYY-MM-DD HH:MM:SS` wall-clock datetimes (Philly's native form).
+
+use std::collections::HashMap;
+
+use crate::util::csv;
+
+/// The raw trace dialect to parse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    Alibaba,
+    Philly,
+}
+
+impl TraceFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceFormat::Alibaba => "alibaba",
+            TraceFormat::Philly => "philly",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "alibaba" | "alibaba-v2020" | "pai" => Some(TraceFormat::Alibaba),
+            "philly" | "msr-philly" => Some(TraceFormat::Philly),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TraceFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One job extracted from a raw trace row, before profile mapping and
+/// time normalization. `gpu_share` is the fraction of one GPU (Philly's
+/// multi-device jobs exceed 1.0), `mem_gb` the GPU memory request
+/// (0 = unconstrained), times are wall-clock epoch seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RawJob {
+    pub key: String,
+    pub tenant: u32,
+    pub gpu_share: f64,
+    pub mem_gb: f64,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Per-row parse outcome. Expansion (`inst_num`, multi-device jobs) is
+/// expressed as a count, not materialized clones — million-row imports
+/// should not allocate N identical structs per row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RowOutcome {
+    /// `count` identical workloads described by one [`RawJob`].
+    Jobs(RawJob, usize),
+    /// Dropped by the status filter (not a ran-to-completion state, or
+    /// never scheduled).
+    FilteredStatus,
+    /// Dropped because the row requests no GPU at all (CPU-only tasks —
+    /// a large share of the real Alibaba dump).
+    FilteredNoGpu,
+}
+
+/// Column-name → position lookup built from the header line.
+pub struct Header {
+    index: HashMap<String, usize>,
+}
+
+impl Header {
+    /// Parse the header row; errors if a required column is missing.
+    pub fn parse(line: &str, required: &[&str]) -> Result<Header, String> {
+        let cells = csv::parse_line(line).map_err(|e| format!("header: {e}"))?;
+        let mut index = HashMap::new();
+        for (i, name) in cells.iter().enumerate() {
+            index.insert(name.trim().to_ascii_lowercase(), i);
+        }
+        for col in required {
+            if !index.contains_key(*col) {
+                return Err(format!("header is missing required column '{col}'"));
+            }
+        }
+        Ok(Header { index })
+    }
+
+    fn get<'a>(&self, cells: &'a [String], col: &str) -> Option<&'a str> {
+        self.index.get(col).and_then(|&i| cells.get(i)).map(|s| s.trim())
+    }
+
+    /// Required field: present and non-empty.
+    fn req<'a>(&self, cells: &'a [String], col: &str) -> Result<&'a str, String> {
+        match self.get(cells, col) {
+            Some(v) if !v.is_empty() => Ok(v),
+            _ => Err(format!("missing value for column '{col}'")),
+        }
+    }
+}
+
+/// Cap on one Alibaba row's `inst_num` expansion (anti-balloon bound; the
+/// public trace's largest tasks run a few hundred instances).
+pub const MAX_INST_NUM: usize = 4096;
+
+/// Columns the Alibaba dialect requires.
+pub const ALIBABA_REQUIRED: [&str; 5] =
+    ["job_name", "status", "start_time", "end_time", "plan_gpu"];
+
+/// Columns the Philly dialect requires.
+pub const PHILLY_REQUIRED: [&str; 5] =
+    ["jobid", "status", "start_time", "finished_time", "num_gpus"];
+
+impl TraceFormat {
+    /// The required-column set for [`Header::parse`].
+    pub fn required_columns(self) -> &'static [&'static str] {
+        match self {
+            TraceFormat::Alibaba => &ALIBABA_REQUIRED,
+            TraceFormat::Philly => &PHILLY_REQUIRED,
+        }
+    }
+
+    /// Parse one data row (already CSV-split) against a parsed header.
+    pub fn parse_row(self, header: &Header, cells: &[String]) -> Result<RowOutcome, String> {
+        match self {
+            TraceFormat::Alibaba => parse_alibaba_row(header, cells),
+            TraceFormat::Philly => parse_philly_row(header, cells),
+        }
+    }
+}
+
+fn parse_f64(what: &str, v: &str) -> Result<f64, String> {
+    v.parse::<f64>().map_err(|_| format!("bad number '{v}' for {what}"))
+}
+
+fn parse_alibaba_row(header: &Header, cells: &[String]) -> Result<RowOutcome, String> {
+    let status = header.req(cells, "status")?;
+    if !status.eq_ignore_ascii_case("terminated") {
+        return Ok(RowOutcome::FilteredStatus);
+    }
+    // plan_gpu is percent of one GPU (Alibaba convention: 100 = 1
+    // device). In the real dump it is EMPTY (or 0) for CPU-only tasks —
+    // those are a filter category, not corruption; a row truncated
+    // before the cell is.
+    let plan_gpu = match header.get(cells, "plan_gpu") {
+        None => return Err("truncated row: missing plan_gpu cell".into()),
+        Some("") => return Ok(RowOutcome::FilteredNoGpu),
+        Some(v) => parse_f64("plan_gpu", v)?,
+    };
+    if plan_gpu == 0.0 {
+        return Ok(RowOutcome::FilteredNoGpu);
+    }
+    let key = header.req(cells, "job_name")?.to_string();
+    let start_raw = header.req(cells, "start_time")?;
+    let start =
+        parse_timestamp(start_raw).ok_or_else(|| format!("bad start_time '{start_raw}'"))?;
+    let end_raw = header.req(cells, "end_time")?;
+    let end = parse_timestamp(end_raw).ok_or_else(|| format!("bad end_time '{end_raw}'"))?;
+    let gpu_share = plan_gpu / 100.0;
+    let mem_gb = match header.get(cells, "plan_mem") {
+        Some(v) if !v.is_empty() => parse_f64("plan_mem", v)?,
+        _ => 0.0,
+    };
+    let inst_num = match header.get(cells, "inst_num") {
+        Some(v) if !v.is_empty() => {
+            let n = parse_f64("inst_num", v)?;
+            // Bounded so one corrupt row cannot balloon the import: the
+            // real trace tops out at hundreds of instances per task.
+            if !n.is_finite() || n < 1.0 || n > MAX_INST_NUM as f64 {
+                return Err(format!("bad inst_num '{v}' (allowed 1..={MAX_INST_NUM})"));
+            }
+            n as usize
+        }
+        _ => 1,
+    };
+    let tenant = match header.get(cells, "user") {
+        Some(v) if !v.is_empty() => tenant_hash(v),
+        _ => tenant_hash(&key),
+    };
+    let job = RawJob { key, tenant, gpu_share, mem_gb, start, end };
+    Ok(RowOutcome::Jobs(job, inst_num))
+}
+
+fn parse_philly_row(header: &Header, cells: &[String]) -> Result<RowOutcome, String> {
+    let status = header.req(cells, "status")?;
+    let known = ["pass", "killed", "failed"]
+        .iter()
+        .any(|s| status.eq_ignore_ascii_case(s));
+    if !known {
+        return Ok(RowOutcome::FilteredStatus);
+    }
+    let key = header.req(cells, "jobid")?.to_string();
+    // Killed/Failed jobs that never got scheduled carry EMPTY start/finish
+    // cells in the real Philly log — they never occupied a GPU, so they
+    // are filtered like foreign statuses. A row truncated before the
+    // cells (no comma at all) is corrupt, not filtered.
+    let start_raw = match header.get(cells, "start_time") {
+        None => return Err("truncated row: missing start_time cell".into()),
+        Some(v) => v,
+    };
+    let end_raw = match header.get(cells, "finished_time") {
+        None => return Err("truncated row: missing finished_time cell".into()),
+        Some(v) => v,
+    };
+    if start_raw.is_empty() || end_raw.is_empty() {
+        return Ok(RowOutcome::FilteredStatus);
+    }
+    let start =
+        parse_timestamp(start_raw).ok_or_else(|| format!("bad start_time '{start_raw}'"))?;
+    let end =
+        parse_timestamp(end_raw).ok_or_else(|| format!("bad finished_time '{end_raw}'"))?;
+    let num_gpus = parse_f64("num_gpus", header.req(cells, "num_gpus")?)?;
+    // Validated here, not in the mapper: the share transform below would
+    // otherwise fold a negative device count into a valid-looking 0.0.
+    if !num_gpus.is_finite() || num_gpus < 0.0 {
+        return Err(format!("bad num_gpus '{num_gpus}'"));
+    }
+    let mem_gb = match header.get(cells, "mem_gb") {
+        Some(v) if !v.is_empty() => parse_f64("mem_gb", v)?,
+        _ => 0.0,
+    };
+    // Philly requests whole devices — the granularity of a non-MIG
+    // cluster, not real demand. A single-GPU job with an explicit memory
+    // request is sized by that request (share 0 = compute-unconstrained,
+    // the mapper picks the smallest profile covering the memory); a
+    // single-GPU job without one pins a full GPU. Multi-device jobs
+    // expand into one full-GPU workload per device (like Alibaba's
+    // `inst_num`) so an 8-GPU job carries 8 GPUs of demand into the
+    // replay instead of collapsing to one clamped profile.
+    // Fallback mirrors the Alibaba importer: no vc column → hash the job
+    // key, so tenant structure never collapses onto one shard.
+    let tenant = match header.get(cells, "vc") {
+        Some(v) if !v.is_empty() => tenant_hash(v),
+        _ => tenant_hash(&key),
+    };
+    if num_gpus == 0.0 {
+        return Ok(RowOutcome::FilteredNoGpu);
+    }
+    if num_gpus > 1.0 {
+        // Multi-device counts must be whole devices — truncating 1.5
+        // would silently drop half a GPU of demand.
+        if num_gpus.fract() != 0.0 {
+            return Err(format!("bad num_gpus '{num_gpus}' (fractional device count)"));
+        }
+        let count = num_gpus as usize;
+        if count > MAX_INST_NUM {
+            return Err(format!("bad num_gpus '{num_gpus}' (allowed up to {MAX_INST_NUM})"));
+        }
+        let job = RawJob { key, tenant, gpu_share: 1.0, mem_gb: 0.0, start, end };
+        return Ok(RowOutcome::Jobs(job, count));
+    }
+    let gpu_share = if mem_gb > 0.0 { 0.0 } else { num_gpus };
+    let job = RawJob { key, tenant, gpu_share, mem_gb, start, end };
+    Ok(RowOutcome::Jobs(job, 1))
+}
+
+/// Stable tenant attribution from a user/VC string (FNV-1a, folded to the
+/// `TenantId` width). Deterministic across runs and platforms so ingest
+/// output is byte-reproducible.
+pub fn tenant_hash(s: &str) -> u32 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+/// Parse a trace timestamp: non-negative integer/float epoch seconds, or a
+/// `YYYY-MM-DD HH:MM:SS` (space or `T` separator) civil datetime mapped to
+/// epoch seconds (UTC). Returns `None` for anything else.
+pub fn parse_timestamp(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    if let Ok(v) = s.parse::<u64>() {
+        return Some(v);
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        if v.is_finite() && v >= 0.0 {
+            return Some(v as u64);
+        }
+        return None;
+    }
+    parse_datetime(s)
+}
+
+/// `YYYY-MM-DD[ T]HH:MM:SS` → epoch seconds (proleptic Gregorian, UTC).
+fn parse_datetime(s: &str) -> Option<u64> {
+    if s.len() != 19 {
+        return None;
+    }
+    let bytes = s.as_bytes();
+    let sep = bytes[10];
+    if bytes[4] != b'-' || bytes[7] != b'-' || (sep != b' ' && sep != b'T') {
+        return None;
+    }
+    if bytes[13] != b':' || bytes[16] != b':' {
+        return None;
+    }
+    let num = |range: std::ops::Range<usize>| -> Option<u64> {
+        let part = &s[range];
+        if !part.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        part.parse().ok()
+    };
+    let (y, m, d) = (num(0..4)?, num(5..7)?, num(8..10)?);
+    let (hh, mm, ss) = (num(11..13)?, num(14..16)?, num(17..19)?);
+    if !(1..=12).contains(&m) || !(1..=31).contains(&d) || hh > 23 || mm > 59 || ss > 59 {
+        return None;
+    }
+    let days = days_from_civil(y as i64, m, d);
+    if days < 0 {
+        return None; // pre-epoch timestamps are not valid trace times
+    }
+    Some(days as u64 * 86_400 + hh * 3600 + mm * 60 + ss)
+}
+
+/// Days since 1970-01-01 for a civil date (Howard Hinnant's algorithm).
+fn days_from_civil(y: i64, m: u64, d: u64) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = (y - era * 400) as u64; // [0, 399]
+    let mp = if m > 2 { m - 3 } else { m + 9 }; // [0, 11], March-based
+    let doy = (153 * mp + 2) / 5 + d - 1; // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146_097 + doe as i64 - 719_468
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cells(s: &str) -> Vec<String> {
+        csv::parse_line(s).unwrap()
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        for f in [TraceFormat::Alibaba, TraceFormat::Philly] {
+            assert_eq!(TraceFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(TraceFormat::parse("PAI"), Some(TraceFormat::Alibaba));
+        assert_eq!(TraceFormat::parse("borg"), None);
+    }
+
+    #[test]
+    fn timestamps_epoch_and_datetime() {
+        assert_eq!(parse_timestamp("0"), Some(0));
+        assert_eq!(parse_timestamp(" 4550 "), Some(4550));
+        assert_eq!(parse_timestamp("4550.75"), Some(4550));
+        assert_eq!(parse_timestamp("1970-01-01 00:00:00"), Some(0));
+        assert_eq!(parse_timestamp("1970-01-02T00:00:01"), Some(86_401));
+        // Pinned against `date -u -d '2017-10-03 11:22:43' +%s`.
+        assert_eq!(parse_timestamp("2017-10-03 11:22:43"), Some(1_507_029_763));
+        assert_eq!(parse_timestamp(""), None);
+        assert_eq!(parse_timestamp("-5"), None);
+        assert_eq!(parse_timestamp("2017-13-01 00:00:00"), None);
+        assert_eq!(parse_timestamp("2017-10-03 24:00:00"), None);
+        assert_eq!(parse_timestamp("yesterday"), None);
+        assert_eq!(parse_timestamp("2017-10-03"), None);
+    }
+
+    #[test]
+    fn days_from_civil_epoch_anchors() {
+        assert_eq!(days_from_civil(1970, 1, 1), 0);
+        assert_eq!(days_from_civil(1970, 1, 2), 1);
+        assert_eq!(days_from_civil(2000, 3, 1), 11_017);
+        assert_eq!(days_from_civil(1969, 12, 31), -1);
+    }
+
+    #[test]
+    fn alibaba_row_parses_and_filters() {
+        let header = Header::parse(
+            "job_name,task_name,inst_num,status,start_time,end_time,plan_cpu,plan_mem,plan_gpu,gpu_type",
+            &ALIBABA_REQUIRED,
+        )
+        .unwrap();
+        let row = cells("j1,tensorflow,1,Terminated,1000,2000,600,29.0,50,V100");
+        match TraceFormat::Alibaba.parse_row(&header, &row).unwrap() {
+            RowOutcome::Jobs(j, count) => {
+                assert_eq!(count, 1);
+                assert_eq!(j.key, "j1");
+                assert!((j.gpu_share - 0.5).abs() < 1e-12);
+                assert!((j.mem_gb - 29.0).abs() < 1e-12);
+                assert_eq!((j.start, j.end), (1000, 2000));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Non-terminated rows are filtered, not errors.
+        let row = cells("j2,tf,1,Running,1000,,600,29.0,50,V100");
+        assert_eq!(
+            TraceFormat::Alibaba.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredStatus
+        );
+        // CPU-only tasks (empty or zero plan_gpu — common in the real
+        // dump) are their own filter category, not corruption.
+        let row = cells("jc,tf,1,Terminated,1000,2000,600,29.0,,V100");
+        assert_eq!(
+            TraceFormat::Alibaba.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredNoGpu
+        );
+        let row = cells("jz,tf,1,Terminated,1000,2000,600,29.0,0,V100");
+        assert_eq!(
+            TraceFormat::Alibaba.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredNoGpu
+        );
+        // inst_num expands the row (as a count, not clones).
+        let row = cells("j3,tf,3,Terminated,5,10,1,1,25,");
+        match TraceFormat::Alibaba.parse_row(&header, &row).unwrap() {
+            RowOutcome::Jobs(_, count) => assert_eq!(count, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn alibaba_row_errors_are_local() {
+        let header = Header::parse(
+            "job_name,inst_num,status,start_time,end_time,plan_gpu",
+            &ALIBABA_REQUIRED,
+        )
+        .unwrap();
+        for bad in [
+            "j,1,Terminated,,2000,50",         // missing start
+            "j,1,Terminated,1000,2000,much",   // non-numeric share
+            "j,1,Terminated,never,2000,50",    // bad timestamp
+            ",1,Terminated,1000,2000,50",      // missing key
+            "j,1e12,Terminated,1000,2000,50",  // inst_num balloon
+            "j,0,Terminated,1000,2000,50",     // inst_num below 1
+        ] {
+            assert!(
+                TraceFormat::Alibaba.parse_row(&header, &cells(bad)).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn philly_row_parses_all_final_statuses() {
+        let header = Header::parse(
+            "jobid,vc,status,submitted_time,start_time,finished_time,num_gpus,mem_gb",
+            &PHILLY_REQUIRED,
+        )
+        .unwrap();
+        for status in ["Pass", "Killed", "Failed"] {
+            let row = cells(&format!(
+                "app_123,vc1,{status},2017-10-03 11:00:00,2017-10-03 11:22:43,2017-10-03 12:22:43,1,16"
+            ));
+            match TraceFormat::Philly.parse_row(&header, &row).unwrap() {
+                RowOutcome::Jobs(j, count) => {
+                    assert_eq!(count, 1);
+                    assert_eq!(j.start, 1_507_029_763);
+                    assert_eq!(j.end - j.start, 3600);
+                    // Single device + explicit memory → memory-sized.
+                    assert_eq!(j.gpu_share, 0.0);
+                    assert!((j.mem_gb - 16.0).abs() < 1e-12);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // No memory request → the full device it asked for.
+        let row = cells("b,vc1,Pass,x,2017-10-03 11:22:43,2017-10-03 12:22:43,1,");
+        match TraceFormat::Philly.parse_row(&header, &row).unwrap() {
+            RowOutcome::Jobs(j, _) => assert!((j.gpu_share - 1.0).abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Multi-device jobs expand into one full-GPU workload per device
+        // (their memory request is per-job, so it is dropped — each
+        // device is fully pinned anyway).
+        let row = cells("c,vc1,Pass,x,2017-10-03 11:22:43,2017-10-03 12:22:43,4,16");
+        match TraceFormat::Philly.parse_row(&header, &row).unwrap() {
+            RowOutcome::Jobs(j, count) => {
+                assert_eq!(count, 4);
+                assert!((j.gpu_share - 1.0).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Unknown status → filtered.
+        let row = cells("a,vc1,Queued,x,2017-10-03 11:22:43,2017-10-03 12:22:43,1,16");
+        assert_eq!(
+            TraceFormat::Philly.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredStatus
+        );
+        // Killed before ever starting (empty start/finish, as in the real
+        // log) → filtered, never a parse error.
+        let row = cells("d,vc1,Killed,2017-10-03 10:00:00,,,1,16");
+        assert_eq!(
+            TraceFormat::Philly.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredStatus
+        );
+        // A zero device count is a CPU row → its own filter category.
+        let row = cells("g,vc1,Pass,x,2017-10-03 11:22:43,2017-10-03 12:22:43,0,");
+        assert_eq!(
+            TraceFormat::Philly.parse_row(&header, &row).unwrap(),
+            RowOutcome::FilteredNoGpu
+        );
+        // But a row TRUNCATED before the timestamp cells is malformed.
+        let row = cells("t1,vc1,Pass");
+        assert!(TraceFormat::Philly.parse_row(&header, &row).is_err());
+        // And garbage non-empty timestamps stay malformed.
+        let row = cells("e,vc1,Pass,x,not-a-time,2017-10-03 12:22:43,1,16");
+        assert!(TraceFormat::Philly.parse_row(&header, &row).is_err());
+        // A negative device count is malformed even with a memory request
+        // (the share transform must not fold it into a valid 0.0).
+        let row = cells("f,vc1,Pass,x,2017-10-03 11:22:43,2017-10-03 12:22:43,-4,16");
+        assert!(TraceFormat::Philly.parse_row(&header, &row).is_err());
+        // So is a fractional multi-device count (would drop demand).
+        let row = cells("h,vc1,Pass,x,2017-10-03 11:22:43,2017-10-03 12:22:43,1.5,");
+        assert!(TraceFormat::Philly.parse_row(&header, &row).is_err());
+    }
+
+    #[test]
+    fn header_missing_required_column() {
+        assert!(Header::parse("job_name,status", &ALIBABA_REQUIRED).is_err());
+        assert!(Header::parse("jobid,status,start_time,finished_time,num_gpus", &PHILLY_REQUIRED).is_ok());
+    }
+
+    #[test]
+    fn tenant_hash_is_stable() {
+        assert_eq!(tenant_hash("vc1"), tenant_hash("vc1"));
+        assert_ne!(tenant_hash("vc1"), tenant_hash("vc2"));
+    }
+}

@@ -1,0 +1,261 @@
+//! Mapping raw resource requests onto MIG profiles.
+//!
+//! Public GPU-cluster traces describe demand as a *fractional GPU share*
+//! (Alibaba `plan_gpu`, in percent of one GPU) or a *device count* (Philly
+//! `num_gpus`), optionally with a memory request in GB. MIG offers neither:
+//! a workload gets one of the Table I profiles. The [`ProfileMapper`]
+//! bridges the two worlds with an explicit, configurable policy so the
+//! mapping — the one modelling judgment call in trace ingestion — is never
+//! implicit.
+//!
+//! A request needs `ceil(share × 7)` compute slices (a full GPU exposes 7
+//! compute slices) and `ceil(mem_gb / mem_per_slice)` memory slices (8 per
+//! GPU). The **nearest-fit-up** policy picks the smallest enabled profile
+//! satisfying both, clamping oversize requests (multi-GPU shares, >1-GPU
+//! memory) to the largest enabled profile; the **strict** policy rejects
+//! any request that does not fit a profile exactly as unmappable.
+
+use crate::mig::{HardwareModel, Profile};
+
+/// How to resolve requests that fall outside the profile lattice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingPolicy {
+    /// Round up to the smallest profile that satisfies the request; clamp
+    /// oversize requests to the largest enabled profile (flagged in the
+    /// [`MapOutcome`] and counted by the ingest report).
+    NearestUp,
+    /// Reject rows whose request exceeds every enabled profile.
+    Strict,
+}
+
+impl MappingPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            MappingPolicy::NearestUp => "nearest-up",
+            MappingPolicy::Strict => "strict",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MappingPolicy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "nearest-up" | "nearest" | "up" => Some(MappingPolicy::NearestUp),
+            "strict" => Some(MappingPolicy::Strict),
+            _ => None,
+        }
+    }
+}
+
+/// A successful mapping; `clamped` marks requests that exceeded the
+/// largest enabled profile and were rounded *down* to it (nearest-up
+/// policy only — strict rejects these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapOutcome {
+    pub profile: Profile,
+    pub clamped: bool,
+}
+
+/// Why a request failed to map — the ingest report counts the two cases
+/// separately (garbage input vs a policy decision).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MapError {
+    /// Nonsensical input (negative / non-finite numbers).
+    Invalid(String),
+    /// A well-formed request larger than every enabled profile, rejected
+    /// by [`MappingPolicy::Strict`].
+    Unmappable(String),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::Invalid(m) | MapError::Unmappable(m) => f.write_str(m),
+        }
+    }
+}
+
+/// Compute slices exposed by a full GPU (the 7g in `7g.80gb`).
+const FULL_GPU_COMPUTE: f64 = 7.0;
+
+/// Maps (gpu share, memory GB) requests onto MIG profiles.
+#[derive(Clone, Debug)]
+pub struct ProfileMapper {
+    hardware: HardwareModel,
+    policy: MappingPolicy,
+}
+
+impl ProfileMapper {
+    pub fn new(hardware: HardwareModel, policy: MappingPolicy) -> Self {
+        Self { hardware, policy }
+    }
+
+    pub fn policy(&self) -> MappingPolicy {
+        self.policy
+    }
+
+    pub fn hardware(&self) -> &HardwareModel {
+        &self.hardware
+    }
+
+    /// Map a request to a profile. `gpu_share` is the fraction of one GPU
+    /// (1.0 = a full device; Philly's `num_gpus = 4` arrives as 4.0),
+    /// `mem_gb` the requested GPU memory (0 = unconstrained).
+    ///
+    /// Errors are descriptive strings: non-finite/negative inputs are
+    /// invalid under every policy; requests exceeding the largest enabled
+    /// profile are unmappable under [`MappingPolicy::Strict`].
+    pub fn map(&self, gpu_share: f64, mem_gb: f64) -> Result<MapOutcome, MapError> {
+        if !gpu_share.is_finite() || gpu_share < 0.0 {
+            return Err(MapError::Invalid(format!("invalid gpu share {gpu_share}")));
+        }
+        if !mem_gb.is_finite() || mem_gb < 0.0 {
+            return Err(MapError::Invalid(format!("invalid memory request {mem_gb} GB")));
+        }
+        // Slice demand implied by the request. A zero share is a CPU-only
+        // row that slipped through the format filter — give it the smallest
+        // footprint rather than inventing a rejection.
+        let need_compute = ((gpu_share * FULL_GPU_COMPUTE).ceil() as u32).max(1);
+        let mem_per_slice = f64::from(self.hardware.total_memory_gb())
+            / self.hardware.num_slices() as f64;
+        let need_mem_slices = (mem_gb / mem_per_slice).ceil() as u32;
+
+        // Smallest enabled profile satisfying both demands: profiles() is
+        // Table I order (largest first), so take the LAST fitting one —
+        // ties on memory slices resolve to the fewest compute slices
+        // (3g.40gb preferred over 4g.40gb for a 3-compute request).
+        let fit = self
+            .hardware
+            .profiles()
+            .filter(|p| {
+                u32::from(p.compute_slices()) >= need_compute
+                    && u32::from(p.size()) >= need_mem_slices
+            })
+            .last();
+        if let Some(profile) = fit {
+            return Ok(MapOutcome { profile, clamped: false });
+        }
+
+        // Nothing fits: the request is larger than the largest enabled
+        // profile (multi-GPU share, or memory beyond one device).
+        match self.policy {
+            MappingPolicy::Strict => Err(MapError::Unmappable(format!(
+                "unmappable request (share {gpu_share:.2} → {need_compute} compute \
+                 slices, {mem_gb:.0} GB → {need_mem_slices} memory slices) under \
+                 the strict policy"
+            ))),
+            MappingPolicy::NearestUp => {
+                // Largest enabled profile = first in Table I order.
+                let largest = self.hardware.profiles().next().ok_or_else(|| {
+                    MapError::Invalid("hardware model has no enabled profiles".into())
+                })?;
+                Ok(MapOutcome { profile: largest, clamped: true })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mapper(policy: MappingPolicy) -> ProfileMapper {
+        ProfileMapper::new(HardwareModel::a100_80gb(), policy)
+    }
+
+    #[test]
+    fn exact_and_nearest_up_shares() {
+        let m = mapper(MappingPolicy::NearestUp);
+        // share → ceil(share*7) compute slices → smallest fitting profile.
+        let cases = [
+            (0.0, Profile::P1g10gb),
+            (0.10, Profile::P1g10gb),  // 1 compute slice
+            (0.25, Profile::P2g20gb),  // 2
+            (0.40, Profile::P3g40gb),  // 3
+            (0.50, Profile::P4g40gb),  // 4
+            (0.70, Profile::P7g80gb),  // 5 — only the full GPU has ≥5
+            (1.0, Profile::P7g80gb),
+        ];
+        for (share, want) in cases {
+            let got = m.map(share, 0.0).unwrap();
+            assert_eq!(got.profile, want, "share {share}");
+            assert!(!got.clamped, "share {share}");
+        }
+    }
+
+    #[test]
+    fn memory_constraint_raises_the_floor() {
+        let m = mapper(MappingPolicy::NearestUp);
+        // 1 compute slice but 15 GB → needs 2 memory slices → 1g.20gb.
+        assert_eq!(m.map(0.1, 15.0).unwrap().profile, Profile::P1g20gb);
+        // 25 GB → 3 memory slices → smallest with size ≥ 3 is 3g.40gb.
+        assert_eq!(m.map(0.1, 25.0).unwrap().profile, Profile::P3g40gb);
+        // 45 GB → 5 memory slices → only the full GPU.
+        assert_eq!(m.map(0.1, 45.0).unwrap().profile, Profile::P7g80gb);
+    }
+
+    #[test]
+    fn compute_tie_prefers_fewer_compute_slices() {
+        // 3 compute slices fits both 3g.40gb and 4g.40gb (same memory
+        // footprint); nearest-up picks 3g.40gb.
+        let m = mapper(MappingPolicy::NearestUp);
+        assert_eq!(m.map(3.0 / 7.0, 0.0).unwrap().profile, Profile::P3g40gb);
+    }
+
+    #[test]
+    fn oversize_clamps_under_nearest_up() {
+        let m = mapper(MappingPolicy::NearestUp);
+        let got = m.map(2.0, 0.0).unwrap(); // two full GPUs
+        assert_eq!(got.profile, Profile::P7g80gb);
+        assert!(got.clamped);
+        let got = m.map(0.1, 200.0).unwrap(); // > 80 GB memory
+        assert_eq!(got.profile, Profile::P7g80gb);
+        assert!(got.clamped);
+    }
+
+    #[test]
+    fn oversize_rejects_under_strict() {
+        let m = mapper(MappingPolicy::Strict);
+        assert!(matches!(m.map(2.0, 0.0), Err(MapError::Unmappable(_))));
+        assert!(matches!(m.map(0.1, 200.0), Err(MapError::Unmappable(_))));
+        // In-lattice requests still map.
+        assert_eq!(m.map(1.0, 80.0).unwrap().profile, Profile::P7g80gb);
+    }
+
+    #[test]
+    fn invalid_inputs_error_under_both_policies() {
+        for policy in [MappingPolicy::NearestUp, MappingPolicy::Strict] {
+            let m = mapper(policy);
+            assert!(matches!(m.map(-0.5, 0.0), Err(MapError::Invalid(_))));
+            assert!(matches!(m.map(f64::NAN, 0.0), Err(MapError::Invalid(_))));
+            assert!(matches!(m.map(0.5, f64::INFINITY), Err(MapError::Invalid(_))));
+        }
+    }
+
+    #[test]
+    fn restricted_hardware_changes_the_lattice() {
+        let hw = HardwareModel::a100_80gb()
+            .with_profiles(&[Profile::P3g40gb, Profile::P1g10gb]);
+        let m = ProfileMapper::new(hw, MappingPolicy::NearestUp);
+        // 2 compute slices: 2g.20gb is disabled → next fit is 3g.40gb.
+        assert_eq!(m.map(0.25, 0.0).unwrap().profile, Profile::P3g40gb);
+        // 5 compute slices: nothing fits → clamp to largest enabled.
+        let got = m.map(0.7, 0.0).unwrap();
+        assert_eq!(got.profile, Profile::P3g40gb);
+        assert!(got.clamped);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [MappingPolicy::NearestUp, MappingPolicy::Strict] {
+            assert_eq!(MappingPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(MappingPolicy::parse("NEAREST_UP"), Some(MappingPolicy::NearestUp));
+        assert_eq!(MappingPolicy::parse("fuzzy"), None);
+    }
+
+    #[test]
+    fn a100_40gb_memory_slices_are_5gb() {
+        let m = ProfileMapper::new(HardwareModel::a100_40gb(), MappingPolicy::NearestUp);
+        // 8 GB on a 5 GB/slice part → 2 memory slices → 1g.20gb shape.
+        assert_eq!(m.map(0.1, 8.0).unwrap().profile, Profile::P1g20gb);
+    }
+}

@@ -1,0 +1,190 @@
+//! Wall-clock → scheduling-slot normalization.
+//!
+//! Raw jobs carry epoch-second start/end times; the simulator runs on
+//! integer slots. Normalization anchors the earliest start at slot 0,
+//! divides wall time by a configurable slot width, derives lifespans from
+//! `end - start` (rounded up, floor one slot, optionally capped) and
+//! assigns workload ids in canonical arrival order — so the resulting
+//! [`Trace`] is independent of row order in the source file.
+
+use super::formats::RawJob;
+use super::report::IngestReport;
+use crate::mig::Profile;
+use crate::workload::spec::{TenantId, Workload, WorkloadId};
+use crate::workload::trace::Trace;
+
+/// Normalization parameters.
+#[derive(Clone, Debug)]
+pub struct NormalizeConfig {
+    /// Slot width in wall-clock seconds (default 300 = five minutes, a
+    /// slot granularity at which both public traces keep sub-hour jobs
+    /// visible without exploding the horizon).
+    pub slot_secs: u64,
+    /// Lifespan cap in slots; 0 = uncapped. Long-tail jobs (days) otherwise
+    /// pin slices for the entire replay.
+    pub max_duration_slots: u64,
+}
+
+impl Default for NormalizeConfig {
+    fn default() -> Self {
+        Self { slot_secs: 300, max_duration_slots: 0 }
+    }
+}
+
+/// A raw job whose request has already been mapped to a profile.
+#[derive(Clone, Debug)]
+pub struct MappedJob {
+    pub profile: Profile,
+    pub tenant: u32,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Normalize mapped jobs into trace workloads, updating the report's
+/// duration counters. Jobs with `end < start` must be filtered out by the
+/// caller (they are row errors, not normalization input).
+pub fn normalize(
+    jobs: &[MappedJob],
+    config: &NormalizeConfig,
+    report: &mut IngestReport,
+) -> Vec<Workload> {
+    assert!(config.slot_secs > 0, "slot width must be positive");
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let t0 = jobs.iter().map(|j| j.start).min().unwrap();
+
+    // Sort by a TOTAL key — (start, end, profile, tenant) — and assign ids
+    // post-sort: the output trace is then canonical under any source row
+    // order, including ties on start time (same-second submissions are
+    // common in real logs). Jobs identical in every key field are
+    // interchangeable, so the residual stable tie-break cannot change
+    // the rendered trace.
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| {
+        let j = &jobs[i];
+        (j.start, j.end, j.profile.index(), j.tenant)
+    });
+
+    let mut out = Vec::with_capacity(jobs.len());
+    for (id, &i) in order.iter().enumerate() {
+        let j = &jobs[i];
+        debug_assert!(j.end >= j.start, "caller must filter end < start");
+        let arrival_slot = (j.start - t0) / config.slot_secs;
+        let dur_secs = j.end - j.start;
+        if dur_secs == 0 {
+            report.zero_duration += 1;
+        }
+        // Ceil-divide, floor one slot: a job always occupies the slot it
+        // arrived in.
+        let mut duration_slots = dur_secs.div_ceil(config.slot_secs).max(1);
+        if config.max_duration_slots > 0 && duration_slots > config.max_duration_slots {
+            duration_slots = config.max_duration_slots;
+            report.clamped_duration += 1;
+        }
+        out.push(Workload {
+            id: WorkloadId(id as u64),
+            tenant: TenantId(j.tenant),
+            profile: j.profile,
+            arrival_slot,
+            duration_slots,
+        });
+    }
+    out
+}
+
+/// Assemble the canonical trace from normalized workloads.
+pub fn build_trace(
+    description: &str,
+    capacity_slices: u64,
+    workloads: &[Workload],
+) -> Trace {
+    Trace::from_workloads(description, capacity_slices, workloads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(start: u64, end: u64) -> MappedJob {
+        MappedJob { profile: Profile::P1g10gb, tenant: 0, start, end }
+    }
+
+    #[test]
+    fn anchors_sorts_and_assigns_ids() {
+        let jobs = vec![job(1000, 1600), job(400, 700), job(700, 701)];
+        let mut report = IngestReport::new("t", "alibaba");
+        let ws = normalize(&jobs, &NormalizeConfig { slot_secs: 300, max_duration_slots: 0 }, &mut report);
+        // Sorted by start: 400, 700, 1000 → slots 0, 1, 2.
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[0].id, WorkloadId(0));
+        assert_eq!(ws[0].arrival_slot, 0);
+        assert_eq!(ws[0].duration_slots, 1); // 300 s exactly → 1 slot
+        assert_eq!(ws[1].arrival_slot, 1);
+        assert_eq!(ws[1].duration_slots, 1); // 1 s rounds up
+        assert_eq!(ws[2].arrival_slot, 2);
+        assert_eq!(ws[2].duration_slots, 2); // 600 s → 2 slots
+    }
+
+    #[test]
+    fn zero_duration_raised_and_counted() {
+        let jobs = vec![job(50, 50)];
+        let mut report = IngestReport::new("t", "alibaba");
+        let ws = normalize(&jobs, &NormalizeConfig::default(), &mut report);
+        assert_eq!(ws[0].duration_slots, 1);
+        assert_eq!(report.zero_duration, 1);
+    }
+
+    #[test]
+    fn duration_cap_applies_and_counts() {
+        let jobs = vec![job(0, 1_000_000)];
+        let mut report = IngestReport::new("t", "alibaba");
+        let cfg = NormalizeConfig { slot_secs: 300, max_duration_slots: 10 };
+        let ws = normalize(&jobs, &cfg, &mut report);
+        assert_eq!(ws[0].duration_slots, 10);
+        assert_eq!(report.clamped_duration, 1);
+    }
+
+    #[test]
+    fn out_of_order_input_yields_identical_trace() {
+        let a = vec![job(10, 400), job(5000, 5600), job(900, 1000)];
+        let mut b = a.clone();
+        b.reverse();
+        let mut ra = IngestReport::new("a", "x");
+        let mut rb = IngestReport::new("b", "x");
+        let cfg = NormalizeConfig::default();
+        let wa = normalize(&a, &cfg, &mut ra);
+        let wb = normalize(&b, &cfg, &mut rb);
+        assert_eq!(wa, wb);
+        let ta = build_trace("t", 80, &wa);
+        let tb = build_trace("t", 80, &wb);
+        assert_eq!(ta.render_jsonl(), tb.render_jsonl());
+    }
+
+    #[test]
+    fn equal_start_times_still_canonicalize() {
+        // Same-second submissions with different shapes: swapping the
+        // source rows must not change which id carries which profile.
+        let a = vec![
+            MappedJob { profile: Profile::P3g40gb, tenant: 7, start: 100, end: 700 },
+            MappedJob { profile: Profile::P1g10gb, tenant: 3, start: 100, end: 400 },
+        ];
+        let b: Vec<MappedJob> = a.iter().rev().cloned().collect();
+        let mut ra = IngestReport::new("a", "x");
+        let mut rb = IngestReport::new("b", "x");
+        let cfg = NormalizeConfig::default();
+        let wa = normalize(&a, &cfg, &mut ra);
+        let wb = normalize(&b, &cfg, &mut rb);
+        assert_eq!(wa, wb);
+        assert_eq!(
+            build_trace("t", 80, &wa).render_jsonl(),
+            build_trace("t", 80, &wb).render_jsonl()
+        );
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        let mut report = IngestReport::new("t", "philly");
+        assert!(normalize(&[], &NormalizeConfig::default(), &mut report).is_empty());
+    }
+}

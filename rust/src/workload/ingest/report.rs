@@ -1,0 +1,158 @@
+//! Per-file ingestion accounting: what was imported, what was skipped and
+//! why — so a lossy import is visible, never silent.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Cap on the number of row-level errors kept verbatim (the counters keep
+/// counting past it; detail on a million-row corrupt file is useless).
+pub const MAX_ERROR_DETAIL: usize = 32;
+
+/// One row-local problem: physical line number (1-based, header = line of
+/// its own) and the reason.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowError {
+    pub line: usize,
+    pub reason: String,
+}
+
+/// The error report accompanying every ingested trace.
+#[derive(Clone, Debug, Default)]
+pub struct IngestReport {
+    /// Source label (path or caller-provided name).
+    pub source: String,
+    /// Format name (`alibaba` / `philly`).
+    pub format: String,
+    /// Data rows seen (excluding the header and blank lines).
+    pub rows_total: u64,
+    /// Workloads emitted into the trace (≥ rows can differ via `inst_num`
+    /// expansion or skips).
+    pub imported: u64,
+    /// Rows dropped as malformed (CSV/quoting/field errors) — detailed in
+    /// `errors` up to [`MAX_ERROR_DETAIL`].
+    pub skipped_malformed: u64,
+    /// Rows dropped by the status filter (e.g. Alibaba non-`Terminated`,
+    /// Philly never-started).
+    pub filtered_status: u64,
+    /// Rows dropped for requesting no GPU (CPU-only tasks).
+    pub filtered_no_gpu: u64,
+    /// Rows rejected by the strict mapping policy (unmappable requests).
+    pub unmappable: u64,
+    /// Workloads whose request exceeded the largest profile and was
+    /// clamped to it (nearest-up policy).
+    pub clamped_profile: u64,
+    /// Workloads with `end == start` whose lifespan was raised to 1 slot.
+    pub zero_duration: u64,
+    /// Workloads whose lifespan hit the configured cap.
+    pub clamped_duration: u64,
+    /// Row-level detail (capped; `skipped_malformed + unmappable` is the
+    /// true total).
+    pub errors: Vec<RowError>,
+}
+
+impl IngestReport {
+    pub fn new(source: &str, format: &str) -> Self {
+        Self { source: source.to_string(), format: format.to_string(), ..Self::default() }
+    }
+
+    /// Record a row-level error, keeping detail up to the cap.
+    pub fn push_error(&mut self, line: usize, reason: String) {
+        if self.errors.len() < MAX_ERROR_DETAIL {
+            self.errors.push(RowError { line, reason });
+        }
+    }
+
+    /// Rows that contributed workloads / total data rows (1.0 for clean
+    /// files and empty files alike — an empty file loses nothing).
+    pub fn ok_fraction(&self) -> f64 {
+        if self.rows_total == 0 {
+            return 1.0;
+        }
+        let dropped = self.skipped_malformed + self.unmappable;
+        1.0 - dropped as f64 / self.rows_total as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let errors: Vec<Json> = self
+            .errors
+            .iter()
+            .map(|e| Json::obj().with("line", e.line).with("reason", e.reason.as_str()))
+            .collect();
+        Json::obj()
+            .with("source", self.source.as_str())
+            .with("format", self.format.as_str())
+            .with("rows_total", self.rows_total)
+            .with("imported", self.imported)
+            .with("skipped_malformed", self.skipped_malformed)
+            .with("filtered_status", self.filtered_status)
+            .with("filtered_no_gpu", self.filtered_no_gpu)
+            .with("unmappable", self.unmappable)
+            .with("clamped_profile", self.clamped_profile)
+            .with("zero_duration", self.zero_duration)
+            .with("clamped_duration", self.clamped_duration)
+            .with("ok_fraction", self.ok_fraction())
+            .with("errors", Json::Arr(errors))
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["counter", "value"])
+            .title(&format!("ingest report — {} ({})", self.source, self.format));
+        let rows: [(&str, u64); 9] = [
+            ("data rows", self.rows_total),
+            ("workloads imported", self.imported),
+            ("skipped (malformed)", self.skipped_malformed),
+            ("filtered (status)", self.filtered_status),
+            ("filtered (no GPU requested)", self.filtered_no_gpu),
+            ("unmappable (strict)", self.unmappable),
+            ("clamped to largest profile", self.clamped_profile),
+            ("zero-duration (raised to 1 slot)", self.zero_duration),
+            ("duration clamped to cap", self.clamped_duration),
+        ];
+        for (label, value) in rows {
+            t.row(&[label.to_string(), value.to_string()]);
+        }
+        let mut out = t.render();
+        if !self.errors.is_empty() {
+            out.push_str(&format!(
+                "first {} error(s) of {}:\n",
+                self.errors.len(),
+                self.skipped_malformed + self.unmappable
+            ));
+            for e in &self.errors {
+                out.push_str(&format!("  line {}: {}\n", e.line, e.reason));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_detail_is_capped_but_counts_run_on() {
+        let mut r = IngestReport::new("t.csv", "alibaba");
+        for i in 0..100 {
+            r.skipped_malformed += 1;
+            r.push_error(i + 2, format!("boom {i}"));
+        }
+        assert_eq!(r.errors.len(), MAX_ERROR_DETAIL);
+        assert_eq!(r.skipped_malformed, 100);
+        let j = r.to_json();
+        assert_eq!(j.req_u64("skipped_malformed").unwrap(), 100);
+        assert_eq!(j.get("errors").unwrap().as_arr().unwrap().len(), MAX_ERROR_DETAIL);
+    }
+
+    #[test]
+    fn ok_fraction_edges() {
+        let mut r = IngestReport::new("x", "philly");
+        assert_eq!(r.ok_fraction(), 1.0); // empty file
+        r.rows_total = 10;
+        r.skipped_malformed = 2;
+        r.unmappable = 3;
+        assert!((r.ok_fraction() - 0.5).abs() < 1e-12);
+        assert!(r.render().contains("skipped (malformed)"));
+    }
+}

@@ -1,14 +1,17 @@
 //! Workloads: requests for MIG profiles with arrival times and lifespans
 //! (paper Section IV system model), the Table II request distributions,
-//! the synthetic generator behind the Monte Carlo evaluation, and a
-//! JSON-lines trace format for record/replay.
+//! the synthetic generator behind the Monte Carlo evaluation, a JSON-lines
+//! trace format for record/replay, and the [`ingest`] subsystem importing
+//! real GPU-cluster job logs (Alibaba/Philly-style) into that format.
 
 pub mod distribution;
 pub mod generator;
+pub mod ingest;
 pub mod spec;
 pub mod trace;
 
 pub use distribution::Distribution;
 pub use generator::{GeneratedWorkloads, WorkloadGenerator};
+pub use ingest::{IngestConfig, IngestReport, MappingPolicy, ProfileMapper, TraceFormat};
 pub use spec::{TenantId, Workload, WorkloadId};
-pub use trace::{Trace, TraceEvent};
+pub use trace::{Trace, TraceEvent, TraceStats};

@@ -4,14 +4,19 @@
 //! Format: one JSON object per line. The first line is a header object
 //! (`{"type":"header",...}`), subsequent lines are events. Two event kinds
 //! exist — `arrival` carries the full workload spec, `departure` is
-//! derivable from arrivals and optional (written for human inspection,
-//! ignored on load).
+//! derivable from arrivals and optional. Departures are preserved
+//! verbatim (so `save → load → save` is byte-stable) and **validated** on
+//! load: a departure must reference a known arrival and agree with its
+//! `arrival_slot + duration_slots`; contradictions (hand-edited files,
+//! corrupt concatenations) are load errors, never silently ignored.
 
+use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::path::Path;
 
 use super::spec::Workload;
 use crate::util::json::Json;
+use crate::util::stats::Sample;
 
 /// A trace event.
 #[derive(Clone, Debug, PartialEq)]
@@ -98,8 +103,13 @@ impl Trace {
     }
 
     pub fn parse_jsonl(text: &str) -> Result<Trace, String> {
-        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-        let header_line = lines.next().ok_or("empty trace")?;
+        // Enumerate PHYSICAL lines (1-based) so diagnostics on
+        // hand-edited files with blank lines point at the right place.
+        let mut lines = text.lines().enumerate();
+        let (_, header_line) = lines
+            .by_ref()
+            .find(|(_, l)| !l.trim().is_empty())
+            .ok_or("empty trace")?;
         let header = Json::parse(header_line).map_err(|e| format!("header: {e}"))?;
         if header.req_str("type")? != "header" {
             return Err("first line must be the header object".into());
@@ -112,17 +122,76 @@ impl Trace {
             header.get("description").and_then(Json::as_str).unwrap_or(""),
             header.req_u64("capacity_slices")?,
         );
-        for (lineno, line) in lines.enumerate() {
-            let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 2))?;
+        // Validation state: arrivals seen (id → expected departure slot);
+        // departures are collected and checked in one post-pass (they may
+        // legally precede their arrival line in hand-assembled files).
+        let mut expected_departure: HashMap<u64, u64> = HashMap::new();
+        let mut pending_departures: Vec<(u64, u64, usize)> = Vec::new();
+        for (idx, line) in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let lineno = idx + 1; // physical, 1-based
+            let j = Json::parse(line).map_err(|e| format!("line {lineno}: {e}"))?;
             match j.req_str("type")? {
-                "arrival" => trace.events.push(TraceEvent::Arrival(Workload::from_json(&j)?)),
-                "departure" => trace
-                    .events
-                    .push(TraceEvent::Departure(j.req_u64("id")?, j.req_u64("slot")?)),
-                other => return Err(format!("line {}: unknown event '{other}'", lineno + 2)),
+                "arrival" => {
+                    let w = Workload::from_json(&j)?;
+                    // Untrusted input: the departure slot must be computed
+                    // checked, or corrupt u64s panic in debug builds and
+                    // wrap (poisoning the contradiction check) in release.
+                    let departs =
+                        w.arrival_slot.checked_add(w.duration_slots).ok_or_else(|| {
+                            format!(
+                                "line {lineno}: arrival_slot + duration_slots overflows \
+                                 for id {}",
+                                w.id.0
+                            )
+                        })?;
+                    if expected_departure.insert(w.id.0, departs).is_some() {
+                        return Err(format!("line {lineno}: duplicate arrival id {}", w.id.0));
+                    }
+                    trace.events.push(TraceEvent::Arrival(w));
+                }
+                "departure" => {
+                    let (id, slot) = (j.req_u64("id")?, j.req_u64("slot")?);
+                    pending_departures.push((id, slot, lineno));
+                    trace.events.push(TraceEvent::Departure(id, slot));
+                }
+                other => return Err(format!("line {lineno}: unknown event '{other}'")),
+            }
+        }
+        // Departures may precede their arrival line in hand-assembled
+        // files, so contradictions are checked after the full pass.
+        let mut departure_lines: HashMap<u64, usize> = HashMap::new();
+        for (id, slot, lineno) in pending_departures {
+            if let Some(prev) = departure_lines.insert(id, lineno) {
+                return Err(format!(
+                    "line {lineno}: duplicate departure for id {id} (first at line {prev})"
+                ));
+            }
+            match expected_departure.get(&id) {
+                None => {
+                    return Err(format!(
+                        "line {lineno}: departure for unknown workload id {id}"
+                    ));
+                }
+                Some(&expected) if expected != slot => {
+                    return Err(format!(
+                        "line {lineno}: departure slot {slot} for id {id} contradicts \
+                         its arrival (arrival_slot + duration_slots = {expected})"
+                    ));
+                }
+                Some(_) => {}
             }
         }
         Ok(trace)
+    }
+
+    /// Summary statistics over the arrival sequence (the `migsched trace
+    /// stats` view): profile histogram, inter-arrival and lifespan
+    /// percentiles.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats::compute(self)
     }
 
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
@@ -146,6 +215,143 @@ impl Trace {
             }
         }
         Self::parse_jsonl(&text)
+    }
+}
+
+/// Percentile summary of one series.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeriesStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl SeriesStats {
+    fn from_sample(sample: &mut Sample) -> SeriesStats {
+        if sample.is_empty() {
+            return SeriesStats::default();
+        }
+        SeriesStats {
+            mean: sample.mean(),
+            p50: sample.percentile(50.0),
+            p90: sample.percentile(90.0),
+            p99: sample.percentile(99.0),
+            max: sample.max(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("mean", self.mean)
+            .with("p50", self.p50)
+            .with("p90", self.p90)
+            .with("p99", self.p99)
+            .with("max", self.max)
+    }
+}
+
+/// Descriptive statistics of a trace's arrival sequence.
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    pub arrivals: u64,
+    /// Inclusive slot count from first to last arrival (0 when empty) —
+    /// the same definition as `ReplayResult::span_slots`, so the two
+    /// join cleanly in reports.
+    pub span_slots: u64,
+    /// Distinct tenants attributed.
+    pub tenants: usize,
+    /// Arrival counts per profile, Table I order.
+    pub profile_counts: [u64; crate::mig::NUM_PROFILES],
+    /// Consecutive arrival-slot deltas (0 for same-slot bursts).
+    pub inter_arrival_slots: SeriesStats,
+    pub lifespan_slots: SeriesStats,
+}
+
+impl TraceStats {
+    pub fn compute(trace: &Trace) -> TraceStats {
+        let arrivals = trace.arrivals();
+        let mut stats = TraceStats {
+            arrivals: arrivals.len() as u64,
+            ..TraceStats::default()
+        };
+        if arrivals.is_empty() {
+            return stats;
+        }
+        stats.span_slots =
+            arrivals.last().unwrap().arrival_slot - arrivals[0].arrival_slot + 1;
+        let mut tenants: Vec<u32> = arrivals.iter().map(|w| w.tenant.0).collect();
+        tenants.sort_unstable();
+        tenants.dedup();
+        stats.tenants = tenants.len();
+        let mut inter = Sample::new();
+        let mut life = Sample::new();
+        for (i, w) in arrivals.iter().enumerate() {
+            stats.profile_counts[w.profile.index()] += 1;
+            life.push(w.duration_slots as f64);
+            if i > 0 {
+                inter.push((w.arrival_slot - arrivals[i - 1].arrival_slot) as f64);
+            }
+        }
+        stats.inter_arrival_slots = SeriesStats::from_sample(&mut inter);
+        stats.lifespan_slots = SeriesStats::from_sample(&mut life);
+        stats
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut profiles = Json::obj();
+        for (i, &count) in self.profile_counts.iter().enumerate() {
+            let p = crate::mig::Profile::from_index(i).unwrap();
+            profiles.set(p.canonical_name(), count);
+        }
+        Json::obj()
+            .with("arrivals", self.arrivals)
+            .with("span_slots", self.span_slots)
+            .with("tenants", self.tenants)
+            .with("profiles", profiles)
+            .with("inter_arrival_slots", self.inter_arrival_slots.to_json())
+            .with("lifespan_slots", self.lifespan_slots.to_json())
+    }
+
+    /// Render as tables (profile histogram with bars + percentile rows).
+    pub fn render(&self) -> String {
+        use crate::util::table::Table;
+        let mut out = String::new();
+        let mut hist = Table::new(&["profile", "arrivals", "share", ""]);
+        let total = self.arrivals.max(1);
+        let max_count = self.profile_counts.iter().copied().max().unwrap_or(0).max(1);
+        for (i, &count) in self.profile_counts.iter().enumerate() {
+            let p = crate::mig::Profile::from_index(i).unwrap();
+            let bar_len = (count * 24 / max_count) as usize;
+            hist.row(&[
+                p.canonical_name().to_string(),
+                count.to_string(),
+                format!("{:.1}%", count as f64 * 100.0 / total as f64),
+                "#".repeat(bar_len),
+            ]);
+        }
+        out.push_str(&hist.render());
+        let mut series = Table::new(&["series", "mean", "p50", "p90", "p99", "max"]);
+        for (name, s) in [
+            ("inter-arrival (slots)", &self.inter_arrival_slots),
+            ("lifespan (slots)", &self.lifespan_slots),
+        ] {
+            series.row(&[
+                name.to_string(),
+                format!("{:.2}", s.mean),
+                format!("{:.1}", s.p50),
+                format!("{:.1}", s.p90),
+                format!("{:.1}", s.p99),
+                format!("{:.0}", s.max),
+            ]);
+        }
+        out.push_str(&format!(
+            "arrivals: {}   span: {} slots   tenants: {}\n",
+            self.arrivals, self.span_slots, self.tenants
+        ));
+        out.push_str(&series.render());
+        out
     }
 }
 
@@ -219,6 +425,101 @@ mod tests {
         let back = Trace::load(&path).unwrap();
         assert_eq!(back, t);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_load_save_is_byte_stable() {
+        // Regression: departures are preserved on load (not dropped and
+        // re-synthesized), so a second save emits identical bytes.
+        let t = Trace::from_workloads("stability", 64, &sample_workloads());
+        let first = t.render_jsonl();
+        let second = Trace::parse_jsonl(&first).unwrap().render_jsonl();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn contradictory_departures_error_on_load() {
+        let t = Trace::from_workloads("check", 64, &sample_workloads());
+        let good = t.render_jsonl();
+        // w0 arrives at slot 0 with duration 3 → departs at 3. Hand-edit
+        // the departure line to slot 5: contradiction.
+        let bad = good.replace("{\"type\":\"departure\",\"id\":0,\"slot\":3}",
+                               "{\"type\":\"departure\",\"id\":0,\"slot\":5}");
+        assert_ne!(good, bad, "fixture must actually change a line");
+        let err = Trace::parse_jsonl(&bad).unwrap_err();
+        assert!(err.contains("contradicts"), "{err}");
+
+        // A departure for an id that never arrives is also an error.
+        let ghost = format!("{good}{{\"type\":\"departure\",\"id\":99,\"slot\":4}}\n");
+        let err = Trace::parse_jsonl(&ghost).unwrap_err();
+        assert!(err.contains("unknown workload id 99"), "{err}");
+
+        // Duplicate departures for one id are an error.
+        let dup = format!("{good}{{\"type\":\"departure\",\"id\":0,\"slot\":3}}\n");
+        let err = Trace::parse_jsonl(&dup).unwrap_err();
+        assert!(err.contains("duplicate departure"), "{err}");
+
+        // Duplicate arrival ids are an error.
+        let arrival_line = good
+            .lines()
+            .find(|l| l.contains("\"type\":\"arrival\""))
+            .unwrap();
+        let dup_arrival = format!("{good}{arrival_line}\n");
+        let err = Trace::parse_jsonl(&dup_arrival).unwrap_err();
+        assert!(err.contains("duplicate arrival"), "{err}");
+    }
+
+    #[test]
+    fn overflowing_slot_arithmetic_is_a_load_error() {
+        let header = r#"{"type":"header","format":"migsched-trace-v1","capacity_slices":8}"#;
+        let line = format!(
+            "{{\"type\":\"arrival\",\"id\":0,\"tenant\":0,\"profile\":\"1g.10gb\",\
+             \"arrival_slot\":{},\"duration_slots\":2}}",
+            u64::MAX
+        );
+        let err = Trace::parse_jsonl(&format!("{header}\n{line}\n")).unwrap_err();
+        assert!(err.contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn departures_remain_optional() {
+        // Arrival-only traces (what an external importer might produce
+        // before synthesis) still load.
+        let t = Trace::from_workloads("opt", 64, &sample_workloads());
+        let arrivals_only: String = t
+            .render_jsonl()
+            .lines()
+            .filter(|l| !l.contains("\"departure\""))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let back = Trace::parse_jsonl(&arrivals_only).unwrap();
+        assert_eq!(back.arrivals(), sample_workloads());
+    }
+
+    #[test]
+    fn stats_histogram_and_percentiles() {
+        let t = Trace::from_workloads("stats", 64, &sample_workloads());
+        let s = t.stats();
+        assert_eq!(s.arrivals, 2);
+        // Inclusive: arrivals at slots 0 and 1 span 2 slots (matches
+        // ReplayResult::span_slots on the same trace).
+        assert_eq!(s.span_slots, 2);
+        assert_eq!(s.tenants, 2);
+        assert_eq!(s.profile_counts[Profile::P2g20gb.index()], 1);
+        assert_eq!(s.profile_counts[Profile::P7g80gb.index()], 1);
+        assert_eq!(s.profile_counts[Profile::P1g10gb.index()], 0);
+        // Lifespans 3 and 1 → mean 2.
+        assert!((s.lifespan_slots.mean - 2.0).abs() < 1e-12);
+        assert!((s.inter_arrival_slots.mean - 1.0).abs() < 1e-12);
+        let rendered = s.render();
+        assert!(rendered.contains("2g.20gb"));
+        assert!(rendered.contains("lifespan"));
+        let j = s.to_json();
+        assert_eq!(j.req_u64("arrivals").unwrap(), 2);
+        // Empty trace stats don't panic.
+        let empty = Trace::new("e", 8).stats();
+        assert_eq!(empty.arrivals, 0);
+        assert!(empty.render().lines().count() > 0);
     }
 
     #[test]

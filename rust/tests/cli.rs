@@ -90,6 +90,114 @@ fn trace_record_and_replay_roundtrip() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+fn sample(name: &str) -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/traces")
+        .join(name)
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn trace_ingest_stats_replay_workflow() {
+    let dir = std::env::temp_dir().join(format!("migsched-cli-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("ali.jsonl");
+    let report = dir.join("report.json");
+
+    // Ingest the bundled Alibaba-style sample.
+    let (stdout, stderr, ok) = migsched(&[
+        "trace", "ingest", "--format", "alibaba", "--in", &sample("sample_alibaba.csv"),
+        "--out", out.to_str().unwrap(), "--gpus", "4",
+        "--report", report.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("ingest report"));
+    assert!(stdout.contains("wrote"));
+    assert!(report.exists());
+
+    // Stats over the ingested trace.
+    let (stdout, _, ok) = migsched(&["trace", "stats", "--trace", out.to_str().unwrap()]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("1g.10gb"));
+    assert!(stdout.contains("inter-arrival"));
+    assert!(stdout.contains("lifespan"));
+
+    // Stats straight off the CSV (on-the-fly ingest) agree on arrivals.
+    let (stdout2, _, ok) = migsched(&[
+        "trace", "stats", "--format", "alibaba", "--in", &sample("sample_alibaba.csv"),
+        "--gpus", "4", "--json",
+    ]);
+    assert!(ok, "{stdout2}");
+    assert!(stdout2.contains("\"arrivals\""));
+
+    // Replay through MFI and MFI-IDX: identical acceptance (the index
+    // equivalence acceptance criterion, exercised at the CLI surface).
+    let accepted_of = |sched: &str| -> u64 {
+        let (stdout, stderr, ok) = migsched(&[
+            "trace", "replay", "--trace", out.to_str().unwrap(), "--sched", sched,
+            "--gpus", "2", "--json",
+        ]);
+        assert!(ok, "{sched}: {stdout}\n{stderr}");
+        let line = stdout
+            .lines()
+            .find(|l| l.trim_start().starts_with("\"accepted\""))
+            .unwrap_or_else(|| panic!("{sched}: no accepted field in {stdout}"));
+        line.trim()
+            .trim_start_matches("\"accepted\":")
+            .trim()
+            .trim_end_matches(',')
+            .parse()
+            .unwrap()
+    };
+    let mfi = accepted_of("mfi");
+    let mfi_idx = accepted_of("mfi-idx");
+    assert_eq!(mfi, mfi_idx, "MFI vs MFI-IDX acceptance must match");
+    assert!(mfi > 0);
+
+    // Philly sample straight through replay (ingest-on-the-fly).
+    let (stdout, stderr, ok) = migsched(&[
+        "trace", "replay", "--format", "philly", "--in", &sample("sample_philly.csv"),
+        "--sched", "mfi", "--gpus", "2", "--max-events", "20",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("\"conserved\": true"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn trace_subcommand_errors_are_friendly() {
+    let (_, stderr, ok) = migsched(&["trace"]);
+    assert!(!ok);
+    assert!(stderr.contains("subcommand"));
+    let (_, stderr, ok) = migsched(&["trace", "ingest", "--in", "/nonexistent.csv"]);
+    assert!(!ok);
+    assert!(stderr.contains("--format") || stderr.contains("--out"));
+    let (_, stderr, ok) = migsched(&[
+        "trace", "ingest", "--format", "borg", "--in", "x.csv", "--out", "y.jsonl",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown trace format"));
+    let (_, stderr, ok) = migsched(&["trace", "stats"]);
+    assert!(!ok);
+    assert!(stderr.contains("--trace") || stderr.contains("--in"));
+    // Ingest knobs on an existing --trace are rejected, not ignored.
+    let (_, stderr, ok) = migsched(&[
+        "trace", "replay", "--trace", "t.jsonl", "--slot-secs", "60",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("no effect on an existing --trace"), "{stderr}");
+    // --gpus 0 is a friendly error, not an assert panic.
+    let (_, stderr, ok) = migsched(&[
+        "trace", "ingest", "--format", "alibaba", "--in", "x.csv", "--out", "y.jsonl",
+        "--gpus", "0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--gpus must be positive"), "{stderr}");
+}
+
 #[test]
 fn figures_quick() {
     let dir = std::env::temp_dir().join(format!("migsched-cli-fig-{}", std::process::id()));

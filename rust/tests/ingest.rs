@@ -1,0 +1,267 @@
+//! Trace-ingestion integration tests: edge cases over the full
+//! CSV → mapper → normalize → Trace → replay pipeline, plus the bundled
+//! sample traces under `examples/traces/`.
+//!
+//! The two repo-level invariants pinned here:
+//! * ingesting either bundled sample round-trips through the JSON-lines
+//!   trace format **byte-identically**;
+//! * MFI and MFI-IDX produce **identical acceptance counts** replaying
+//!   the bundled samples open-loop (index equivalence beyond the
+//!   saturation protocol).
+
+use std::path::PathBuf;
+
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::sched::SchedulerKind;
+use migsched::mig::HardwareModel;
+use migsched::workload::ingest::{
+    ingest_path, ingest_str, IngestConfig, MappingPolicy, TraceFormat,
+};
+use migsched::workload::Trace;
+
+fn sample(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/traces").join(name)
+}
+
+const ALI_HEADER: &str =
+    "job_name,task_name,inst_num,status,start_time,end_time,plan_cpu,plan_mem,plan_gpu,gpu_type";
+
+fn ali_config() -> IngestConfig {
+    IngestConfig::new(TraceFormat::Alibaba).with_gpus(8)
+}
+
+// ---------- edge cases: never panic, always account ----------------------
+
+#[test]
+fn malformed_and_truncated_rows_are_counted_not_fatal() {
+    let text = format!(
+        "{ALI_HEADER}\n\
+         job_a,tf,1,Terminated,0,600,1,10,50,V100\n\
+         job_b,tf,1,Terminated,60\n\
+         \"job_c,tf,1,Terminated,120,720,1,10,50,V100\n\
+         job_d,tf,one,Terminated,180,780,1,10,50,V100\n\
+         job_e,tf,1,Terminated,240,840,1,10,50,V100"
+    );
+    // NOTE: job_b is truncated mid-row, job_c has an unterminated quote,
+    // job_d a non-numeric inst_num, and the file lacks a final newline.
+    let (trace, report) = ingest_str(&text, "edge", &ali_config()).unwrap();
+    assert_eq!(report.rows_total, 5);
+    assert_eq!(report.imported, 2);
+    assert_eq!(report.skipped_malformed, 3);
+    assert_eq!(report.errors.len(), 3);
+    assert_eq!(trace.arrivals().len(), 2);
+}
+
+#[test]
+fn stray_non_utf8_bytes_cost_one_row_not_the_file() {
+    use migsched::workload::ingest::ingest_reader;
+    let mut bytes = format!(
+        "{ALI_HEADER}\n\
+         good1,tf,1,Terminated,0,600,1,10,50,V100\n"
+    )
+    .into_bytes();
+    // A row whose plan_gpu field contains a raw 0xFF byte: lossy decoding
+    // turns it into U+FFFD, the number parse fails, the row is skipped.
+    bytes.extend_from_slice(b"bad,tf,1,Terminated,60,660,1,10,5\xFF0,V100\n");
+    bytes.extend_from_slice(b"good2,tf,1,Terminated,120,720,1,10,50,V100\n");
+    let (trace, report) =
+        ingest_reader(&bytes[..], "binary", &ali_config()).unwrap();
+    assert_eq!(report.rows_total, 3);
+    assert_eq!(report.imported, 2);
+    assert_eq!(report.skipped_malformed, 1);
+    assert_eq!(trace.arrivals().len(), 2);
+}
+
+#[test]
+fn newline_free_blob_costs_one_row_not_the_process() {
+    use migsched::workload::ingest::{ingest_reader, MAX_LINE_BYTES};
+    // A >1 MiB junk line with no newline between two valid rows: it must
+    // become one skipped row (its tail discarded, not buffered), and the
+    // following row must still import.
+    let mut bytes = format!(
+        "{ALI_HEADER}\n\
+         good1,tf,1,Terminated,0,600,1,10,50,V100\n"
+    )
+    .into_bytes();
+    bytes.extend(std::iter::repeat(b'x').take(MAX_LINE_BYTES + 4096));
+    bytes.push(b'\n');
+    bytes.extend_from_slice(b"good2,tf,1,Terminated,120,720,1,10,50,V100\n");
+    let (trace, report) = ingest_reader(&bytes[..], "blob", &ali_config()).unwrap();
+    assert_eq!(report.rows_total, 3);
+    assert_eq!(report.imported, 2);
+    assert_eq!(report.skipped_malformed, 1);
+    assert!(report.errors[0].reason.contains("exceeds"));
+    assert_eq!(trace.arrivals().len(), 2);
+
+    // A newline-free junk FILE fails on the header, without buffering it.
+    let blob: Vec<u8> =
+        std::iter::repeat(b'z').take(MAX_LINE_BYTES + 4096).collect();
+    assert!(ingest_reader(&blob[..], "pure-blob", &ali_config()).is_err());
+}
+
+#[test]
+fn cpu_only_rows_are_filtered_not_errors() {
+    // Empty and zero plan_gpu (CPU tasks, a large share of the real
+    // Alibaba dump) land in their own filter counter, keeping the error
+    // detail and ok_fraction meaningful.
+    let text = format!(
+        "{ALI_HEADER}\n\
+         cpu1,tf,1,Terminated,0,600,600,10,,V100\n\
+         cpu2,tf,1,Terminated,0,600,600,10,0,V100\n\
+         gpu1,tf,1,Terminated,0,600,600,10,50,V100\n"
+    );
+    let (trace, report) = ingest_str(&text, "cpu", &ali_config()).unwrap();
+    assert_eq!(report.filtered_no_gpu, 2);
+    assert_eq!(report.skipped_malformed, 0);
+    assert!(report.errors.is_empty());
+    assert_eq!(report.imported, 1);
+    assert_eq!(report.ok_fraction(), 1.0);
+    assert_eq!(trace.arrivals().len(), 1);
+}
+
+#[test]
+fn zero_duration_jobs_occupy_one_slot() {
+    let text = format!(
+        "{ALI_HEADER}\n\
+         j,tf,1,Terminated,500,500,1,10,50,V100\n"
+    );
+    let (trace, report) = ingest_str(&text, "zero", &ali_config()).unwrap();
+    assert_eq!(report.zero_duration, 1);
+    let arrivals = trace.arrivals();
+    assert_eq!(arrivals.len(), 1);
+    assert_eq!(arrivals[0].duration_slots, 1);
+}
+
+#[test]
+fn out_of_order_timestamps_normalize_to_a_sorted_trace() {
+    let text = format!(
+        "{ALI_HEADER}\n\
+         late,tf,1,Terminated,100000,100600,1,10,50,V100\n\
+         early,tf,1,Terminated,0,600,1,10,50,V100\n\
+         mid,tf,1,Terminated,50000,50600,1,10,50,V100\n"
+    );
+    let (trace, _) = ingest_str(&text, "ooo", &ali_config()).unwrap();
+    let arrivals = trace.arrivals();
+    assert_eq!(arrivals.len(), 3);
+    assert!(arrivals.windows(2).all(|w| w[0].arrival_slot <= w[1].arrival_slot));
+    assert_eq!(arrivals[0].arrival_slot, 0); // "early" anchors the clock
+    // Ids are canonical (assigned post-sort), so replays are
+    // deterministic regardless of source row order.
+    assert!(arrivals.windows(2).all(|w| w[0].id < w[1].id));
+}
+
+#[test]
+fn unmappable_share_under_strict_policy_is_a_skip_count() {
+    let text = format!(
+        "{ALI_HEADER}\n\
+         multi,tf,1,Terminated,0,600,1,10,800,V100\n\
+         fits,tf,1,Terminated,0,600,1,10,100,V100\n"
+    );
+    let cfg = ali_config().with_policy(MappingPolicy::Strict);
+    let (trace, report) = ingest_str(&text, "strict", &cfg).unwrap();
+    assert_eq!(report.unmappable, 1);
+    assert_eq!(report.imported, 1);
+    assert!(!report.errors.is_empty());
+    assert_eq!(trace.arrivals().len(), 1);
+    assert!(report.ok_fraction() < 1.0);
+}
+
+#[test]
+fn empty_and_header_only_files_ingest_cleanly() {
+    let (trace, report) = ingest_str("", "empty", &ali_config()).unwrap();
+    assert_eq!((report.rows_total, trace.arrivals().len()), (0, 0));
+    let (trace, report) =
+        ingest_str(&format!("{ALI_HEADER}\n"), "header-only", &ali_config()).unwrap();
+    assert_eq!((report.rows_total, trace.arrivals().len()), (0, 0));
+    // Blank lines anywhere are skipped, not rows.
+    let (_, report) = ingest_str(
+        &format!("\n\n{ALI_HEADER}\n\nj,tf,1,Terminated,0,9,1,1,25,V\n\n"),
+        "blanky",
+        &ali_config(),
+    )
+    .unwrap();
+    assert_eq!(report.rows_total, 1);
+    assert_eq!(report.imported, 1);
+    // And an empty trace replays to an empty result.
+    let (trace, _) = ingest_str("", "empty", &ali_config()).unwrap();
+    let mut sched = SchedulerKind::Mfi.build(&HardwareModel::a100_80gb());
+    let r = replay::run(&trace, &mut *sched, &ReplayConfig::new(4));
+    assert_eq!(r.arrived, 0);
+    assert!(r.conserved());
+}
+
+// ---------- bundled samples: the repo-level acceptance invariants --------
+
+#[test]
+fn bundled_samples_ingest_with_zero_malformed_rows() {
+    for (name, format) in [
+        ("sample_alibaba.csv", TraceFormat::Alibaba),
+        ("sample_philly.csv", TraceFormat::Philly),
+    ] {
+        let cfg = IngestConfig::new(format).with_gpus(8);
+        let (trace, report) = ingest_path(&sample(name), &cfg).unwrap();
+        assert_eq!(report.skipped_malformed, 0, "{name}: {:?}", report.errors);
+        assert_eq!(report.unmappable, 0, "{name}");
+        assert!(report.imported > 0, "{name}");
+        assert_eq!(trace.arrivals().len() as u64, report.imported, "{name}");
+        // Stats over the ingested trace are well-formed.
+        let stats = trace.stats();
+        assert_eq!(stats.arrivals, report.imported, "{name}");
+        assert!(stats.lifespan_slots.p50 >= 1.0, "{name}");
+    }
+}
+
+#[test]
+fn bundled_samples_roundtrip_jsonl_byte_identically() {
+    for (name, format) in [
+        ("sample_alibaba.csv", TraceFormat::Alibaba),
+        ("sample_philly.csv", TraceFormat::Philly),
+    ] {
+        let cfg = IngestConfig::new(format).with_gpus(8);
+        let (trace, _) = ingest_path(&sample(name), &cfg).unwrap();
+        let rendered = trace.render_jsonl();
+        let reparsed = Trace::parse_jsonl(&rendered).unwrap();
+        assert_eq!(reparsed.render_jsonl(), rendered, "{name}");
+        assert_eq!(reparsed, trace, "{name}");
+    }
+}
+
+#[test]
+fn mfi_and_indexed_mfi_accept_identically_on_bundled_samples() {
+    for (name, format, gpus) in [
+        ("sample_alibaba.csv", TraceFormat::Alibaba, 2),
+        ("sample_philly.csv", TraceFormat::Philly, 2),
+        ("bench_alibaba_2k.csv", TraceFormat::Alibaba, 6),
+    ] {
+        let cfg = IngestConfig::new(format).with_gpus(gpus);
+        let (trace, _) = ingest_path(&sample(name), &cfg).unwrap();
+        let hw = HardwareModel::a100_80gb();
+        let rcfg = ReplayConfig::new(gpus);
+        let mut flat = SchedulerKind::Mfi.build(&hw);
+        let mut indexed = SchedulerKind::MfiIdx.build(&hw);
+        let a = replay::run(&trace, &mut *flat, &rcfg);
+        let b = replay::run(&trace, &mut *indexed, &rcfg);
+        assert_eq!(a.accepted, b.accepted, "{name}");
+        assert_eq!(a.rejected, b.rejected, "{name}");
+        assert_eq!(a.time_avg_frag, b.time_avg_frag, "{name}");
+        assert!(a.conserved() && b.conserved(), "{name}");
+        // Small clusters must actually exercise rejection for the
+        // equivalence to mean anything.
+        assert!(a.rejected > 0, "{name}: no rejections at M={gpus}");
+    }
+}
+
+#[test]
+fn every_scheduler_conserves_counters_on_the_bench_trace_prefix() {
+    let cfg = IngestConfig::new(TraceFormat::Alibaba).with_gpus(4);
+    let (trace, _) = ingest_path(&sample("bench_alibaba_2k.csv"), &cfg).unwrap();
+    let hw = HardwareModel::a100_80gb();
+    let rcfg = ReplayConfig { max_events: 500, ..ReplayConfig::new(4) };
+    for kind in SchedulerKind::all() {
+        let mut sched = kind.build(&hw);
+        let r = replay::run(&trace, &mut *sched, &rcfg);
+        assert_eq!(r.arrived, 500, "{kind}");
+        assert!(r.conserved(), "{kind}");
+        assert!(r.accepted > 0, "{kind}");
+    }
+}

@@ -239,6 +239,93 @@ fn header_line_flood_is_rejected_with_400() {
 }
 
 #[test]
+fn keep_alive_pipelines_requests_on_one_connection() {
+    // Three HTTP/1.1 requests written back-to-back on ONE connection (no
+    // Connection header → keep-alive by default): the daemon must answer
+    // all three in order without dropping buffered pipeline bytes.
+    let (handle, _client) = start_daemon(2);
+    let addr = handle.addr().to_string();
+    let pipeline = "GET /healthz HTTP/1.1\r\n\r\n".repeat(3);
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert_eq!(
+        reply.matches("HTTP/1.1 200 OK").count(),
+        3,
+        "want 3 responses on one connection, got: {reply}"
+    );
+    assert_eq!(reply.matches("ok\n").count(), 3);
+    assert!(reply.contains("Connection: keep-alive"));
+    handle.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_stateful_requests_in_order() {
+    // Submit + stats pipelined on one connection: the second response
+    // must observe the first request's effect (strict ordering).
+    let (handle, _client) = start_daemon(2);
+    let addr = handle.addr().to_string();
+    let body = "{\"profile\":\"3g.40gb\",\"tenant\":1}";
+    let pipeline = format!(
+        "POST /v1/workloads HTTP/1.1\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}GET /v1/stats HTTP/1.1\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert!(reply.contains("HTTP/1.1 201"), "{reply}");
+    // The stats response (second on the wire) sees the allocation.
+    let stats_at = reply.find("\"allocated_workloads\"").expect("stats response present");
+    assert!(
+        reply[stats_at..].starts_with("\"allocated_workloads\":1"),
+        "stats must observe the pipelined submit: {reply}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn connection_close_is_honored_mid_pipeline() {
+    // The first request opts out of keep-alive; a second pipelined
+    // request must NOT be served.
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    let pipeline = "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n\
+                    GET /healthz HTTP/1.1\r\n\r\n";
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert_eq!(reply.matches("HTTP/1.1 200 OK").count(), 1, "{reply}");
+    assert!(reply.contains("Connection: close"));
+    handle.shutdown();
+}
+
+#[test]
+fn keep_alive_request_cap_closes_the_connection() {
+    use migsched::server::daemon::MAX_REQUESTS_PER_CONN;
+    // Two more requests than the cap: exactly cap-many are answered, the
+    // last answered one advertises Connection: close.
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    let pipeline = "GET /healthz HTTP/1.1\r\n\r\n".repeat(MAX_REQUESTS_PER_CONN + 2);
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert_eq!(
+        reply.matches("HTTP/1.1 200 OK").count(),
+        MAX_REQUESTS_PER_CONN,
+        "cap must bound one connection: {}",
+        reply.len()
+    );
+    let last_close = reply.rfind("Connection: close").expect("final response closes");
+    assert!(reply[last_close..].contains("ok\n"));
+    assert_eq!(reply.matches("Connection: close").count(), 1);
+    handle.shutdown();
+}
+
+#[test]
+fn http_1_0_without_opt_in_closes_after_one_response() {
+    let (handle, _client) = start_daemon(1);
+    let addr = handle.addr().to_string();
+    let pipeline = "GET /healthz HTTP/1.0\r\n\r\nGET /healthz HTTP/1.0\r\n\r\n";
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert_eq!(reply.matches("HTTP/1.1 200 OK").count(), 1, "{reply}");
+    handle.shutdown();
+}
+
+#[test]
 fn shutdown_completes_when_bound_to_unspecified_address() {
     // Regression: shutdown wakes the accept loop with a dummy connect to
     // the bind address — dialing 0.0.0.0 hangs forever on some platforms,
