@@ -1,0 +1,154 @@
+//! Defragmentation cost/benefit Pareto sweep (experiment D1): replay the
+//! bundled ~2k-row Alibaba-style trace on a deliberately tight fleet and
+//! sweep the continuous-defrag cost budget, recording the acceptance
+//! uplift each budget buys and what it costs in migrations and copied
+//! instance memory.
+//!
+//! The no-defrag baseline runs first; every run must conserve its
+//! counters, and a budgeted run that accepts *fewer* workloads than the
+//! baseline is flagged loudly (defrag usually frees capacity, but a
+//! migration can also fill a hole a later arrival would have used, so
+//! this is a report, not an invariant). The run is recorded
+//! machine-readably in
+//! `BENCH_defrag.json` at the repository root (schema:
+//! `{format, bench, quick_mode, trace: {rows, arrivals, span_slots},
+//! gpus, policy: {every, threshold, max_moves}, results: [{budget,
+//! accepted, acceptance_rate, migrations, migrated_bytes, defrag_sweeps,
+//! time_avg_frag, median_ms}]}`; the baseline row has `budget: null`).
+
+use std::path::Path;
+
+use migsched::defrag::DefragPolicy;
+use migsched::sched::SchedulerKind;
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::util::bench::{fmt_ns, quick_mode, BenchRunner};
+use migsched::util::json::Json;
+use migsched::workload::ingest::{ingest_path, IngestConfig, TraceFormat};
+
+/// A small fleet keeps the trace capacity-bound so defrag has rejections
+/// to recover (the 16-GPU throughput bench accepts nearly everything).
+const GPUS: usize = 8;
+/// Sweep cadence in slots; frequent enough to act between arrival bursts.
+const EVERY: u64 = 4;
+const MAX_MOVES: usize = 16;
+
+fn main() {
+    let quick = quick_mode();
+    let csv = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/bench_alibaba_2k.csv");
+
+    let t0 = std::time::Instant::now();
+    let config = IngestConfig::new(TraceFormat::Alibaba).with_gpus(GPUS);
+    let (trace, report) = ingest_path(&csv, &config).expect("ingest bundled bench trace");
+    let ingest_ns = t0.elapsed().as_nanos() as f64;
+    let arrivals = trace.arrivals().len() as u64;
+    let stats = trace.stats();
+    println!(
+        "== defrag pareto bench: {} rows → {} workloads ({} span slots), ingest {} ==",
+        report.rows_total,
+        arrivals,
+        stats.span_slots,
+        fmt_ns(ingest_ns)
+    );
+
+    let hw = migsched::mig::HardwareModel::a100_80gb();
+    let kind = SchedulerKind::Ff; // the packing-blind baseline defrag helps most
+    // `None` = defrag disabled; `Some(0)` = unlimited budget; the rest
+    // trace the cost/benefit frontier between them.
+    let budgets: &[Option<u64>] = if quick {
+        &[None, Some(0)]
+    } else {
+        &[None, Some(40), Some(80), Some(160), Some(320), Some(0)]
+    };
+
+    let mut runner = BenchRunner::new("defrag_pareto");
+    let mut results: Vec<Json> = Vec::new();
+    let mut baseline_accepted = None;
+    for &budget in budgets {
+        let mut rcfg = ReplayConfig::new(GPUS);
+        rcfg.defrag = budget.map(|b| {
+            DefragPolicy::every(EVERY)
+                .with_max_moves(MAX_MOVES)
+                .with_cost_budget(b)
+        });
+        let label = match budget {
+            None => "off".to_string(),
+            Some(0) => "unlimited".to_string(),
+            Some(b) => format!("budget{b}"),
+        };
+        let mut sched = kind.build(&hw);
+        let mut last = None;
+        let reps = if quick { 2 } else { 5 };
+        let r = runner
+            .bench_once(&format!("pareto/{label}/M{GPUS}"), reps, || {
+                last = Some(replay::run(&trace, &mut *sched, &rcfg));
+            })
+            .clone();
+        let outcome = last.expect("at least one rep ran");
+        assert!(outcome.conserved(), "{label}: counters must conserve");
+        match budget {
+            None => baseline_accepted = Some(outcome.accepted),
+            Some(_) => {
+                let base = baseline_accepted.expect("baseline runs first");
+                if outcome.accepted < base {
+                    eprintln!(
+                        "WARNING {label}: defrag lost acceptance ({} < {base})",
+                        outcome.accepted
+                    );
+                }
+            }
+        }
+        println!(
+            "   {label}: acceptance {:.4} ({} / {}), {} migration(s), {} bytes, frag {:.2}",
+            outcome.acceptance_rate(),
+            outcome.accepted,
+            outcome.arrived,
+            outcome.migrations,
+            outcome.migrated_bytes,
+            outcome.time_avg_frag
+        );
+        results.push(
+            Json::obj()
+                .with(
+                    "budget",
+                    budget.map(Json::from).unwrap_or(Json::Null),
+                )
+                .with("accepted", outcome.accepted)
+                .with("acceptance_rate", outcome.acceptance_rate())
+                .with("migrations", outcome.migrations)
+                .with("migrated_bytes", outcome.migrated_bytes)
+                .with("defrag_sweeps", outcome.defrag_sweeps)
+                .with("time_avg_frag", outcome.time_avg_frag)
+                .with("median_ms", r.median_ns / 1e6),
+        );
+    }
+
+    runner.save_csv();
+    let doc = Json::obj()
+        .with("format", "migsched-bench-defrag-v1")
+        .with("bench", "defrag_pareto")
+        .with("quick_mode", quick)
+        .with(
+            "trace",
+            Json::obj()
+                .with("source", "examples/traces/bench_alibaba_2k.csv")
+                .with("rows", report.rows_total)
+                .with("arrivals", arrivals)
+                .with("span_slots", stats.span_slots)
+                .with("ingest_ms", ingest_ns / 1e6),
+        )
+        .with("gpus", GPUS as u64)
+        .with("scheme", kind.name())
+        .with(
+            "policy",
+            Json::obj()
+                .with("every", EVERY)
+                .with("threshold", 0.0)
+                .with("max_moves", MAX_MOVES as u64),
+        )
+        .with("results", Json::Arr(results));
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_defrag.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-- saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
+    }
+}

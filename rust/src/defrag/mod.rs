@@ -8,19 +8,107 @@
 //! **offline planner**: given the current cluster state it computes a
 //! bounded sequence of single-workload migrations that monotonically
 //! lowers the total fragmentation score, which an operator can apply
-//! during maintenance windows (or the simulator can apply periodically —
-//! `SimConfig::defrag_every`).
+//! during maintenance windows (or the simulator and trace replayer can
+//! apply continuously — `SimConfig::defrag` / `ReplayConfig::defrag`).
 //!
 //! Planning is greedy: at each step consider every (allocated workload ×
 //! feasible target placement) pair, simulate the move (release + place),
 //! and commit the move with the largest total-F reduction; stop when no
 //! move improves F or the migration budget is exhausted. Each step is
 //! O(W · M · 18) table lookups — milliseconds at cluster scale.
+//!
+//! Migration is not free: moving an instance copies its memory footprint
+//! and costs the tenant a downtime slot. [`CostModel`] prices each move
+//! and [`plan_defrag_budgeted`] maximizes ΔF reduction subject to a total
+//! cost budget — with budget 0 (= unlimited) it degenerates bit-for-bit
+//! to the pure greedy plan, which is how [`plan_defrag`] is implemented.
 
 use crate::cluster::Cluster;
 use crate::frag::{FragScorer, ScoreTable};
-use crate::mig::{GpuState, Placement};
+use crate::mig::{GpuState, HardwareModel, Placement, Profile};
 use crate::workload::WorkloadId;
+
+/// Bytes per reported memory GB (migrated-bytes accounting).
+pub const BYTES_PER_GB: u64 = 1 << 30;
+
+/// Prices one migration: the instance's memory footprint (the bytes that
+/// have to be copied) plus a flat downtime penalty per move. Costs are
+/// unitless; the defaults make a 1g.10gb move cost 20 and a 7g.80gb move
+/// cost 90, so a budget knob trades a few big moves against many small
+/// ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostModel {
+    /// Cost units per GB of instance memory copied.
+    pub per_gb: u64,
+    /// Flat per-move penalty for the tenant's downtime slot.
+    pub downtime_penalty: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { per_gb: 1, downtime_penalty: 10 }
+    }
+}
+
+impl CostModel {
+    /// Cost of migrating one instance of `p` on `hw`.
+    pub fn move_cost(&self, hw: &HardwareModel, p: Profile) -> u64 {
+        self.per_gb * u64::from(hw.profile_mem_gb(p)) + self.downtime_penalty
+    }
+}
+
+/// Bytes copied when migrating one instance of `p` on `hw`.
+pub fn move_bytes(hw: &HardwareModel, p: Profile) -> u64 {
+    u64::from(hw.profile_mem_gb(p)) * BYTES_PER_GB
+}
+
+/// A continuous-defrag trigger policy, shared by the simulation engine,
+/// the open-loop trace replayer and the CLI: every `every` slots (the
+/// daemon interprets it as seconds), when the cluster-mean fragmentation
+/// score is at least `threshold`, run one budgeted sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DefragPolicy {
+    /// Sweep cadence in slots (daemon: seconds). Must be positive.
+    pub every: u64,
+    /// Minimum cluster-mean fragmentation score for a sweep to fire
+    /// (0.0 = always sweep on cadence).
+    pub threshold: f64,
+    /// Maximum migrations per sweep.
+    pub max_moves: usize,
+    /// Migration cost budget per sweep under `cost` (0 = unlimited).
+    pub cost_budget: u64,
+    pub cost: CostModel,
+}
+
+impl DefragPolicy {
+    /// Sweep every `every` slots, unconditionally, up to 16 moves,
+    /// unlimited cost (builder-style setters refine).
+    pub fn every(every: u64) -> Self {
+        assert!(every > 0, "defrag cadence must be positive");
+        Self {
+            every,
+            threshold: 0.0,
+            max_moves: 16,
+            cost_budget: 0,
+            cost: CostModel::default(),
+        }
+    }
+
+    pub fn with_threshold(mut self, threshold: f64) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    pub fn with_max_moves(mut self, max_moves: usize) -> Self {
+        self.max_moves = max_moves;
+        self
+    }
+
+    pub fn with_cost_budget(mut self, cost_budget: u64) -> Self {
+        self.cost_budget = cost_budget;
+        self
+    }
+}
 
 /// One planned migration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,6 +118,8 @@ pub struct Migration {
     pub to: Placement,
     /// Total-cluster fragmentation-score change of this step (< 0).
     pub delta_f: i32,
+    /// Price of this move under the planning [`CostModel`].
+    pub cost: u64,
 }
 
 /// A defragmentation plan: migrations in application order.
@@ -40,6 +130,10 @@ pub struct MigrationPlan {
     pub f_before: u32,
     /// Cluster total F after applying every move.
     pub f_after: u32,
+    /// Sum of per-move costs under the planning [`CostModel`].
+    pub total_cost: u64,
+    /// Instance memory the plan copies ([`move_bytes`] per move).
+    pub bytes_moved: u64,
 }
 
 impl MigrationPlan {
@@ -64,6 +158,22 @@ pub fn plan_defrag(
     table: &ScoreTable,
     max_migrations: usize,
 ) -> MigrationPlan {
+    plan_defrag_budgeted(cluster, table, max_migrations, &CostModel::default(), 0)
+}
+
+/// [`plan_defrag`] with a migration cost budget: moves whose cumulative
+/// cost (under `cost`) would exceed `cost_budget` are unaffordable and
+/// skipped; the greedy selection among affordable moves is otherwise
+/// unchanged, so `cost_budget == 0` (= unlimited) produces the exact
+/// pure-greedy plan.
+pub fn plan_defrag_budgeted(
+    cluster: &Cluster,
+    table: &ScoreTable,
+    max_migrations: usize,
+    cost: &CostModel,
+    cost_budget: u64,
+) -> MigrationPlan {
+    let hw = cluster.hardware();
     // Work on shadow state: occupancies + the allocation list.
     let mut gpus: Vec<GpuState> = cluster.gpus().to_vec();
     let mut allocs: Vec<(WorkloadId, Placement)> = cluster.allocations().collect();
@@ -71,13 +181,16 @@ pub fn plan_defrag(
 
     let f_before = total_f(&gpus, table);
     let mut current_f = f_before as i64;
-    let mut plan = MigrationPlan { moves: Vec::new(), f_before, f_after: f_before };
+    let mut plan = MigrationPlan { f_before, f_after: f_before, ..MigrationPlan::default() };
 
     for _ in 0..max_migrations {
         // Find the single move with the best (most negative) ΔF_total.
         let mut best: Option<(usize, Placement, i64)> = None; // (alloc idx, target, ΔF)
         for (ai, &(_, from)) in allocs.iter().enumerate() {
             let profile = from.profile;
+            if cost_budget > 0 && plan.total_cost + cost.move_cost(hw, profile) > cost_budget {
+                continue; // unaffordable this sweep
+            }
             // State with the workload lifted out.
             let mut lifted = gpus[from.gpu];
             lifted
@@ -120,7 +233,10 @@ pub fn plan_defrag(
         allocs[ai].1 = to;
         current_f += delta;
         debug_assert_eq!(current_f, total_f(&gpus, table) as i64, "ΔF accounting");
-        plan.moves.push(Migration { workload: wid, from, to, delta_f: delta as i32 });
+        let move_cost = cost.move_cost(hw, from.profile);
+        plan.total_cost += move_cost;
+        plan.bytes_moved += move_bytes(hw, from.profile);
+        plan.moves.push(Migration { workload: wid, from, to, delta_f: delta as i32, cost: move_cost });
     }
     plan.f_after = current_f as u32;
     plan
@@ -259,6 +375,74 @@ mod tests {
             "defrag should free a whole GPU: {:?}",
             cluster.gpus().iter().map(|g| g.diagram()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn zero_cost_budget_is_unlimited_and_matches_greedy() {
+        // The tentpole's bit-identity pin: budget 0 degenerates to the
+        // pure greedy plan — same moves, same order, same final score.
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 1, 0, Profile::P1g10gb, 5);
+        alloc(&mut cluster, 2, 1, Profile::P2g20gb, 2);
+        alloc(&mut cluster, 3, 2, Profile::P1g20gb, 2);
+        let greedy = plan_defrag(&cluster, &table, 16);
+        let budgeted =
+            plan_defrag_budgeted(&cluster, &table, 16, &CostModel::default(), 0);
+        assert!(!greedy.is_empty());
+        assert_eq!(greedy.moves, budgeted.moves);
+        assert_eq!(greedy.f_after, budgeted.f_after);
+        assert_eq!(greedy.total_cost, budgeted.total_cost);
+        assert_eq!(greedy.bytes_moved, budgeted.bytes_moved);
+    }
+
+    #[test]
+    fn cost_budget_filters_unaffordable_moves() {
+        // Unlimited greedy on this cluster makes exactly two moves
+        // (verified against the python-oracle score table): first the
+        // 1g.10gb off gpu0's index 1 (cost 10 GB + 10 downtime = 20),
+        // then the 2g.20gb off gpu1 into gpu2's free window (cost
+        // 20 GB + 10 = 30).
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 1, 0, Profile::P1g10gb, 5);
+        alloc(&mut cluster, 2, 1, Profile::P2g20gb, 2);
+        alloc(&mut cluster, 3, 2, Profile::P1g20gb, 2);
+        let cost = CostModel::default();
+
+        // Budget below the cheapest move: empty plan.
+        let none = plan_defrag_budgeted(&cluster, &table, 16, &cost, 19);
+        assert!(none.is_empty());
+        assert_eq!(none.total_cost, 0);
+
+        // Budget 20 affords only the 1g move; the 2g repair is filtered.
+        let one = plan_defrag_budgeted(&cluster, &table, 16, &cost, 20);
+        assert_eq!(one.moves.len(), 1);
+        assert_eq!(one.moves[0].workload, WorkloadId(0));
+        assert_eq!(one.moves[0].cost, 20);
+        assert_eq!(one.total_cost, 20);
+
+        // Budget 50 affords both: bit-identical to the unlimited plan.
+        let both = plan_defrag_budgeted(&cluster, &table, 16, &cost, 50);
+        let unlimited = plan_defrag(&cluster, &table, 16);
+        assert_eq!(both.moves.len(), 2);
+        assert_eq!(both.moves[1].workload, WorkloadId(2));
+        assert_eq!(both.moves[1].cost, 30);
+        assert_eq!(both.total_cost, 50);
+        assert_eq!(both.moves, unlimited.moves);
+        assert_eq!(both.f_after, unlimited.f_after);
+    }
+
+    #[test]
+    fn plan_accounts_cost_and_bytes_moved() {
+        let (mut cluster, table) = setup();
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        let plan = plan_defrag(&cluster, &table, 16);
+        assert_eq!(plan.moves.len(), 1);
+        // Default model on A100-80GB: 1g.10gb move = 10 GB + 10 downtime.
+        assert_eq!(plan.moves[0].cost, 20);
+        assert_eq!(plan.total_cost, 20);
+        assert_eq!(plan.bytes_moved, 10 * BYTES_PER_GB);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
+use migsched::defrag::DefragPolicy;
 use migsched::prelude::*;
 use migsched::sim::{fig4_report, fig5_report, fig6_report};
 use migsched::sim::experiment::run_sweep;
@@ -78,6 +79,8 @@ COMMANDS:
                   --scheduler MFI|MFI-IDX|FF|RR|BF-BI|WF-BI|...  (default MFI)
                   --distribution uniform|skew-small|skew-big|bimodal
                   --gpus N (default 100)   --seed N   --hardware a100-80gb
+                  [--defrag-every N] [--defrag-threshold F]
+                  [--defrag-moves N] [--defrag-budget COST]
   sweep         full experiment (paper setup: 500 runs x 5 schemes x 4 dists)
                   --runs N   --gpus N   --quick (20 runs, M=20)
                   --out DIR (CSV exports, default results/)
@@ -85,6 +88,8 @@ COMMANDS:
   serve         online serving daemon
                   --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
                   --shards N (disjoint sub-clusters, default 1)   --workers N
+                  [--defrag-every SECS] [--defrag-threshold F]
+                  [--defrag-moves N] [--defrag-budget COST]  (background sweep)
   inspect       --hardware a100-80gb | --distributions | --candidates
   trace ingest  import a real-cluster CSV job log as a canonical trace
                   --format alibaba|philly   --in jobs.csv   --out trace.jsonl
@@ -96,8 +101,10 @@ COMMANDS:
                   --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
                   [--sched MFI|MFI-IDX|...] [--gpus N] [--every N]
                   [--max-events N] [--csv out.csv] [--json]
+                  [--defrag-every N] [--defrag-threshold F]
+                  [--defrag-moves N] [--defrag-budget COST]
   trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
-  trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N]
+  trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N] [--defrag-every N]
   help          this message
 
 Environment: MIGSCHED_LOG=info|debug|trace, MIGSCHED_ARTIFACTS=dir"
@@ -149,6 +156,35 @@ fn flag_u64(flags: &Flags, key: &str, default: u64) -> Result<u64, String> {
     }
 }
 
+fn flag_f64(flags: &Flags, key: &str, default: f64) -> Result<f64, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{key} must be a number, got '{v}'")),
+    }
+}
+
+/// Parse the shared `--defrag-*` flags into a continuous-defrag policy.
+/// `--defrag-every N` turns it on; the refinement knobs are rejected
+/// without it (a silently inert flag would let users attribute results to
+/// a configuration that never ran).
+fn flag_defrag(flags: &Flags) -> Result<Option<DefragPolicy>, String> {
+    let every = flag_u64(flags, "defrag-every", 0)?;
+    if every == 0 {
+        for knob in ["defrag-threshold", "defrag-moves", "defrag-budget"] {
+            if flags.contains_key(knob) {
+                return Err(format!("--{knob} requires --defrag-every N"));
+            }
+        }
+        return Ok(None);
+    }
+    Ok(Some(
+        DefragPolicy::every(every)
+            .with_threshold(flag_f64(flags, "defrag-threshold", 0.0)?)
+            .with_max_moves(flag_usize(flags, "defrag-moves", 16)?)
+            .with_cost_budget(flag_u64(flags, "defrag-budget", 0)?),
+    ))
+}
+
 fn flag_scheduler(flags: &Flags) -> Result<SchedulerKind, String> {
     // `--sched` is the short form used by the trace subcommands.
     let name = flags
@@ -178,7 +214,7 @@ fn cmd_sim(flags: &Flags) -> Result<(), String> {
         distribution: flag_distribution(flags)?,
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: flag_u64(flags, "seed", 1)?,
-        defrag_every: None,
+        defrag: flag_defrag(flags)?,
     };
     let engine = SimEngine::new(config.clone());
     let mut sched = kind.build(&hw);
@@ -214,6 +250,12 @@ fn cmd_sim(flags: &Flags) -> Result<(), String> {
         result.acceptance_rate(),
         result.time_avg_frag
     );
+    if config.defrag.is_some() {
+        println!(
+            "defrag: migrations={} migrated_bytes={}",
+            result.migrations, result.migrated_bytes
+        );
+    }
     Ok(())
 }
 
@@ -285,13 +327,20 @@ fn cmd_figures(flags: &Flags) -> Result<(), String> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<(), String> {
-    use migsched::server::{Daemon, DaemonConfig};
+    use migsched::server::{Daemon, DaemonConfig, DaemonDefrag};
     let config = DaemonConfig {
         hardware: flag_hardware(flags)?,
         num_gpus: flag_usize(flags, "gpus", 100)?,
         scheduler: flag_scheduler(flags)?,
         workers: flag_usize(flags, "workers", 8)?,
         shards: flag_usize(flags, "shards", 1)?,
+        // The daemon interprets the cadence as wall-clock seconds.
+        defrag: flag_defrag(flags)?.map(|p| DaemonDefrag {
+            every_secs: p.every,
+            threshold: p.threshold,
+            max_moves: p.max_moves,
+            cost_budget: p.cost_budget,
+        }),
     };
     if config.shards == 0 || config.shards > config.num_gpus {
         return Err(format!(
@@ -466,6 +515,7 @@ fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
         num_gpus,
         record_every: flag_u64(flags, "every", 0)?,
         max_events: flag_u64(flags, "max-events", 0)?,
+        defrag: flag_defrag(flags)?,
     };
     let mut sched = kind.build(&hw);
     let t0 = std::time::Instant::now();
@@ -536,24 +586,29 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         "gpus",
         (trace.capacity_slices as usize / hw.num_slices()).max(1),
     )?;
+    let defrag = flag_defrag(flags)?;
     let config = SimConfig {
         hardware: hw.clone(),
         num_gpus,
         distribution: Distribution::Uniform, // informational only on replay
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: 0,
-        defrag_every: None,
+        defrag,
     };
-    let engine = SimEngine::new(config);
+    let engine = SimEngine::new(config.clone());
     let mut sched = kind.build(&hw);
     let result = engine.replay_trace(&mut *sched, &trace);
-    let summary = Json::obj()
+    let mut summary = Json::obj()
         .with("trace", path.as_str())
         .with("scheme", result.scheme.as_str())
         .with("accepted", result.accepted)
         .with("arrived", result.arrived)
         .with("acceptance_rate", result.acceptance_rate())
         .with("time_avg_frag", result.time_avg_frag);
+    if config.defrag.is_some() {
+        summary.set("migrations", result.migrations);
+        summary.set("migrated_bytes", result.migrated_bytes);
+    }
     println!("{}", summary.to_string_pretty());
     Ok(())
 }

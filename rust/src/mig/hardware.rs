@@ -76,6 +76,13 @@ impl HardwareModel {
         self.mem_gb_per_slice * NUM_SLICES as u32
     }
 
+    /// Instance memory of one profile on this part (e.g. 3g → 40 GB on
+    /// A100-80GB, 20 GB on A100-40GB) — the migration cost model's
+    /// bytes-moved basis.
+    pub fn profile_mem_gb(&self, p: Profile) -> u32 {
+        p.mem_weight() * self.mem_gb_per_slice
+    }
+
     pub fn total_sms(&self) -> u32 {
         self.total_sms
     }
@@ -155,6 +162,9 @@ mod tests {
             assert_eq!(hw.profile_name(p), p.canonical_name(), "{p:?}");
         }
         assert_eq!(hw.total_memory_gb(), 80);
+        assert_eq!(hw.profile_mem_gb(Profile::P7g80gb), 80);
+        assert_eq!(hw.profile_mem_gb(Profile::P3g40gb), 40);
+        assert_eq!(hw.profile_mem_gb(Profile::P1g10gb), 10);
     }
 
     #[test]

@@ -208,6 +208,8 @@ fn stats(shards: &ShardSet) -> Response {
     let mut capacity = 0u64;
     let mut score_total = 0u64;
     let mut clock = 0u64;
+    let mut migrations = 0u64;
+    let mut migrated_bytes = 0u64;
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
         allocated += s.cluster.allocated_workloads();
@@ -215,6 +217,8 @@ fn stats(shards: &ShardSet) -> Response {
         arrived += s.arrived_total;
         released += s.released_total;
         expired += s.expired_total;
+        migrations += s.migrations_total;
+        migrated_bytes += s.migrated_bytes_total;
         active += s.cluster.active_gpus();
         used += s.cluster.used_slices();
         capacity += s.cluster.capacity_slices();
@@ -237,6 +241,13 @@ fn stats(shards: &ShardSet) -> Response {
     j.set("num_gpus", shards.total_gpus());
     j.set("capacity_slices", capacity);
     j.set("scheduler", shards.scheduler_name());
+    // Emitted only once maintenance has actually migrated something, so a
+    // migration-free daemon's stats stay byte-identical to the legacy
+    // single-mutex serialization (the PR 4 compatibility pin).
+    if migrations > 0 {
+        j.set("migrations_total", migrations);
+        j.set("migrated_bytes_total", migrated_bytes);
+    }
     if shards.num_shards() > 1 {
         j.set("shards", shards.num_shards());
     }
@@ -297,20 +308,23 @@ fn hardware(shards: &ShardSet) -> Response {
     )
 }
 
-/// `POST /v1/maintenance/defrag` — body `{"shard": 0, "max_migrations": 8}`
-/// (both optional: default every shard, budget 16 moves per shard). Runs
-/// the offline greedy planner ([`crate::defrag::plan_defrag`]) under each
-/// target shard's lock and applies it immediately via
-/// [`crate::defrag::apply_plan`] — plan and application happen under the
-/// same lock acquisition, so the plan can never be stale. Returns the move
-/// list (global GPU ids) and the fragmentation-score delta per shard.
+/// `POST /v1/maintenance/defrag` — body `{"shard": 0, "max_migrations": 8,
+/// "cost_budget": 100}` (all optional: default every shard, 16 moves per
+/// shard, unlimited cost). Runs the budgeted greedy planner
+/// ([`crate::defrag::plan_defrag_budgeted`]) under each target shard's
+/// lock and applies it immediately via [`crate::defrag::apply_plan`] —
+/// plan and application happen under the same lock acquisition, so the
+/// plan can never be stale. Returns the move list (global GPU ids) and the
+/// fragmentation-score delta per shard; applied migrations bump the
+/// shard's `migrations_total` / `migrated_bytes_total` gauges in
+/// `/v1/stats`.
 ///
-/// Leases and counters are untouched (migration is not an arrival or a
-/// release); the shard's incremental scheduler observes the moves through
-/// the cluster change log on its next decision (generation-checked
+/// Leases and arrival counters are untouched (migration is not an arrival
+/// or a release); the shard's incremental scheduler observes the moves
+/// through the cluster change log on its next decision (generation-checked
 /// catch-up), so no hook calls are needed here.
 fn defrag(request: &Request, shards: &ShardSet) -> Response {
-    let (target, budget) = match request.body_str() {
+    let (target, budget, cost_budget) = match request.body_str() {
         Ok(b) if !b.trim().is_empty() => match Json::parse(b) {
             Ok(j) => {
                 let target = match j.get("shard") {
@@ -330,30 +344,66 @@ fn defrag(request: &Request, shards: &ShardSet) -> Response {
                 };
                 let budget =
                     j.get("max_migrations").and_then(Json::as_u64).unwrap_or(16) as usize;
-                (target, budget)
+                let cost_budget =
+                    j.get("cost_budget").and_then(Json::as_u64).unwrap_or(0);
+                (target, budget, cost_budget)
             }
             Err(e) => return Response::error(400, &format!("invalid JSON: {e}")),
         },
-        _ => (None, 16usize),
+        _ => (None, 16usize, 0u64),
     };
+    let plan_for = |s: &ShardState, budget: usize, cost_budget: u64| {
+        crate::defrag::plan_defrag_budgeted(
+            &s.cluster,
+            &s.scorer,
+            budget,
+            &crate::defrag::CostModel::default(),
+            cost_budget,
+        )
+    };
+    run_defrag(shards, target, budget, cost_budget, &plan_for)
+}
 
+/// The defrag scatter-gather, with the planner injectable so tests can
+/// force a stale plan mid-gather and pin the partial-failure report shape.
+fn run_defrag(
+    shards: &ShardSet,
+    target: Option<usize>,
+    budget: usize,
+    cost_budget: u64,
+    plan_for: &dyn Fn(&ShardState, usize, u64) -> crate::defrag::MigrationPlan,
+) -> Response {
     let mut reports: Vec<Json> = Vec::new();
     let mut total_delta = 0i64;
     let mut total_moves = 0u64;
+    let mut total_bytes = 0u64;
     for shard in shards.shards() {
         if target.is_some_and(|t| t != shard.index) {
             continue;
         }
         let mut s = shard.state.lock().unwrap();
-        let ShardState { cluster, scorer, .. } = &mut *s;
-        let plan = crate::defrag::plan_defrag(cluster, scorer, budget);
-        if let Err(e) = crate::defrag::apply_plan(cluster, &plan) {
-            // Unreachable (planned and applied under one lock hold), but
-            // surfaced rather than panicking the worker.
-            return Response::error(500, &format!("shard {}: applying plan: {e}", shard.index));
+        let plan = plan_for(&s, budget, cost_budget);
+        if let Err(e) = crate::defrag::apply_plan(&mut s.cluster, &plan) {
+            // Unreachable with the real planner (planned and applied under
+            // one lock hold) — but when a plan does fail, the shards
+            // visited before it HAVE been defragged: report that applied
+            // work alongside the error instead of discarding it.
+            return Response::json(
+                500,
+                &Json::obj()
+                    .with("error", format!("shard {}: applying plan: {e}", shard.index))
+                    .with("budget", budget as u64)
+                    .with("migrations", total_moves)
+                    .with("migrated_bytes", total_bytes)
+                    .with("delta_f", total_delta)
+                    .with("shards", Json::Arr(reports)),
+            );
         }
+        s.migrations_total += plan.moves.len() as u64;
+        s.migrated_bytes_total += plan.bytes_moved;
         total_delta += plan.total_delta();
         total_moves += plan.moves.len() as u64;
+        total_bytes += plan.bytes_moved;
         let moves: Vec<Json> = plan
             .moves
             .iter()
@@ -366,6 +416,7 @@ fn defrag(request: &Request, shards: &ShardSet) -> Response {
                     .with("to_gpu", shard.gpu_offset + mv.to.gpu)
                     .with("to_index", mv.to.index as u64)
                     .with("delta_f", i64::from(mv.delta_f))
+                    .with("cost", mv.cost)
             })
             .collect();
         reports.push(
@@ -374,6 +425,8 @@ fn defrag(request: &Request, shards: &ShardSet) -> Response {
                 .with("f_before", plan.f_before)
                 .with("f_after", plan.f_after)
                 .with("delta_f", plan.total_delta())
+                .with("cost", plan.total_cost)
+                .with("bytes_moved", plan.bytes_moved)
                 .with("moves", Json::Arr(moves)),
         );
     }
@@ -382,6 +435,7 @@ fn defrag(request: &Request, shards: &ShardSet) -> Response {
         &Json::obj()
             .with("budget", budget as u64)
             .with("migrations", total_moves)
+            .with("migrated_bytes", total_bytes)
             .with("delta_f", total_delta)
             .with("shards", Json::Arr(reports)),
     )
@@ -643,7 +697,104 @@ mod tests {
         assert_eq!(r.status, 200);
         let j = json_of(&r);
         assert_eq!(j.req_u64("migrations").unwrap(), 0);
+        assert_eq!(j.req_u64("migrated_bytes").unwrap(), 0);
         assert_eq!(j.get("delta_f").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("shards").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn maintenance_defrag_bumps_stats_counters() {
+        use crate::mig::{Placement, Profile};
+        let state = shard_set();
+        // Before any migration the gauges are absent entirely (the legacy
+        // byte-for-byte stats pin).
+        let before = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        assert!(before.get("migrations_total").is_none());
+        assert!(before.get("migrated_bytes_total").is_none());
+        // A misplaced 1g.10gb (index 1 blocks the 4g anchor, score 12).
+        {
+            let mut s = state.shard(0).unwrap().state.lock().unwrap();
+            s.cluster
+                .allocate(
+                    WorkloadId(0),
+                    Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 },
+                )
+                .unwrap();
+        }
+        let r = dispatch(&req("POST", "/v1/maintenance/defrag", ""), &state);
+        assert_eq!(r.status, 200);
+        let j = json_of(&r);
+        let migrations = j.req_u64("migrations").unwrap();
+        let bytes = j.req_u64("migrated_bytes").unwrap();
+        assert!(migrations >= 1);
+        assert!(bytes > 0);
+        // /v1/stats now carries exactly what maintenance applied.
+        let stats = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        assert_eq!(stats.req_u64("migrations_total").unwrap(), migrations);
+        assert_eq!(stats.req_u64("migrated_bytes_total").unwrap(), bytes);
+    }
+
+    #[test]
+    fn defrag_failure_reports_already_applied_shards() {
+        // Regression: a mid-scatter-gather apply failure used to return a
+        // bare 500, discarding the reports of shards already defragged —
+        // applied migrations were misreported as not-happened.
+        use crate::defrag::{plan_defrag_budgeted, CostModel, Migration, MigrationPlan};
+        use crate::mig::{Placement, Profile};
+        let state = Daemon::new(DaemonConfig {
+            num_gpus: 4,
+            shards: 2,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        // Shard 0 gets a genuinely fragmented sub-cluster.
+        {
+            let mut s = state.shard(0).unwrap().state.lock().unwrap();
+            s.cluster
+                .allocate(
+                    WorkloadId(0),
+                    Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 },
+                )
+                .unwrap();
+        }
+        // Injected planner: the real plan on shard 0 (it hosts workload 0),
+        // a stale plan referencing a never-allocated workload on shard 1.
+        let plan_for = |s: &ShardState, budget: usize, cost_budget: u64| {
+            if s.cluster.placement_of(WorkloadId(0)).is_some() {
+                plan_defrag_budgeted(
+                    &s.cluster,
+                    &s.scorer,
+                    budget,
+                    &CostModel::default(),
+                    cost_budget,
+                )
+            } else {
+                MigrationPlan {
+                    moves: vec![Migration {
+                        workload: WorkloadId(7777),
+                        from: Placement { gpu: 0, profile: Profile::P1g10gb, index: 0 },
+                        to: Placement { gpu: 0, profile: Profile::P1g10gb, index: 2 },
+                        delta_f: -1,
+                        cost: 0,
+                    }],
+                    ..MigrationPlan::default()
+                }
+            }
+        };
+        let r = run_defrag(&state, None, 16, 0, &plan_for);
+        assert_eq!(r.status, 500);
+        let j = json_of(&r);
+        // The error names the failing shard…
+        assert!(j.req_str("error").unwrap().contains("shard 1"), "{:?}", j);
+        // …while the work already applied on shard 0 is reported, not lost.
+        let reports = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].req_u64("shard").unwrap(), 0);
+        assert!(j.req_u64("migrations").unwrap() >= 1);
+        assert!(j.req_u64("migrated_bytes").unwrap() > 0);
+        // Shard 0's gauges agree with the partial report.
+        let s0 = state.shard(0).unwrap().state.lock().unwrap();
+        assert_eq!(s0.migrations_total, j.req_u64("migrations").unwrap());
     }
 }

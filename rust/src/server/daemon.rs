@@ -26,6 +26,23 @@ pub const KEEP_ALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(
 /// Read timeout while receiving the FIRST request of a connection.
 const REQUEST_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
+/// Background continuous-defrag configuration: every `every_secs` the
+/// sweeper visits each shard in index order (one lock at a time — the
+/// same one-lock-hold discipline as the maintenance endpoint) and runs a
+/// threshold-gated, budgeted sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonDefrag {
+    /// Wall-clock sweep cadence in seconds.
+    pub every_secs: u64,
+    /// Minimum shard-mean fragmentation score for a sweep to act
+    /// (0.0 = always sweep on cadence).
+    pub threshold: f64,
+    /// Maximum migrations per shard per sweep.
+    pub max_moves: usize,
+    /// Migration cost budget per shard per sweep (0 = unlimited).
+    pub cost_budget: u64,
+}
+
 /// Daemon configuration.
 #[derive(Clone, Debug)]
 pub struct DaemonConfig {
@@ -38,6 +55,9 @@ pub struct DaemonConfig {
     /// consistent-hash routed). `1` (the default) is the single-mutex
     /// daemon with byte-for-byte identical responses to earlier versions.
     pub shards: usize,
+    /// Background continuous defrag (`None` = the pre-existing behavior:
+    /// migrations only via `POST /v1/maintenance/defrag`).
+    pub defrag: Option<DaemonDefrag>,
 }
 
 impl Default for DaemonConfig {
@@ -48,6 +68,7 @@ impl Default for DaemonConfig {
             scheduler: SchedulerKind::Mfi,
             workers: 8,
             shards: 1,
+            defrag: None,
         }
     }
 }
@@ -103,13 +124,84 @@ impl Daemon {
                 }
             })?;
 
+        let defrag_thread = match self.config.defrag {
+            Some(policy) => Some(
+                std::thread::Builder::new().name("migsched-defrag".into()).spawn({
+                    let shards = Arc::clone(&self.shards);
+                    let shutdown = Arc::clone(&shutdown);
+                    move || background_defrag(shards, policy, shutdown)
+                })?,
+            ),
+            None => None,
+        };
+
         crate::log_info!(
             "serving on {local_addr} ({} GPUs over {} shard(s), scheduler {})",
             self.config.num_gpus,
             self.config.shards,
             self.config.scheduler.name()
         );
-        Ok(ServerHandle { addr: local_addr, shutdown, accept_thread: Some(accept_thread) })
+        if let Some(policy) = &self.config.defrag {
+            crate::log_info!(
+                "background defrag every {}s (threshold {}, max {} move(s), cost budget {})",
+                policy.every_secs,
+                policy.threshold,
+                policy.max_moves,
+                policy.cost_budget
+            );
+        }
+        Ok(ServerHandle {
+            addr: local_addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            defrag_thread,
+        })
+    }
+}
+
+/// The background defrag loop: sleep out the cadence (in short ticks so
+/// shutdown stays prompt), then sweep every shard via
+/// [`ShardState::defrag_sweep`] — one lock at a time, in index order,
+/// exactly the maintenance endpoint's scatter-gather discipline, so the
+/// sweeper never deadlocks with data-plane handlers or `/v1/tick`.
+///
+/// [`ShardState::defrag_sweep`]: super::shard::ShardState::defrag_sweep
+fn background_defrag(
+    shards: Arc<ShardSet>,
+    policy: DaemonDefrag,
+    shutdown: Arc<AtomicBool>,
+) {
+    let tick = std::time::Duration::from_millis(50);
+    'outer: loop {
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(policy.every_secs.max(1));
+        while std::time::Instant::now() < deadline {
+            if shutdown.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            std::thread::sleep(tick);
+        }
+        for shard in shards.shards() {
+            if shutdown.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            let mut s = shard.state.lock().unwrap();
+            match s.defrag_sweep(policy.threshold, policy.max_moves, policy.cost_budget) {
+                Ok(plan) if !plan.is_empty() => {
+                    crate::log_info!(
+                        "defrag shard {}: {} move(s), delta_f {}, {} bytes",
+                        shard.index,
+                        plan.moves.len(),
+                        plan.total_delta(),
+                        plan.bytes_moved
+                    );
+                }
+                Ok(_) => {}
+                // Unreachable (the sweep plans and applies under one lock
+                // hold), but a sweep failure must never kill the daemon.
+                Err(e) => crate::log_warn!("defrag shard {}: {e}", shard.index),
+            }
+        }
     }
 }
 
@@ -215,6 +307,7 @@ pub struct ServerHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    defrag_thread: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -238,12 +331,16 @@ impl ServerHandle {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // The sweeper polls the flag every 50ms, so this join is prompt.
+        if let Some(t) = self.defrag_thread.take() {
+            let _ = t.join();
+        }
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        if self.accept_thread.is_some() {
+        if self.accept_thread.is_some() || self.defrag_thread.is_some() {
             self.shutdown_inner();
         }
     }

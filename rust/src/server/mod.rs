@@ -35,7 +35,7 @@ pub mod shard;
 pub mod threadpool;
 
 pub use client::HttpClient;
-pub use daemon::{Daemon, DaemonConfig, ServerHandle};
+pub use daemon::{Daemon, DaemonConfig, DaemonDefrag, ServerHandle};
 pub use http::{Request, Response};
 pub use shard::{Lease, Shard, ShardRouter, ShardSet, ShardState};
 pub use threadpool::ThreadPool;

@@ -24,7 +24,8 @@ use std::sync::Mutex;
 
 use super::daemon::DaemonConfig;
 use crate::cluster::Cluster;
-use crate::frag::ScoreTable;
+use crate::defrag::{apply_plan, plan_defrag_budgeted, CostModel, MigrationPlan};
+use crate::frag::{FragScorer, ScoreTable};
 use crate::sched::Scheduler;
 use crate::workload::{TenantId, WorkloadId};
 
@@ -54,6 +55,11 @@ pub struct ShardState {
     pub released_total: u64,
     /// Lease expiries observed by `tick` only.
     pub expired_total: u64,
+    /// Defrag migrations applied on this shard (maintenance endpoint and
+    /// the background sweeper both count here).
+    pub migrations_total: u64,
+    /// Instance memory copied by those migrations.
+    pub migrated_bytes_total: u64,
 }
 
 impl ShardState {
@@ -78,6 +84,35 @@ impl ShardState {
             self.expired_total += 1;
         }
         released
+    }
+
+    /// One threshold-gated, budgeted defrag sweep over this shard's
+    /// sub-cluster. The caller holds the shard lock, so the plan is fresh
+    /// by construction and applies atomically from every other handler's
+    /// point of view. Returns the applied plan (empty when the threshold
+    /// gate held the sweep back or the planner found nothing).
+    pub fn defrag_sweep(
+        &mut self,
+        threshold: f64,
+        max_moves: usize,
+        cost_budget: u64,
+    ) -> Result<MigrationPlan, String> {
+        if self.scorer.mean_score(self.cluster.gpus()) < threshold {
+            return Ok(MigrationPlan::default());
+        }
+        let plan = plan_defrag_budgeted(
+            &self.cluster,
+            &self.scorer,
+            max_moves,
+            &CostModel::default(),
+            cost_budget,
+        );
+        if !plan.is_empty() {
+            apply_plan(&mut self.cluster, &plan)?;
+            self.migrations_total += plan.moves.len() as u64;
+            self.migrated_bytes_total += plan.bytes_moved;
+        }
+        Ok(plan)
     }
 }
 
@@ -131,6 +166,8 @@ impl ShardSet {
                 arrived_total: 0,
                 released_total: 0,
                 expired_total: 0,
+                migrations_total: 0,
+                migrated_bytes_total: 0,
             };
             shards.push(Shard { index, gpu_offset: offset, state: Mutex::new(state) });
             offset += size;
@@ -336,6 +373,36 @@ mod tests {
         assert_eq!(s.tick(1), vec![WorkloadId(0)]);
         assert_eq!(s.expired_total, 1);
         assert_eq!(s.cluster.allocated_workloads(), 0);
+    }
+
+    #[test]
+    fn defrag_sweep_repairs_and_counts() {
+        use crate::mig::Placement;
+        let set = ShardSet::new(&config(2, 1));
+        let shard = set.shard(0).unwrap();
+        let mut s = shard.state.lock().unwrap();
+        // A 1g.10gb at index 1 blocks the 4g anchor (score 12).
+        s.cluster
+            .allocate(
+                WorkloadId(0),
+                Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 },
+            )
+            .unwrap();
+        // Threshold above the current mean: the sweep is gated off.
+        let gated = s.defrag_sweep(100.0, 16, 0).unwrap();
+        assert!(gated.is_empty());
+        assert_eq!(s.migrations_total, 0);
+        // Unconditional sweep repairs and bumps both counters.
+        let plan = s.defrag_sweep(0.0, 16, 0).unwrap();
+        assert_eq!(plan.moves.len(), 1);
+        assert_eq!(s.migrations_total, 1);
+        assert_eq!(s.migrated_bytes_total, plan.bytes_moved);
+        assert!(s.migrated_bytes_total > 0);
+        // Nothing left to repair: sweeping again is a counted no-op… of
+        // zero moves, so counters are unchanged.
+        let again = s.defrag_sweep(0.0, 16, 0).unwrap();
+        assert!(again.is_empty());
+        assert_eq!(s.migrations_total, 1);
     }
 
     #[test]

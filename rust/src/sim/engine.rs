@@ -12,6 +12,7 @@
 use std::collections::BinaryHeap;
 
 use crate::cluster::{Cluster, ClusterMetrics};
+use crate::defrag::DefragPolicy;
 use crate::frag::{FragScorer, ScoreTable};
 use crate::mig::HardwareModel;
 use crate::sched::Scheduler;
@@ -28,10 +29,10 @@ pub struct SimConfig {
     /// Demand fractions at which metrics are captured, ascending in (0, 1].
     pub checkpoints: Vec<f64>,
     pub seed: u64,
-    /// Periodic rescheduling (the paper's future-work extension,
-    /// [`crate::defrag`]): every `interval` slots apply a migration plan
-    /// of at most `budget` moves. `None` = paper behavior (no migration).
-    pub defrag_every: Option<(u64, usize)>,
+    /// Continuous rescheduling (the paper's future-work extension,
+    /// [`crate::defrag`]): on the policy's cadence, apply a budgeted
+    /// migration plan. `None` = paper behavior (no migration).
+    pub defrag: Option<DefragPolicy>,
 }
 
 impl SimConfig {
@@ -43,7 +44,7 @@ impl SimConfig {
             distribution,
             checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
             seed,
-            defrag_every: None,
+            defrag: None,
         }
     }
 
@@ -52,10 +53,13 @@ impl SimConfig {
         Self { num_gpus: 10, ..Self::paper(distribution, seed) }
     }
 
-    /// Enable periodic defragmentation (builder style).
+    /// Enable periodic defragmentation (builder style): every `interval`
+    /// slots, a sweep of at most `budget` moves, unconditionally (no
+    /// threshold) and with unlimited cost. Set [`Self::defrag`] directly
+    /// for threshold- or cost-gated policies.
     pub fn with_defrag(mut self, interval: u64, budget: usize) -> Self {
         assert!(interval > 0 && budget > 0);
-        self.defrag_every = Some((interval, budget));
+        self.defrag = Some(DefragPolicy::every(interval).with_max_moves(budget));
         self
     }
 }
@@ -88,8 +92,10 @@ pub struct SimResult {
     pub accepted: u64,
     pub arrived: u64,
     /// Migrations performed by the periodic defragmenter (0 unless
-    /// `SimConfig::defrag_every` is set).
+    /// `SimConfig::defrag` is set).
     pub migrations: u64,
+    /// Instance memory copied by those migrations.
+    pub migrated_bytes: u64,
 }
 
 impl SimResult {
@@ -181,6 +187,7 @@ impl SimEngine {
         let mut frag_sum = 0.0f64;
         let mut next_checkpoint = 0usize;
         let mut migrations = 0u64;
+        let mut migrated_bytes = 0u64;
 
         for w in workloads {
             let t = w.arrival_slot;
@@ -195,17 +202,27 @@ impl SimEngine {
                     .expect("departure of allocated workload");
                 scheduler.on_release(&cluster, freed);
             }
-            // 1b. periodic rescheduling (future-work extension). Migration
+            // 1b. continuous rescheduling (future-work extension). Migration
             // moves go through allocate/release and thus the cluster's
             // change log, so incremental schedulers catch up on their next
             // decision without explicit hook calls here.
-            if let Some((interval, budget)) = self.config.defrag_every {
-                if t > 0 && t % interval == 0 {
-                    let plan = crate::defrag::plan_defrag(&cluster, &scorer, budget);
+            if let Some(policy) = &self.config.defrag {
+                if t > 0
+                    && t % policy.every == 0
+                    && scorer.mean_score(cluster.gpus()) >= policy.threshold
+                {
+                    let plan = crate::defrag::plan_defrag_budgeted(
+                        &cluster,
+                        &scorer,
+                        policy.max_moves,
+                        &policy.cost,
+                        policy.cost_budget,
+                    );
                     if !plan.is_empty() {
                         migrations +=
                             crate::defrag::apply_plan(&mut cluster, &plan)
                                 .expect("fresh plan applies") as u64;
+                        migrated_bytes += plan.bytes_moved;
                     }
                 }
             }
@@ -245,6 +262,7 @@ impl SimEngine {
             accepted,
             arrived,
             migrations,
+            migrated_bytes,
         }
     }
 
@@ -368,6 +386,52 @@ mod tests {
         let replayed = engine.replay_trace(&mut *b, &trace);
         assert_eq!(direct.accepted, replayed.accepted);
         assert_eq!(direct.time_avg_frag, replayed.time_avg_frag);
+    }
+
+    #[test]
+    fn budgeted_defrag_recovers_a_rejected_full_gpu_request() {
+        // Engine twin of the replay-level scenario (one arrival per slot):
+        // slot-6/8/9 departures strand w1+w3 on GPU 0 and w4 on GPU 1, so
+        // the 7g.80gb arriving at slot 10 is rejected under FF — unless
+        // the slot-10 sweep consolidates first. Verified against the
+        // python-oracle mirror of the greedy planner: one move, w4
+        // (2g.20gb) into GPU 0's free window at index 0, empties GPU 1.
+        use crate::defrag::BYTES_PER_GB;
+        use crate::mig::Profile;
+        use crate::workload::spec::{TenantId, Workload};
+        use crate::workload::WorkloadId;
+        let mk = |id: u64, profile, arrival: u64, dur: u64| Workload {
+            id: WorkloadId(id),
+            tenant: TenantId(0),
+            profile,
+            arrival_slot: arrival,
+            duration_slots: dur,
+        };
+        let ws = [
+            mk(0, Profile::P2g20gb, 0, 6),
+            mk(1, Profile::P2g20gb, 1, 100),
+            mk(2, Profile::P2g20gb, 2, 6),
+            mk(3, Profile::P1g20gb, 3, 100),
+            mk(4, Profile::P2g20gb, 4, 100),
+            mk(5, Profile::P2g20gb, 5, 4),
+            mk(6, Profile::P7g80gb, 10, 5),
+        ];
+        let base = SimConfig { num_gpus: 2, ..SimConfig::paper(Distribution::Uniform, 0) };
+
+        let engine = SimEngine::new(base.clone());
+        let mut ff = SchedulerKind::Ff.build(&base.hardware);
+        let plain = engine.replay(&mut *ff, &ws);
+        assert_eq!(plain.accepted, 6, "7g must be rejected without defrag");
+        assert_eq!(plain.migrations, 0);
+        assert_eq!(plain.migrated_bytes, 0);
+
+        let engine = SimEngine::new(base.with_defrag(10, 16));
+        let mut ff = SchedulerKind::Ff.build(&HardwareModel::a100_80gb());
+        let r = engine.replay(&mut *ff, &ws);
+        assert_eq!(r.accepted, 7, "slot-10 sweep consolidates, 7g fits");
+        assert_eq!(r.migrations, 1);
+        // w4 (2g.20gb): 20 GB on A100-80GB.
+        assert_eq!(r.migrated_bytes, 20 * BYTES_PER_GB);
     }
 
     #[test]

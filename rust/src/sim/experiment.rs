@@ -205,7 +205,7 @@ pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
                             distribution: distribution.clone(),
                             checkpoints: config.checkpoints.clone(),
                             seed: run_seeds[run],
-                            defrag_every: None,
+                            defrag: None,
                         };
                         let engine = SimEngine::new(sim_cfg);
                         let mut sched = scheme.build(&config.hardware);

@@ -25,6 +25,7 @@
 use std::collections::BinaryHeap;
 
 use crate::cluster::{Cluster, ClusterMetrics};
+use crate::defrag::DefragPolicy;
 use crate::frag::{FragScorer, ScoreTable};
 use crate::mig::HardwareModel;
 use crate::sched::Scheduler;
@@ -43,6 +44,9 @@ pub struct ReplayConfig {
     /// Stop after this many arrivals (0 = the whole trace) — the CI smoke
     /// uses a bounded prefix of the bundled trace.
     pub max_events: u64,
+    /// Continuous defragmentation policy applied during the replay
+    /// (`None` = no migrations, the pre-existing behavior).
+    pub defrag: Option<DefragPolicy>,
 }
 
 impl ReplayConfig {
@@ -52,6 +56,7 @@ impl ReplayConfig {
             num_gpus,
             record_every: 0,
             max_events: 0,
+            defrag: None,
         }
     }
 }
@@ -81,6 +86,17 @@ pub struct ReplayResult {
     pub peak_active_gpus: usize,
     /// First..=last slot touched by the replayed prefix.
     pub span_slots: u64,
+    /// Migrations performed by the continuous defragmenter (0 unless
+    /// [`ReplayConfig::defrag`] is set).
+    pub migrations: u64,
+    /// Instance memory copied by those migrations.
+    pub migrated_bytes: u64,
+    /// Sweeps that fired (cadence reached with fragmentation at or above
+    /// the policy threshold), including sweeps that found no moves.
+    pub defrag_sweeps: u64,
+    /// Whether a defrag policy was configured — gates the migration keys
+    /// in [`Self::to_json`] so defrag-disabled output stays byte-identical.
+    pub defrag_enabled: bool,
 }
 
 impl ReplayResult {
@@ -93,13 +109,15 @@ impl ReplayResult {
     }
 
     /// Counter conservation: every arrival was either accepted or
-    /// rejected. Drivers and CI smoke assert this.
+    /// rejected, and migrations only happen when a policy asked for them.
+    /// Drivers and CI smoke assert this.
     pub fn conserved(&self) -> bool {
         self.arrived == self.accepted + self.rejected
+            && (self.defrag_enabled || self.migrations == 0)
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .with("scheme", self.scheme.as_str())
             .with("arrived", self.arrived)
             .with("accepted", self.accepted)
@@ -108,8 +126,13 @@ impl ReplayResult {
             .with("conserved", self.conserved())
             .with("time_avg_frag", self.time_avg_frag)
             .with("peak_active_gpus", self.peak_active_gpus)
-            .with("span_slots", self.span_slots)
-            .with("final", self.final_metrics.to_json())
+            .with("span_slots", self.span_slots);
+        if self.defrag_enabled {
+            j.set("migrations", self.migrations);
+            j.set("migrated_bytes", self.migrated_bytes);
+            j.set("defrag_sweeps", self.defrag_sweeps);
+        }
+        j.with("final", self.final_metrics.to_json())
     }
 }
 
@@ -154,6 +177,10 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
     let mut integrated_to = first_slot;
     let mut peak_active = 0usize;
     let mut last_recorded: Option<u64> = None;
+    let mut migrations = 0u64;
+    let mut migrated_bytes = 0u64;
+    let mut defrag_sweeps = 0u64;
+    let mut last_defrag = first_slot;
 
     let mut i = 0usize;
     while i < arrivals.len() {
@@ -180,6 +207,37 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         }
         frag_weighted_sum += frag_now * (t - integrated_to) as f64;
         integrated_to = t;
+        // 1b. Continuous defrag: once the cadence elapses and the cluster-
+        // mean fragmentation is at or above the policy threshold, apply one
+        // budgeted sweep before this slot's arrivals. Migration moves go
+        // through allocate/release and thus the cluster's change log, so
+        // incremental schedulers catch up on their next decision without
+        // explicit hook calls here.
+        if let Some(policy) = &config.defrag {
+            if t >= last_defrag + policy.every && frag_now >= policy.threshold {
+                let plan = crate::defrag::plan_defrag_budgeted(
+                    &cluster,
+                    &scorer,
+                    policy.max_moves,
+                    &policy.cost,
+                    policy.cost_budget,
+                );
+                if !plan.is_empty() {
+                    let live_before = cluster.allocated_workloads();
+                    migrations += crate::defrag::apply_plan(&mut cluster, &plan)
+                        .expect("fresh plan applies") as u64;
+                    migrated_bytes += plan.bytes_moved;
+                    debug_assert_eq!(
+                        cluster.allocated_workloads(),
+                        live_before,
+                        "defrag must not create or drop allocations"
+                    );
+                    frag_now = scorer.mean_score(cluster.gpus());
+                }
+                last_defrag = t;
+                defrag_sweeps += 1;
+            }
+        }
         // 2. Every arrival of this slot, FIFO, open-loop.
         while i < arrivals.len() && arrivals[i].arrival_slot == t {
             let w = &arrivals[i];
@@ -229,6 +287,10 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         time_avg_frag: if span == 0 { 0.0 } else { frag_weighted_sum / span as f64 },
         peak_active_gpus: peak_active,
         span_slots: span,
+        migrations,
+        migrated_bytes,
+        defrag_sweeps,
+        defrag_enabled: config.defrag.is_some(),
     }
 }
 
@@ -334,6 +396,142 @@ mod tests {
         for (sa, sb) in ra.samples.iter().zip(&rb.samples) {
             assert_eq!(sa.metrics, sb.metrics, "slot {}", sa.slot);
         }
+    }
+
+    /// Two A100s under FF, built so that slot-3 departures strand w1+w3 on
+    /// GPU 0 and w4 on GPU 1: neither GPU can host the 7g.80gb that
+    /// arrives at slot 10 — unless defrag consolidates first. Verified
+    /// against the python-oracle mirror of the greedy planner: the slot-10
+    /// sweep makes a single move, w4 (2g.20gb) from GPU 1 into GPU 0's
+    /// free window at index 0 (ΔF = −20), emptying GPU 1 for the 7g.
+    fn fragmenting_trace() -> Trace {
+        trace_of(&[
+            w(0, Profile::P2g20gb, 0, 3),
+            w(1, Profile::P2g20gb, 0, 100),
+            w(2, Profile::P2g20gb, 0, 3),
+            w(3, Profile::P1g20gb, 0, 100),
+            w(4, Profile::P2g20gb, 0, 100),
+            w(5, Profile::P2g20gb, 0, 3),
+            w(6, Profile::P7g80gb, 10, 5),
+        ])
+    }
+
+    fn run_ff(cfg: &ReplayConfig) -> ReplayResult {
+        let mut s = SchedulerKind::Ff.build(&HardwareModel::a100_80gb());
+        run(&fragmenting_trace(), &mut *s, cfg)
+    }
+
+    #[test]
+    fn defrag_recovers_a_rejected_full_gpu_request() {
+        use crate::defrag::{DefragPolicy, BYTES_PER_GB};
+        let plain = run_ff(&ReplayConfig::new(2));
+        assert_eq!(plain.accepted, 6, "7g must be rejected without defrag");
+        assert_eq!(plain.migrations, 0);
+        assert!(!plain.defrag_enabled);
+        assert!(plain.conserved());
+
+        let cfg = ReplayConfig {
+            defrag: Some(DefragPolicy::every(5)),
+            ..ReplayConfig::new(2)
+        };
+        let defragged = run_ff(&cfg);
+        assert_eq!(defragged.accepted, 7, "defrag consolidates, 7g fits");
+        assert_eq!(defragged.migrations, 1);
+        // w4 (2g.20gb): 20 GB on A100-80GB.
+        assert_eq!(defragged.migrated_bytes, 20 * BYTES_PER_GB);
+        assert_eq!(defragged.defrag_sweeps, 1);
+        assert!(defragged.defrag_enabled);
+        assert!(defragged.conserved());
+    }
+
+    #[test]
+    fn defrag_threshold_gates_the_sweep() {
+        use crate::defrag::DefragPolicy;
+        // Post-departure cluster mean score is (12 + 8) / 2 = 10: a
+        // threshold just above it must suppress the sweep entirely.
+        let cfg = ReplayConfig {
+            defrag: Some(DefragPolicy::every(5).with_threshold(11.0)),
+            ..ReplayConfig::new(2)
+        };
+        let r = run_ff(&cfg);
+        assert_eq!(r.defrag_sweeps, 0);
+        assert_eq!(r.migrations, 0);
+        assert_eq!(r.accepted, 6);
+        assert!(r.conserved());
+    }
+
+    #[test]
+    fn defrag_cost_budget_limits_the_sweep() {
+        use crate::defrag::{DefragPolicy, BYTES_PER_GB};
+        // Every stranded allocation prices at 20 GB + 10 downtime = 30
+        // units. Budget 20 makes all of them unaffordable: the sweep fires
+        // but moves nothing, and the 7g stays rejected.
+        let starved = run_ff(&ReplayConfig {
+            defrag: Some(DefragPolicy::every(5).with_cost_budget(20)),
+            ..ReplayConfig::new(2)
+        });
+        assert_eq!(starved.defrag_sweeps, 1);
+        assert_eq!(starved.migrations, 0);
+        assert_eq!(starved.migrated_bytes, 0);
+        assert_eq!(starved.accepted, 6, "no affordable move, no recovery");
+        assert!(starved.conserved());
+
+        // Budget 30 affords exactly the one consolidating move the
+        // unlimited planner makes, so the 7g is recovered at cost 30.
+        let r = run_ff(&ReplayConfig {
+            defrag: Some(DefragPolicy::every(5).with_cost_budget(30)),
+            ..ReplayConfig::new(2)
+        });
+        assert_eq!(r.migrations, 1);
+        assert_eq!(r.migrated_bytes, 20 * BYTES_PER_GB);
+        assert_eq!(r.accepted, 7);
+        assert!(r.conserved());
+    }
+
+    #[test]
+    fn mfi_and_indexed_mfi_agree_under_interleaved_defrag() {
+        use crate::defrag::DefragPolicy;
+        use crate::util::rng::Rng;
+        use crate::workload::{Distribution, WorkloadGenerator};
+        // Migrations flow through the cluster change log; the generation-
+        // checked catch-up contract must keep MFI-IDX placement-identical.
+        let gen = WorkloadGenerator::new(Distribution::Bimodal).with_tenants(7);
+        let ws = gen.generate_stream(600, 0.35, 40, &mut Rng::new(43));
+        let t = trace_of(&ws);
+        let hw = HardwareModel::a100_80gb();
+        let mut a = SchedulerKind::Mfi.build(&hw);
+        let mut b = SchedulerKind::MfiIdx.build(&hw);
+        let cfg = ReplayConfig {
+            defrag: Some(DefragPolicy::every(7).with_max_moves(4)),
+            ..ReplayConfig::new(6)
+        };
+        let ra = run(&t, &mut *a, &cfg);
+        let rb = run(&t, &mut *b, &cfg);
+        assert_eq!(ra.accepted, rb.accepted);
+        assert_eq!(ra.rejected, rb.rejected);
+        assert_eq!(ra.migrations, rb.migrations);
+        assert_eq!(ra.migrated_bytes, rb.migrated_bytes);
+        assert_eq!(ra.time_avg_frag, rb.time_avg_frag);
+        for (sa, sb) in ra.samples.iter().zip(&rb.samples) {
+            assert_eq!(sa.metrics, sb.metrics, "slot {}", sa.slot);
+        }
+    }
+
+    #[test]
+    fn defrag_json_keys_are_gated_on_the_policy() {
+        use crate::defrag::DefragPolicy;
+        let plain = run_ff(&ReplayConfig::new(2)).to_json();
+        assert!(plain.get("migrations").is_none(), "disabled output unchanged");
+        assert!(plain.get("migrated_bytes").is_none());
+
+        let cfg = ReplayConfig {
+            defrag: Some(DefragPolicy::every(5)),
+            ..ReplayConfig::new(2)
+        };
+        let j = run_ff(&cfg).to_json();
+        assert_eq!(j.req_u64("migrations").unwrap(), 1);
+        assert!(j.req_u64("migrated_bytes").unwrap() > 0);
+        assert_eq!(j.req_u64("defrag_sweeps").unwrap(), 1);
     }
 
     #[test]

@@ -168,6 +168,99 @@ fn trace_ingest_stats_replay_workflow() {
 }
 
 #[test]
+fn trace_replay_defrag_flags_recover_acceptance() {
+    use migsched::mig::Profile;
+    use migsched::workload::{TenantId, Trace, Workload, WorkloadId};
+    let dir = std::env::temp_dir().join(format!("migsched-cli-defrag-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("frag.jsonl");
+
+    // The deterministic consolidation scenario from the replay unit
+    // tests: under FF on 2 GPUs the slot-3 departures strand a 2g + a
+    // 1g.20gb on one GPU and a 2g on the other, so the 7g.80gb arriving
+    // at slot 10 is rejected — unless a defrag sweep consolidates first.
+    let w = |id: u64, profile, arrival: u64, dur: u64| Workload {
+        id: WorkloadId(id),
+        tenant: TenantId(0),
+        profile,
+        arrival_slot: arrival,
+        duration_slots: dur,
+    };
+    let trace = Trace::from_workloads(
+        "cli defrag",
+        64,
+        &[
+            w(0, Profile::P2g20gb, 0, 3),
+            w(1, Profile::P2g20gb, 0, 100),
+            w(2, Profile::P2g20gb, 0, 3),
+            w(3, Profile::P1g20gb, 0, 100),
+            w(4, Profile::P2g20gb, 0, 100),
+            w(5, Profile::P2g20gb, 0, 3),
+            w(6, Profile::P7g80gb, 10, 5),
+        ],
+    );
+    trace.save(&path).unwrap();
+    let field = |stdout: &str, key: &str| -> u64 {
+        let pat = format!("\"{key}\"");
+        let line = stdout
+            .lines()
+            .find(|l| l.trim_start().starts_with(&pat))
+            .unwrap_or_else(|| panic!("no {key} field in {stdout}"));
+        line.trim()
+            .trim_start_matches(&pat)
+            .trim_start_matches(':')
+            .trim()
+            .trim_end_matches(',')
+            .parse()
+            .unwrap()
+    };
+
+    // Baseline: no defrag flags → the full-GPU request is lost and the
+    // output carries no migration keys (byte-stable legacy shape).
+    let (stdout, stderr, ok) = migsched(&[
+        "trace", "replay", "--trace", path.to_str().unwrap(), "--sched", "ff",
+        "--gpus", "2", "--json",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert_eq!(field(&stdout, "accepted"), 6);
+    assert!(!stdout.contains("\"migrations\""), "{stdout}");
+
+    // With the sweep enabled the 7g fits and the migrations are reported.
+    let (stdout, stderr, ok) = migsched(&[
+        "trace", "replay", "--trace", path.to_str().unwrap(), "--sched", "ff",
+        "--gpus", "2", "--defrag-every", "5", "--json",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert_eq!(field(&stdout, "accepted"), 7);
+    assert_eq!(field(&stdout, "migrations"), 1);
+    assert!(field(&stdout, "migrated_bytes") > 0);
+    assert!(stdout.contains("\"conserved\": true"), "{stdout}");
+
+    // Refinement knobs without --defrag-every are an error, not a no-op.
+    let (_, stderr, ok) = migsched(&[
+        "trace", "replay", "--trace", path.to_str().unwrap(), "--defrag-budget", "40",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--defrag-budget requires --defrag-every"), "{stderr}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sim_defrag_flags_report_migrations() {
+    let (stdout, stderr, ok) = migsched(&[
+        "sim", "--gpus", "8", "--seed", "7", "--scheduler", "FF",
+        "--defrag-every", "10",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("defrag: migrations="), "{stdout}");
+    // Without the flag the line stays out of the report.
+    let (stdout, _, ok) = migsched(&["sim", "--gpus", "8", "--seed", "7", "--scheduler", "FF"]);
+    assert!(ok);
+    assert!(!stdout.contains("defrag:"), "{stdout}");
+}
+
+#[test]
 fn trace_subcommand_errors_are_friendly() {
     let (_, stderr, ok) = migsched(&["trace"]);
     assert!(!ok);

@@ -288,6 +288,70 @@ fn prop_mfi_placement_is_exhaustive_argmin() {
 }
 
 #[test]
+fn prop_replay_with_defrag_conserves_and_index_stays_identical() {
+    // Continuous defrag must never break counter conservation, never
+    // create or lose allocations, and — because migrations flow through
+    // the cluster change log — must leave MFI and MFI-IDX
+    // placement-identical on any stream, cadence and budget.
+    use migsched::defrag::DefragPolicy;
+    use migsched::sim::replay::{self, ReplayConfig};
+    use migsched::workload::Trace;
+    forall(
+        "replay-defrag",
+        |rng| {
+            (
+                rng.next_u64(),
+                2 + rng.index(5),            // gpus
+                2 + rng.index(10) as u64,    // sweep cadence
+                rng.index(4) as u64 * 40,    // cost budget (0 = unlimited)
+            )
+        },
+        |&(seed, gpus, every, budget)| {
+            let gen = WorkloadGenerator::new(Distribution::Bimodal).with_tenants(5);
+            let ws = gen.generate_stream(120, 0.6, 25, &mut Rng::new(seed));
+            let trace = Trace::from_workloads("prop defrag", 64, &ws);
+            let hw = HardwareModel::a100_80gb();
+            let cfg = ReplayConfig {
+                defrag: Some(
+                    DefragPolicy::every(every).with_max_moves(8).with_cost_budget(budget),
+                ),
+                ..ReplayConfig::new(gpus)
+            };
+            let mut mfi = SchedulerKind::Mfi.build(&hw);
+            let ra = replay::run(&trace, &mut *mfi, &cfg);
+            if !ra.conserved() {
+                return Err(format!(
+                    "MFI: arrived {} != accepted {} + rejected {}",
+                    ra.arrived, ra.accepted, ra.rejected
+                ));
+            }
+            let mut idx = SchedulerKind::MfiIdx.build(&hw);
+            let rb = replay::run(&trace, &mut *idx, &cfg);
+            if (ra.accepted, ra.rejected, ra.migrations, ra.migrated_bytes)
+                != (rb.accepted, rb.rejected, rb.migrations, rb.migrated_bytes)
+            {
+                return Err(format!(
+                    "MFI vs MFI-IDX diverged under defrag: \
+                     ({}, {}, {}, {}) vs ({}, {}, {}, {})",
+                    ra.accepted,
+                    ra.rejected,
+                    ra.migrations,
+                    ra.migrated_bytes,
+                    rb.accepted,
+                    rb.rejected,
+                    rb.migrations,
+                    rb.migrated_bytes
+                ));
+            }
+            if ra.time_avg_frag != rb.time_avg_frag {
+                return Err("frag trajectories diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_slices_conserved_during_sim() {
     // At every checkpoint: utilization × capacity == Σ profile sizes of
     // currently allocated workloads ≤ capacity.
