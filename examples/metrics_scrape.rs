@@ -1,0 +1,114 @@
+//! Observability demo: boots the serving daemon, replays a multi-tenant
+//! workload stream against it from a background thread, and concurrently
+//! scrapes `GET /metrics` the way a Prometheus server would — printing a
+//! compact dashboard line per scrape, then a final snapshot of the
+//! exposition's headline families.
+//!
+//! Run: `cargo run --release --example metrics_scrape -- [requests]`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use migsched::prelude::*;
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::json::Json;
+
+/// Sum of every sample of `family` in an exposition (histogram series are
+/// excluded by exact-name matching).
+fn family_sum(text: &str, family: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter_map(|l| {
+            let (name_labels, value) = l.rsplit_once(' ')?;
+            let name = name_labels.split('{').next().unwrap();
+            (name == family).then(|| value.parse::<f64>().unwrap())
+        })
+        .sum()
+}
+
+fn main() {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(600);
+
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 16,
+        scheduler: SchedulerKind::MfiIdx,
+        workers: 4,
+        shards: 2,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    println!("daemon up on http://{addr} — scrape target: GET /metrics\n");
+
+    // Load generator: a bursty multi-tenant stream replayed over HTTP in
+    // the background, the same way serving_daemon.rs drives the fleet.
+    let done = Arc::new(AtomicBool::new(false));
+    let load = {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let client = HttpClient::new(&addr);
+            let mut rng = Rng::new(7);
+            let gen = WorkloadGenerator::new(Distribution::Bimodal).with_tenants(8);
+            let stream = gen.generate_stream(n_requests, 1.0, 60, &mut rng);
+            let mut clock = 0u64;
+            for w in &stream {
+                if w.arrival_slot > clock {
+                    let delta = w.arrival_slot - clock;
+                    client.post_json("/v1/tick", &Json::obj().with("slots", delta)).ok();
+                    clock = w.arrival_slot;
+                }
+                let body = Json::obj()
+                    .with("profile", w.profile.canonical_name())
+                    .with("tenant", w.tenant.0 as u64)
+                    .with("duration_slots", w.duration_slots);
+                client.post_json("/v1/workloads", &body).expect("submit");
+            }
+            done.store(true, Ordering::Relaxed);
+        })
+    };
+
+    // The "Prometheus server": poll /metrics while the load runs.
+    let scraper = HttpClient::new(&addr);
+    println!("  scrape   submits  accepted  utilization   decisions");
+    let mut scrapes = 0u64;
+    while !done.load(Ordering::Relaxed) {
+        let r = scraper.get("/metrics").expect("scrape");
+        assert_eq!(r.status, 200);
+        scrapes += 1;
+        println!(
+            "{scrapes:>8} {:>9} {:>9} {:>12.3} {:>11}",
+            family_sum(&r.body, "migsched_submits_total"),
+            family_sum(&r.body, "migsched_accepted_total"),
+            family_sum(&r.body, "migsched_utilization"),
+            // _count samples of the per-shard decision histogram.
+            family_sum(&r.body, "migsched_sched_decision_seconds_count"),
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    load.join().unwrap();
+
+    // Final snapshot: print the headline families verbatim, the way they
+    // arrive at a scraper.
+    let text = scraper.get("/metrics").expect("final scrape").body;
+    println!("\n=== final exposition (headline families) ===");
+    for line in text.lines() {
+        let keep = [
+            "migsched_submits_total",
+            "migsched_accepted_total",
+            "migsched_http_requests_total",
+            "migsched_http_responses_total",
+            "migsched_utilization",
+            "migsched_mean_frag_score",
+            "migsched_uptime_seconds",
+        ]
+        .iter()
+        .any(|f| line.contains(f));
+        if keep {
+            println!("{line}");
+        }
+    }
+    handle.shutdown();
+}

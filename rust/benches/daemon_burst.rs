@@ -9,13 +9,24 @@
 //! routing buys once the per-request work no longer serializes on one
 //! lock. The run is recorded machine-readably in `BENCH_daemon.json` at
 //! the repository root (schema: `{format, bench, quick_mode, gpus,
-//! clients, submits_per_config, results: [{shards, workers, requests,
-//! wall_ms, reqs_per_sec}]}`).
+//! clients, submits_per_config, hist_record_ns, results: [{shards,
+//! workers, requests, wall_ms, reqs_per_sec,
+//! latency_us: {p50, p90, p99}}]}`).
+//!
+//! Client-side per-request latency is recorded into an
+//! [`migsched::obs::hist::LatencyHist`] shared across the client threads —
+//! the same lock-free structure the daemon itself uses on its hot path, so
+//! this run doubles as the observability overhead check: `hist_record_ns`
+//! is the measured cost of one `record_ns` call (a bucket-index
+//! computation plus two relaxed atomic adds, tens of nanoseconds), which
+//! against the ~100µs-scale request latencies below keeps the
+//! instrumentation overhead well under the 5% budget.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use migsched::obs::hist::{HistSnapshot, LatencyHist};
 use migsched::sched::SchedulerKind;
 use migsched::server::{Daemon, DaemonConfig, HttpClient};
 use migsched::util::bench::quick_mode;
@@ -23,8 +34,29 @@ use migsched::util::json::Json;
 
 const GPUS: usize = 64;
 
-/// Run one configuration; returns (total HTTP requests, wall seconds).
-fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usize, f64) {
+/// Time ~1M `record_ns` calls: the per-call cost of the daemon's hot-path
+/// instrumentation, reported as `hist_record_ns` in the JSON artifact.
+fn measure_hist_record_ns() -> f64 {
+    let h = LatencyHist::new();
+    const N: u64 = 1_000_000;
+    let t0 = Instant::now();
+    for i in 0..N {
+        // Vary the value so the bucket index is not branch-predicted away.
+        h.record_ns(1 + (i % 97) * 1_013);
+    }
+    let elapsed = t0.elapsed().as_nanos() as f64 / N as f64;
+    assert_eq!(h.snapshot().count(), N, "every record lands in a bucket");
+    elapsed
+}
+
+/// Run one configuration; returns (total HTTP requests, wall seconds,
+/// client-observed per-request latency histogram).
+fn burst(
+    shards: usize,
+    workers: usize,
+    clients: usize,
+    submits: usize,
+) -> (usize, f64, HistSnapshot) {
     let daemon = Daemon::new(DaemonConfig {
         num_gpus: GPUS,
         scheduler: SchedulerKind::MfiIdx,
@@ -35,11 +67,13 @@ fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usiz
     let handle = daemon.serve("127.0.0.1:0").expect("bind ephemeral port");
     let addr = handle.addr().to_string();
     let next = Arc::new(AtomicUsize::new(0));
+    let latency = Arc::new(LatencyHist::new());
     let t0 = Instant::now();
     let threads: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
             let next = Arc::clone(&next);
+            let latency = Arc::clone(&latency);
             std::thread::spawn(move || -> usize {
                 let client = HttpClient::new(&addr);
                 let mut ops = 0usize;
@@ -50,12 +84,14 @@ fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usiz
                         break;
                     }
                     let tenant = (c * 131 + i % 17) as u64;
+                    let started = Instant::now();
                     let r = client
                         .post_json(
                             "/v1/workloads",
                             &Json::obj().with("profile", "1g.10gb").with("tenant", tenant),
                         )
                         .expect("submit");
+                    latency.record(started.elapsed());
                     ops += 1;
                     match r.status {
                         201 => live.push(r.json().unwrap().req_u64("id").unwrap()),
@@ -66,7 +102,9 @@ fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usiz
                     // our backlog so submits keep finding free anchors.
                     if live.len() > 8 {
                         let id = live.remove(0);
+                        let started = Instant::now();
                         client.delete(&format!("/v1/workloads/{id}")).expect("release");
+                        latency.record(started.elapsed());
                         ops += 1;
                     }
                 }
@@ -82,7 +120,7 @@ fn burst(shards: usize, workers: usize, clients: usize, submits: usize) -> (usiz
     let total_ops: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
     let wall = t0.elapsed().as_secs_f64();
     handle.shutdown();
-    (total_ops, wall)
+    (total_ops, wall, latency.snapshot())
 }
 
 fn main() {
@@ -94,11 +132,18 @@ fn main() {
     let mut rps_by_key: Vec<(usize, usize, f64)> = Vec::new();
     for &shards in &[1usize, 4, 16] {
         for &workers in &[1usize, 8] {
-            let (ops, wall) = burst(shards, workers, clients, submits);
+            let (ops, wall, lat) = burst(shards, workers, clients, submits);
             let rps = ops as f64 / wall;
+            // Client-observed request latency percentiles, in microseconds.
+            let (p50, p90, p99) = (
+                lat.percentile(50.0) * 1e6,
+                lat.percentile(90.0) * 1e6,
+                lat.percentile(99.0) * 1e6,
+            );
             println!(
                 "  shards={shards:<2} workers={workers}: {rps:>9.0} req/s \
-                 ({ops} requests in {:.0} ms)",
+                 ({ops} requests in {:.0} ms) \
+                 p50={p50:.0}us p90={p90:.0}us p99={p99:.0}us",
                 wall * 1e3
             );
             rps_by_key.push((shards, workers, rps));
@@ -108,7 +153,11 @@ fn main() {
                     .with("workers", workers)
                     .with("requests", ops as u64)
                     .with("wall_ms", wall * 1e3)
-                    .with("reqs_per_sec", rps),
+                    .with("reqs_per_sec", rps)
+                    .with(
+                        "latency_us",
+                        Json::obj().with("p50", p50).with("p90", p90).with("p99", p99),
+                    ),
             );
         }
     }
@@ -123,6 +172,9 @@ fn main() {
         );
     }
 
+    let hist_record_ns = measure_hist_record_ns();
+    println!("hot-path hist record cost: {hist_record_ns:.1} ns/record");
+
     let doc = Json::obj()
         .with("format", "migsched-bench-daemon-v1")
         .with("bench", "daemon_burst")
@@ -130,6 +182,7 @@ fn main() {
         .with("gpus", GPUS as u64)
         .with("clients", clients as u64)
         .with("submits_per_config", submits as u64)
+        .with("hist_record_ns", hist_record_ns)
         .with("results", Json::Arr(results));
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_daemon.json");
     match std::fs::write(&path, doc.to_string_pretty()) {

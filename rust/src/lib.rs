@@ -21,7 +21,8 @@
 //! baseline schedulers ([`sched`]), the Table II workload distributions and
 //! trace tooling ([`workload`]), the slot-based Monte Carlo simulator and
 //! the experiment/figure harness ([`sim`]), an online serving daemon with a
-//! JSON-over-HTTP API ([`server`]), and the batched evaluation runtime
+//! JSON-over-HTTP API ([`server`]) with Prometheus-style observability
+//! ([`obs`]), and the batched evaluation runtime
 //! ([`runtime`]): pure rust by default, or a PJRT runtime executing the
 //! AOT-compiled JAX/Pallas fragmentation program behind the `xla` feature.
 //!
@@ -53,6 +54,7 @@ pub mod cluster;
 pub mod defrag;
 pub mod frag;
 pub mod mig;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod server;

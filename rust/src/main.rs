@@ -81,6 +81,7 @@ COMMANDS:
                   --gpus N (default 100)   --seed N   --hardware a100-80gb
                   [--defrag-every N] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]
+                  [--telemetry rows.jsonl] (per-checkpoint run telemetry)
   sweep         full experiment (paper setup: 500 runs x 5 schemes x 4 dists)
                   --runs N   --gpus N   --quick (20 runs, M=20)
                   --out DIR (CSV exports, default results/)
@@ -103,11 +104,19 @@ COMMANDS:
                   [--max-events N] [--csv out.csv] [--json]
                   [--defrag-every N] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]
+                  [--telemetry rows.jsonl] (slot-cadence run telemetry)
   trace-record  --out trace.jsonl [--distribution D] [--gpus N] [--seed N]
   trace-replay  --trace trace.jsonl [--scheduler S] [--gpus N] [--defrag-every N]
+                  [--telemetry rows.jsonl]
   help          this message
 
-Environment: MIGSCHED_LOG=info|debug|trace, MIGSCHED_ARTIFACTS=dir"
+Environment:
+  MIGSCHED_LOG=error|warn|info|debug|trace|off   log filter (default info)
+  MIGSCHED_LOG_FORMAT=json                       JSON-lines log records
+  MIGSCHED_ARTIFACTS=dir                         artifact output directory
+
+The serving daemon exposes Prometheus metrics at GET /metrics and liveness
+at GET /v1/healthz; see the README \"Observability\" section."
     );
 }
 
@@ -205,9 +214,28 @@ fn flag_hardware(flags: &Flags) -> Result<HardwareModel, String> {
     HardwareModel::by_name(name).ok_or_else(|| format!("unknown hardware model '{name}'"))
 }
 
+/// `--telemetry PATH` (the bare flag without a path is rejected — a file
+/// literally named "true" is never what anyone wants).
+fn flag_telemetry(flags: &Flags) -> Result<Option<&str>, String> {
+    match flags.get("telemetry").map(String::as_str) {
+        Some("true") => Err("--telemetry requires a file path".into()),
+        other => Ok(other),
+    }
+}
+
+/// Write a run's telemetry rows as JSONL and note where they went
+/// (stderr: stdout carries the run's own report).
+fn save_telemetry(path: &str, rows: &[Json]) -> Result<(), String> {
+    migsched::obs::telemetry::write_jsonl(path, rows)
+        .map_err(|e| format!("saving telemetry {path}: {e}"))?;
+    eprintln!("telemetry saved to {path} ({} rows)", rows.len());
+    Ok(())
+}
+
 fn cmd_sim(flags: &Flags) -> Result<(), String> {
     let kind = flag_scheduler(flags)?;
     let hw = flag_hardware(flags)?;
+    let telemetry_path = flag_telemetry(flags)?;
     let config = SimConfig {
         hardware: hw.clone(),
         num_gpus: flag_usize(flags, "gpus", 100)?,
@@ -215,6 +243,7 @@ fn cmd_sim(flags: &Flags) -> Result<(), String> {
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: flag_u64(flags, "seed", 1)?,
         defrag: flag_defrag(flags)?,
+        telemetry: telemetry_path.is_some(),
     };
     let engine = SimEngine::new(config.clone());
     let mut sched = kind.build(&hw);
@@ -255,6 +284,9 @@ fn cmd_sim(flags: &Flags) -> Result<(), String> {
             "defrag: migrations={} migrated_bytes={}",
             result.migrations, result.migrated_bytes
         );
+    }
+    if let Some(path) = telemetry_path {
+        save_telemetry(path, &result.telemetry)?;
     }
     Ok(())
 }
@@ -510,12 +542,14 @@ fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
     if num_gpus == 0 {
         return Err("--gpus must be positive".into());
     }
+    let telemetry_path = flag_telemetry(flags)?;
     let config = ReplayConfig {
         hardware: hw.clone(),
         num_gpus,
         record_every: flag_u64(flags, "every", 0)?,
         max_events: flag_u64(flags, "max-events", 0)?,
         defrag: flag_defrag(flags)?,
+        telemetry: telemetry_path.is_some(),
     };
     let mut sched = kind.build(&hw);
     let t0 = std::time::Instant::now();
@@ -565,6 +599,9 @@ fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
         // stderr: stdout carries the machine-readable summary JSON.
         eprintln!("trajectory saved to {csv_path}");
     }
+    if let Some(path) = telemetry_path {
+        save_telemetry(path, &result.telemetry)?;
+    }
 
     // Conservation is the smoke-level invariant CI relies on.
     if !result.conserved() {
@@ -587,6 +624,7 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         (trace.capacity_slices as usize / hw.num_slices()).max(1),
     )?;
     let defrag = flag_defrag(flags)?;
+    let telemetry_path = flag_telemetry(flags)?;
     let config = SimConfig {
         hardware: hw.clone(),
         num_gpus,
@@ -594,6 +632,7 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: 0,
         defrag,
+        telemetry: telemetry_path.is_some(),
     };
     let engine = SimEngine::new(config.clone());
     let mut sched = kind.build(&hw);
@@ -610,5 +649,8 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         summary.set("migrated_bytes", result.migrated_bytes);
     }
     println!("{}", summary.to_string_pretty());
+    if let Some(path) = telemetry_path {
+        save_telemetry(path, &result.telemetry)?;
+    }
     Ok(())
 }

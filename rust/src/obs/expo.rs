@@ -1,0 +1,233 @@
+//! Prometheus text exposition (format version 0.0.4): `# HELP` / `# TYPE`
+//! headers, label escaping, and cumulative `_bucket` rendering for
+//! [`HistSnapshot`]s.
+//!
+//! Families are emitted in the exact order the caller registers them, so
+//! a given server state always serializes identically (deterministic
+//! ordering is what lets tests pin the output and diffs stay readable).
+//! Duplicate family names are a programming error and panic in debug
+//! builds.
+
+use super::hist::HistSnapshot;
+
+/// The `Content-Type` of the rendered exposition.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Escape a label value: backslash, double quote and newline, per the
+/// exposition-format spec.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// An ordered label set, rendered once at construction. Cloning is cheap
+/// (one `String`), which the histogram renderer uses to splice `le` in.
+#[derive(Clone, Debug, Default)]
+pub struct Labels(String);
+
+impl Labels {
+    pub fn new() -> Self {
+        Self(String::new())
+    }
+
+    /// Append one `key="value"` pair (escaped); builder style.
+    pub fn with(mut self, key: &str, value: &str) -> Self {
+        if !self.0.is_empty() {
+            self.0.push(',');
+        }
+        self.0.push_str(key);
+        self.0.push_str("=\"");
+        self.0.push_str(&escape_label(value));
+        self.0.push('"');
+        self
+    }
+
+    fn render(&self, extra: Option<&str>) -> String {
+        match (self.0.is_empty(), extra) {
+            (true, None) => String::new(),
+            (true, Some(e)) => format!("{{{e}}}"),
+            (false, None) => format!("{{{}}}", self.0),
+            (false, Some(e)) => format!("{{{},{e}}}", self.0),
+        }
+    }
+}
+
+/// Format a sample value the way Prometheus expects: integral values
+/// without a fractional part, everything else via shortest-round-trip
+/// `Display` (rust never emits scientific notation there).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The exposition builder: register families in output order, then
+/// [`Expo::finish`].
+#[derive(Debug, Default)]
+pub struct Expo {
+    out: String,
+    families: Vec<String>,
+}
+
+impl Expo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        debug_assert!(
+            !self.families.iter().any(|f| f == name),
+            "duplicate metric family {name}"
+        );
+        self.families.push(name.to_string());
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// A counter family with one sample per label set.
+    pub fn counter(&mut self, name: &str, help: &str, samples: &[(Labels, u64)]) {
+        self.family(name, "counter", help);
+        for (labels, v) in samples {
+            self.out.push_str(&format!("{name}{} {v}\n", labels.render(None)));
+        }
+    }
+
+    /// A gauge family with one sample per label set.
+    pub fn gauge(&mut self, name: &str, help: &str, samples: &[(Labels, f64)]) {
+        self.family(name, "gauge", help);
+        for (labels, v) in samples {
+            self.out.push_str(&format!("{name}{} {}\n", labels.render(None), fmt_value(*v)));
+        }
+    }
+
+    /// A histogram family: cumulative `_bucket` series per finite bound,
+    /// the `le="+Inf"` bucket (== `_count` by snapshot construction), then
+    /// `_sum` and `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, samples: &[(Labels, HistSnapshot)]) {
+        self.family(name, "histogram", help);
+        for (labels, snap) in samples {
+            let cum = snap.cumulative();
+            for (i, &bound) in snap.bounds.iter().enumerate() {
+                let le = format!("le=\"{}\"", fmt_value(bound));
+                self.out.push_str(&format!(
+                    "{name}_bucket{} {}\n",
+                    labels.render(Some(&le)),
+                    cum[i]
+                ));
+            }
+            let count = *cum.last().unwrap_or(&0);
+            self.out.push_str(&format!(
+                "{name}_bucket{} {count}\n",
+                labels.render(Some("le=\"+Inf\""))
+            ));
+            self.out
+                .push_str(&format!("{name}_sum{} {}\n", labels.render(None), fmt_value(snap.sum)));
+            self.out.push_str(&format!("{name}_count{} {count}\n", labels.render(None)));
+        }
+    }
+
+    /// The rendered exposition text.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::LatencyHist;
+
+    #[test]
+    fn label_escaping_covers_the_spec_set() {
+        assert_eq!(escape_label(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(escape_label("line\nbreak"), r"line\nbreak");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+
+    #[test]
+    fn counter_and_gauge_render_with_headers() {
+        let mut e = Expo::new();
+        e.counter(
+            "migsched_test_total",
+            "A test counter.",
+            &[
+                (Labels::new().with("shard", "0"), 3),
+                (Labels::new().with("shard", "1"), 4),
+            ],
+        );
+        e.gauge("migsched_test_ratio", "A test gauge.", &[(Labels::new(), 0.25)]);
+        let text = e.finish();
+        assert!(text.contains("# TYPE migsched_test_total counter\n"));
+        assert!(text.contains("migsched_test_total{shard=\"0\"} 3\n"));
+        assert!(text.contains("migsched_test_total{shard=\"1\"} 4\n"));
+        assert!(text.contains("# HELP migsched_test_ratio A test gauge.\n"));
+        assert!(text.contains("migsched_test_ratio 0.25\n"));
+        // Integral gauges render without a fractional part.
+        assert_eq!(fmt_value(7.0), "7");
+        assert_eq!(fmt_value(-2.0), "-2");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_matches_count() {
+        let h = LatencyHist::new();
+        h.record_ns(500);
+        h.record_ns(1_500);
+        h.record_ns(3_000_000);
+        let mut e = Expo::new();
+        e.histogram(
+            "migsched_test_seconds",
+            "A test histogram.",
+            &[(Labels::new().with("endpoint", "/v1/workloads"), h.snapshot())],
+        );
+        let text = e.finish();
+        assert!(text.contains("# TYPE migsched_test_seconds histogram\n"));
+        // First bound is 1µs; the 500ns observation is inside it.
+        assert!(text.contains(
+            "migsched_test_seconds_bucket{endpoint=\"/v1/workloads\",le=\"0.000001\"} 1\n"
+        ));
+        assert!(text.contains(
+            "migsched_test_seconds_bucket{endpoint=\"/v1/workloads\",le=\"+Inf\"} 3\n"
+        ));
+        assert!(text.contains("migsched_test_seconds_count{endpoint=\"/v1/workloads\"} 3\n"));
+        // Cumulative counts never decrease along the bucket series.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn deterministic_ordering_follows_registration() {
+        let build = || {
+            let mut e = Expo::new();
+            e.counter("b_total", "b", &[(Labels::new(), 1)]);
+            e.counter("a_total", "a", &[(Labels::new(), 2)]);
+            e.finish()
+        };
+        assert_eq!(build(), build());
+        let text = build();
+        let b = text.find("# TYPE b_total").unwrap();
+        let a = text.find("# TYPE a_total").unwrap();
+        assert!(b < a, "families serialize in registration order");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric family")]
+    #[cfg(debug_assertions)]
+    fn duplicate_family_panics_in_debug() {
+        let mut e = Expo::new();
+        e.counter("dup_total", "x", &[]);
+        e.counter("dup_total", "x", &[]);
+    }
+}

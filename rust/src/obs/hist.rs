@@ -1,0 +1,399 @@
+//! Lock-free metrics primitives: counters, gauges and fixed-boundary
+//! histograms with atomic buckets.
+//!
+//! Everything here is recorded from hot paths (the daemon's submit
+//! handler, the per-connection loop), so the write side is a bounded
+//! number of `Relaxed` atomic adds — no allocation, no locks, no bucket
+//! search loops ([`LatencyHist`] finds its bucket with one `leading_zeros`
+//! instruction). Reads take a point-in-time [`HistSnapshot`] whose count
+//! is *derived from the bucket values*, so every snapshot is internally
+//! consistent (`le="+Inf"` cumulative count equals `_count` by
+//! construction) even while writers race with the reader.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge that can move both ways (e.g. open connections).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicI64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Finite bucket upper bounds of [`LatencyHist`], in nanoseconds:
+/// `1µs · 2^i` for `i = 0..24` (1 µs up to ~8.4 s), doubling per bucket —
+/// fixed log-spaced boundaries, so histograms from different shards,
+/// threads or processes always merge bucket-for-bucket.
+pub const LATENCY_BOUNDS: usize = 24;
+
+/// Total bucket count: the finite bounds plus the overflow (`+Inf`) bucket.
+pub const LATENCY_BUCKETS: usize = LATENCY_BOUNDS + 1;
+
+/// Upper bound of finite latency bucket `i`, in nanoseconds.
+#[inline]
+pub fn latency_bound_ns(i: usize) -> u64 {
+    1000u64 << i
+}
+
+/// Bucket index for a latency of `ns` nanoseconds: the smallest `i` with
+/// `ns <= 1µs · 2^i`, or the overflow bucket. Branch-free except for the
+/// overflow clamp: one division, one `leading_zeros`.
+#[inline]
+pub fn latency_bucket(ns: u64) -> usize {
+    // Ceil to whole microseconds, then the bucket is ceil(log2(µs)).
+    let us = ns.div_ceil(1000).max(1);
+    let i = (64 - (us - 1).leading_zeros()) as usize;
+    i.min(LATENCY_BOUNDS)
+}
+
+/// A latency histogram with fixed log-spaced boundaries and atomic
+/// buckets. `record` is lock-free and allocation-free (two relaxed
+/// `fetch_add`s and one on the chosen bucket), so shards and HTTP workers
+/// share one instance without contention beyond cache-line traffic.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one observation of `ns` nanoseconds.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one observed duration.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Point-in-time snapshot in **seconds** (the Prometheus base unit).
+    /// The count is the sum of the sampled buckets, so the snapshot's
+    /// cumulative-bucket/`_count` relation holds even under concurrent
+    /// writers; `sum` is read separately and may lag by in-flight records.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        HistSnapshot {
+            bounds: (0..LATENCY_BOUNDS).map(|i| latency_bound_ns(i) as f64 / 1e9).collect(),
+            buckets,
+            sum: self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Finite bucket upper bounds of [`DeltaHist`]: fragmentation-score deltas
+/// are small signed integers, so symmetric powers of two around zero keep
+/// the histogram sharp where commits actually land.
+pub const DELTA_BOUNDS: [i64; 15] =
+    [-64, -32, -16, -8, -4, -2, -1, 0, 1, 2, 4, 8, 16, 32, 64];
+
+/// A histogram over signed integer values (ΔF per commit) with the same
+/// atomic, lock-free recording contract as [`LatencyHist`].
+#[derive(Debug)]
+pub struct DeltaHist {
+    buckets: [AtomicU64; DELTA_BOUNDS.len() + 1],
+    sum: AtomicI64,
+}
+
+impl Default for DeltaHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeltaHist {
+    pub fn new() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicI64::new(0) }
+    }
+
+    /// Record one signed observation. The bound scan is over 15 integers —
+    /// still allocation- and lock-free; ΔF values cluster near zero so the
+    /// scan usually stops early.
+    #[inline]
+    pub fn record(&self, v: i64) {
+        let i = DELTA_BOUNDS
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(DELTA_BOUNDS.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot (native score units).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bounds: DELTA_BOUNDS.iter().map(|&b| b as f64).collect(),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+/// An owned, mergeable histogram snapshot: finite ascending `bounds` plus
+/// per-bucket (non-cumulative) counts, with `buckets.len() == bounds.len()
+/// + 1` (the last slot is the overflow bucket). Percentiles interpolate
+/// linearly inside the winning bucket — the same estimator idiom as
+/// [`crate::util::stats::Sample::percentile`], but over bucket edges
+/// instead of stored values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    /// Total observations (always the sum of the buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Cumulative counts per finite bound, then the `+Inf` total — the
+    /// Prometheus `_bucket` series.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|&b| {
+                acc += b;
+                acc
+            })
+            .collect()
+    }
+
+    /// Merge another snapshot (same boundaries) into this one —
+    /// cross-shard / cross-thread aggregation.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        assert_eq!(self.bounds, other.bounds, "histograms must share boundaries to merge");
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Estimated `q`-th percentile (`q` in 0..=100) by linear
+    /// interpolation inside the bucket containing that rank. Observations
+    /// in the overflow bucket are reported as the largest finite bound
+    /// (the histogram cannot see past it). Returns 0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 100.0) / 100.0 * n as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            if b == 0 {
+                cum += b;
+                continue;
+            }
+            let next = cum + b;
+            if rank <= next as f64 {
+                let Some(&hi) = self.bounds.get(i) else {
+                    // Overflow bucket: clamp to the last finite bound.
+                    return *self.bounds.last().unwrap_or(&0.0);
+                };
+                let lo = if i == 0 { hi.min(0.0) } else { self.bounds[i - 1] };
+                let frac = (rank - cum as f64) / b as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn latency_bucket_boundaries_are_inclusive_powers_of_two() {
+        // Smallest bucket takes everything up to 1µs.
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(1000), 0);
+        assert_eq!(latency_bucket(1001), 1);
+        assert_eq!(latency_bucket(2000), 1);
+        assert_eq!(latency_bucket(2001), 2);
+        assert_eq!(latency_bucket(4000), 2);
+        // 1 ms = bucket 10 (1µs · 2^10 = 1.024 ms bound).
+        assert_eq!(latency_bucket(1_000_000), 10);
+        // The largest finite bound is ~8.39 s; past it, overflow.
+        assert_eq!(latency_bucket(latency_bound_ns(LATENCY_BOUNDS - 1)), LATENCY_BOUNDS - 1);
+        assert_eq!(latency_bucket(latency_bound_ns(LATENCY_BOUNDS - 1) + 1), LATENCY_BOUNDS);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BOUNDS);
+    }
+
+    #[test]
+    fn snapshot_count_and_cumulative_agree() {
+        let h = LatencyHist::new();
+        for ns in [10u64, 500, 1_000, 5_000, 1_000_000, 10_000_000_000] {
+            h.record_ns(ns);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 6);
+        let cum = s.cumulative();
+        assert_eq!(*cum.last().unwrap(), 6, "+Inf cumulative equals count");
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "cumulative is monotone");
+        // 3 observations at or under 1µs.
+        assert_eq!(cum[0], 3);
+        // The 10 s observation landed in the overflow bucket.
+        assert_eq!(s.buckets[LATENCY_BOUNDS], 1);
+    }
+
+    #[test]
+    fn merge_requires_matching_bounds_and_adds() {
+        let a = LatencyHist::new();
+        let b = LatencyHist::new();
+        a.record_ns(100);
+        a.record_ns(3_000);
+        b.record_ns(3_000);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 3);
+        assert!((s.sum - 6_100.0 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate_and_clamp() {
+        let h = LatencyHist::new();
+        // 100 observations of ~1.5µs: all in bucket 1 (1µs, 2µs].
+        for _ in 0..100 {
+            h.record_ns(1_500);
+        }
+        let s = h.snapshot();
+        let p50 = s.percentile(50.0);
+        assert!(p50 > 1.0e-6 && p50 <= 2.0e-6, "p50 {p50} inside the bucket");
+        assert!(s.percentile(99.0) <= 2.0e-6 + 1e-12);
+        // Empty histogram.
+        assert_eq!(LatencyHist::new().snapshot().percentile(50.0), 0.0);
+        // Overflow-only histogram clamps to the last finite bound.
+        let h = LatencyHist::new();
+        h.record_ns(u64::MAX / 2);
+        let s = h.snapshot();
+        assert_eq!(s.percentile(50.0), *s.bounds.last().unwrap());
+    }
+
+    #[test]
+    fn delta_hist_handles_signed_values() {
+        let d = DeltaHist::new();
+        for v in [-20i64, -1, 0, 0, 3, 100] {
+            d.record(v);
+        }
+        let s = d.snapshot();
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.sum, 82.0);
+        let cum = s.cumulative();
+        assert_eq!(*cum.last().unwrap(), 6);
+        // -20 lands in the le=-16 bucket, 100 in the overflow bucket.
+        let le_m16 = DELTA_BOUNDS.iter().position(|&b| b == -16).unwrap();
+        assert_eq!(cum[le_m16], 1);
+        assert_eq!(s.buckets[DELTA_BOUNDS.len()], 1);
+        // Both zeros in the le=0 bucket.
+        let le_0 = DELTA_BOUNDS.iter().position(|&b| b == 0).unwrap();
+        assert_eq!(s.buckets[le_0], 2);
+    }
+
+    #[test]
+    fn concurrent_recording_conserves_the_count() {
+        // The lock-free contract: N threads × K records never lose a
+        // sample, and a final snapshot's count equals the total.
+        let h = Arc::new(LatencyHist::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record_ns((t * 1_000 + i) % 50_000_000);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count(), 80_000);
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+}

@@ -1,0 +1,339 @@
+//! Leveled, RFC3339-timestamped stderr logger behind the
+//! `log_error!`…`log_trace!` macros.
+//!
+//! * `MIGSCHED_LOG` selects the filter: `error|warn|info|debug|trace|off`
+//!   (default `info`). `off` silences everything including errors.
+//! * `MIGSCHED_LOG_FORMAT=json` switches from human-readable lines to
+//!   JSON-lines (`{"ts":...,"level":...,"module":...,"msg":...}`), one
+//!   object per line, escaped via [`crate::util::json`].
+//! * [`RateLimited`] suppresses repeated identical warnings (the daemon's
+//!   accept-error path) and reports how many were dropped when the same
+//!   message is next allowed through.
+//!
+//! The level check is a single relaxed atomic load, so disabled log sites
+//! cost one branch on the hot path.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    /// Lowercase name for the JSON-lines `level` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Filter slot values: 0..=4 map to [`Level`], `OFF` silences all sites,
+/// `u8::MAX` means "not yet read from the environment".
+const OFF: u8 = 5;
+static FILTER: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Output format: 0 = text, 1 = JSON-lines, `u8::MAX` = uninitialized.
+static FORMAT: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Parse a `MIGSCHED_LOG` value into a filter slot.
+fn parse_filter(s: &str) -> Option<u8> {
+    if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("none") {
+        return Some(OFF);
+    }
+    Level::from_str(s).map(|l| l as u8)
+}
+
+fn init_filter_from_env() -> u8 {
+    let raw = std::env::var("MIGSCHED_LOG")
+        .ok()
+        .and_then(|v| parse_filter(&v))
+        .unwrap_or(Level::Info as u8);
+    FILTER.store(raw, Ordering::Relaxed);
+    raw
+}
+
+fn filter() -> u8 {
+    let raw = FILTER.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        init_filter_from_env()
+    } else {
+        raw
+    }
+}
+
+fn json_format() -> bool {
+    let raw = FORMAT.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        return raw == 1;
+    }
+    let json = std::env::var("MIGSCHED_LOG_FORMAT")
+        .map(|v| v.eq_ignore_ascii_case("json"))
+        .unwrap_or(false);
+    FORMAT.store(json as u8, Ordering::Relaxed);
+    json
+}
+
+/// Current level when logging is on; `None` when the filter is `off`.
+pub fn level() -> Option<Level> {
+    match filter() {
+        0 => Some(Level::Error),
+        1 => Some(Level::Warn),
+        2 => Some(Level::Info),
+        3 => Some(Level::Debug),
+        4 => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(lvl: Level) {
+    FILTER.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Silence every log site, including errors.
+pub fn set_off() {
+    FILTER.store(OFF, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    (lvl as u8) <= filter()
+}
+
+/// Days-since-epoch to (year, month, day) in the proleptic Gregorian
+/// calendar — Howard Hinnant's `civil_from_days`, which keeps RFC3339
+/// timestamps dependency-free.
+fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// RFC3339 UTC timestamp with millisecond precision, e.g.
+/// `2026-08-08T12:34:56.789Z`.
+pub fn rfc3339_millis(t: SystemTime) -> String {
+    let since = t.duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = since.as_secs();
+    let millis = since.subsec_millis();
+    let (y, mo, d) = civil_from_days((secs / 86_400) as i64);
+    let rem = secs % 86_400;
+    let (h, mi, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    format!("{y:04}-{mo:02}-{d:02}T{h:02}:{mi:02}:{s:02}.{millis:03}Z")
+}
+
+/// Emit one log line; prefer the macros.
+pub fn log(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let ts = rfc3339_millis(SystemTime::now());
+    if json_format() {
+        let line = crate::util::json::Json::obj()
+            .with("ts", ts.as_str())
+            .with("level", lvl.name())
+            .with("module", module)
+            .with("msg", args.to_string())
+            .to_string_compact();
+        eprintln!("{line}");
+    } else {
+        eprintln!("{ts} {} {module}: {args}", lvl.tag());
+    }
+}
+
+struct RateState {
+    last_key: u64,
+    last_emit: Option<Instant>,
+    suppressed: u64,
+}
+
+/// Suppresses repeated identical messages inside a time window. Intended
+/// for `static` use next to a noisy log site:
+///
+/// ```ignore
+/// static ACCEPT_WARN: RateLimited = RateLimited::new(Duration::from_secs(5));
+/// if let Some(dropped) = ACCEPT_WARN.should_log(&msg) {
+///     if dropped > 0 { /* mention the dropped count */ }
+///     log_warn!("{msg}");
+/// }
+/// ```
+pub struct RateLimited {
+    window: Duration,
+    state: Mutex<RateState>,
+}
+
+impl RateLimited {
+    pub const fn new(window: Duration) -> Self {
+        Self {
+            window,
+            state: Mutex::new(RateState { last_key: 0, last_emit: None, suppressed: 0 }),
+        }
+    }
+
+    /// FNV-1a over the message, so "identical" means byte-identical.
+    fn hash(key: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// `Some(previously_suppressed)` if the caller should emit this
+    /// message now, `None` if it is a repeat inside the window. A changed
+    /// message always logs immediately and resets the window.
+    pub fn should_log(&self, key: &str) -> Option<u64> {
+        let now = Instant::now();
+        let h = Self::hash(key);
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let same = st.last_key == h;
+        let within = st.last_emit.map(|t| now.duration_since(t) < self.window).unwrap_or(false);
+        if same && within {
+            st.suppressed += 1;
+            return None;
+        }
+        let dropped = if same { st.suppressed } else { 0 };
+        st.last_key = h;
+        st.last_emit = Some(now);
+        st.suppressed = 0;
+        Some(dropped)
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_includes_off() {
+        assert_eq!(Level::from_str("ERROR"), Some(Level::Error));
+        assert_eq!(Level::from_str("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_str("Info"), Some(Level::Info));
+        assert_eq!(Level::from_str("nope"), None);
+        assert_eq!(parse_filter("off"), Some(OFF));
+        assert_eq!(parse_filter("OFF"), Some(OFF));
+        assert_eq!(parse_filter("debug"), Some(Level::Debug as u8));
+        assert_eq!(parse_filter("bogus"), None);
+    }
+
+    #[test]
+    fn ordering_gates_and_off_silences_errors() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_off();
+        assert!(!enabled(Level::Error));
+        assert_eq!(level(), None);
+        set_level(Level::Info); // restore default for other tests
+        assert_eq!(level(), Some(Level::Info));
+    }
+
+    #[test]
+    fn rfc3339_known_values() {
+        assert_eq!(rfc3339_millis(UNIX_EPOCH), "1970-01-01T00:00:00.000Z");
+        // 2000-02-29 (leap day) 00:00:00 UTC = 951782400.
+        let leap = UNIX_EPOCH + Duration::from_secs(951_782_400);
+        assert_eq!(rfc3339_millis(leap), "2000-02-29T00:00:00.000Z");
+        // End of 2023 with millis: 1703980799.250 = 2023-12-30T23:59:59.250Z.
+        let t = UNIX_EPOCH + Duration::from_millis(1_703_980_799_250);
+        assert_eq!(rfc3339_millis(t), "2023-12-30T23:59:59.250Z");
+    }
+
+    #[test]
+    fn rate_limiter_suppresses_repeats_and_resets_on_change() {
+        let rl = RateLimited::new(Duration::from_secs(3600));
+        assert_eq!(rl.should_log("boom"), Some(0));
+        assert_eq!(rl.should_log("boom"), None);
+        assert_eq!(rl.should_log("boom"), None);
+        // A different message logs immediately (no carryover of the count).
+        assert_eq!(rl.should_log("other"), Some(0));
+        // Returning to the first message counts as a change again.
+        assert_eq!(rl.should_log("boom"), Some(0));
+        assert_eq!(rl.should_log("boom"), None);
+    }
+
+    #[test]
+    fn zero_window_never_suppresses_and_reports_drops() {
+        let rl = RateLimited::new(Duration::ZERO);
+        assert_eq!(rl.should_log("x"), Some(0));
+        assert_eq!(rl.should_log("x"), Some(0));
+    }
+}

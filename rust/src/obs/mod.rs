@@ -1,0 +1,34 @@
+//! Observability substrate: metrics primitives, Prometheus exposition,
+//! structured logging and run telemetry — dependency-free, like the rest
+//! of [`crate::util`].
+//!
+//! The layer is deliberately split from what it observes:
+//!
+//! * [`hist`] — lock-free atomic counters, gauges and fixed-boundary
+//!   log-bucket histograms ([`hist::LatencyHist`]) that shards and worker
+//!   threads record into concurrently and that merge into one snapshot
+//!   ([`hist::HistSnapshot`], the percentile-interpolation idiom of
+//!   [`crate::util::stats::Sample`]).
+//! * [`expo`] — the Prometheus text exposition format (`# HELP`/`# TYPE`,
+//!   label escaping, cumulative `_bucket` rendering) behind the daemon's
+//!   `GET /metrics` endpoint.
+//! * [`log`] — the leveled, RFC3339-timestamped (optionally JSON-lines)
+//!   stderr logger driving the `log_error!`…`log_trace!` macros, plus the
+//!   repeated-warning rate limiter used by the daemon's accept loop.
+//! * [`telemetry`] — slot-cadence JSONL rows emitted by `sim::engine` and
+//!   `sim::replay` under `--telemetry PATH`, so run trajectories (frag
+//!   score, acceptance, migrations, decision-latency percentiles) become
+//!   plottable artifacts.
+//!
+//! **Hot-path contract**: recording a sample is a bounded handful of
+//! relaxed atomic increments — no allocation, no locks, no formatting —
+//! so instrumenting the submit path costs nanoseconds (measured by
+//! `benches/daemon_burst.rs`, reported as `hist_record_ns`).
+
+pub mod expo;
+pub mod hist;
+pub mod log;
+pub mod telemetry;
+
+pub use expo::{Expo, Labels};
+pub use hist::{Counter, DeltaHist, Gauge, HistSnapshot, LatencyHist};

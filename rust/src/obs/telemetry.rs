@@ -1,0 +1,106 @@
+//! Slot-cadence run telemetry: JSONL rows emitted by `sim::engine` and
+//! `sim::replay` under `--telemetry PATH`.
+//!
+//! One row per recorded slot, so a run's trajectory (fragmentation,
+//! acceptance, migrations, decision-latency percentiles) is plottable with
+//! any JSONL-aware tool. Keys are fixed and documented in the README
+//! "Observability" section; add new keys at the end rather than reordering
+//! so downstream parsers stay stable.
+
+use crate::obs::hist::HistSnapshot;
+use crate::util::json::Json;
+
+/// Point-in-time scalars for one telemetry row; the caller assembles this
+/// from whatever engine it runs (closed-loop sim or open-loop replay).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlotStats {
+    pub slot: u64,
+    pub arrived: u64,
+    pub accepted: u64,
+    pub allocated: usize,
+    pub active_gpus: usize,
+    pub utilization: f64,
+    pub mean_frag_score: f64,
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+}
+
+/// Render one JSONL row. `decisions` is the cumulative scheduler
+/// decision-latency histogram at this slot; percentiles are in seconds.
+pub fn slot_row(s: &SlotStats, decisions: &HistSnapshot) -> Json {
+    let acceptance = if s.arrived > 0 { s.accepted as f64 / s.arrived as f64 } else { 1.0 };
+    Json::obj()
+        .with("slot", s.slot)
+        .with("arrived", s.arrived)
+        .with("accepted", s.accepted)
+        .with("acceptance_rate", acceptance)
+        .with("allocated", s.allocated)
+        .with("utilization", s.utilization)
+        .with("active_gpus", s.active_gpus)
+        .with("mean_frag_score", s.mean_frag_score)
+        .with("migrations", s.migrations)
+        .with("migrated_bytes", s.migrated_bytes)
+        .with("decisions", decisions.count())
+        .with("decision_seconds_p50", decisions.percentile(50.0))
+        .with("decision_seconds_p90", decisions.percentile(90.0))
+        .with("decision_seconds_p99", decisions.percentile(99.0))
+}
+
+/// Write rows as one compact JSON object per line.
+pub fn write_jsonl(path: &str, rows: &[Json]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut out = String::new();
+    for row in rows {
+        out.push_str(&row.to_string_compact());
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::LatencyHist;
+
+    #[test]
+    fn row_has_the_documented_keys_and_rates() {
+        let h = LatencyHist::new();
+        h.record_ns(2_000); // 2µs
+        h.record_ns(2_000);
+        let stats = SlotStats {
+            slot: 128,
+            arrived: 10,
+            accepted: 8,
+            allocated: 5,
+            active_gpus: 3,
+            utilization: 0.75,
+            mean_frag_score: 1.5,
+            migrations: 2,
+            migrated_bytes: 40,
+        };
+        let row = slot_row(&stats, &h.snapshot());
+        assert_eq!(row.get("slot").and_then(Json::as_u64), Some(128));
+        assert_eq!(row.get("acceptance_rate").and_then(Json::as_f64), Some(0.8));
+        assert_eq!(row.get("decisions").and_then(Json::as_u64), Some(2));
+        assert!(row.get("decision_seconds_p50").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(row.get("migrated_bytes").and_then(Json::as_u64), Some(40));
+        // Zero arrivals does not divide by zero.
+        let empty = slot_row(&SlotStats::default(), &LatencyHist::new().snapshot());
+        assert_eq!(empty.get("acceptance_rate").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn jsonl_writes_one_object_per_line() {
+        let dir = std::env::temp_dir().join("migsched_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rows.jsonl");
+        let rows = vec![Json::obj().with("slot", 0u64), Json::obj().with("slot", 1u64)];
+        write_jsonl(path.to_str().unwrap(), &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with('{') && lines[0].ends_with('}'));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -20,6 +20,9 @@ pub fn dispatch(request: &Request, shards: &ShardSet) -> Response {
     let segments = request.segments();
     match (request.method.as_str(), segments.as_slice()) {
         ("GET", ["healthz"]) => Response::text(200, "ok\n"),
+        ("GET", ["metrics"]) => metrics_exposition(shards),
+        ("GET", ["v1", "healthz"]) => healthz(shards),
+        ("GET", ["v1", "version"]) => version(shards),
         ("POST", ["v1", "workloads"]) => submit(request, shards),
         ("GET", ["v1", "workloads", id]) => lookup(id, shards),
         ("DELETE", ["v1", "workloads", id]) => release(id, shards),
@@ -64,8 +67,16 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
         None => return Response::error(400, &format!("unknown profile '{profile_name}'")),
     };
     s.arrived_total += 1;
-    let ShardState { scheduler, cluster, .. } = &mut *s;
-    let placement = match scheduler.schedule(cluster, profile) {
+    let metrics = shards.metrics();
+    // Decision latency covers the scheduler's dry-run search only (accepts
+    // AND rejects — tail latency on a full cluster matters just as much).
+    let decision_start = std::time::Instant::now();
+    let decided = {
+        let ShardState { scheduler, cluster, .. } = &mut *s;
+        scheduler.schedule(cluster, profile)
+    };
+    metrics.decision[shard.index].record(decision_start.elapsed());
+    let placement = match decided {
         Some(p) => p,
         None => {
             return Response::json(
@@ -77,6 +88,9 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
             )
         }
     };
+    // ΔF per commit: only the target GPU's score changes on allocate, so
+    // the delta is two table lookups, not a fleet rescore.
+    let f_before = i64::from(s.scorer.score(s.cluster.gpus()[placement.gpu]));
     let seq = s.next_seq;
     s.next_seq += 1;
     let id = shards.workload_id(shard, seq);
@@ -87,6 +101,8 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
         let ShardState { scheduler, cluster, .. } = &mut *s;
         scheduler.on_commit(cluster, placement);
     }
+    let f_after = i64::from(s.scorer.score(s.cluster.gpus()[placement.gpu]));
+    metrics.delta_f[shard.index].record(f_after - f_before);
     s.accepted_total += 1;
     let expires_at = duration.map(|d| s.clock_slot + d);
     s.leases.insert(id, Lease { tenant, expires_at });
@@ -308,6 +324,48 @@ fn hardware(shards: &ShardSet) -> Response {
     )
 }
 
+/// `GET /metrics` — the whole registry as Prometheus text exposition
+/// (see [`super::metrics::render`] for the family inventory and the
+/// requests ≥ responses scrape invariant).
+fn metrics_exposition(shards: &ShardSet) -> Response {
+    Response::with_content_type(
+        200,
+        crate::obs::expo::CONTENT_TYPE,
+        super::metrics::render(shards).into_bytes(),
+    )
+}
+
+/// `GET /v1/healthz` — structured liveness: the daemon is up, for how
+/// long, and over what fleet. (The bare `/healthz` plain-text probe
+/// predates this and stays for compatibility.)
+fn healthz(shards: &ShardSet) -> Response {
+    Response::json(
+        200,
+        &Json::obj()
+            .with("status", "ok")
+            .with("uptime_seconds", shards.uptime().as_secs_f64())
+            .with("shards", shards.num_shards())
+            .with("num_gpus", shards.total_gpus()),
+    )
+}
+
+/// `GET /v1/version` — crate version plus the compile-time feature set,
+/// so operators can tell which binary is answering.
+fn version(shards: &ShardSet) -> Response {
+    let mut features: Vec<Json> = Vec::new();
+    if cfg!(feature = "xla") {
+        features.push(Json::from("xla"));
+    }
+    Response::json(
+        200,
+        &Json::obj()
+            .with("name", env!("CARGO_PKG_NAME"))
+            .with("version", env!("CARGO_PKG_VERSION"))
+            .with("features", Json::Arr(features))
+            .with("scheduler", shards.scheduler_name()),
+    )
+}
+
 /// `POST /v1/maintenance/defrag` — body `{"shard": 0, "max_migrations": 8,
 /// "cost_budget": 100}` (all optional: default every shard, 16 moves per
 /// shard, unlimited cost). Runs the budgeted greedy planner
@@ -381,6 +439,7 @@ fn run_defrag(
         if target.is_some_and(|t| t != shard.index) {
             continue;
         }
+        let sweep_start = std::time::Instant::now();
         let mut s = shard.state.lock().unwrap();
         let plan = plan_for(&s, budget, cost_budget);
         if let Err(e) = crate::defrag::apply_plan(&mut s.cluster, &plan) {
@@ -401,6 +460,8 @@ fn run_defrag(
         }
         s.migrations_total += plan.moves.len() as u64;
         s.migrated_bytes_total += plan.bytes_moved;
+        shards.metrics().defrag_sweeps_total.inc();
+        shards.metrics().defrag_sweep_duration.record(sweep_start.elapsed());
         total_delta += plan.total_delta();
         total_moves += plan.moves.len() as u64;
         total_bytes += plan.bytes_moved;
@@ -557,6 +618,47 @@ mod tests {
 
         let health = dispatch(&req("GET", "/healthz", ""), &state);
         assert_eq!(health.status, 200);
+    }
+
+    #[test]
+    fn healthz_and_version_endpoints() {
+        let state = shard_set();
+        let r = dispatch(&req("GET", "/v1/healthz", ""), &state);
+        assert_eq!(r.status, 200);
+        let j = json_of(&r);
+        assert_eq!(j.req_str("status").unwrap(), "ok");
+        assert!(j.get("uptime_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(j.req_u64("shards").unwrap(), 1);
+        assert_eq!(j.req_u64("num_gpus").unwrap(), 2);
+
+        let r = dispatch(&req("GET", "/v1/version", ""), &state);
+        assert_eq!(r.status, 200);
+        let j = json_of(&r);
+        assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+        assert!(j.get("features").unwrap().as_arr().is_some());
+        assert_eq!(j.req_str("scheduler").unwrap(), state.scheduler_name());
+    }
+
+    #[test]
+    fn metrics_endpoint_tracks_decisions_and_stats_gauges() {
+        let state = shard_set();
+        // Two accepts fill the cluster; the third submit is rejected.
+        for _ in 0..2 {
+            dispatch(&req("POST", "/v1/workloads", r#"{"profile":"7g.80gb"}"#), &state);
+        }
+        dispatch(&req("POST", "/v1/workloads", r#"{"profile":"1g.10gb"}"#), &state);
+        let r = dispatch(&req("GET", "/metrics", ""), &state);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, crate::obs::expo::CONTENT_TYPE);
+        let text = String::from_utf8(r.body).unwrap();
+        // The /v1/stats gauges re-exported, matching the scripted sequence.
+        assert!(text.contains("migsched_submits_total 3\n"), "{text}");
+        assert!(text.contains("migsched_accepted_total 2\n"));
+        assert!(text.contains("migsched_allocated_workloads 2\n"));
+        // Decision latency was recorded for accepts AND the reject; ΔF
+        // only for the two commits.
+        assert!(text.contains("migsched_sched_decision_seconds_count{shard=\"0\"} 3\n"));
+        assert!(text.contains("migsched_sched_delta_f_per_commit_count{shard=\"0\"} 2\n"));
     }
 
     #[test]

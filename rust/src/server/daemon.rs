@@ -2,15 +2,17 @@
 //! listener (see [`super::shard`] for the partitioning/routing model).
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::api;
 use super::http::parse_request_from;
+use super::metrics;
 use super::shard::ShardSet;
 use super::threadpool::ThreadPool;
 use crate::mig::HardwareModel;
+use crate::obs::log::RateLimited;
 use crate::sched::SchedulerKind;
 
 /// Requests served over one kept-alive connection before the daemon
@@ -118,7 +120,18 @@ impl Daemon {
                             pool.execute(move || handle_connection(stream, shards, shutdown));
                         }
                         Err(e) => {
-                            crate::log_warn!("accept error: {e}");
+                            // A dying listener repeats the same error at
+                            // accept-loop speed; log once per window.
+                            static ACCEPT_WARN: RateLimited =
+                                RateLimited::new(std::time::Duration::from_secs(5));
+                            let msg = format!("accept error: {e}");
+                            match ACCEPT_WARN.should_log(&msg) {
+                                Some(0) => crate::log_warn!("{msg}"),
+                                Some(dropped) => crate::log_warn!(
+                                    "{msg} ({dropped} identical warning(s) suppressed)"
+                                ),
+                                None => {}
+                            }
                         }
                     }
                 }
@@ -185,6 +198,7 @@ fn background_defrag(
             if shutdown.load(Ordering::SeqCst) {
                 break 'outer;
             }
+            let sweep_start = std::time::Instant::now();
             let mut s = shard.state.lock().unwrap();
             match s.defrag_sweep(policy.threshold, policy.max_moves, policy.cost_budget) {
                 Ok(plan) if !plan.is_empty() => {
@@ -201,6 +215,9 @@ fn background_defrag(
                 // hold), but a sweep failure must never kill the daemon.
                 Err(e) => crate::log_warn!("defrag shard {}: {e}", shard.index),
             }
+            drop(s);
+            shards.metrics().defrag_sweeps_total.inc();
+            shards.metrics().defrag_sweep_duration.record(sweep_start.elapsed());
         }
     }
 }
@@ -219,6 +236,10 @@ fn handle_connection(
     shards: Arc<ShardSet>,
     shutdown: Arc<AtomicBool>,
 ) {
+    // Per-connection id: together with the per-connection request sequence
+    // it forms the request id (`conn=N req=M`) threaded through every log
+    // line from accept to respond.
+    static NEXT_CONN_ID: AtomicU64 = AtomicU64::new(1);
     let _ = stream.set_read_timeout(Some(REQUEST_TIMEOUT));
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
@@ -227,6 +248,15 @@ fn handle_connection(
             return;
         }
     };
+    // Open-connection accounting starts only after the early-return above,
+    // so the single decrement at the bottom always balances it.
+    let m = shards.metrics();
+    m.connections_total.inc();
+    m.connections_open.inc();
+    let conn_id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+    if let Ok(peer) = stream.peer_addr() {
+        crate::log_debug!("conn={conn_id} accepted from {peer}");
+    }
     let mut reader = std::io::BufReader::new(reader_stream);
     let mut served = 0usize;
     loop {
@@ -236,16 +266,32 @@ fn handle_connection(
         match parse_request_from(&mut reader) {
             Ok(None) => break, // clean EOF / idle timeout between requests
             Ok(Some(request)) => {
-                crate::log_debug!("{} {}", request.method, request.path);
+                let started = std::time::Instant::now();
                 served += 1;
+                crate::log_debug!(
+                    "conn={conn_id} req={served} {} {}",
+                    request.method, request.path
+                );
                 let keep = request.keep_alive
                     && served < MAX_REQUESTS_PER_CONN
                     && !shutdown.load(Ordering::SeqCst);
                 let response = api::dispatch(&request, &shards);
+                // Counted before the response bytes go out; together with
+                // responses_total counting after, any concurrent scrape
+                // sees requests >= responses (see super::metrics docs).
+                let route = metrics::route_index(&request.method, &request.segments());
+                m.record_request(route, response.status, started.elapsed());
                 if let Err(e) = response.write_conn(&mut stream, keep) {
-                    crate::log_debug!("write response: {e}");
+                    crate::log_debug!("conn={conn_id} req={served} write response: {e}");
                     break;
                 }
+                m.responses_total.inc();
+                crate::log_debug!(
+                    "conn={conn_id} req={served} -> {} ({} bytes, {:?})",
+                    response.status,
+                    response.body.len(),
+                    started.elapsed()
+                );
                 if !keep {
                     break;
                 }
@@ -255,9 +301,18 @@ fn handle_connection(
                 let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
             }
             Err(response) => {
-                // Malformed input: answer (best effort) and hang up.
+                // Malformed input: answer (best effort) and hang up. No
+                // parsed route or meaningful handling latency exists, so
+                // it counts against the catch-all route at zero elapsed.
+                m.record_request(
+                    metrics::ROUTE_OTHER,
+                    response.status,
+                    std::time::Duration::ZERO,
+                );
                 if let Err(e) = response.write_conn(&mut stream, false) {
-                    crate::log_debug!("write error response: {e}");
+                    crate::log_debug!("conn={conn_id} write error response: {e}");
+                } else {
+                    m.responses_total.inc();
                 }
                 break;
             }
@@ -287,6 +342,8 @@ fn handle_connection(
         }
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
+    m.connections_open.dec();
+    crate::log_debug!("conn={conn_id} closed after {served} request(s)");
 }
 
 /// The address to dial when waking the accept loop: `addr` itself, unless

@@ -74,6 +74,12 @@ impl Response {
         Self::json(status, &crate::util::json::Json::obj().with("error", message))
     }
 
+    /// A response with an explicit content type (e.g. the Prometheus
+    /// exposition type on `GET /metrics`).
+    pub fn with_content_type(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
+        Self { status, content_type, body }
+    }
+
     fn status_text(status: u16) -> &'static str {
         match status {
             200 => "OK",

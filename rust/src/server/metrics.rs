@@ -1,0 +1,377 @@
+//! The daemon's metric registry and the `GET /metrics` renderer.
+//!
+//! One [`ServerMetrics`] instance hangs off the [`ShardSet`]; the daemon's
+//! connection loop, the API handlers and the defrag sweepers record into
+//! it lock-free (see [`crate::obs::hist`]), and [`render`] serializes the
+//! whole registry — plus the `/v1/stats` gauges re-read from the shards —
+//! as Prometheus text exposition with a fixed family order.
+//!
+//! **Scrape-time invariant**: `migsched_http_responses_total` is rendered
+//! *before* the request families, and a response is counted only after its
+//! bytes hit the socket while requests are counted at dispatch, so any
+//! single scrape observes `requests >= responses`. After quiescence the
+//! two are exactly equal — the conservation law the soak test checks under
+//! concurrent load.
+
+use std::time::Duration;
+
+use super::shard::ShardSet;
+use crate::obs::expo::{Expo, Labels};
+use crate::obs::hist::{Counter, DeltaHist, Gauge, LatencyHist};
+
+/// The routes the daemon serves, as `(method, normalized path)` — the
+/// label vocabulary of the HTTP families. Path parameters are collapsed
+/// (`/v1/workloads/{id}`), so label cardinality is fixed no matter how
+/// many workloads exist.
+pub const ROUTES: [(&str, &str); 12] = [
+    ("GET", "/healthz"),
+    ("GET", "/metrics"),
+    ("POST", "/v1/workloads"),
+    ("GET", "/v1/workloads/{id}"),
+    ("DELETE", "/v1/workloads/{id}"),
+    ("POST", "/v1/tick"),
+    ("GET", "/v1/stats"),
+    ("GET", "/v1/cluster"),
+    ("GET", "/v1/hardware"),
+    ("GET", "/v1/healthz"),
+    ("GET", "/v1/version"),
+    ("POST", "/v1/maintenance/defrag"),
+];
+
+/// Index of the catch-all route label (`other`): unknown paths, bad
+/// methods, unparseable requests.
+pub const ROUTE_OTHER: usize = ROUTES.len();
+pub const NROUTES: usize = ROUTES.len() + 1;
+
+/// Route label for index `i`.
+pub fn route_label(i: usize) -> (&'static str, &'static str) {
+    if i < ROUTES.len() {
+        ROUTES[i]
+    } else {
+        ("", "other")
+    }
+}
+
+/// Map a request to its route index. `segments` is the parsed path as in
+/// [`super::http::Request::segments`].
+pub fn route_index(method: &str, segments: &[&str]) -> usize {
+    match (method, segments) {
+        ("GET", ["healthz"]) => 0,
+        ("GET", ["metrics"]) => 1,
+        ("POST", ["v1", "workloads"]) => 2,
+        ("GET", ["v1", "workloads", _]) => 3,
+        ("DELETE", ["v1", "workloads", _]) => 4,
+        ("POST", ["v1", "tick"]) => 5,
+        ("GET", ["v1", "stats"]) => 6,
+        ("GET", ["v1", "cluster"]) => 7,
+        ("GET", ["v1", "hardware"]) => 8,
+        ("GET", ["v1", "healthz"]) => 9,
+        ("GET", ["v1", "version"]) => 10,
+        ("POST", ["v1", "maintenance", "defrag"]) => 11,
+        _ => ROUTE_OTHER,
+    }
+}
+
+/// Status-class labels; `class_index` clamps anything outside 1xx–5xx
+/// into the nearest class.
+pub const CLASSES: [&str; 5] = ["1xx", "2xx", "3xx", "4xx", "5xx"];
+
+pub fn class_index(status: u16) -> usize {
+    (status / 100).clamp(1, 5) as usize - 1
+}
+
+/// Per-route HTTP metrics: one counter + latency histogram per status
+/// class.
+pub struct RouteMetrics {
+    pub requests: [Counter; CLASSES.len()],
+    pub latency: [LatencyHist; CLASSES.len()],
+}
+
+impl RouteMetrics {
+    fn new() -> Self {
+        Self {
+            requests: std::array::from_fn(|_| Counter::new()),
+            latency: std::array::from_fn(|_| LatencyHist::new()),
+        }
+    }
+}
+
+/// The whole registry. Everything is pre-allocated at daemon construction
+/// (fixed routes × classes, one decision/ΔF histogram per shard), so
+/// recording never allocates or takes a lock.
+pub struct ServerMetrics {
+    /// Indexed by [`route_index`]; `NROUTES` entries.
+    pub http: Vec<RouteMetrics>,
+    /// Connections accepted since start.
+    pub connections_total: Counter,
+    /// Connections currently open (keep-alive sessions in flight).
+    pub connections_open: Gauge,
+    /// Responses fully written to a socket. Incremented after the write
+    /// succeeds, so it trails `requests` by the in-flight window.
+    pub responses_total: Counter,
+    /// Scheduler decision latency (accept and reject), one per shard.
+    pub decision: Vec<LatencyHist>,
+    /// Fragmentation-score delta per committed placement, one per shard.
+    pub delta_f: Vec<DeltaHist>,
+    /// Defrag sweeps executed (background sweeper + maintenance endpoint;
+    /// threshold-gated no-op sweeps count too).
+    pub defrag_sweeps_total: Counter,
+    /// Wall-clock duration of those sweeps.
+    pub defrag_sweep_duration: LatencyHist,
+}
+
+impl ServerMetrics {
+    pub fn new(num_shards: usize) -> Self {
+        Self {
+            http: (0..NROUTES).map(|_| RouteMetrics::new()).collect(),
+            connections_total: Counter::new(),
+            connections_open: Gauge::new(),
+            responses_total: Counter::new(),
+            decision: (0..num_shards).map(|_| LatencyHist::new()).collect(),
+            delta_f: (0..num_shards).map(|_| DeltaHist::new()).collect(),
+            defrag_sweeps_total: Counter::new(),
+            defrag_sweep_duration: LatencyHist::new(),
+        }
+    }
+
+    /// Count one dispatched request: increments the (route, class) counter
+    /// and records its handling latency. Called after dispatch, before the
+    /// response bytes are written.
+    pub fn record_request(&self, route: usize, status: u16, elapsed: Duration) {
+        let c = class_index(status);
+        self.http[route].requests[c].inc();
+        self.http[route].latency[c].record(elapsed);
+    }
+}
+
+/// Render the full exposition for `GET /metrics`. Families appear in a
+/// fixed registration order; shard gauges are sampled one shard lock at a
+/// time in index order (the same scatter-gather discipline as
+/// `/v1/stats`).
+pub fn render(shards: &ShardSet) -> String {
+    let m = shards.metrics();
+    let mut e = Expo::new();
+
+    // --- HTTP plane. Responses BEFORE requests (see module docs). -------
+    e.counter(
+        "migsched_http_responses_total",
+        "Responses fully written to a client socket.",
+        &[(Labels::new(), m.responses_total.get())],
+    );
+    let mut req_samples = Vec::new();
+    let mut lat_samples = Vec::new();
+    for (r, rm) in m.http.iter().enumerate() {
+        let (method, endpoint) = route_label(r);
+        for (c, class) in CLASSES.iter().enumerate() {
+            let n = rm.requests[c].get();
+            if n == 0 {
+                continue; // unexercised (route, class) pairs stay silent
+            }
+            let labels = Labels::new()
+                .with("method", method)
+                .with("endpoint", endpoint)
+                .with("class", class);
+            req_samples.push((labels.clone(), n));
+            lat_samples.push((labels, rm.latency[c].snapshot()));
+        }
+    }
+    e.counter(
+        "migsched_http_requests_total",
+        "Requests dispatched, by method, normalized endpoint and status class.",
+        &req_samples,
+    );
+    e.histogram(
+        "migsched_http_request_duration_seconds",
+        "Request handling latency (parse to response ready), by route and status class.",
+        &lat_samples,
+    );
+    e.counter(
+        "migsched_http_connections_total",
+        "Connections accepted since start.",
+        &[(Labels::new(), m.connections_total.get())],
+    );
+    e.gauge(
+        "migsched_http_connections_open",
+        "Connections currently open (keep-alive sessions).",
+        &[(Labels::new(), m.connections_open.get() as f64)],
+    );
+
+    // --- Scheduler plane: per-shard decision latency and ΔF. ------------
+    let shard_label = |i: usize| Labels::new().with("shard", &i.to_string());
+    e.histogram(
+        "migsched_sched_decision_seconds",
+        "Scheduler decision latency per shard (accepts and rejects).",
+        &m.decision
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (shard_label(i), h.snapshot()))
+            .collect::<Vec<_>>(),
+    );
+    e.histogram(
+        "migsched_sched_delta_f_per_commit",
+        "Fragmentation-score increase per committed placement, per shard.",
+        &m.delta_f
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (shard_label(i), h.snapshot()))
+            .collect::<Vec<_>>(),
+    );
+
+    // --- Defrag plane. ---------------------------------------------------
+    e.counter(
+        "migsched_defrag_sweeps_total",
+        "Defrag sweeps executed (background sweeper and maintenance endpoint).",
+        &[(Labels::new(), m.defrag_sweeps_total.get())],
+    );
+    e.histogram(
+        "migsched_defrag_sweep_duration_seconds",
+        "Wall-clock duration of defrag sweeps.",
+        &[(Labels::new(), m.defrag_sweep_duration.snapshot())],
+    );
+
+    // --- Cluster gauges: the /v1/stats surface re-exported so the two can
+    // be cross-checked sample for sample. One shard lock at a time.
+    let mut allocated = 0u64;
+    let mut accepted = 0u64;
+    let mut arrived = 0u64;
+    let mut released = 0u64;
+    let mut expired = 0u64;
+    let mut migrations = 0u64;
+    let mut migrated_bytes = 0u64;
+    let mut active = 0u64;
+    let mut used = 0u64;
+    let mut capacity = 0u64;
+    let mut score_total = 0u64;
+    let mut clock = 0u64;
+    for shard in shards.shards() {
+        let s = shard.state.lock().unwrap();
+        allocated += s.cluster.allocated_workloads() as u64;
+        accepted += s.accepted_total;
+        arrived += s.arrived_total;
+        released += s.released_total;
+        expired += s.expired_total;
+        migrations += s.migrations_total;
+        migrated_bytes += s.migrated_bytes_total;
+        active += s.cluster.active_gpus() as u64;
+        used += s.cluster.used_slices();
+        capacity += s.cluster.capacity_slices();
+        score_total +=
+            s.cluster.gpus().iter().map(|&g| u64::from(s.scorer.score(g))).sum::<u64>();
+        clock = s.clock_slot;
+    }
+    let one = |v: u64| vec![(Labels::new(), v)];
+    let oneg = |v: f64| vec![(Labels::new(), v)];
+    e.counter(
+        "migsched_submits_total",
+        "Workload submissions (accepted or rejected).",
+        &one(arrived),
+    );
+    e.counter("migsched_accepted_total", "Workload submissions accepted.", &one(accepted));
+    e.counter("migsched_released_total", "Explicit workload releases.", &one(released));
+    e.counter("migsched_expired_total", "Lease expiries observed by tick.", &one(expired));
+    e.counter("migsched_defrag_migrations_total", "Defrag migrations applied.", &one(migrations));
+    e.counter(
+        "migsched_defrag_migrated_bytes_total",
+        "Instance memory copied by defrag migrations.",
+        &one(migrated_bytes),
+    );
+    e.gauge("migsched_allocated_workloads", "Workloads currently placed.", &oneg(allocated as f64));
+    e.gauge("migsched_active_gpus", "GPUs with at least one instance.", &oneg(active as f64));
+    e.gauge(
+        "migsched_utilization",
+        "Fraction of memory slices in use.",
+        &oneg(if capacity > 0 { used as f64 / capacity as f64 } else { 0.0 }),
+    );
+    e.gauge(
+        "migsched_mean_frag_score",
+        "Mean fragmentation score per GPU (paper Algorithm 1).",
+        &oneg(score_total as f64 / shards.total_gpus() as f64),
+    );
+    e.gauge("migsched_clock_slot", "Logical slot clock.", &oneg(clock as f64));
+    e.gauge("migsched_num_gpus", "Fleet size in GPUs.", &oneg(shards.total_gpus() as f64));
+    e.gauge("migsched_capacity_slices", "Fleet memory-slice capacity.", &oneg(capacity as f64));
+    e.gauge("migsched_shards", "Shard count.", &oneg(shards.num_shards() as f64));
+    e.gauge(
+        "migsched_uptime_seconds",
+        "Seconds since the daemon state was constructed.",
+        &oneg(shards.uptime().as_secs_f64()),
+    );
+    e.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::daemon::{Daemon, DaemonConfig};
+
+    #[test]
+    fn route_index_covers_every_route_and_falls_through() {
+        for (i, (method, path)) in ROUTES.iter().enumerate() {
+            // Rebuild segments from the normalized path, substituting a
+            // concrete id for the parameter.
+            let segs: Vec<&str> = path
+                .split('/')
+                .filter(|s| !s.is_empty())
+                .map(|s| if s == "{id}" { "42" } else { s })
+                .collect();
+            assert_eq!(route_index(method, &segs), i, "{method} {path}");
+        }
+        assert_eq!(route_index("GET", &["v1", "nope"]), ROUTE_OTHER);
+        assert_eq!(route_index("PUT", &["v1", "workloads"]), ROUTE_OTHER);
+        assert_eq!(route_index("GET", &[]), ROUTE_OTHER);
+    }
+
+    #[test]
+    fn class_index_clamps() {
+        assert_eq!(class_index(200), 1);
+        assert_eq!(class_index(201), 1);
+        assert_eq!(class_index(404), 3);
+        assert_eq!(class_index(500), 4);
+        assert_eq!(class_index(99), 0);
+        assert_eq!(class_index(700), 4);
+    }
+
+    #[test]
+    fn render_produces_the_required_families_and_orders_responses_first() {
+        let shards = Daemon::new(DaemonConfig {
+            num_gpus: 4,
+            shards: 2,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        let m = shards.metrics();
+        m.record_request(route_index("POST", &["v1", "workloads"]), 201, Duration::from_micros(30));
+        m.responses_total.inc();
+        m.decision[0].record(Duration::from_micros(5));
+        m.delta_f[1].record(3);
+        let text = render(&shards);
+        for family in [
+            "migsched_http_requests_total",
+            "migsched_http_request_duration_seconds",
+            "migsched_http_responses_total",
+            "migsched_http_connections_open",
+            "migsched_sched_decision_seconds",
+            "migsched_sched_delta_f_per_commit",
+            "migsched_defrag_sweeps_total",
+            "migsched_defrag_sweep_duration_seconds",
+            "migsched_submits_total",
+            "migsched_uptime_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+        }
+        assert!(text.contains(
+            "migsched_http_requests_total{method=\"POST\",endpoint=\"/v1/workloads\",class=\"2xx\"} 1\n"
+        ));
+        // Per-shard series exist for both shards.
+        assert!(text.contains("migsched_sched_decision_seconds_count{shard=\"0\"} 1\n"));
+        assert!(text.contains("migsched_sched_decision_seconds_count{shard=\"1\"} 0\n"));
+        assert!(text.contains("migsched_sched_delta_f_per_commit_sum{shard=\"1\"} 3\n"));
+        // The scrape-consistency ordering: responses family renders first.
+        let responses = text.find("# TYPE migsched_http_responses_total").unwrap();
+        let requests = text.find("# TYPE migsched_http_requests_total").unwrap();
+        assert!(responses < requests);
+        assert!(text.contains("migsched_shards 2\n"));
+        assert!(text.contains("migsched_num_gpus 4\n"));
+    }
+}

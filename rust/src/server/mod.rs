@@ -25,12 +25,16 @@
 //! | `GET /v1/stats`               | paper metrics (acceptance, frag, util…)   |
 //! | `GET /v1/cluster`             | full occupancy snapshot                   |
 //! | `POST /v1/maintenance/defrag` | plan + apply migrations (per shard)       |
-//! | `GET /healthz`                | liveness                                  |
+//! | `GET /v1/healthz`             | liveness JSON (status, uptime, shards)    |
+//! | `GET /v1/version`             | crate version + enabled features          |
+//! | `GET /metrics`                | Prometheus text exposition ([`metrics`])  |
+//! | `GET /healthz`                | liveness (legacy plain-text)              |
 
 pub mod api;
 pub mod client;
 pub mod daemon;
 pub mod http;
+pub mod metrics;
 pub mod shard;
 pub mod threadpool;
 

@@ -21,8 +21,10 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use super::daemon::DaemonConfig;
+use super::metrics::ServerMetrics;
 use crate::cluster::Cluster;
 use crate::defrag::{apply_plan, plan_defrag_budgeted, CostModel, MigrationPlan};
 use crate::frag::{FragScorer, ScoreTable};
@@ -136,6 +138,10 @@ pub struct ShardSet {
     router: ShardRouter,
     total_gpus: usize,
     scheduler_name: &'static str,
+    /// The daemon's metric registry (see [`super::metrics`]); recording is
+    /// lock-free, so it lives outside the shard mutexes.
+    metrics: ServerMetrics,
+    started: Instant,
 }
 
 impl ShardSet {
@@ -177,7 +183,19 @@ impl ShardSet {
             router: ShardRouter::new(config.shards),
             total_gpus: config.num_gpus,
             scheduler_name: config.scheduler.name(),
+            metrics: ServerMetrics::new(config.shards),
+            started: Instant::now(),
         }
+    }
+
+    /// The daemon's metric registry.
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Time since this state was constructed (serving uptime).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     pub fn num_shards(&self) -> usize {

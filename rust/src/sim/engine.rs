@@ -15,7 +15,10 @@ use crate::cluster::{Cluster, ClusterMetrics};
 use crate::defrag::DefragPolicy;
 use crate::frag::{FragScorer, ScoreTable};
 use crate::mig::HardwareModel;
+use crate::obs::hist::LatencyHist;
+use crate::obs::telemetry::{slot_row, SlotStats};
 use crate::sched::Scheduler;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Distribution, Trace, Workload, WorkloadGenerator};
 
@@ -33,6 +36,10 @@ pub struct SimConfig {
     /// [`crate::defrag`]): on the policy's cadence, apply a budgeted
     /// migration plan. `None` = paper behavior (no migration).
     pub defrag: Option<DefragPolicy>,
+    /// Capture per-checkpoint telemetry rows ([`SimResult::telemetry`],
+    /// the `--telemetry PATH` JSONL). Off by default: rows carry wall-clock
+    /// decision latency, so untimed runs stay clock-free and deterministic.
+    pub telemetry: bool,
 }
 
 impl SimConfig {
@@ -45,6 +52,7 @@ impl SimConfig {
             checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
             seed,
             defrag: None,
+            telemetry: false,
         }
     }
 
@@ -96,6 +104,10 @@ pub struct SimResult {
     pub migrations: u64,
     /// Instance memory copied by those migrations.
     pub migrated_bytes: u64,
+    /// Slot-cadence telemetry rows (one per checkpoint; empty unless
+    /// [`SimConfig::telemetry`]) — see [`crate::obs::telemetry::slot_row`]
+    /// for the schema.
+    pub telemetry: Vec<Json>,
 }
 
 impl SimResult {
@@ -188,6 +200,8 @@ impl SimEngine {
         let mut next_checkpoint = 0usize;
         let mut migrations = 0u64;
         let mut migrated_bytes = 0u64;
+        let mut telemetry: Vec<Json> = Vec::new();
+        let decision_hist = LatencyHist::new();
 
         for w in workloads {
             let t = w.arrival_slot;
@@ -226,9 +240,19 @@ impl SimEngine {
                     }
                 }
             }
-            // 2. FIFO arrival → schedule → commit or reject.
+            // 2. FIFO arrival → schedule → commit or reject. Decision
+            // timing only under telemetry, so plain runs never touch the
+            // wall clock.
             arrived += 1;
-            if let Some(placement) = scheduler.schedule(&cluster, w.profile) {
+            let decided = if self.config.telemetry {
+                let start = std::time::Instant::now();
+                let p = scheduler.schedule(&cluster, w.profile);
+                decision_hist.record(start.elapsed());
+                p
+            } else {
+                scheduler.schedule(&cluster, w.profile)
+            };
+            if let Some(placement) = decided {
                 cluster.allocate(w.id, placement).expect("scheduler proposed valid placement");
                 scheduler.on_commit(&cluster, placement);
                 accepted += 1;
@@ -241,11 +265,24 @@ impl SimEngine {
                 && checkpoint_slots[next_checkpoint].0 == t
             {
                 let (slot, frac) = checkpoint_slots[next_checkpoint];
-                records.push(CheckpointRecord {
-                    demand: frac,
-                    slot,
-                    metrics: ClusterMetrics::capture(&cluster, &scorer, accepted, arrived),
-                });
+                let metrics = ClusterMetrics::capture(&cluster, &scorer, accepted, arrived);
+                records.push(CheckpointRecord { demand: frac, slot, metrics });
+                if self.config.telemetry {
+                    telemetry.push(slot_row(
+                        &SlotStats {
+                            slot,
+                            arrived,
+                            accepted,
+                            allocated: metrics.allocated_workloads,
+                            active_gpus: metrics.active_gpus,
+                            utilization: metrics.utilization,
+                            mean_frag_score: metrics.mean_frag_score,
+                            migrations,
+                            migrated_bytes,
+                        },
+                        &decision_hist.snapshot(),
+                    ));
+                }
                 next_checkpoint += 1;
             }
         }
@@ -263,6 +300,7 @@ impl SimEngine {
             arrived,
             migrations,
             migrated_bytes,
+            telemetry,
         }
     }
 
@@ -443,6 +481,30 @@ mod tests {
                 assert!(rec.metrics.active_gpus <= 10, "{kind}");
             }
         }
+    }
+
+    #[test]
+    fn telemetry_rows_follow_checkpoints_and_default_off() {
+        let off = run(SchedulerKind::Mfi, Distribution::Uniform, 4);
+        assert!(off.telemetry.is_empty(), "telemetry is opt-in");
+
+        let mut cfg = SimConfig::small(Distribution::Uniform, 4);
+        cfg.telemetry = true;
+        let engine = SimEngine::new(cfg.clone());
+        let mut sched = SchedulerKind::Mfi.build(&cfg.hardware);
+        let r = engine.run(&mut *sched);
+        assert_eq!(r.telemetry.len(), r.records.len());
+        // Telemetry timing must not perturb the simulation itself.
+        assert_eq!(r.accepted, off.accepted);
+        assert_eq!(r.time_avg_frag, off.time_avg_frag);
+        // The last row agrees with the run totals.
+        let last = r.telemetry.last().unwrap();
+        use crate::util::json::Json;
+        assert_eq!(last.get("arrived").and_then(Json::as_u64), Some(r.arrived));
+        assert_eq!(last.get("accepted").and_then(Json::as_u64), Some(r.accepted));
+        // One decision timed per arrival.
+        assert_eq!(last.get("decisions").and_then(Json::as_u64), Some(r.arrived));
+        assert!(last.get("decision_seconds_p99").and_then(Json::as_f64).unwrap() >= 0.0);
     }
 
     #[test]

@@ -206,6 +206,7 @@ pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
                             checkpoints: config.checkpoints.clone(),
                             seed: run_seeds[run],
                             defrag: None,
+                            telemetry: false,
                         };
                         let engine = SimEngine::new(sim_cfg);
                         let mut sched = scheme.build(&config.hardware);

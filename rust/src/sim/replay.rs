@@ -28,6 +28,8 @@ use crate::cluster::{Cluster, ClusterMetrics};
 use crate::defrag::DefragPolicy;
 use crate::frag::{FragScorer, ScoreTable};
 use crate::mig::HardwareModel;
+use crate::obs::hist::LatencyHist;
+use crate::obs::telemetry::{slot_row, SlotStats};
 use crate::sched::Scheduler;
 use crate::util::json::Json;
 use crate::workload::{Trace, WorkloadId};
@@ -47,6 +49,10 @@ pub struct ReplayConfig {
     /// Continuous defragmentation policy applied during the replay
     /// (`None` = no migrations, the pre-existing behavior).
     pub defrag: Option<DefragPolicy>,
+    /// Capture per-sample telemetry rows ([`ReplayResult::telemetry`], the
+    /// `--telemetry PATH` JSONL). Off by default: rows carry wall-clock
+    /// decision latency, so untimed replays stay clock-free.
+    pub telemetry: bool,
 }
 
 impl ReplayConfig {
@@ -57,6 +63,7 @@ impl ReplayConfig {
             record_every: 0,
             max_events: 0,
             defrag: None,
+            telemetry: false,
         }
     }
 }
@@ -97,6 +104,11 @@ pub struct ReplayResult {
     /// Whether a defrag policy was configured — gates the migration keys
     /// in [`Self::to_json`] so defrag-disabled output stays byte-identical.
     pub defrag_enabled: bool,
+    /// Slot-cadence telemetry rows (one per [`ReplaySample`]; empty unless
+    /// [`ReplayConfig::telemetry`]) — see [`crate::obs::telemetry::slot_row`]
+    /// for the schema. Deliberately NOT part of [`Self::to_json`], which is
+    /// byte-stable; rows go to their own JSONL file.
+    pub telemetry: Vec<Json>,
 }
 
 impl ReplayResult {
@@ -181,6 +193,8 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
     let mut migrated_bytes = 0u64;
     let mut defrag_sweeps = 0u64;
     let mut last_defrag = first_slot;
+    let mut telemetry: Vec<Json> = Vec::new();
+    let decision_hist = LatencyHist::new();
 
     let mut i = 0usize;
     while i < arrivals.len() {
@@ -242,7 +256,17 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         while i < arrivals.len() && arrivals[i].arrival_slot == t {
             let w = &arrivals[i];
             arrived += 1;
-            if let Some(placement) = scheduler.schedule(&cluster, w.profile) {
+            // Wall-clock timing only when telemetry asks for it, so plain
+            // replays never touch the clock.
+            let decided = if config.telemetry {
+                let start = std::time::Instant::now();
+                let p = scheduler.schedule(&cluster, w.profile);
+                decision_hist.record(start.elapsed());
+                p
+            } else {
+                scheduler.schedule(&cluster, w.profile)
+            };
+            if let Some(placement) = decided {
                 cluster
                     .allocate(w.id, placement)
                     .expect("scheduler proposed valid placement");
@@ -260,10 +284,24 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         peak_active = peak_active.max(cluster.active_gpus());
         // 3. Slot-cadence sampling.
         if last_recorded.map(|r| t - r >= record_every).unwrap_or(true) {
-            samples.push(ReplaySample {
-                slot: t,
-                metrics: ClusterMetrics::capture(&cluster, &scorer, accepted, arrived),
-            });
+            let metrics = ClusterMetrics::capture(&cluster, &scorer, accepted, arrived);
+            samples.push(ReplaySample { slot: t, metrics });
+            if config.telemetry {
+                telemetry.push(slot_row(
+                    &SlotStats {
+                        slot: t,
+                        arrived,
+                        accepted,
+                        allocated: metrics.allocated_workloads,
+                        active_gpus: metrics.active_gpus,
+                        utilization: metrics.utilization,
+                        mean_frag_score: metrics.mean_frag_score,
+                        migrations,
+                        migrated_bytes,
+                    },
+                    &decision_hist.snapshot(),
+                ));
+            }
             last_recorded = Some(t);
         }
     }
@@ -276,6 +314,22 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
     // Always close the trajectory with the final state.
     if samples.last().map(|s| s.slot != last_slot).unwrap_or(false) {
         samples.push(ReplaySample { slot: last_slot, metrics: final_metrics });
+        if config.telemetry {
+            telemetry.push(slot_row(
+                &SlotStats {
+                    slot: last_slot,
+                    arrived,
+                    accepted,
+                    allocated: final_metrics.allocated_workloads,
+                    active_gpus: final_metrics.active_gpus,
+                    utilization: final_metrics.utilization,
+                    mean_frag_score: final_metrics.mean_frag_score,
+                    migrations,
+                    migrated_bytes,
+                },
+                &decision_hist.snapshot(),
+            ));
+        }
     }
     ReplayResult {
         scheme: scheduler.name().to_string(),
@@ -291,6 +345,7 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         migrated_bytes,
         defrag_sweeps,
         defrag_enabled: config.defrag.is_some(),
+        telemetry,
     }
 }
 
@@ -578,6 +633,69 @@ mod tests {
             assert!(pair[1].metrics.accepted_total >= pair[0].metrics.accepted_total);
         }
         assert_eq!(r.samples.last().unwrap().slot, 990);
+    }
+
+    #[test]
+    fn telemetry_rows_mirror_samples_and_default_off() {
+        let ws: Vec<Workload> =
+            (0..40).map(|i| w(i, Profile::P1g10gb, i * 5, 8)).collect();
+        let t = trace_of(&ws);
+        let hw = HardwareModel::a100_80gb();
+        let mut a = SchedulerKind::Mfi.build(&hw);
+        let plain = run(&t, &mut *a, &ReplayConfig::new(8));
+        assert!(plain.telemetry.is_empty(), "telemetry is opt-in");
+
+        let mut b = SchedulerKind::Mfi.build(&hw);
+        let cfg = ReplayConfig { telemetry: true, ..ReplayConfig::new(8) };
+        let traced = run(&t, &mut *b, &cfg);
+        // Timing must not perturb the replay itself.
+        assert_eq!(traced.accepted, plain.accepted);
+        assert_eq!(traced.time_avg_frag, plain.time_avg_frag);
+        assert_eq!(traced.samples.len(), plain.samples.len());
+        // One row per sample, slots aligned, final row carries the totals.
+        assert_eq!(traced.telemetry.len(), traced.samples.len());
+        for (row, sample) in traced.telemetry.iter().zip(&traced.samples) {
+            assert_eq!(row.get("slot").and_then(Json::as_u64), Some(sample.slot));
+        }
+        let last = traced.telemetry.last().unwrap();
+        assert_eq!(last.get("arrived").and_then(Json::as_u64), Some(traced.arrived));
+        assert_eq!(last.get("accepted").and_then(Json::as_u64), Some(traced.accepted));
+        // Every arrival was timed exactly once.
+        assert_eq!(last.get("decisions").and_then(Json::as_u64), Some(traced.arrived));
+    }
+
+    /// Byte-stability pin: the observability layer must not change the
+    /// serialized defrag-off replay summary at all — same keys, same
+    /// order, and telemetry capture must leave the bytes identical.
+    #[test]
+    fn defrag_off_json_bytes_are_pinned() {
+        let plain = run_ff(&ReplayConfig::new(2)).to_json();
+        let keys: Vec<&str> = match &plain {
+            Json::Obj(pairs) => pairs.iter().map(|(k, _)| k.as_str()).collect(),
+            other => panic!("summary must be an object, got {other:?}"),
+        };
+        assert_eq!(
+            keys,
+            [
+                "scheme",
+                "arrived",
+                "accepted",
+                "rejected",
+                "acceptance_rate",
+                "conserved",
+                "time_avg_frag",
+                "peak_active_gpus",
+                "span_slots",
+                "final",
+            ],
+            "defrag-off summary keys changed — downstream parsers pin these"
+        );
+        let traced = run_ff(&ReplayConfig { telemetry: true, ..ReplayConfig::new(2) });
+        assert_eq!(
+            plain.to_string_compact(),
+            traced.to_json().to_string_compact(),
+            "telemetry capture must not leak into the summary bytes"
+        );
     }
 
     #[test]

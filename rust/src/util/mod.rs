@@ -14,7 +14,8 @@
 //! * [`csv`] — a CSV writer for experiment result exports.
 //! * [`stats`] — streaming statistics (Welford), percentiles, confidence
 //!   intervals and histograms for the experiment harness.
-//! * [`logging`] — leveled stderr logger controlled by `MIGSCHED_LOG`.
+//! * [`logging`] — compatibility re-export of [`crate::obs::log`], the
+//!   leveled RFC3339 stderr logger controlled by `MIGSCHED_LOG`.
 //! * [`table`] — aligned plain-text table rendering for figure/report output.
 //! * [`bench`] — a micro/macro benchmark harness (criterion replacement) used
 //!   by the `harness = false` bench binaries.
@@ -25,7 +26,10 @@ pub mod bench;
 pub mod check;
 pub mod csv;
 pub mod json;
-pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// The logger moved to [`crate::obs::log`] when the observability layer
+/// landed; this alias keeps `util::logging::*` paths working.
+pub use crate::obs::log as logging;

@@ -7,12 +7,100 @@
 //!   allocated       = accepted_total − released_total − expired_total
 //!   released_total  counts explicit DELETEs only
 //!   expired_total   counts lease expiries via /v1/tick only
+//!
+//! A scraper thread hits `GET /metrics` throughout the run: every
+//! mid-flight snapshot must satisfy the scrape-time invariants (cumulative
+//! buckets, requests ≥ responses, the per-shard counter identity), and
+//! after the drain the HTTP counters must converge to exact conservation.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use migsched::server::{Daemon, DaemonConfig, HttpClient};
 use migsched::util::json::Json;
+
+/// Pull one value out of an exposition: the sum over all samples of
+/// `family` (skips `# ` comments; histogram series excluded by the
+/// `_bucket`/`_sum`/`_count` suffix check).
+fn family_sum(text: &str, family: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter_map(|l| {
+            let (name_labels, value) = l.rsplit_once(' ')?;
+            let name = name_labels.split('{').next().unwrap();
+            (name == family).then(|| value.parse::<f64>().unwrap())
+        })
+        .sum()
+}
+
+/// Scrape-time invariants that must hold in ANY snapshot, even one taken
+/// mid-burst with all client threads live.
+fn check_snapshot(text: &str) {
+    // Cumulative buckets never decrease within a series, and the +Inf
+    // bucket equals the series' _count (bucket lines for one series are
+    // consecutive, finite bounds first, then +Inf, then _sum and _count).
+    let mut prev: Option<(String, f64)> = None; // (series prefix, last value)
+    let mut pending_inf: Option<(String, f64)> = None; // (count name+labels, +Inf value)
+    for line in text.lines().filter(|l| !l.starts_with('#')) {
+        let (name_labels, value) = line.rsplit_once(' ').expect("sample line");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        if let Some((prefix, _)) = name_labels.split_once("le=\"") {
+            let series = prefix.to_string();
+            if let Some((last_series, last_v)) = &prev {
+                if *last_series == series {
+                    assert!(value >= *last_v, "bucket decreased: {line}");
+                }
+            }
+            if name_labels.contains("le=\"+Inf\"") {
+                // Derive the matching _count sample name for this series.
+                // Split at the FIRST '{' (label values like "/{id}" may
+                // contain braces of their own), keep the other labels.
+                let (bucket_name, labels) = series.split_once('{').expect("label brace");
+                let base = bucket_name.strip_suffix("_bucket").expect("bucket suffix");
+                let labels = labels.trim_end_matches(',');
+                let count_name = if labels.is_empty() {
+                    format!("{base}_count")
+                } else {
+                    format!("{base}_count{{{labels}}}")
+                };
+                pending_inf = Some((count_name, value));
+                prev = None;
+            } else {
+                prev = Some((series, value));
+            }
+            continue;
+        }
+        if let Some((count_name, inf_v)) = &pending_inf {
+            if name_labels == count_name {
+                assert_eq!(value, *inf_v, "+Inf bucket != _count: {line}");
+                pending_inf = None;
+            }
+        }
+    }
+    assert!(pending_inf.is_none(), "+Inf bucket without a matching _count");
+
+    // A request is counted at dispatch, its response only after the bytes
+    // hit the socket — no snapshot may ever see responses ahead.
+    let requests = family_sum(text, "migsched_http_requests_total");
+    let responses = family_sum(text, "migsched_http_responses_total");
+    assert!(
+        requests >= responses,
+        "snapshot saw responses ({responses}) ahead of requests ({requests})"
+    );
+
+    // Per-shard identity, preserved by summation because each shard's
+    // counters are sampled under its own lock.
+    let accepted = family_sum(text, "migsched_accepted_total");
+    let released = family_sum(text, "migsched_released_total");
+    let expired = family_sum(text, "migsched_expired_total");
+    let allocated = family_sum(text, "migsched_allocated_workloads");
+    assert_eq!(
+        allocated,
+        accepted - released - expired,
+        "allocated = accepted - released - expired must hold in every snapshot"
+    );
+    assert!(family_sum(text, "migsched_submits_total") >= accepted);
+}
 
 #[test]
 fn multi_shard_soak_conserves_counters_and_drains() {
@@ -28,6 +116,26 @@ fn multi_shard_soak_conserves_counters_and_drains() {
     let addr = handle.addr().to_string();
     let accepted = Arc::new(AtomicU64::new(0));
     let rejected = Arc::new(AtomicU64::new(0));
+
+    // Concurrent scraper: every snapshot taken while the 6 client threads
+    // hammer the daemon must satisfy the scrape-time invariants.
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || -> usize {
+            let client = HttpClient::new(&addr);
+            let mut scrapes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let r = client.get("/metrics").expect("scrape");
+                assert_eq!(r.status, 200);
+                check_snapshot(&r.body);
+                scrapes += 1;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            scrapes
+        })
+    };
 
     let threads: Vec<_> = (0..n_threads)
         .map(|t| {
@@ -86,6 +194,9 @@ fn multi_shard_soak_conserves_counters_and_drains() {
     for t in threads {
         t.join().unwrap();
     }
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper invariants held");
+    assert!(scrapes > 0, "the scraper observed at least one mid-run snapshot");
 
     let client = HttpClient::new(&addr);
     let stats = client.get("/v1/stats").unwrap().json().unwrap();
@@ -127,5 +238,35 @@ fn multi_shard_soak_conserves_counters_and_drains() {
     for mask in snap.get("gpu_masks").unwrap().as_arr().unwrap() {
         assert_eq!(mask.as_u64(), Some(0), "drained fleet has empty occupancy");
     }
+
+    // After the drain the metric counters converge to exact conservation:
+    // requests == responses (only this client's in-flight window can lag,
+    // so poll briefly) and the exposition agrees with /v1/stats.
+    let arrived_total = client
+        .get("/v1/stats")
+        .unwrap()
+        .json()
+        .unwrap()
+        .req_u64("arrived_total")
+        .unwrap() as f64;
+    let mut converged = false;
+    for _ in 0..100 {
+        let body = client.get("/metrics").expect("scrape").body;
+        check_snapshot(&body);
+        assert_eq!(
+            family_sum(&body, "migsched_submits_total"),
+            arrived_total,
+            "exposition submits_total tracks /v1/stats arrived_total"
+        );
+        assert_eq!(family_sum(&body, "migsched_allocated_workloads"), 0.0);
+        let requests = family_sum(&body, "migsched_http_requests_total");
+        let responses = family_sum(&body, "migsched_http_responses_total");
+        if requests == responses {
+            converged = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(converged, "requests never converged to responses after the drain");
     handle.shutdown();
 }

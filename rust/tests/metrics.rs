@@ -1,0 +1,380 @@
+//! `GET /metrics` contract over a live socket: the exposition must be
+//! well-formed Prometheus text format (every sample preceded by exactly
+//! one `# TYPE`, no duplicate families, cumulative buckets, `le="+Inf"`
+//! equal to `_count`), and the re-exported cluster counters must agree
+//! sample-for-sample with `/v1/stats` after a scripted
+//! submit/release/tick sequence.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use migsched::sched::SchedulerKind;
+use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::util::json::Json;
+
+/// Raw HTTP GET that keeps the response headers ([`HttpClient`] hides
+/// them, and the exposition `Content-Type` is part of the contract).
+fn raw_get(addr: &str, path: &str) -> (u16, BTreeMap<String, String>, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+        .expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .expect("status line")
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let headers = lines
+        .map(|l| {
+            let (k, v) = l.split_once(':').expect("header line");
+            (k.trim().to_ascii_lowercase(), v.trim().to_string())
+        })
+        .collect();
+    (status, headers, body.to_string())
+}
+
+/// One parsed sample: metric name (with `_bucket`/`_sum`/`_count` suffix
+/// intact), its label pairs, and the value.
+#[derive(Debug, Clone)]
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+impl Sample {
+    fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// The label set minus `le`, as a grouping key for bucket series.
+    fn series_key(&self) -> String {
+        let mut parts: Vec<String> = self
+            .labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        parts.sort();
+        parts.join(",")
+    }
+}
+
+/// Parse + lint the exposition. Panics (with context) on any format
+/// violation; returns samples grouped by family name.
+fn lint_exposition(text: &str) -> BTreeMap<String, (String, Vec<Sample>)> {
+    // family name -> (kind, samples)
+    let mut families: BTreeMap<String, (String, Vec<Sample>)> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("family name").to_string();
+            let kind = it.next().expect("family kind").to_string();
+            assert!(
+                !families.contains_key(&name),
+                "duplicate # TYPE for family {name}"
+            );
+            families.insert(name.clone(), (kind, Vec::new()));
+            order.push(name);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        // Sample line: name[{labels}] value
+        let (name_labels, value) = line.rsplit_once(' ').expect("sample has a value");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => {
+                let inner = rest.strip_suffix('}').expect("closing brace");
+                let labels = inner
+                    .split(',')
+                    .map(|pair| {
+                        let (k, v) = pair.split_once('=').expect("label pair");
+                        let v = v
+                            .strip_prefix('"')
+                            .and_then(|v| v.strip_suffix('"'))
+                            .expect("quoted label value");
+                        (k.to_string(), v.to_string())
+                    })
+                    .collect();
+                (n.to_string(), labels)
+            }
+            None => (name_labels.to_string(), Vec::new()),
+        };
+        // Resolve the family this sample belongs to: exact name for
+        // counters/gauges, stripped suffix for histogram series. The
+        // family must already be declared — that is the "every sample is
+        // preceded by its # TYPE" rule.
+        let family = if families.contains_key(&name) {
+            name.clone()
+        } else {
+            ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suffix| {
+                    let base = name.strip_suffix(suffix)?;
+                    match families.get(base) {
+                        Some((kind, _)) if kind == "histogram" => Some(base.to_string()),
+                        _ => None,
+                    }
+                })
+                .unwrap_or_else(|| panic!("sample {name} has no preceding # TYPE"))
+        };
+        families.get_mut(&family).unwrap().1.push(Sample { name, labels, value });
+    }
+
+    // Histogram invariants per (family, label set): buckets cumulative in
+    // `le` order, `+Inf` bucket == `_count`, and an empty series has zero
+    // sum.
+    for (family, (kind, samples)) in &families {
+        if kind != "histogram" {
+            continue;
+        }
+        let mut buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+        let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+        let mut sums: BTreeMap<String, f64> = BTreeMap::new();
+        for s in samples {
+            if s.name.ends_with("_bucket") {
+                let le = s.label("le").expect("bucket has le");
+                let le = if le == "+Inf" { f64::INFINITY } else { le.parse().expect("le bound") };
+                buckets.entry(s.series_key()).or_default().push((le, s.value));
+            } else if s.name.ends_with("_count") {
+                counts.insert(s.series_key(), s.value);
+            } else if s.name.ends_with("_sum") {
+                sums.insert(s.series_key(), s.value);
+            } else {
+                panic!("unexpected sample {} in histogram {family}", s.name);
+            }
+        }
+        for (series, series_buckets) in &buckets {
+            let mut last_le = f64::NEG_INFINITY;
+            let mut last_v = 0.0;
+            for &(le, v) in series_buckets {
+                assert!(le > last_le, "{family}{{{series}}}: le bounds must increase");
+                assert!(
+                    v >= last_v,
+                    "{family}{{{series}}}: bucket at le={le} decreased ({v} < {last_v})"
+                );
+                (last_le, last_v) = (le, v);
+            }
+            let (inf_le, inf_v) = *series_buckets.last().unwrap();
+            assert!(inf_le.is_infinite(), "{family}{{{series}}}: missing le=\"+Inf\"");
+            let count = counts.get(series).unwrap_or_else(|| {
+                panic!("{family}{{{series}}}: buckets without a _count sample")
+            });
+            assert_eq!(inf_v, *count, "{family}{{{series}}}: +Inf bucket != _count");
+            let sum = sums
+                .get(series)
+                .unwrap_or_else(|| panic!("{family}{{{series}}}: missing _sum sample"));
+            if *count == 0.0 {
+                assert_eq!(*sum, 0.0, "{family}{{{series}}}: empty series with nonzero sum");
+            }
+        }
+    }
+    assert!(!order.is_empty(), "exposition declared no families at all");
+    families
+}
+
+/// Value of the single unlabeled sample of `family`.
+fn scalar(families: &BTreeMap<String, (String, Vec<Sample>)>, family: &str) -> f64 {
+    let (_, samples) = families
+        .get(family)
+        .unwrap_or_else(|| panic!("missing family {family}"));
+    assert_eq!(samples.len(), 1, "{family} should carry exactly one sample");
+    samples[0].value
+}
+
+/// Value of the request counter for (method, endpoint, class), 0 if the
+/// pair never fired (zero-count pairs are silent by design).
+fn requests(
+    families: &BTreeMap<String, (String, Vec<Sample>)>,
+    method: &str,
+    endpoint: &str,
+    class: &str,
+) -> f64 {
+    families["migsched_http_requests_total"]
+        .1
+        .iter()
+        .find(|s| {
+            s.label("method") == Some(method)
+                && s.label("endpoint") == Some(endpoint)
+                && s.label("class") == Some(class)
+        })
+        .map(|s| s.value)
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn metrics_exposition_is_well_formed_and_matches_stats() {
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 2,
+        scheduler: SchedulerKind::Mfi,
+        workers: 2,
+        shards: 1,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    let client = HttpClient::new(&addr);
+
+    // Scripted sequence: two full-GPU accepts, one reject, one release,
+    // one tick — every counter lands on a known value.
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        let r = client
+            .post_json("/v1/workloads", &Json::obj().with("profile", "7g.80gb"))
+            .expect("submit");
+        assert_eq!(r.status, 201, "{}", r.body);
+        ids.push(r.json().unwrap().req_u64("id").unwrap());
+    }
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "1g.10gb"))
+        .expect("submit");
+    assert_eq!(r.status, 409, "fleet is full: {}", r.body);
+    let r = client.delete(&format!("/v1/workloads/{}", ids[0])).expect("release");
+    assert_eq!(r.status, 200);
+    let r = client.post_json("/v1/tick", &Json::obj().with("slots", 1u64)).expect("tick");
+    assert_eq!(r.status, 200);
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+
+    let (status, headers, body) = raw_get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(
+        headers.get("content-type").map(String::as_str),
+        Some("text/plain; version=0.0.4; charset=utf-8")
+    );
+    // A response is counted only after its bytes hit the socket, so the
+    // keep-alive client's last response may still be in flight at render
+    // time: any scrape sees requests >= responses, and equality holds
+    // after quiescence — poll for it.
+    let mut families = lint_exposition(&body);
+    let total = |fs: &BTreeMap<String, (String, Vec<Sample>)>| -> (f64, f64) {
+        let requests: f64 =
+            fs["migsched_http_requests_total"].1.iter().map(|s| s.value).sum();
+        (requests, scalar(fs, "migsched_http_responses_total"))
+    };
+    for attempt in 0.. {
+        let (requests, responses) = total(&families);
+        assert!(requests >= responses, "a scrape may never see responses ahead");
+        if requests == responses {
+            break;
+        }
+        assert!(attempt < 100, "requests never converged to responses");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        families = lint_exposition(&raw_get(&addr, "/metrics").2);
+    }
+
+    // Cluster counters match /v1/stats sample for sample.
+    assert_eq!(scalar(&families, "migsched_submits_total"), 3.0);
+    assert_eq!(
+        scalar(&families, "migsched_submits_total"),
+        stats.req_u64("arrived_total").unwrap() as f64
+    );
+    assert_eq!(
+        scalar(&families, "migsched_accepted_total"),
+        stats.req_u64("accepted_total").unwrap() as f64
+    );
+    assert_eq!(
+        scalar(&families, "migsched_released_total"),
+        stats.req_u64("released_total").unwrap() as f64
+    );
+    assert_eq!(
+        scalar(&families, "migsched_expired_total"),
+        stats.req_u64("expired_total").unwrap() as f64
+    );
+    assert_eq!(
+        scalar(&families, "migsched_allocated_workloads"),
+        stats.req_u64("allocated_workloads").unwrap() as f64
+    );
+    assert_eq!(scalar(&families, "migsched_clock_slot"), 1.0);
+    assert_eq!(scalar(&families, "migsched_shards"), 1.0);
+    assert_eq!(scalar(&families, "migsched_num_gpus"), 2.0);
+    assert!(scalar(&families, "migsched_uptime_seconds") >= 0.0);
+
+    // HTTP plane: the scripted requests landed on the right routes; the
+    // in-flight /metrics scrape itself is recorded only after its
+    // response renders, so it appears in neither side.
+    assert_eq!(requests(&families, "POST", "/v1/workloads", "2xx"), 2.0);
+    assert_eq!(requests(&families, "POST", "/v1/workloads", "4xx"), 1.0);
+    assert_eq!(requests(&families, "DELETE", "/v1/workloads/{id}", "2xx"), 1.0);
+    assert_eq!(requests(&families, "POST", "/v1/tick", "2xx"), 1.0);
+    assert_eq!(requests(&families, "GET", "/v1/stats", "2xx"), 1.0);
+    let total_requests: f64 =
+        families["migsched_http_requests_total"].1.iter().map(|s| s.value).sum();
+    assert_eq!(
+        total_requests,
+        scalar(&families, "migsched_http_responses_total"),
+        "quiescent scrape: every dispatched request was answered"
+    );
+    assert!(scalar(&families, "migsched_http_connections_total") >= 2.0);
+
+    // Scheduler plane: 3 decisions (2 accepts + 1 reject), ΔF recorded
+    // only for the 2 commits.
+    let count_of = |family: &str| -> f64 {
+        families[family]
+            .1
+            .iter()
+            .filter(|s| s.name.ends_with("_count"))
+            .map(|s| s.value)
+            .sum()
+    };
+    assert_eq!(count_of("migsched_sched_decision_seconds"), 3.0);
+    assert_eq!(count_of("migsched_sched_delta_f_per_commit"), 2.0);
+    // Each 7g.80gb commit fills a blank GPU: ΔF is identical for both, so
+    // the per-shard sum is even and non-negative.
+    let delta_sum: f64 = families["migsched_sched_delta_f_per_commit"]
+        .1
+        .iter()
+        .filter(|s| s.name.ends_with("_sum"))
+        .map(|s| s.value)
+        .sum();
+    assert_eq!(delta_sum % 2.0, 0.0);
+
+    // A second scrape still lints and sees the earlier ones counted.
+    let (_, _, body2) = raw_get(&addr, "/metrics");
+    let families2 = lint_exposition(&body2);
+    assert!(requests(&families2, "GET", "/metrics", "2xx") >= 1.0);
+
+    handle.shutdown();
+}
+
+#[test]
+fn healthz_and_version_over_the_socket() {
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 4,
+        workers: 1,
+        shards: 2,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let client = HttpClient::new(&handle.addr().to_string());
+
+    let r = client.get("/v1/healthz").expect("healthz");
+    assert_eq!(r.status, 200);
+    let j = r.json().unwrap();
+    assert_eq!(j.req_str("status").unwrap(), "ok");
+    assert!(j.get("uptime_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert_eq!(j.req_u64("shards").unwrap(), 2);
+    assert_eq!(j.req_u64("num_gpus").unwrap(), 4);
+
+    let r = client.get("/v1/version").expect("version");
+    assert_eq!(r.status, 200);
+    let j = r.json().unwrap();
+    assert_eq!(j.req_str("name").unwrap(), "migsched");
+    assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+    assert!(j.get("features").unwrap().as_arr().is_some());
+
+    handle.shutdown();
+}
