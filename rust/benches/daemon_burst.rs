@@ -1,26 +1,35 @@
-//! Daemon burst throughput (experiment D1): end-to-end requests/sec of
-//! the serving daemon over live HTTP at shards ∈ {1, 4, 16} × workers ∈
-//! {1, 8}, with 8 concurrent client threads submitting across many
-//! tenants and releasing their backlog as they go — the ROADMAP's
-//! "profile the daemon's JSON/accept path at burst rates" follow-up.
+//! Daemon burst throughput (experiment D1): end-to-end scheduling
+//! decisions/sec of the serving daemon over live HTTP, swept across
+//! serve model (event-loop reactor vs blocking threadpool) × shards ×
+//! batch size × client-connection count — the ROADMAP's "profile the
+//! daemon's JSON/accept path at burst rates" follow-up, extended for the
+//! non-blocking serving rewrite.
 //!
-//! Single-shard numbers measure the old single-mutex daemon (shards = 1
-//! is response-identical to it); the multi-shard rows show what tenant
-//! routing buys once the per-request work no longer serializes on one
-//! lock. The run is recorded machine-readably in `BENCH_daemon.json` at
-//! the repository root (schema: `{format, bench, quick_mode, gpus,
-//! clients, submits_per_config, hist_record_ns, results: [{shards,
-//! workers, requests, wall_ms, reqs_per_sec,
-//! latency_us: {p50, p90, p99}}]}`).
+//! Every client thread drives ONE kept-alive connection
+//! ([`migsched::server::HttpConn`]), so the numbers measure the serving
+//! hot path (parse → dispatch → respond on a live connection), not
+//! connection setup. `batch = 1` submits through `POST /v1/workloads`;
+//! larger batches go through `POST /v1/submit/batch`, whose placements
+//! are bit-identical (pinned by `tests/batch_equiv.rs`) but amortize one
+//! shard-lock hold and one HTTP round trip over N decisions. `requests`
+//! counts scheduling operations (submitted items + releases), so
+//! `reqs_per_sec` is directly comparable across batch sizes; latency
+//! percentiles are per HTTP round trip as the client observes them.
 //!
-//! Client-side per-request latency is recorded into an
+//! The run is recorded machine-readably in `BENCH_daemon.json` at the
+//! repository root (schema `migsched-bench-daemon-v2`: `{format, bench,
+//! quick_mode, gpus, submits_per_config, hist_record_ns, results:
+//! [{model, shards, workers, clients, batch, requests, wall_ms,
+//! reqs_per_sec, latency_us: {p50, p90, p99}}]}`). The headline ratios —
+//! reactor vs threadpool at shards = 16, and best batched reactor vs the
+//! sequential threadpool baseline — come from configurations measured in
+//! the SAME run.
+//!
+//! Client-side latency is recorded into an
 //! [`migsched::obs::hist::LatencyHist`] shared across the client threads —
-//! the same lock-free structure the daemon itself uses on its hot path, so
-//! this run doubles as the observability overhead check: `hist_record_ns`
-//! is the measured cost of one `record_ns` call (a bucket-index
-//! computation plus two relaxed atomic adds, tens of nanoseconds), which
-//! against the ~100µs-scale request latencies below keeps the
-//! instrumentation overhead well under the 5% budget.
+//! the same lock-free structure the daemon uses on its hot path, so this
+//! run doubles as the observability overhead check: `hist_record_ns` is
+//! the measured cost of one `record_ns` call.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -28,7 +37,7 @@ use std::time::Instant;
 
 use migsched::obs::hist::{HistSnapshot, LatencyHist};
 use migsched::sched::SchedulerKind;
-use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::server::{Daemon, DaemonConfig, HttpConn, ServeModel};
 use migsched::util::bench::quick_mode;
 use migsched::util::json::Json;
 
@@ -49,19 +58,25 @@ fn measure_hist_record_ns() -> f64 {
     elapsed
 }
 
-/// Run one configuration; returns (total HTTP requests, wall seconds,
-/// client-observed per-request latency histogram).
-fn burst(
+/// One measured configuration.
+#[derive(Clone, Copy)]
+struct Cfg {
+    model: ServeModel,
     shards: usize,
     workers: usize,
     clients: usize,
-    submits: usize,
-) -> (usize, f64, HistSnapshot) {
+    batch: usize,
+}
+
+/// Run one configuration; returns (scheduling operations, wall seconds,
+/// client-observed per-round-trip latency histogram).
+fn burst(cfg: Cfg, submits: usize) -> (usize, f64, HistSnapshot) {
     let daemon = Daemon::new(DaemonConfig {
         num_gpus: GPUS,
         scheduler: SchedulerKind::MfiIdx,
-        workers,
-        shards,
+        workers: cfg.workers,
+        shards: cfg.shards,
+        model: cfg.model,
         ..DaemonConfig::default()
     });
     let handle = daemon.serve("127.0.0.1:0").expect("bind ephemeral port");
@@ -69,47 +84,67 @@ fn burst(
     let next = Arc::new(AtomicUsize::new(0));
     let latency = Arc::new(LatencyHist::new());
     let t0 = Instant::now();
-    let threads: Vec<_> = (0..clients)
+    let threads: Vec<_> = (0..cfg.clients)
         .map(|c| {
             let addr = addr.clone();
             let next = Arc::clone(&next);
             let latency = Arc::clone(&latency);
             std::thread::spawn(move || -> usize {
-                let client = HttpClient::new(&addr);
+                let mut conn = HttpConn::connect(&addr);
                 let mut ops = 0usize;
                 let mut live: Vec<u64> = Vec::new();
                 loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let i = next.fetch_add(cfg.batch, Ordering::Relaxed);
                     if i >= submits {
                         break;
                     }
-                    let tenant = (c * 131 + i % 17) as u64;
-                    let started = Instant::now();
-                    let r = client
-                        .post_json(
-                            "/v1/workloads",
-                            &Json::obj().with("profile", "1g.10gb").with("tenant", tenant),
-                        )
-                        .expect("submit");
-                    latency.record(started.elapsed());
-                    ops += 1;
-                    match r.status {
-                        201 => live.push(r.json().unwrap().req_u64("id").unwrap()),
-                        409 => {}
-                        other => panic!("unexpected status {other}: {}", r.body),
+                    let n = cfg.batch.min(submits - i);
+                    if cfg.batch == 1 {
+                        let tenant = (c * 131 + i % 17) as u64;
+                        let body =
+                            Json::obj().with("profile", "1g.10gb").with("tenant", tenant);
+                        let started = Instant::now();
+                        let r = conn.post_json("/v1/workloads", &body).expect("submit");
+                        latency.record(started.elapsed());
+                        ops += 1;
+                        match r.status {
+                            201 => live.push(r.json().unwrap().req_u64("id").unwrap()),
+                            409 => {}
+                            other => panic!("unexpected status {other}: {}", r.body),
+                        }
+                    } else {
+                        let items: Vec<Json> = (0..n)
+                            .map(|k| {
+                                Json::obj()
+                                    .with("profile", "1g.10gb")
+                                    .with("tenant", (c * 131 + (i + k) % 17) as u64)
+                            })
+                            .collect();
+                        let body = Json::obj().with("requests", Json::Arr(items));
+                        let started = Instant::now();
+                        let r = conn.post_json("/v1/submit/batch", &body).expect("batch");
+                        latency.record(started.elapsed());
+                        ops += n;
+                        assert_eq!(r.status, 200, "{}", r.body);
+                        let envelope = r.json().unwrap();
+                        for item in envelope.get("results").unwrap().as_arr().unwrap() {
+                            if let Ok(id) = item.req_u64("id") {
+                                live.push(id);
+                            }
+                        }
                     }
-                    // Keep the fleet from saturating: drain the oldest of
-                    // our backlog so submits keep finding free anchors.
-                    if live.len() > 8 {
+                    // Keep the fleet from saturating: drain our backlog so
+                    // submits keep finding free anchors.
+                    while live.len() > cfg.batch.max(8) {
                         let id = live.remove(0);
                         let started = Instant::now();
-                        client.delete(&format!("/v1/workloads/{id}")).expect("release");
+                        conn.delete(&format!("/v1/workloads/{id}")).expect("release");
                         latency.record(started.elapsed());
                         ops += 1;
                     }
                 }
                 for id in live {
-                    if client.delete(&format!("/v1/workloads/{id}")).is_ok() {
+                    if conn.delete(&format!("/v1/workloads/{id}")).is_ok() {
                         ops += 1;
                     }
                 }
@@ -125,62 +160,94 @@ fn burst(
 
 fn main() {
     let quick = quick_mode();
-    let clients = 8usize;
     let submits = if quick { 400 } else { 3000 };
-    println!("== daemon burst throughput ({clients} clients, {submits} submits/config) ==");
+    let reactor = ServeModel::Reactor.effective();
+    let pool = ServeModel::Threadpool;
+    // Headline model × shards grid, then batch and connection sweeps on
+    // the 16-shard reactor. Threadpool rows are the pre-rewrite baseline,
+    // measured in the SAME run as everything they are compared against.
+    let configs = [
+        Cfg { model: pool, shards: 1, workers: 8, clients: 8, batch: 1 },
+        Cfg { model: pool, shards: 16, workers: 8, clients: 8, batch: 1 },
+        Cfg { model: reactor, shards: 1, workers: 8, clients: 8, batch: 1 },
+        Cfg { model: reactor, shards: 16, workers: 1, clients: 8, batch: 1 },
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 8, batch: 1 },
+        // Batch sweep: one round trip + one shard-lock hold per N items.
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 8, batch: 8 },
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 8, batch: 32 },
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 8, batch: 128 },
+        // Connection sweep: few → many kept-alive connections.
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 1, batch: 1 },
+        Cfg { model: reactor, shards: 16, workers: 8, clients: 32, batch: 1 },
+    ];
+    println!("== daemon burst throughput ({submits} submits/config) ==");
     let mut results: Vec<Json> = Vec::new();
-    let mut rps_by_key: Vec<(usize, usize, f64)> = Vec::new();
-    for &shards in &[1usize, 4, 16] {
-        for &workers in &[1usize, 8] {
-            let (ops, wall, lat) = burst(shards, workers, clients, submits);
-            let rps = ops as f64 / wall;
-            // Client-observed request latency percentiles, in microseconds.
-            let (p50, p90, p99) = (
-                lat.percentile(50.0) * 1e6,
-                lat.percentile(90.0) * 1e6,
-                lat.percentile(99.0) * 1e6,
-            );
-            println!(
-                "  shards={shards:<2} workers={workers}: {rps:>9.0} req/s \
-                 ({ops} requests in {:.0} ms) \
-                 p50={p50:.0}us p90={p90:.0}us p99={p99:.0}us",
-                wall * 1e3
-            );
-            rps_by_key.push((shards, workers, rps));
-            results.push(
-                Json::obj()
-                    .with("shards", shards)
-                    .with("workers", workers)
-                    .with("requests", ops as u64)
-                    .with("wall_ms", wall * 1e3)
-                    .with("reqs_per_sec", rps)
-                    .with(
-                        "latency_us",
-                        Json::obj().with("p50", p50).with("p90", p90).with("p99", p99),
-                    ),
-            );
-        }
-    }
-    // Headline: sharding speedup at full worker pool.
-    let rps_of = |s: usize, w: usize| {
-        rps_by_key.iter().find(|&&(a, b, _)| a == s && b == w).map(|&(_, _, r)| r)
-    };
-    if let (Some(one), Some(sixteen)) = (rps_of(1, 8), rps_of(16, 8)) {
-        println!(
-            "\n16-shard daemon vs single mutex (8 workers): {:.2}x",
-            sixteen / one
+    let mut measured: Vec<(Cfg, f64)> = Vec::new();
+    for &cfg in &configs {
+        let (ops, wall, lat) = burst(cfg, submits);
+        let rps = ops as f64 / wall;
+        // Client-observed round-trip latency percentiles, in microseconds.
+        let (p50, p90, p99) = (
+            lat.percentile(50.0) * 1e6,
+            lat.percentile(90.0) * 1e6,
+            lat.percentile(99.0) * 1e6,
         );
+        println!(
+            "  {:<10} shards={:<2} workers={} clients={:<2} batch={:<3}: \
+             {rps:>9.0} req/s ({ops} ops in {:.0} ms) \
+             p50={p50:.0}us p90={p90:.0}us p99={p99:.0}us",
+            cfg.model.name(),
+            cfg.shards,
+            cfg.workers,
+            cfg.clients,
+            cfg.batch,
+            wall * 1e3
+        );
+        measured.push((cfg, rps));
+        results.push(
+            Json::obj()
+                .with("model", cfg.model.name())
+                .with("shards", cfg.shards)
+                .with("workers", cfg.workers)
+                .with("clients", cfg.clients)
+                .with("batch", cfg.batch)
+                .with("requests", ops as u64)
+                .with("wall_ms", wall * 1e3)
+                .with("reqs_per_sec", rps)
+                .with(
+                    "latency_us",
+                    Json::obj().with("p50", p50).with("p90", p90).with("p99", p99),
+                ),
+        );
+    }
+    let rps_of = |model: ServeModel, shards: usize, batch: usize, clients: usize| {
+        measured
+            .iter()
+            .find(|(c, _)| {
+                c.model == model && c.shards == shards && c.batch == batch && c.clients == clients
+            })
+            .map(|&(_, r)| r)
+    };
+    // Headlines, all from this run: the rewrite at like-for-like batch=1,
+    // and the full win with batching against the threadpool baseline.
+    if let (Some(base), Some(evented)) = (rps_of(pool, 16, 1, 8), rps_of(reactor, 16, 1, 8)) {
+        println!("\nreactor vs threadpool (shards=16, batch=1): {:.2}x", evented / base);
+    }
+    if let (Some(base), Some(best)) = (rps_of(pool, 16, 1, 8), rps_of(reactor, 16, 128, 8)) {
+        println!("batched reactor vs threadpool baseline (shards=16): {:.2}x", best / base);
+    }
+    if let (Some(one), Some(sixteen)) = (rps_of(reactor, 1, 1, 8), rps_of(reactor, 16, 1, 8)) {
+        println!("16-shard vs single mutex (reactor, batch=1): {:.2}x", sixteen / one);
     }
 
     let hist_record_ns = measure_hist_record_ns();
     println!("hot-path hist record cost: {hist_record_ns:.1} ns/record");
 
     let doc = Json::obj()
-        .with("format", "migsched-bench-daemon-v1")
+        .with("format", "migsched-bench-daemon-v2")
         .with("bench", "daemon_burst")
         .with("quick_mode", quick)
         .with("gpus", GPUS as u64)
-        .with("clients", clients as u64)
         .with("submits_per_config", submits as u64)
         .with("hist_record_ns", hist_record_ns)
         .with("results", Json::Arr(results));

@@ -89,6 +89,9 @@ COMMANDS:
   serve         online serving daemon
                   --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
                   --shards N (disjoint sub-clusters, default 1)   --workers N
+                  [--serve-model reactor|threadpool] (default reactor on unix)
+                  [--idle-timeout-ms N (default 5000)]
+                  [--max-requests-per-conn N (default 32)]
                   [--defrag-every SECS] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]  (background sweep)
   inspect       --hardware a100-80gb | --distributions | --candidates
@@ -358,14 +361,44 @@ fn cmd_figures(flags: &Flags) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(flags: &Flags) -> Result<(), String> {
-    use migsched::server::{Daemon, DaemonConfig, DaemonDefrag};
+/// Build and validate the daemon configuration from `serve` flags.
+/// Every knob is checked up front so a misconfigured daemon fails with a
+/// clear message before a socket ever binds.
+fn serve_config(flags: &Flags) -> Result<migsched::server::DaemonConfig, String> {
+    use migsched::server::daemon::{KEEP_ALIVE_IDLE, MAX_REQUESTS_PER_CONN};
+    use migsched::server::{DaemonConfig, DaemonDefrag, ServeModel};
+    let workers = flag_usize(flags, "workers", 8)?;
+    if workers == 0 {
+        return Err("--workers must be at least 1 (got 0): \
+                    the daemon needs at least one serving thread"
+            .into());
+    }
+    let idle_timeout_ms = flag_u64(flags, "idle-timeout-ms", KEEP_ALIVE_IDLE.as_millis() as u64)?;
+    if idle_timeout_ms == 0 {
+        return Err("--idle-timeout-ms must be at least 1 (got 0): \
+                    a zero timeout would close every connection immediately"
+            .into());
+    }
+    let max_requests = flag_usize(flags, "max-requests-per-conn", MAX_REQUESTS_PER_CONN)?;
+    if max_requests == 0 {
+        return Err("--max-requests-per-conn must be at least 1 (got 0): \
+                    a zero cap could never serve a request"
+            .into());
+    }
+    let model = match flags.get("serve-model") {
+        None => ServeModel::default(),
+        Some(name) => ServeModel::parse(name)
+            .ok_or_else(|| format!("unknown serve model '{name}' (use reactor or threadpool)"))?,
+    };
     let config = DaemonConfig {
         hardware: flag_hardware(flags)?,
         num_gpus: flag_usize(flags, "gpus", 100)?,
         scheduler: flag_scheduler(flags)?,
-        workers: flag_usize(flags, "workers", 8)?,
+        workers,
         shards: flag_usize(flags, "shards", 1)?,
+        model,
+        idle_timeout: std::time::Duration::from_millis(idle_timeout_ms),
+        max_requests_per_conn: max_requests,
         // The daemon interprets the cadence as wall-clock seconds.
         defrag: flag_defrag(flags)?.map(|p| DaemonDefrag {
             every_secs: p.every,
@@ -374,12 +407,22 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             cost_budget: p.cost_budget,
         }),
     };
+    if config.num_gpus == 0 {
+        return Err("--gpus must be positive".into());
+    }
     if config.shards == 0 || config.shards > config.num_gpus {
         return Err(format!(
             "--shards must be in 1..={} (got {})",
-            config.num_gpus, config.shards
+            config.num_gpus.max(1),
+            config.shards
         ));
     }
+    Ok(config)
+}
+
+fn cmd_serve(flags: &Flags) -> Result<(), String> {
+    use migsched::server::Daemon;
+    let config = serve_config(flags)?;
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".to_string());
     let daemon = Daemon::new(config);
     let handle = daemon.serve(&addr).map_err(|e| format!("binding {addr}: {e}"))?;
@@ -653,4 +696,64 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         save_telemetry(path, &result.telemetry)?;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use migsched::server::ServeModel;
+
+    use super::*;
+
+    fn flags_of(pairs: &[(&str, &str)]) -> Flags {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn serve_config_defaults_are_sane() {
+        let config = serve_config(&Flags::new()).expect("default serve config");
+        assert_eq!(config.shards, 1);
+        assert_eq!(config.workers, 8);
+        assert_eq!(config.model, ServeModel::default());
+        assert_eq!(config.idle_timeout, migsched::server::daemon::KEEP_ALIVE_IDLE);
+        assert_eq!(
+            config.max_requests_per_conn,
+            migsched::server::daemon::MAX_REQUESTS_PER_CONN
+        );
+    }
+
+    #[test]
+    fn serve_config_rejects_zero_shards_and_workers() {
+        let err = serve_config(&flags_of(&[("shards", "0")])).unwrap_err();
+        assert!(err.contains("--shards must be in 1..=100 (got 0)"), "{err}");
+        let err = serve_config(&flags_of(&[("workers", "0")])).unwrap_err();
+        assert!(err.contains("--workers must be at least 1"), "{err}");
+        // Shards above the fleet size are as unservable as zero.
+        let err = serve_config(&flags_of(&[("gpus", "4"), ("shards", "5")])).unwrap_err();
+        assert!(err.contains("--shards must be in 1..=4 (got 5)"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_rejects_zero_connection_limits() {
+        let err = serve_config(&flags_of(&[("idle-timeout-ms", "0")])).unwrap_err();
+        assert!(err.contains("--idle-timeout-ms must be at least 1"), "{err}");
+        let err = serve_config(&flags_of(&[("max-requests-per-conn", "0")])).unwrap_err();
+        assert!(err.contains("--max-requests-per-conn must be at least 1"), "{err}");
+        let err = serve_config(&flags_of(&[("idle-timeout-ms", "abc")])).unwrap_err();
+        assert!(err.contains("--idle-timeout-ms must be an integer"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_parses_connection_knobs_and_model() {
+        let config = serve_config(&flags_of(&[
+            ("idle-timeout-ms", "250"),
+            ("max-requests-per-conn", "7"),
+            ("serve-model", "threadpool"),
+        ]))
+        .expect("custom serve config");
+        assert_eq!(config.idle_timeout, std::time::Duration::from_millis(250));
+        assert_eq!(config.max_requests_per_conn, 7);
+        assert_eq!(config.model, ServeModel::Threadpool);
+        let err = serve_config(&flags_of(&[("serve-model", "tokio")])).unwrap_err();
+        assert!(err.contains("unknown serve model 'tokio'"), "{err}");
+    }
 }

@@ -8,6 +8,8 @@
 //! Duplicate family names are a programming error and panic in debug
 //! builds.
 
+use std::fmt::Write as _;
+
 use super::hist::HistSnapshot;
 
 /// The `Content-Type` of the rendered exposition.
@@ -50,12 +52,29 @@ impl Labels {
         self
     }
 
-    fn render(&self, extra: Option<&str>) -> String {
+    /// Append the braced label set (with an optional extra pair spliced
+    /// in) directly onto an output buffer — the renderer is called per
+    /// scrape per sample, so it must not allocate.
+    fn write_rendered(&self, out: &mut String, extra: Option<&str>) {
         match (self.0.is_empty(), extra) {
-            (true, None) => String::new(),
-            (true, Some(e)) => format!("{{{e}}}"),
-            (false, None) => format!("{{{}}}", self.0),
-            (false, Some(e)) => format!("{{{},{e}}}", self.0),
+            (true, None) => {}
+            (true, Some(e)) => {
+                out.push('{');
+                out.push_str(e);
+                out.push('}');
+            }
+            (false, None) => {
+                out.push('{');
+                out.push_str(&self.0);
+                out.push('}');
+            }
+            (false, Some(e)) => {
+                out.push('{');
+                out.push_str(&self.0);
+                out.push(',');
+                out.push_str(e);
+                out.push('}');
+            }
         }
     }
 }
@@ -64,10 +83,17 @@ impl Labels {
 /// without a fractional part, everything else via shortest-round-trip
 /// `Display` (rust never emits scientific notation there).
 fn fmt_value(v: f64) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v);
+    out
+}
+
+/// [`fmt_value`], appended into a caller-owned buffer.
+fn write_value(out: &mut String, v: f64) {
     if v.fract() == 0.0 && v.abs() < 9e15 {
-        format!("{}", v as i64)
+        let _ = write!(out, "{}", v as i64);
     } else {
-        format!("{v}")
+        let _ = write!(out, "{v}");
     }
 }
 
@@ -84,20 +110,33 @@ impl Expo {
         Self::default()
     }
 
+    /// An exposition that reuses `buf`'s allocation (cleared first). The
+    /// `/metrics` handler threads one scratch `String` per thread
+    /// through here so steady-state scrapes render without growing the
+    /// heap.
+    pub fn with_buffer(mut buf: String) -> Self {
+        buf.clear();
+        Self { out: buf, families: Vec::new() }
+    }
+
     fn family(&mut self, name: &str, kind: &str, help: &str) {
-        debug_assert!(
-            !self.families.iter().any(|f| f == name),
-            "duplicate metric family {name}"
-        );
-        self.families.push(name.to_string());
-        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        if cfg!(debug_assertions) {
+            assert!(
+                !self.families.iter().any(|f| f == name),
+                "duplicate metric family {name}"
+            );
+            self.families.push(name.to_string());
+        }
+        let _ = write!(self.out, "# HELP {name} {help}\n# TYPE {name} {kind}\n");
     }
 
     /// A counter family with one sample per label set.
     pub fn counter(&mut self, name: &str, help: &str, samples: &[(Labels, u64)]) {
         self.family(name, "counter", help);
         for (labels, v) in samples {
-            self.out.push_str(&format!("{name}{} {v}\n", labels.render(None)));
+            self.out.push_str(name);
+            labels.write_rendered(&mut self.out, None);
+            let _ = writeln!(self.out, " {v}");
         }
     }
 
@@ -105,7 +144,11 @@ impl Expo {
     pub fn gauge(&mut self, name: &str, help: &str, samples: &[(Labels, f64)]) {
         self.family(name, "gauge", help);
         for (labels, v) in samples {
-            self.out.push_str(&format!("{name}{} {}\n", labels.render(None), fmt_value(*v)));
+            self.out.push_str(name);
+            labels.write_rendered(&mut self.out, None);
+            self.out.push(' ');
+            write_value(&mut self.out, *v);
+            self.out.push('\n');
         }
     }
 
@@ -114,24 +157,34 @@ impl Expo {
     /// `_sum` and `_count`.
     pub fn histogram(&mut self, name: &str, help: &str, samples: &[(Labels, HistSnapshot)]) {
         self.family(name, "histogram", help);
+        let mut le = String::with_capacity(32);
         for (labels, snap) in samples {
             let cum = snap.cumulative();
             for (i, &bound) in snap.bounds.iter().enumerate() {
-                let le = format!("le=\"{}\"", fmt_value(bound));
-                self.out.push_str(&format!(
-                    "{name}_bucket{} {}\n",
-                    labels.render(Some(&le)),
-                    cum[i]
-                ));
+                le.clear();
+                le.push_str("le=\"");
+                write_value(&mut le, bound);
+                le.push('"');
+                self.out.push_str(name);
+                self.out.push_str("_bucket");
+                labels.write_rendered(&mut self.out, Some(&le));
+                let _ = writeln!(self.out, " {}", cum[i]);
             }
             let count = *cum.last().unwrap_or(&0);
-            self.out.push_str(&format!(
-                "{name}_bucket{} {count}\n",
-                labels.render(Some("le=\"+Inf\""))
-            ));
-            self.out
-                .push_str(&format!("{name}_sum{} {}\n", labels.render(None), fmt_value(snap.sum)));
-            self.out.push_str(&format!("{name}_count{} {count}\n", labels.render(None)));
+            self.out.push_str(name);
+            self.out.push_str("_bucket");
+            labels.write_rendered(&mut self.out, Some("le=\"+Inf\""));
+            let _ = writeln!(self.out, " {count}");
+            self.out.push_str(name);
+            self.out.push_str("_sum");
+            labels.write_rendered(&mut self.out, None);
+            self.out.push(' ');
+            write_value(&mut self.out, snap.sum);
+            self.out.push('\n');
+            self.out.push_str(name);
+            self.out.push_str("_count");
+            labels.write_rendered(&mut self.out, None);
+            let _ = writeln!(self.out, " {count}");
         }
     }
 
@@ -220,6 +273,25 @@ mod tests {
         let b = text.find("# TYPE b_total").unwrap();
         let a = text.find("# TYPE a_total").unwrap();
         assert!(b < a, "families serialize in registration order");
+    }
+
+    #[test]
+    fn with_buffer_renders_identically_and_keeps_capacity() {
+        let render = |mut e: Expo| {
+            let h = LatencyHist::new();
+            h.record_ns(2_000);
+            e.counter("x_total", "x", &[(Labels::new().with("shard", "0"), 3)]);
+            e.gauge("x_ratio", "r", &[(Labels::new(), 0.5)]);
+            e.histogram("x_seconds", "h", &[(Labels::new(), h.snapshot())]);
+            e.finish()
+        };
+        let fresh = render(Expo::new());
+        let reused = render(Expo::with_buffer(String::from("stale junk")));
+        assert_eq!(fresh, reused);
+        // A pre-grown buffer keeps its allocation across renders.
+        let big = render(Expo::with_buffer(String::with_capacity(1 << 16)));
+        assert_eq!(fresh, big);
+        assert!(big.capacity() >= 1 << 16);
     }
 
     #[test]

@@ -8,12 +8,23 @@
 //! single-shard daemon's responses are byte-for-byte those of the old
 //! single-mutex implementation.
 
+use std::borrow::Cow;
+
 use super::http::{Request, Response};
-use super::shard::{Lease, ShardSet, ShardState};
+use super::shard::{Lease, Shard, ShardSet, ShardState};
 use crate::cluster::{snapshot, ClusterMetrics};
 use crate::frag::FragScorer;
-use crate::util::json::Json;
+use crate::util::json::{scan_flat_object, Json};
 use crate::workload::{TenantId, WorkloadId};
+
+/// Largest accepted `POST /v1/submit/batch` request count.
+pub const MAX_BATCH: usize = 4096;
+
+/// Preserialized fixed error bodies (pinned byte-equal to their dynamic
+/// [`Response::error`] forms in tests) — the hot path's rejections
+/// serialize without allocating.
+const MISSING_BODY: &[u8] = br#"{"error":"missing JSON body"}"#;
+const MISSING_REQUESTS: &[u8] = br#"{"error":"missing or non-array field 'requests'"}"#;
 
 /// Route a parsed request to its handler.
 pub fn dispatch(request: &Request, shards: &ShardSet) -> Response {
@@ -24,6 +35,7 @@ pub fn dispatch(request: &Request, shards: &ShardSet) -> Response {
         ("GET", ["v1", "healthz"]) => healthz(shards),
         ("GET", ["v1", "version"]) => version(shards),
         ("POST", ["v1", "workloads"]) => submit(request, shards),
+        ("POST", ["v1", "submit", "batch"]) => submit_batch(request, shards),
         ("GET", ["v1", "workloads", id]) => lookup(id, shards),
         ("DELETE", ["v1", "workloads", id]) => release(id, shards),
         ("POST", ["v1", "tick"]) => tick(request, shards),
@@ -38,33 +50,87 @@ pub fn dispatch(request: &Request, shards: &ShardSet) -> Response {
     }
 }
 
-/// `POST /v1/workloads` — body `{"profile": "2g.20gb", "tenant": 3,
-/// "duration_slots": 10}` (tenant and duration optional). 201 on success
-/// with the placement, 409 when rejected by the scheduler. The tenant
-/// picks the shard (consistent hash), so one tenant's workloads always
-/// compete inside one sub-cluster.
-fn submit(request: &Request, shards: &ShardSet) -> Response {
-    let body = match request.body_str() {
-        Ok(b) if !b.trim().is_empty() => b,
-        Ok(_) => return Response::error(400, "missing JSON body"),
-        Err(e) => return Response::error(400, &e),
-    };
-    let j = match Json::parse(body) {
-        Ok(j) => j,
-        Err(e) => return Response::error(400, &format!("invalid JSON: {e}")),
-    };
-    let profile_name = match j.req_str("profile") {
-        Ok(p) => p,
-        Err(e) => return Response::error(400, &e),
-    };
-    let tenant = TenantId(j.get("tenant").and_then(Json::as_u64).unwrap_or(0) as u32);
-    let duration = j.get("duration_slots").and_then(Json::as_u64);
+/// A decoded submit request, ready for [`submit_one`]. The profile stays
+/// a borrowed string on the fast parse path (zero-allocation) and is
+/// resolved against the hardware model under the shard lock, exactly
+/// where the pre-batch handler resolved it.
+struct SubmitReq<'a> {
+    profile: Cow<'a, str>,
+    tenant: TenantId,
+    duration: Option<u64>,
+}
 
-    let shard = shards.route(tenant);
-    let mut s = shard.state.lock().unwrap();
-    let profile = match s.cluster.hardware().parse_profile(profile_name) {
+/// Decode a submit body. The flat-object scanner handles the common
+/// machine-generated shape without building a JSON tree; anything it
+/// isn't sure about falls back to [`Json::parse`] so every error message
+/// stays byte-identical to the pre-scanner handler's.
+fn decode_submit(body: &str) -> Result<SubmitReq<'_>, Json> {
+    let mut profile: Option<&str> = None;
+    let mut tenant: u64 = 0;
+    let mut duration: Option<u64> = None;
+    let mut clean = true;
+    let scanned = scan_flat_object(body, |key, value| match key {
+        // A non-string profile must produce req_str's exact error:
+        // defer to the fallback rather than duplicating the message.
+        "profile" => match value.as_str() {
+            Some(p) => profile = Some(p),
+            None => clean = false,
+        },
+        "tenant" => tenant = value.as_u64().unwrap_or(0),
+        "duration_slots" => duration = value.as_u64(),
+        _ => {}
+    });
+    if scanned && clean {
+        if let Some(profile) = profile {
+            return Ok(SubmitReq {
+                profile: Cow::Borrowed(profile),
+                tenant: TenantId(tenant as u32),
+                duration,
+            });
+        }
+        // Missing profile: fall through for the canonical error message.
+    }
+    let j = Json::parse(body)
+        .map_err(|e| Json::obj().with("error", format!("invalid JSON: {e}")))?;
+    let decoded = decode_submit_json(&j)?;
+    Ok(SubmitReq {
+        profile: Cow::Owned(decoded.profile.into_owned()),
+        tenant: decoded.tenant,
+        duration: decoded.duration,
+    })
+}
+
+/// Decode one already-parsed submit object (a batch element). Errors are
+/// returned as the body object of the 400 the single-submit endpoint
+/// would serve.
+fn decode_submit_json(j: &Json) -> Result<SubmitReq<'_>, Json> {
+    let profile = j.req_str("profile").map_err(|e| Json::obj().with("error", e))?;
+    Ok(SubmitReq {
+        profile: Cow::Borrowed(profile),
+        tenant: TenantId(j.get("tenant").and_then(Json::as_u64).unwrap_or(0) as u32),
+        duration: j.get("duration_slots").and_then(Json::as_u64),
+    })
+}
+
+/// The submit decision under a held shard lock: profile resolution,
+/// arrival accounting, scheduler dry run, commit, lease. Returns the
+/// status and the response body object — shared verbatim by the single
+/// and batch endpoints, which is what makes batch placements, counters
+/// and tie-breaking bit-identical to sequential submits.
+fn submit_one(
+    s: &mut ShardState,
+    shard: &Shard,
+    shards: &ShardSet,
+    req: &SubmitReq<'_>,
+) -> (u16, Json) {
+    let profile = match s.cluster.hardware().parse_profile(&req.profile) {
         Some(p) => p,
-        None => return Response::error(400, &format!("unknown profile '{profile_name}'")),
+        None => {
+            // Rejected before it counts as an arrival (unchanged from the
+            // pre-batch handler: an unparseable request never reached the
+            // scheduler's arrival stream).
+            return (400, Json::obj().with("error", format!("unknown profile '{}'", req.profile)));
+        }
     };
     s.arrived_total += 1;
     let metrics = shards.metrics();
@@ -79,9 +145,9 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
     let placement = match decided {
         Some(p) => p,
         None => {
-            return Response::json(
+            return (
                 409,
-                &Json::obj()
+                Json::obj()
                     .with("rejected", true)
                     .with("reason", "no feasible MIG placement (cluster fragmented or full)")
                     .with("profile", profile.canonical_name()),
@@ -95,7 +161,7 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
     s.next_seq += 1;
     let id = shards.workload_id(shard, seq);
     if let Err(e) = s.cluster.allocate(id, placement) {
-        return Response::error(500, &format!("commit failed: {e}"));
+        return (500, Json::obj().with("error", format!("commit failed: {e}")));
     }
     {
         let ShardState { scheduler, cluster, .. } = &mut *s;
@@ -104,13 +170,13 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
     let f_after = i64::from(s.scorer.score(s.cluster.gpus()[placement.gpu]));
     metrics.delta_f[shard.index].record(f_after - f_before);
     s.accepted_total += 1;
-    let expires_at = duration.map(|d| s.clock_slot + d);
-    s.leases.insert(id, Lease { tenant, expires_at });
-    Response::json(
+    let expires_at = req.duration.map(|d| s.clock_slot + d);
+    s.leases.insert(id, Lease { tenant: req.tenant, expires_at });
+    (
         201,
-        &Json::obj()
+        Json::obj()
             .with("id", id.0)
-            .with("tenant", tenant.0 as u64)
+            .with("tenant", req.tenant.0 as u64)
             .with("profile", profile.canonical_name())
             .with("gpu", shard.gpu_offset + placement.gpu)
             .with("index", placement.index as u64)
@@ -118,6 +184,104 @@ fn submit(request: &Request, shards: &ShardSet) -> Response {
                 "expires_at_slot",
                 expires_at.map(Json::from).unwrap_or(Json::Null),
             ),
+    )
+}
+
+/// `POST /v1/workloads` — body `{"profile": "2g.20gb", "tenant": 3,
+/// "duration_slots": 10}` (tenant and duration optional). 201 on success
+/// with the placement, 409 when rejected by the scheduler. The tenant
+/// picks the shard (consistent hash), so one tenant's workloads always
+/// compete inside one sub-cluster.
+fn submit(request: &Request, shards: &ShardSet) -> Response {
+    let body = match request.body_str() {
+        Ok(b) if !b.trim().is_empty() => b,
+        Ok(_) => return Response::static_json(400, MISSING_BODY),
+        Err(e) => return Response::error(400, &e),
+    };
+    let sub = match decode_submit(body) {
+        Ok(s) => s,
+        Err(err_body) => return Response::json(400, &err_body),
+    };
+    let shard = shards.route(sub.tenant);
+    let mut s = shard.state.lock().unwrap();
+    let (status, body) = submit_one(&mut s, shard, shards, &sub);
+    Response::json(status, &body)
+}
+
+/// `POST /v1/submit/batch` — body `{"requests": [<submit body>, …]}`.
+/// Decodes every element up front (no locks held), then visits each
+/// involved shard once in index order, running that shard's elements in
+/// arrival order under ONE lock hold — amortizing N lock acquisitions
+/// down to the number of distinct shards. Placements, counters and
+/// tie-breaking are bit-identical to submitting the same bodies
+/// sequentially (pinned by `rust/tests/batch_equiv.rs`): the per-shard
+/// order is preserved and shards share no state.
+///
+/// Response: `{"accepted": n, "rejected": m, "results": [...]}` (200),
+/// where `results[i]` is exactly the body `POST /v1/workloads` would
+/// have returned for element `i` (201-created, 409-rejected or
+/// 400-invalid), in request order. `rejected` counts everything that
+/// did not place.
+fn submit_batch(request: &Request, shards: &ShardSet) -> Response {
+    let body = match request.body_str() {
+        Ok(b) if !b.trim().is_empty() => b,
+        Ok(_) => return Response::static_json(400, MISSING_BODY),
+        Err(e) => return Response::error(400, &e),
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("invalid JSON: {e}")),
+    };
+    let items = match j.get("requests").and_then(Json::as_arr) {
+        Some(items) => items,
+        None => return Response::static_json(400, MISSING_REQUESTS),
+    };
+    if items.len() > MAX_BATCH {
+        return Response::error(
+            413,
+            &format!("batch too large: {} requests (limit {MAX_BATCH})", items.len()),
+        );
+    }
+    // Decode before locking; invalid elements resolve to their 400 body
+    // without ever touching a shard.
+    let mut results: Vec<Option<Json>> = (0..items.len()).map(|_| None).collect();
+    let mut decoded: Vec<Option<SubmitReq<'_>>> = Vec::with_capacity(items.len());
+    let mut by_shard: Vec<Vec<usize>> = (0..shards.num_shards()).map(|_| Vec::new()).collect();
+    for (i, item) in items.iter().enumerate() {
+        match decode_submit_json(item) {
+            Ok(req) => {
+                by_shard[shards.route(req.tenant).index].push(i);
+                decoded.push(Some(req));
+            }
+            Err(err_body) => {
+                results[i] = Some(err_body);
+                decoded.push(None);
+            }
+        }
+    }
+    let mut accepted = 0u64;
+    for shard in shards.shards() {
+        let indices = &by_shard[shard.index];
+        if indices.is_empty() {
+            continue;
+        }
+        let mut s = shard.state.lock().unwrap();
+        for &i in indices {
+            let req = decoded[i].as_ref().expect("decoded for every routed index");
+            let (status, body) = submit_one(&mut s, shard, shards, req);
+            if status == 201 {
+                accepted += 1;
+            }
+            results[i] = Some(body);
+        }
+    }
+    let rejected = items.len() as u64 - accepted;
+    Response::json(
+        200,
+        &Json::obj().with("accepted", accepted).with("rejected", rejected).with(
+            "results",
+            Json::Arr(results.into_iter().map(|r| r.expect("every element resolved")).collect()),
+        ),
     )
 }
 
@@ -326,13 +490,22 @@ fn hardware(shards: &ShardSet) -> Response {
 
 /// `GET /metrics` — the whole registry as Prometheus text exposition
 /// (see [`super::metrics::render`] for the family inventory and the
-/// requests ≥ responses scrape invariant).
+/// requests ≥ responses scrape invariant). Rendering goes through a
+/// per-thread scratch buffer, so steady-state scrapes cost one
+/// exact-size copy into the response instead of a growth-realloc chain.
 fn metrics_exposition(shards: &ShardSet) -> Response {
-    Response::with_content_type(
-        200,
-        crate::obs::expo::CONTENT_TYPE,
-        super::metrics::render(shards).into_bytes(),
-    )
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<String> = std::cell::RefCell::new(String::new());
+    }
+    SCRATCH.with(|scratch| {
+        let mut buf = scratch.borrow_mut();
+        super::metrics::render_into(shards, &mut buf);
+        Response::with_content_type(
+            200,
+            crate::obs::expo::CONTENT_TYPE,
+            buf.as_bytes().to_vec(),
+        )
+    })
 }
 
 /// `GET /v1/healthz` — structured liveness: the daemon is up, for how
@@ -349,21 +522,13 @@ fn healthz(shards: &ShardSet) -> Response {
     )
 }
 
-/// `GET /v1/version` — crate version plus the compile-time feature set,
-/// so operators can tell which binary is answering.
+/// `GET /v1/version` — crate version, compile-time feature set, and the
+/// effective serving configuration (serve model, idle timeout, requests
+/// per connection), so operators can tell which binary is answering and
+/// how it was launched. The body is rendered once at startup
+/// ([`ShardSet::version_body`]); serving it is a refcount bump.
 fn version(shards: &ShardSet) -> Response {
-    let mut features: Vec<Json> = Vec::new();
-    if cfg!(feature = "xla") {
-        features.push(Json::from("xla"));
-    }
-    Response::json(
-        200,
-        &Json::obj()
-            .with("name", env!("CARGO_PKG_NAME"))
-            .with("version", env!("CARGO_PKG_VERSION"))
-            .with("features", Json::Arr(features))
-            .with("scheduler", shards.scheduler_name()),
-    )
+    Response::shared_json(200, shards.version_body())
 }
 
 /// `POST /v1/maintenance/defrag` — body `{"shard": 0, "max_migrations": 8,
@@ -520,7 +685,7 @@ mod tests {
             method: method.into(),
             path: path.into(),
             query: HashMap::new(),
-            headers: HashMap::new(),
+            headers: Vec::new(),
             body: body.as_bytes().to_vec(),
             keep_alive: false,
         }
@@ -633,10 +798,22 @@ mod tests {
 
         let r = dispatch(&req("GET", "/v1/version", ""), &state);
         assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "application/json");
         let j = json_of(&r);
         assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
         assert!(j.get("features").unwrap().as_arr().is_some());
         assert_eq!(j.req_str("scheduler").unwrap(), state.scheduler_name());
+        // The serving knobs are reported (defaults here).
+        let model = crate::server::daemon::ServeModel::default();
+        assert_eq!(j.req_str("serve_model").unwrap(), model.name());
+        assert_eq!(
+            j.req_u64("idle_timeout_ms").unwrap(),
+            crate::server::daemon::KEEP_ALIVE_IDLE.as_millis() as u64
+        );
+        assert_eq!(
+            j.req_u64("max_requests_per_conn").unwrap(),
+            crate::server::daemon::MAX_REQUESTS_PER_CONN as u64
+        );
     }
 
     #[test]
@@ -650,7 +827,7 @@ mod tests {
         let r = dispatch(&req("GET", "/metrics", ""), &state);
         assert_eq!(r.status, 200);
         assert_eq!(r.content_type, crate::obs::expo::CONTENT_TYPE);
-        let text = String::from_utf8(r.body).unwrap();
+        let text = String::from_utf8(r.body.to_vec()).unwrap();
         // The /v1/stats gauges re-exported, matching the scripted sequence.
         assert!(text.contains("migsched_submits_total 3\n"), "{text}");
         assert!(text.contains("migsched_accepted_total 2\n"));
@@ -782,9 +959,9 @@ mod tests {
         };
 
         let got = dispatch(&req("GET", "/v1/stats", ""), &state);
-        assert_eq!(String::from_utf8(got.body).unwrap(), expect_stats);
+        assert_eq!(String::from_utf8(got.body.to_vec()).unwrap(), expect_stats);
         let got = dispatch(&req("GET", "/v1/cluster", ""), &state);
-        assert_eq!(String::from_utf8(got.body).unwrap(), expect_cluster);
+        assert_eq!(String::from_utf8(got.body.to_vec()).unwrap(), expect_cluster);
     }
 
     // Sharded routing, id-encoding, and cross-shard merge assertions live
@@ -898,5 +1075,172 @@ mod tests {
         // Shard 0's gauges agree with the partial report.
         let s0 = state.shard(0).unwrap().state.lock().unwrap();
         assert_eq!(s0.migrations_total, j.req_u64("migrations").unwrap());
+    }
+
+    #[test]
+    fn preserialized_error_bodies_match_their_dynamic_forms() {
+        // The static fragments the hot path serves must stay byte-equal
+        // to what Response::error would render.
+        assert_eq!(
+            MISSING_BODY,
+            &*Response::error(400, "missing JSON body").body,
+        );
+        assert_eq!(
+            MISSING_REQUESTS,
+            &*Response::error(400, "missing or non-array field 'requests'").body,
+        );
+    }
+
+    #[test]
+    fn batch_submit_mixes_placements_rejections_and_errors() {
+        let state = shard_set(); // 2 GPUs
+        let r = dispatch(
+            &req(
+                "POST",
+                "/v1/submit/batch",
+                r#"{"requests":[
+                    {"profile":"7g.80gb","tenant":1},
+                    {"profile":"7g.80gb"},
+                    {"profile":"1g.10gb","duration_slots":2},
+                    {"tenant":3},
+                    {"profile":"9g.90gb"}
+                ]}"#,
+            ),
+            &state,
+        );
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        let j = json_of(&r);
+        assert_eq!(j.req_u64("accepted").unwrap(), 2);
+        assert_eq!(j.req_u64("rejected").unwrap(), 3);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 5);
+        // Two placements, ids in arrival order.
+        assert_eq!(results[0].req_u64("id").unwrap(), 0);
+        assert_eq!(results[1].req_u64("id").unwrap(), 1);
+        // Full cluster: the 1g is scheduler-rejected, like a lone submit.
+        assert_eq!(results[2].get("rejected").unwrap().as_bool(), Some(true));
+        // Missing / unknown profile resolve to the single-submit 400 bodies.
+        assert_eq!(
+            results[3].req_str("error").unwrap(),
+            "missing or non-string field 'profile'"
+        );
+        assert_eq!(results[4].req_str("error").unwrap(), "unknown profile '9g.90gb'");
+        // Only the three schedulable elements count as arrivals (the
+        // decode error never reached a shard; the unknown profile was
+        // rejected before arrival accounting, as on the single endpoint).
+        let stats = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        assert_eq!(stats.req_u64("arrived_total").unwrap(), 3);
+        assert_eq!(stats.req_u64("accepted_total").unwrap(), 2);
+    }
+
+    #[test]
+    fn batch_submit_matches_sequential_submits() {
+        // The bit-identity contract at the dispatch layer (the randomized
+        // multi-shard version lives in rust/tests/batch_equiv.rs).
+        let bodies = [
+            r#"{"profile":"2g.20gb","tenant":4,"duration_slots":3}"#,
+            r#"{"profile":"1g.10gb","tenant":9}"#,
+            r#"{"profile":"3g.40gb"}"#,
+            r#"{"profile":"7g.80gb","tenant":2}"#,
+        ];
+        let sequential = shard_set();
+        let mut expect = Vec::new();
+        for body in &bodies {
+            let r = dispatch(&req("POST", "/v1/workloads", body), &sequential);
+            expect.push(String::from_utf8(r.body.to_vec()).unwrap());
+        }
+        let batched = shard_set();
+        let batch_body =
+            format!(r#"{{"requests":[{}]}}"#, bodies.join(","));
+        let r = dispatch(&req("POST", "/v1/submit/batch", &batch_body), &batched);
+        assert_eq!(r.status, 200);
+        let j = json_of(&r);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        let got: Vec<String> = results.iter().map(|b| b.to_string_compact()).collect();
+        assert_eq!(got, expect, "batch bodies must equal sequential bodies");
+        // And the end state agrees byte-for-byte.
+        let a = dispatch(&req("GET", "/v1/cluster", ""), &sequential);
+        let b = dispatch(&req("GET", "/v1/cluster", ""), &batched);
+        assert_eq!(a.body.to_vec(), b.body.to_vec());
+        let a = dispatch(&req("GET", "/v1/stats", ""), &sequential);
+        let b = dispatch(&req("GET", "/v1/stats", ""), &batched);
+        assert_eq!(a.body.to_vec(), b.body.to_vec());
+    }
+
+    #[test]
+    fn batch_submit_validates_the_envelope() {
+        let state = shard_set();
+        let r = dispatch(&req("POST", "/v1/submit/batch", ""), &state);
+        assert_eq!(r.status, 400);
+        assert_eq!(&*r.body, MISSING_BODY);
+        let r = dispatch(&req("POST", "/v1/submit/batch", "{nope"), &state);
+        assert_eq!(r.status, 400);
+        let r = dispatch(&req("POST", "/v1/submit/batch", r#"{"requests":3}"#), &state);
+        assert_eq!(r.status, 400);
+        assert_eq!(&*r.body, MISSING_REQUESTS);
+        // Over the element cap: 413 without touching any shard.
+        let huge = format!(
+            r#"{{"requests":[{}]}}"#,
+            vec![r#"{"profile":"1g.10gb"}"#; MAX_BATCH + 1].join(",")
+        );
+        let r = dispatch(&req("POST", "/v1/submit/batch", &huge), &state);
+        assert_eq!(r.status, 413);
+        let stats = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        assert_eq!(stats.req_u64("arrived_total").unwrap(), 0);
+        // An empty batch is legal and a no-op.
+        let r = dispatch(&req("POST", "/v1/submit/batch", r#"{"requests":[]}"#), &state);
+        assert_eq!(r.status, 200);
+        let j = json_of(&r);
+        assert_eq!(j.req_u64("accepted").unwrap(), 0);
+        assert_eq!(j.req_u64("rejected").unwrap(), 0);
+    }
+
+    #[test]
+    fn submit_fast_path_and_fallback_agree() {
+        // Each pair is (scanner-friendly body, semantically identical body
+        // that forces the Json::parse fallback). Responses must match
+        // byte-for-byte on twin daemons.
+        let pairs = [
+            // Nesting makes the scanner bail.
+            (
+                r#"{"profile":"2g.20gb","tenant":5}"#,
+                r#"{"profile":"2g.20gb","tenant":5,"note":{"a":1}}"#,
+            ),
+            // Escapes make the scanner bail (value is irrelevant junk).
+            (
+                r#"{"profile":"1g.10gb","duration_slots":4}"#,
+                r#"{"profile":"1g.10gb","duration_slots":4,"x":"\n"}"#,
+            ),
+            // Float tenant is ignored (as_u64 fails) on both paths.
+            (
+                r#"{"profile":"3g.40gb","tenant":1.5}"#,
+                r#"{"profile":"3g.40gb","tenant":1.5,"y":[1]}"#,
+            ),
+        ];
+        for (fast, slow) in pairs {
+            let a = shard_set();
+            let b = shard_set();
+            let ra = dispatch(&req("POST", "/v1/workloads", fast), &a);
+            let rb = dispatch(&req("POST", "/v1/workloads", slow), &b);
+            assert_eq!(ra.status, rb.status, "{fast} vs {slow}");
+            assert_eq!(ra.body.to_vec(), rb.body.to_vec(), "{fast} vs {slow}");
+        }
+        // Error shapes keep the pre-scanner messages on every path.
+        let state = shard_set();
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"tenant":1}"#), &state);
+        assert_eq!(r.status, 400);
+        assert_eq!(
+            json_of(&r).req_str("error").unwrap(),
+            "missing or non-string field 'profile'"
+        );
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"profile":7}"#), &state);
+        assert_eq!(r.status, 400);
+        assert_eq!(
+            json_of(&r).req_str("error").unwrap(),
+            "missing or non-string field 'profile'"
+        );
+        let r = dispatch(&req("POST", "/v1/workloads", ""), &state);
+        assert_eq!(r.status, 400);
+        assert_eq!(&*r.body, MISSING_BODY);
     }
 }

@@ -1,8 +1,13 @@
-//! Minimal blocking HTTP/1.1 client for the control-plane API — used by
-//! the load-generator example, the `migsched trace-replay --remote` mode
-//! and the integration tests.
+//! Minimal blocking HTTP/1.1 clients for the control-plane API — used by
+//! the load-generator example, the `migsched trace-replay --remote` mode,
+//! the daemon benchmark and the integration tests.
+//!
+//! [`HttpClient`] opens a fresh connection per request (simple, always
+//! correct). [`HttpConn`] holds ONE kept-alive connection and frames
+//! responses by `Content-Length`, which is what the daemon benchmark and
+//! soak tests use to exercise the persistent-connection serving path.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -83,6 +88,153 @@ impl HttpClient {
             .and_then(|s| s.parse().ok())
             .context("malformed status line")?;
         Ok(ClientResponse { status, body })
+    }
+}
+
+/// A persistent keep-alive HTTP/1.1 connection. Requests are sent with
+/// `Connection: keep-alive`; responses are framed by their
+/// `Content-Length` (the daemon always sends one). When the server
+/// answers `Connection: close` (request cap reached, shutdown) or the
+/// socket dies, the next request transparently reconnects.
+pub struct HttpConn {
+    addr: String,
+    timeout: Duration,
+    reader: Option<BufReader<TcpStream>>,
+}
+
+impl HttpConn {
+    pub fn connect(addr: &str) -> Self {
+        Self { addr: addr.to_string(), timeout: Duration::from_secs(10), reader: None }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body.to_string_compact()))
+    }
+
+    /// POST a preserialized JSON string (the benchmark renders request
+    /// bodies once and reuses them).
+    pub fn post_raw(&mut self, path: &str, body: &str) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body.to_string()))
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("DELETE", path, None)
+    }
+
+    fn ensure_connected(&mut self) -> Result<&mut BufReader<TcpStream>> {
+        if self.reader.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .with_context(|| format!("connecting to {}", self.addr))?;
+            stream.set_read_timeout(Some(self.timeout))?;
+            stream.set_write_timeout(Some(self.timeout))?;
+            stream.set_nodelay(true)?;
+            self.reader = Some(BufReader::new(stream));
+        }
+        Ok(self.reader.as_mut().expect("just connected"))
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<String>,
+    ) -> Result<ClientResponse> {
+        let body = body.unwrap_or_default();
+        // One transparent retry: a kept-alive connection the server has
+        // since closed (request cap, idle timeout) surfaces as an error
+        // on the NEXT request; that request is re-sent on a fresh
+        // connection rather than failed.
+        match self.round_trip(method, path, &body) {
+            Ok(resp) => Ok(resp),
+            Err(_) if self.reader.is_none() => self.round_trip(method, path, &body),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn round_trip(&mut self, method: &str, path: &str, body: &str) -> Result<ClientResponse> {
+        let addr = self.addr.clone();
+        let reader = self.ensure_connected()?;
+        let result = Self::exchange(reader, &addr, method, path, body);
+        match result {
+            Ok((resp, server_closes)) => {
+                if server_closes {
+                    self.reader = None;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                // Dead connection: drop it so the caller's retry (or next
+                // request) reconnects.
+                self.reader = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Send one request and read one `Content-Length`-framed response.
+    /// Returns the response plus whether the server announced it will
+    /// close the connection.
+    fn exchange(
+        reader: &mut BufReader<TcpStream>,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<(ClientResponse, bool)> {
+        {
+            let stream = reader.get_mut();
+            write!(
+                stream,
+                "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+                body.len()
+            )?;
+            stream.flush()?;
+        }
+        let mut status_line = String::new();
+        if reader.read_line(&mut status_line)? == 0 {
+            anyhow::bail!("connection closed before status line");
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .context("malformed status line")?;
+        let mut content_length: Option<usize> = None;
+        let mut server_closes = false;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed mid-headers");
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                let name = name.trim().to_ascii_lowercase();
+                let value = value.trim();
+                if name == "content-length" {
+                    content_length = Some(value.parse().context("bad Content-Length")?);
+                } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                    server_closes = true;
+                }
+            }
+        }
+        let len = content_length.context("response without Content-Length")?;
+        let mut raw = vec![0u8; len];
+        reader.read_exact(&mut raw).context("reading response body")?;
+        let body = String::from_utf8_lossy(&raw).into_owned();
+        Ok((ClientResponse { status, body }, server_closes))
     }
 }
 

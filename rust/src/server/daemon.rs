@@ -1,5 +1,15 @@
 //! The serving daemon: sharded cluster state + schedulers behind an HTTP
 //! listener (see [`super::shard`] for the partitioning/routing model).
+//!
+//! Two serve models share the shard set, the dispatch layer and the HTTP
+//! grammar:
+//!
+//! * [`ServeModel::Reactor`] (the default on unix) — N event-loop
+//!   threads, each running a non-blocking readiness poller
+//!   ([`super::reactor`]); connections never pin a thread.
+//! * [`ServeModel::Threadpool`] — the original accept thread + blocking
+//!   worker pool, kept as the portable fallback and as the baseline the
+//!   daemon benchmark compares against.
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -15,18 +25,79 @@ use crate::mig::HardwareModel;
 use crate::obs::log::RateLimited;
 use crate::sched::SchedulerKind;
 
-/// Requests served over one kept-alive connection before the daemon
-/// forces a close — bounds how long a chatty client can pin a worker.
+/// Default for [`DaemonConfig::max_requests_per_conn`]: requests served
+/// over one kept-alive connection before the daemon forces a close —
+/// bounds how long a chatty client can pin a worker.
 pub const MAX_REQUESTS_PER_CONN: usize = 32;
 
-/// Socket read timeout after the first response: bounds both the idle
-/// wait for the next request line and each read while receiving that
-/// request (one knob — a kept-alive peer trickling bytes is
-/// indistinguishable from an idle one at this layer).
+/// Default for [`DaemonConfig::idle_timeout`]: socket read timeout after
+/// the first response — bounds both the idle wait for the next request
+/// line and each read while receiving that request (one knob — a
+/// kept-alive peer trickling bytes is indistinguishable from an idle one
+/// at this layer).
 pub const KEEP_ALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(5);
 
 /// Read timeout while receiving the FIRST request of a connection.
-const REQUEST_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+pub(crate) const REQUEST_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// How the daemon turns accepted sockets into served requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeModel {
+    /// Non-blocking event loops (epoll on Linux, poll(2) elsewhere on
+    /// unix). Unavailable off unix; [`ServeModel::effective`] falls back.
+    Reactor,
+    /// Accept thread handing blocking connections to a worker pool.
+    Threadpool,
+}
+
+impl ServeModel {
+    /// The model that will actually serve on this platform.
+    pub fn effective(self) -> ServeModel {
+        if cfg!(unix) {
+            self
+        } else {
+            ServeModel::Threadpool
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeModel::Reactor => "reactor",
+            ServeModel::Threadpool => "threadpool",
+        }
+    }
+
+    /// Parse a `--serve-model` CLI value (case-insensitive).
+    pub fn parse(name: &str) -> Option<ServeModel> {
+        match name.to_ascii_lowercase().as_str() {
+            "reactor" => Some(ServeModel::Reactor),
+            "threadpool" => Some(ServeModel::Threadpool),
+            _ => None,
+        }
+    }
+}
+
+impl Default for ServeModel {
+    fn default() -> Self {
+        ServeModel::Reactor.effective()
+    }
+}
+
+/// Per-connection serving limits, shared by both serve models and
+/// reported by `GET /v1/version`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConnLimits {
+    /// Idle / slow-trickle timeout between kept-alive requests.
+    pub idle_timeout: std::time::Duration,
+    /// Requests served per connection before a forced close.
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        Self { idle_timeout: KEEP_ALIVE_IDLE, max_requests_per_conn: MAX_REQUESTS_PER_CONN }
+    }
+}
 
 /// Background continuous-defrag configuration: every `every_secs` the
 /// sweeper visits each shard in index order (one lock at a time — the
@@ -51,7 +122,8 @@ pub struct DaemonConfig {
     pub hardware: HardwareModel,
     pub num_gpus: usize,
     pub scheduler: SchedulerKind,
-    /// HTTP worker threads.
+    /// Serving threads: event loops under [`ServeModel::Reactor`], HTTP
+    /// workers under [`ServeModel::Threadpool`]. Must be ≥ 1.
     pub workers: usize,
     /// Disjoint sub-clusters, each behind its own lock (tenants are
     /// consistent-hash routed). `1` (the default) is the single-mutex
@@ -60,6 +132,13 @@ pub struct DaemonConfig {
     /// Background continuous defrag (`None` = the pre-existing behavior:
     /// migrations only via `POST /v1/maintenance/defrag`).
     pub defrag: Option<DaemonDefrag>,
+    /// How connections are served; see [`ServeModel`].
+    pub model: ServeModel,
+    /// Idle timeout between kept-alive requests (`--idle-timeout-ms`).
+    pub idle_timeout: std::time::Duration,
+    /// Requests per connection before a forced close
+    /// (`--max-requests-per-conn`).
+    pub max_requests_per_conn: usize,
 }
 
 impl Default for DaemonConfig {
@@ -71,6 +150,9 @@ impl Default for DaemonConfig {
             workers: 8,
             shards: 1,
             defrag: None,
+            model: ServeModel::default(),
+            idle_timeout: KEEP_ALIVE_IDLE,
+            max_requests_per_conn: MAX_REQUESTS_PER_CONN,
         }
     }
 }
@@ -99,43 +181,28 @@ impl Daemon {
     pub fn serve(&self, addr: &str) -> std::io::Result<ServerHandle> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(false)?;
-        let shards = Arc::clone(&self.shards);
-        let workers = self.config.workers;
+        let workers = self.config.workers.max(1);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let shutdown_flag = Arc::clone(&shutdown);
+        let model = self.config.model.effective();
 
-        let accept_thread = std::thread::Builder::new()
-            .name("migsched-accept".into())
-            .spawn(move || {
-                let pool = ThreadPool::new(workers);
-                for stream in listener.incoming() {
-                    if shutdown_flag.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match stream {
-                        Ok(stream) => {
-                            let shards = Arc::clone(&shards);
-                            let shutdown = Arc::clone(&shutdown_flag);
-                            pool.execute(move || handle_connection(stream, shards, shutdown));
-                        }
-                        Err(e) => {
-                            // A dying listener repeats the same error at
-                            // accept-loop speed; log once per window.
-                            static ACCEPT_WARN: RateLimited =
-                                RateLimited::new(std::time::Duration::from_secs(5));
-                            let msg = format!("accept error: {e}");
-                            match ACCEPT_WARN.should_log(&msg) {
-                                Some(0) => crate::log_warn!("{msg}"),
-                                Some(dropped) => crate::log_warn!(
-                                    "{msg} ({dropped} identical warning(s) suppressed)"
-                                ),
-                                None => {}
-                            }
-                        }
-                    }
-                }
-            })?;
+        let threads: Vec<JoinHandle<()>> = match model {
+            #[cfg(unix)]
+            ServeModel::Reactor => super::reactor::serve(
+                listener,
+                Arc::clone(&self.shards),
+                Arc::clone(&shutdown),
+                workers,
+            )?,
+            _ => {
+                listener.set_nonblocking(false)?;
+                vec![spawn_accept_loop(
+                    listener,
+                    Arc::clone(&self.shards),
+                    Arc::clone(&shutdown),
+                    workers,
+                )?]
+            }
+        };
 
         let defrag_thread = match self.config.defrag {
             Some(policy) => Some(
@@ -149,10 +216,12 @@ impl Daemon {
         };
 
         crate::log_info!(
-            "serving on {local_addr} ({} GPUs over {} shard(s), scheduler {})",
+            "serving on {local_addr} ({} GPUs over {} shard(s), scheduler {}, {} model, {} thread(s))",
             self.config.num_gpus,
             self.config.shards,
-            self.config.scheduler.name()
+            self.config.scheduler.name(),
+            model.name(),
+            workers
         );
         if let Some(policy) = &self.config.defrag {
             crate::log_info!(
@@ -163,13 +232,56 @@ impl Daemon {
                 policy.cost_budget
             );
         }
-        Ok(ServerHandle {
-            addr: local_addr,
-            shutdown,
-            accept_thread: Some(accept_thread),
-            defrag_thread,
-        })
+        Ok(ServerHandle { addr: local_addr, shutdown, threads, defrag_thread })
     }
+}
+
+/// The threadpool serve model: one blocking accept loop feeding a worker
+/// pool, one connection pinned per worker while it is being served.
+fn spawn_accept_loop(
+    listener: TcpListener,
+    shards: Arc<ShardSet>,
+    shutdown: Arc<AtomicBool>,
+    workers: usize,
+) -> std::io::Result<JoinHandle<()>> {
+    std::thread::Builder::new().name("migsched-accept".into()).spawn(move || {
+        let pool = ThreadPool::new(workers);
+        for stream in listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let shards = Arc::clone(&shards);
+                    let shutdown = Arc::clone(&shutdown);
+                    pool.execute(move || handle_connection(stream, shards, shutdown));
+                }
+                Err(e) => {
+                    // A dying listener repeats the same error at
+                    // accept-loop speed; log once per window.
+                    static ACCEPT_WARN: RateLimited =
+                        RateLimited::new(std::time::Duration::from_secs(5));
+                    let msg = format!("accept error: {e}");
+                    match ACCEPT_WARN.should_log(&msg) {
+                        Some(0) => crate::log_warn!("{msg}"),
+                        Some(dropped) => crate::log_warn!(
+                            "{msg} ({dropped} identical warning(s) suppressed)"
+                        ),
+                        None => {}
+                    }
+                }
+            }
+        }
+    })
+}
+
+/// Next connection id: together with the per-connection request sequence
+/// it forms the request id (`conn=N req=M`) threaded through every log
+/// line from accept to respond. Shared by both serve models so ids stay
+/// unique within a process.
+pub(crate) fn next_conn_id() -> u64 {
+    static NEXT_CONN_ID: AtomicU64 = AtomicU64::new(1);
+    NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed)
 }
 
 /// The background defrag loop: sleep out the cadence (in short ticks so
@@ -222,10 +334,11 @@ fn background_defrag(
     }
 }
 
-/// Serve one connection: up to [`MAX_REQUESTS_PER_CONN`] requests when
-/// the client negotiates keep-alive (HTTP/1.1 default), with
-/// [`KEEP_ALIVE_IDLE`] between requests. One `BufReader` lives for the
-/// whole connection so pipelined request bytes survive across turns.
+/// Serve one connection (threadpool model): up to
+/// `max_requests_per_conn` requests when the client negotiates
+/// keep-alive (HTTP/1.1 default), with the configured idle timeout
+/// between requests. One `BufReader` lives for the whole connection so
+/// pipelined request bytes survive across turns.
 ///
 /// The daemon's shutdown flag is honored between requests (and folded
 /// into the keep decision), so an actively-polling kept-alive client
@@ -236,10 +349,7 @@ fn handle_connection(
     shards: Arc<ShardSet>,
     shutdown: Arc<AtomicBool>,
 ) {
-    // Per-connection id: together with the per-connection request sequence
-    // it forms the request id (`conn=N req=M`) threaded through every log
-    // line from accept to respond.
-    static NEXT_CONN_ID: AtomicU64 = AtomicU64::new(1);
+    let limits = shards.limits();
     let _ = stream.set_read_timeout(Some(REQUEST_TIMEOUT));
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
@@ -253,7 +363,7 @@ fn handle_connection(
     let m = shards.metrics();
     m.connections_total.inc();
     m.connections_open.inc();
-    let conn_id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+    let conn_id = next_conn_id();
     if let Ok(peer) = stream.peer_addr() {
         crate::log_debug!("conn={conn_id} accepted from {peer}");
     }
@@ -273,7 +383,7 @@ fn handle_connection(
                     request.method, request.path
                 );
                 let keep = request.keep_alive
-                    && served < MAX_REQUESTS_PER_CONN
+                    && served < limits.max_requests_per_conn
                     && !shutdown.load(Ordering::SeqCst);
                 let response = api::dispatch(&request, &shards);
                 // Counted before the response bytes go out; together with
@@ -298,7 +408,7 @@ fn handle_connection(
                 // Idle clock: subsequent requests get the (shorter)
                 // keep-alive window. SO_RCVTIMEO lives on the shared
                 // socket, so setting it on either handle is enough.
-                let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+                let _ = stream.set_read_timeout(Some(limits.idle_timeout));
             }
             Err(response) => {
                 // Malformed input: answer (best effort) and hang up. No
@@ -363,7 +473,9 @@ fn wake_addr(addr: SocketAddr) -> SocketAddr {
 pub struct ServerHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    /// The accept thread (threadpool model) or the event-loop threads
+    /// (reactor model).
+    threads: Vec<JoinHandle<()>>,
     defrag_thread: Option<JoinHandle<()>>,
 }
 
@@ -372,20 +484,23 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown and join the serving threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept loop with a dummy connection (via loopback
-        // when bound to 0.0.0.0/[::]; bounded so shutdown never hangs).
+        // Unblock the accept loop / pollers with a dummy connection (via
+        // loopback when bound to 0.0.0.0/[::]; bounded so shutdown never
+        // hangs). Every reactor loop polls the same listener, so one
+        // pending connection wakes them all; their wait timeout backstops
+        // a missed wake.
         let _ = TcpStream::connect_timeout(
             &wake_addr(self.addr),
             std::time::Duration::from_secs(1),
         );
-        if let Some(t) = self.accept_thread.take() {
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
         // The sweeper polls the flag every 50ms, so this join is prompt.
@@ -397,7 +512,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        if self.accept_thread.is_some() || self.defrag_thread.is_some() {
+        if !self.threads.is_empty() || self.defrag_thread.is_some() {
             self.shutdown_inner();
         }
     }
@@ -451,6 +566,24 @@ mod tests {
         assert_eq!(w, "192.0.2.7:80".parse().unwrap());
         let w = wake_addr("127.0.0.1:81".parse().unwrap());
         assert_eq!(w, "127.0.0.1:81".parse().unwrap());
+    }
+
+    #[test]
+    fn serve_model_effective_and_names() {
+        assert_eq!(ServeModel::Threadpool.effective(), ServeModel::Threadpool);
+        assert_eq!(ServeModel::Reactor.name(), "reactor");
+        assert_eq!(ServeModel::Threadpool.name(), "threadpool");
+        if cfg!(unix) {
+            assert_eq!(ServeModel::default(), ServeModel::Reactor);
+        } else {
+            assert_eq!(ServeModel::default(), ServeModel::Threadpool);
+        }
+        let limits = ConnLimits::default();
+        assert_eq!(limits.idle_timeout, KEEP_ALIVE_IDLE);
+        assert_eq!(limits.max_requests_per_conn, MAX_REQUESTS_PER_CONN);
+        assert_eq!(ServeModel::parse("reactor"), Some(ServeModel::Reactor));
+        assert_eq!(ServeModel::parse("Threadpool"), Some(ServeModel::Threadpool));
+        assert_eq!(ServeModel::parse("async"), None);
     }
 
     // Socket-level serve/shutdown coverage is in rust/tests/server_api.rs.

@@ -1,18 +1,31 @@
-//! Minimal HTTP/1.1 request parsing and response writing over blocking
-//! TCP streams — just enough protocol for the JSON control-plane API
-//! (no chunked encoding, 1 MiB body cap, 8 KiB request-/header-line cap).
+//! Minimal HTTP/1.1 request parsing and response writing — just enough
+//! protocol for the JSON control-plane API (no chunked encoding, 1 MiB
+//! body cap, 8 KiB request-/header-line cap).
 //!
-//! Persistent connections ARE supported: [`parse_request_from`] reads
-//! sequential requests off one shared `BufRead` (so pipelined bytes
-//! buffered past the first request are never dropped), [`Request`]
-//! carries the negotiated `keep_alive` flag (HTTP/1.1 default-on,
-//! HTTP/1.0 opt-in, `Connection: close` always wins) and
-//! [`Response::write_conn`] emits the matching `Connection:` header. The
+//! Two parse entry points share one grammar:
+//!
+//! * [`parse_request_from`] reads sequential requests off a blocking
+//!   `BufRead` (the threadpool serve model; pipelined bytes buffered past
+//!   the first request are never dropped).
+//! * [`parse_request_bytes`] is the non-blocking form used by the
+//!   [`super::reactor`] event loop: it scans a connection's accumulated
+//!   read buffer and either yields a request plus its consumed byte
+//!   count, asks for more bytes ([`Parse::Incomplete`]), or reports the
+//!   same errors the blocking path would. A differential test below pins
+//!   the two parsers byte-for-byte against each other.
+//!
+//! Persistent connections ARE supported: [`Request`] carries the
+//! negotiated `keep_alive` flag (HTTP/1.1 default-on, HTTP/1.0 opt-in,
+//! `Connection: close` always wins) and [`Response::write_conn`] /
+//! [`Response::render_into`] emit the matching `Connection:` header. The
 //! per-connection loop — request cap, idle timeout — lives in
-//! [`super::daemon`].
+//! [`super::daemon`] and [`super::reactor`].
 
 use std::collections::HashMap;
 use std::io::{BufRead, Read, Write};
+use std::sync::Arc;
+
+use crate::util::small::SmallVec;
 
 /// Maximum accepted request body (1 MiB — control-plane payloads are tiny).
 pub const MAX_BODY: usize = 1 << 20;
@@ -23,14 +36,17 @@ pub const MAX_BODY: usize = 1 << 20;
 pub const MAX_LINE: usize = 8 << 10;
 
 /// A parsed HTTP request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub method: String,
     /// Path without query string.
     pub path: String,
     /// Decoded query parameters.
     pub query: HashMap<String, String>,
-    pub headers: HashMap<String, String>,
+    /// Lowercased header names → values, in arrival order. A plain vector
+    /// beats a `HashMap` here: requests carry a handful of headers and
+    /// the daemon probes at most three of them.
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
     /// Whether the client's version + `Connection` header allow reusing
     /// the connection for another request after the response.
@@ -43,9 +59,56 @@ impl Request {
         std::str::from_utf8(&self.body).map_err(|_| "body is not valid UTF-8".to_string())
     }
 
-    /// Split the path into non-empty segments.
-    pub fn segments(&self) -> Vec<&str> {
+    /// Split the path into non-empty segments. Control-plane paths have
+    /// at most three, so the result stays on the stack.
+    pub fn segments(&self) -> SmallVec<&str, 8> {
         self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+
+    /// Header lookup by (lowercased) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_get(&self.headers, name)
+    }
+}
+
+/// A response body: owned bytes for dynamic payloads, or preserialized
+/// bytes (`Static` for compile-time constants, `Shared` for startup-time
+/// renders like `/v1/version`) so fixed responses serialize without
+/// per-request allocation. Derefs to `[u8]`.
+#[derive(Debug, Clone)]
+pub enum Body {
+    Owned(Vec<u8>),
+    Static(&'static [u8]),
+    Shared(Arc<[u8]>),
+}
+
+impl std::ops::Deref for Body {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            Body::Owned(b) => b,
+            Body::Static(b) => b,
+            Body::Shared(b) => b,
+        }
+    }
+}
+
+impl From<Vec<u8>> for Body {
+    fn from(b: Vec<u8>) -> Self {
+        Body::Owned(b)
+    }
+}
+
+impl From<&'static [u8]> for Body {
+    fn from(b: &'static [u8]) -> Self {
+        Body::Static(b)
+    }
+}
+
+impl From<Arc<[u8]>> for Body {
+    fn from(b: Arc<[u8]>) -> Self {
+        Body::Shared(b)
     }
 }
 
@@ -54,7 +117,7 @@ impl Request {
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
-    pub body: Vec<u8>,
+    pub body: Body,
 }
 
 impl Response {
@@ -62,22 +125,39 @@ impl Response {
         Self {
             status,
             content_type: "application/json",
-            body: body.to_string_compact().into_bytes(),
+            body: Body::Owned(body.to_string_compact().into_bytes()),
         }
     }
 
     pub fn text(status: u16, body: &str) -> Self {
-        Self { status, content_type: "text/plain; charset=utf-8", body: body.as_bytes().to_vec() }
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: Body::Owned(body.as_bytes().to_vec()),
+        }
     }
 
     pub fn error(status: u16, message: &str) -> Self {
         Self::json(status, &crate::util::json::Json::obj().with("error", message))
     }
 
+    /// A fixed-body JSON response from a preserialized `'static`
+    /// fragment. Callers pin the bytes equal to the dynamic form in
+    /// tests.
+    pub fn static_json(status: u16, body: &'static [u8]) -> Self {
+        Self { status, content_type: "application/json", body: Body::Static(body) }
+    }
+
+    /// A JSON response sharing bytes rendered once at startup (e.g.
+    /// `/v1/version`); serializing it is a refcount bump, not a copy.
+    pub fn shared_json(status: u16, body: Arc<[u8]>) -> Self {
+        Self { status, content_type: "application/json", body: Body::Shared(body) }
+    }
+
     /// A response with an explicit content type (e.g. the Prometheus
     /// exposition type on `GET /metrics`).
     pub fn with_content_type(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
-        Self { status, content_type, body }
+        Self { status, content_type, body: Body::Owned(body) }
     }
 
     fn status_text(status: u16) -> &'static str {
@@ -120,12 +200,28 @@ impl Response {
         stream.write_all(&self.body)?;
         stream.flush()
     }
+
+    /// Append the full wire form (status line, headers, body) onto a
+    /// reusable buffer — the reactor's per-connection write path. The
+    /// bytes are identical to [`Response::write_conn`].
+    pub fn render_into(&self, out: &mut Vec<u8>, keep_alive: bool) {
+        let _ = write!(
+            out,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            Self::status_text(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        out.extend_from_slice(&self.body);
+    }
 }
 
-/// Parse one request from a shared buffered reader — the daemon's only
-/// parse entry point. `Ok(None)` means the client closed (or went idle
-/// past the read timeout) *between* requests: nothing to answer, close
-/// quietly. A connection that dies mid-request is still an error.
+/// Parse one request from a shared buffered reader — the threadpool
+/// model's parse entry point. `Ok(None)` means the client closed (or went
+/// idle past the read timeout) *between* requests: nothing to answer,
+/// close quietly. A connection that dies mid-request is still an error.
 ///
 /// The reader must be reused across calls on one connection: pipelined
 /// clients send request N+1's bytes before response N, and those bytes
@@ -152,19 +248,10 @@ pub fn parse_request_from<R: BufRead>(reader: &mut R) -> Result<Option<Request>,
     }
     let request_line =
         request_line.ok_or_else(|| Response::error(400, "missing method"))?;
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().ok_or_else(|| Response::error(400, "missing method"))?;
-    let target = parts.next().ok_or_else(|| Response::error(400, "missing path"))?;
-    let version = parts.next().unwrap_or("HTTP/1.1");
-    if !version.starts_with("HTTP/1.") {
-        return Err(Response::error(400, "unsupported HTTP version"));
-    }
-    // HTTP/1.1 defaults to persistent connections; 1.0 must opt in.
-    let http_11 = version != "HTTP/1.0";
-
+    let (method, target, http_11) = parse_request_line(&request_line)?;
     let (path, query) = split_target(target);
 
-    let mut headers = HashMap::new();
+    let mut headers: Vec<(String, String)> = Vec::new();
     let mut header_lines = 0usize;
     loop {
         let line = read_line_capped(reader, "headers", 413)
@@ -173,49 +260,11 @@ pub fn parse_request_from<R: BufRead>(reader: &mut R) -> Result<Option<Request>,
         if line.is_empty() {
             break;
         }
-        // Count LINES read, not parsed entries: colon-less or
-        // duplicate-name lines must also hit the bound, or a client
-        // streaming junk lines under the length cap pins a worker forever.
         header_lines += 1;
-        if header_lines > 100 {
-            return Err(Response::error(400, "too many headers"));
-        }
-        if let Some((name, value)) = line.split_once(':') {
-            let name = name.trim().to_ascii_lowercase();
-            let value = value.trim().to_string();
-            // RFC 9112 §6.3: conflicting Content-Length values are
-            // unrecoverable — last-wins would desync a kept-alive
-            // connection from any front proxy honoring the first value
-            // (CL.CL request smuggling).
-            if name == "content-length" {
-                if let Some(prev) = headers.get(&name) {
-                    if *prev != value {
-                        return Err(Response::error(
-                            400,
-                            "conflicting Content-Length headers",
-                        ));
-                    }
-                }
-            }
-            headers.insert(name, value);
-        }
+        accept_header_line(&mut headers, line, header_lines)?;
     }
 
-    // No chunked decoding here — and with persistent connections an
-    // unconsumed chunked body would be re-parsed as the next "request"
-    // (request smuggling), so Transfer-Encoding must be refused outright,
-    // not ignored.
-    if headers.contains_key("transfer-encoding") {
-        return Err(Response::error(501, "Transfer-Encoding is not supported"));
-    }
-    let content_length: usize = headers
-        .get("content-length")
-        .map(|v| v.parse().map_err(|_| Response::error(400, "bad Content-Length")))
-        .transpose()?
-        .unwrap_or(0);
-    if content_length > MAX_BODY {
-        return Err(Response::error(413, "body too large"));
-    }
+    let content_length = body_length(&headers)?;
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader
@@ -223,20 +272,7 @@ pub fn parse_request_from<R: BufRead>(reader: &mut R) -> Result<Option<Request>,
             .map_err(|e| Response::error(400, &format!("reading body: {e}")))?;
     }
 
-    let keep_alive = match headers.get("connection") {
-        Some(v) => {
-            let tokens: Vec<String> =
-                v.split(',').map(|t| t.trim().to_ascii_lowercase()).collect();
-            if tokens.iter().any(|t| t == "close") {
-                false
-            } else if tokens.iter().any(|t| t == "keep-alive") {
-                true
-            } else {
-                http_11
-            }
-        }
-        None => http_11,
-    };
+    let keep_alive = negotiate_keep_alive(header_get(&headers, "connection"), http_11);
 
     Ok(Some(Request {
         method: method.to_ascii_uppercase(),
@@ -246,6 +282,269 @@ pub fn parse_request_from<R: BufRead>(reader: &mut R) -> Result<Option<Request>,
         body,
         keep_alive,
     }))
+}
+
+/// Outcome of [`parse_request_bytes`] on a connection's read buffer.
+#[derive(Debug)]
+pub enum Parse {
+    /// Not enough bytes buffered yet — keep reading.
+    Incomplete,
+    /// One complete request, occupying the first `consumed` bytes of the
+    /// buffer. The caller drains those bytes before re-parsing (pipelined
+    /// requests follow immediately).
+    Done { request: Request, consumed: usize },
+    /// Clean end of stream — empty or blank-only buffer at EOF, or bytes
+    /// the blocking parser treats as an idle disconnect. Close without
+    /// answering.
+    Eof,
+    /// Malformed request: answer with the response, then close.
+    Bad(Response),
+}
+
+/// Parse one request from an accumulated read buffer — the reactor's
+/// non-blocking parse entry point. `eof` says the peer half-closed, which
+/// (matching the blocking parser's `read_line`/`read_exact` semantics)
+/// turns "wait for more bytes" into either a final unterminated line or
+/// a hard error.
+pub fn parse_request_bytes(buf: &[u8], eof: bool) -> Parse {
+    let mut pos = 0usize;
+
+    // Request line, skipping up to two bare CRLFs (RFC 9112 §2.2) — the
+    // same tolerance window as the blocking parser.
+    let mut request_line = None;
+    for _ in 0..3 {
+        match take_line(buf, pos, eof) {
+            LineOutcome::Partial => return Parse::Incomplete,
+            LineOutcome::End => return Parse::Eof,
+            // The blocking parser treats undecodable bytes before a
+            // request line as an idle disconnect (its read_line fails
+            // without yielding a partial line) — close quietly.
+            LineOutcome::Utf8 => return Parse::Eof,
+            LineOutcome::TooLong => {
+                return Parse::Bad(
+                    LineError::TooLong { what: "request line", status: 414 }.into_response(),
+                )
+            }
+            LineOutcome::Full(line, next) => {
+                pos = next;
+                if line.trim_end().is_empty() {
+                    continue;
+                }
+                request_line = Some(line);
+                break;
+            }
+        }
+    }
+    let Some(request_line) = request_line else {
+        return Parse::Bad(Response::error(400, "missing method"));
+    };
+    let (method, target, http_11) = match parse_request_line(request_line) {
+        Ok(parts) => parts,
+        Err(resp) => return Parse::Bad(resp),
+    };
+    let (path, query) = split_target(target);
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut header_lines = 0usize;
+    loop {
+        let line = match take_line(buf, pos, eof) {
+            LineOutcome::Partial => return Parse::Incomplete,
+            // EOF ends the header block the same way a blank line does
+            // (read_line yields "" there).
+            LineOutcome::End => break,
+            LineOutcome::Utf8 => {
+                return Parse::Bad(Response::error(
+                    400,
+                    "reading headers: stream did not contain valid UTF-8",
+                ))
+            }
+            LineOutcome::TooLong => {
+                return Parse::Bad(
+                    LineError::TooLong { what: "headers", status: 413 }.into_response(),
+                )
+            }
+            LineOutcome::Full(line, next) => {
+                pos = next;
+                line
+            }
+        };
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        header_lines += 1;
+        if let Err(resp) = accept_header_line(&mut headers, line, header_lines) {
+            return Parse::Bad(resp);
+        }
+    }
+
+    let content_length = match body_length(&headers) {
+        Ok(n) => n,
+        Err(resp) => return Parse::Bad(resp),
+    };
+    if buf.len() - pos < content_length {
+        if eof {
+            // read_exact's UnexpectedEof, verbatim.
+            return Parse::Bad(Response::error(
+                400,
+                "reading body: failed to fill whole buffer",
+            ));
+        }
+        return Parse::Incomplete;
+    }
+    let body = buf[pos..pos + content_length].to_vec();
+    pos += content_length;
+
+    let keep_alive = negotiate_keep_alive(header_get(&headers, "connection"), http_11);
+
+    Parse::Done {
+        request: Request {
+            method: method.to_ascii_uppercase(),
+            path: path.to_string(),
+            query,
+            headers,
+            body,
+            keep_alive,
+        },
+        consumed: pos,
+    }
+}
+
+/// Split a request line into method, target and the HTTP/1.1-ness of the
+/// version token; shared by both parsers so their rejections match.
+fn parse_request_line(line: &str) -> Result<(&str, &str, bool), Response> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| Response::error(400, "missing method"))?;
+    let target = parts.next().ok_or_else(|| Response::error(400, "missing path"))?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        return Err(Response::error(400, "unsupported HTTP version"));
+    }
+    // HTTP/1.1 defaults to persistent connections; 1.0 must opt in.
+    Ok((method, target, version != "HTTP/1.0"))
+}
+
+/// Fold one non-blank header line into `headers`, enforcing the line cap
+/// and the anti-smuggling Content-Length conflict check.
+fn accept_header_line(
+    headers: &mut Vec<(String, String)>,
+    line: &str,
+    header_lines: usize,
+) -> Result<(), Response> {
+    // Count LINES read, not parsed entries: colon-less or duplicate-name
+    // lines must also hit the bound, or a client streaming junk lines
+    // under the length cap pins a connection forever.
+    if header_lines > 100 {
+        return Err(Response::error(400, "too many headers"));
+    }
+    if let Some((name, value)) = line.split_once(':') {
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        // RFC 9112 §6.3: conflicting Content-Length values are
+        // unrecoverable — last-wins would desync a kept-alive connection
+        // from any front proxy honoring the first value (CL.CL request
+        // smuggling).
+        if name == "content-length" {
+            if let Some(prev) = header_get(headers, "content-length") {
+                if prev != value {
+                    return Err(Response::error(400, "conflicting Content-Length headers"));
+                }
+            }
+        }
+        if let Some(slot) = headers.iter_mut().find(|(n, _)| *n == name) {
+            // Repeated names keep map semantics: last value wins.
+            slot.1.clear();
+            slot.1.push_str(value);
+        } else {
+            headers.push((name, value.to_string()));
+        }
+    }
+    Ok(())
+}
+
+fn header_get<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+/// Validate Transfer-Encoding / Content-Length and return the body size.
+fn body_length(headers: &[(String, String)]) -> Result<usize, Response> {
+    // No chunked decoding here — and with persistent connections an
+    // unconsumed chunked body would be re-parsed as the next "request"
+    // (request smuggling), so Transfer-Encoding must be refused outright,
+    // not ignored.
+    if header_get(headers, "transfer-encoding").is_some() {
+        return Err(Response::error(501, "Transfer-Encoding is not supported"));
+    }
+    let content_length: usize = header_get(headers, "content-length")
+        .map(|v| v.parse().map_err(|_| Response::error(400, "bad Content-Length")))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        return Err(Response::error(413, "body too large"));
+    }
+    Ok(content_length)
+}
+
+fn negotiate_keep_alive(connection: Option<&str>, http_11: bool) -> bool {
+    match connection {
+        Some(v) => {
+            let mut close = false;
+            let mut keep = false;
+            for token in v.split(',') {
+                let token = token.trim();
+                if token.eq_ignore_ascii_case("close") {
+                    close = true;
+                } else if token.eq_ignore_ascii_case("keep-alive") {
+                    keep = true;
+                }
+            }
+            if close {
+                false
+            } else {
+                keep || http_11
+            }
+        }
+        None => http_11,
+    }
+}
+
+/// One line extracted from the read buffer.
+enum LineOutcome<'a> {
+    /// A complete line including its terminator (or the final
+    /// unterminated line at EOF); `usize` is the offset just past it.
+    Full(&'a str, usize),
+    /// No terminator buffered yet and the stream is still open.
+    Partial,
+    /// `pos` is exactly the end of the buffer at EOF.
+    End,
+    /// Line exceeds [`MAX_LINE`].
+    TooLong,
+    /// The capped chunk is not valid UTF-8 (mirrors `read_line`'s
+    /// error, including its check running *before* the length cap).
+    Utf8,
+}
+
+/// Buffer-based equivalent of [`read_line_capped`]: examine at most
+/// `MAX_LINE + 1` bytes from `pos`, classifying exactly like the
+/// blocking reader (UTF-8 validation of the capped chunk first, then the
+/// length bound; EOF turns a partial tail into a final line).
+fn take_line(buf: &[u8], pos: usize, eof: bool) -> LineOutcome<'_> {
+    let rest = &buf[pos..];
+    let window = &rest[..rest.len().min(MAX_LINE + 1)];
+    let chunk = match window.iter().position(|&b| b == b'\n') {
+        Some(i) => &window[..=i],
+        None if rest.len() > MAX_LINE => window, // cap hit with no terminator
+        None if !eof => return LineOutcome::Partial,
+        None if rest.is_empty() => return LineOutcome::End,
+        None => window, // final unterminated line at EOF
+    };
+    let Ok(line) = std::str::from_utf8(chunk) else {
+        return LineOutcome::Utf8;
+    };
+    if chunk.len() > MAX_LINE {
+        return LineOutcome::TooLong;
+    }
+    LineOutcome::Full(line, pos + chunk.len())
 }
 
 /// A failed line read, keeping enough context for the caller to decide
@@ -354,6 +653,42 @@ mod tests {
     }
 
     #[test]
+    fn render_into_matches_write_conn_bytes() {
+        for keep in [true, false] {
+            for r in [
+                Response::json(201, &crate::util::json::Json::obj().with("id", 7u64)),
+                Response::static_json(400, br#"{"error":"missing JSON body"}"#),
+                Response::text(200, "ok\n"),
+            ] {
+                let mut streamed = Vec::new();
+                r.write_conn(&mut streamed, keep).unwrap();
+                let mut rendered = Vec::new();
+                r.render_into(&mut rendered, keep);
+                assert_eq!(streamed, rendered);
+            }
+        }
+    }
+
+    #[test]
+    fn render_into_appends_without_clearing() {
+        let mut buf = b"previous".to_vec();
+        Response::text(200, "x").render_into(&mut buf, true);
+        assert!(buf.starts_with(b"previous"));
+        assert!(buf.ends_with(b"x"));
+    }
+
+    #[test]
+    fn body_variants_deref_to_the_same_bytes() {
+        let owned = Body::Owned(b"abc".to_vec());
+        let fixed = Body::Static(b"abc");
+        let shared = Body::Shared(Arc::from(&b"abc"[..]));
+        assert_eq!(&*owned, b"abc");
+        assert_eq!(&*fixed, b"abc");
+        assert_eq!(&*shared, b"abc");
+        assert_eq!(owned.len(), 3);
+    }
+
+    #[test]
     fn status_texts() {
         assert_eq!(Response::status_text(404), "Not Found");
         assert_eq!(Response::status_text(409), "Conflict");
@@ -383,12 +718,15 @@ mod tests {
             method: "GET".into(),
             path: "/v1/workloads/42".into(),
             query: HashMap::new(),
-            headers: HashMap::new(),
+            headers: vec![("host".into(), "x".into())],
             body: b"hello".to_vec(),
             keep_alive: true,
         };
-        assert_eq!(r.segments(), vec!["v1", "workloads", "42"]);
+        assert_eq!(r.segments().as_slice(), &["v1", "workloads", "42"][..]);
+        assert!(r.segments().is_inline());
         assert_eq!(r.body_str().unwrap(), "hello");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("missing"), None);
     }
 
     fn parse_bytes(bytes: &[u8]) -> Result<Option<Request>, Response> {
@@ -493,6 +831,176 @@ mod tests {
         let mut buf = Vec::new();
         r.write_conn(&mut buf, false).unwrap();
         assert!(String::from_utf8(buf).unwrap().contains("Connection: close\r\n"));
+    }
+
+    // ----- differential coverage: buffer parser vs blocking parser -----
+
+    /// One step of either parser, normalized for comparison.
+    #[derive(Debug, PartialEq)]
+    enum Step {
+        Req(Request),
+        Close,
+        Err(u16, Vec<u8>),
+    }
+
+    /// Drive the blocking parser over the whole byte string.
+    fn blocking_steps(bytes: &[u8]) -> Vec<Step> {
+        let mut reader = &bytes[..];
+        let mut steps = Vec::new();
+        loop {
+            match parse_request_from(&mut reader) {
+                Ok(Some(req)) => steps.push(Step::Req(req)),
+                Ok(None) => {
+                    steps.push(Step::Close);
+                    return steps;
+                }
+                Err(resp) => {
+                    steps.push(Step::Err(resp.status, resp.body.to_vec()));
+                    return steps;
+                }
+            }
+        }
+    }
+
+    /// Drive the buffer parser the way the reactor does: whole buffer
+    /// available, EOF known, consumed prefix drained between requests.
+    fn buffered_steps(bytes: &[u8]) -> Vec<Step> {
+        let mut pos = 0usize;
+        let mut steps = Vec::new();
+        loop {
+            match parse_request_bytes(&bytes[pos..], true) {
+                Parse::Done { request, consumed } => {
+                    pos += consumed;
+                    steps.push(Step::Req(request));
+                }
+                Parse::Eof => {
+                    steps.push(Step::Close);
+                    return steps;
+                }
+                Parse::Bad(resp) => {
+                    steps.push(Step::Err(resp.status, resp.body.to_vec()));
+                    return steps;
+                }
+                Parse::Incomplete => panic!("Incomplete with eof=true"),
+            }
+        }
+    }
+
+    fn assert_parsers_agree(bytes: &[u8]) {
+        assert_eq!(
+            blocking_steps(bytes),
+            buffered_steps(bytes),
+            "parsers diverge on {:?}",
+            String::from_utf8_lossy(bytes)
+        );
+    }
+
+    #[test]
+    fn buffer_parser_matches_blocking_parser_on_corpus() {
+        let long_line = [b'a'; MAX_LINE + 10];
+        let mut overlong_request = b"GET /".to_vec();
+        overlong_request.extend_from_slice(&long_line);
+        let mut overlong_header = b"GET /x HTTP/1.1\r\nX-Pad: ".to_vec();
+        overlong_header.extend_from_slice(&long_line);
+        let mut many_headers = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..120 {
+            many_headers.extend_from_slice(format!("H{i}: v\r\n").as_bytes());
+        }
+        many_headers.extend_from_slice(b"\r\n");
+        let corpus: Vec<Vec<u8>> = vec![
+            b"".to_vec(),
+            b"\r\n".to_vec(),
+            b"\r\n\r\nGET /y HTTP/1.1\r\n\r\n".to_vec(),
+            b"\r\n\r\n\r\n\r\nGET /z HTTP/1.1\r\n\r\n".to_vec(),
+            b"GET / HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            b"GET / HTTP/1.0\r\nConnection: Keep-Alive, TE\r\n\r\n".to_vec(),
+            b"GET / HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n".to_vec(),
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec(),
+            b"POST /x HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 31\r\n\r\n".to_vec(),
+            b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi".to_vec(),
+            b"POST /v1/workloads HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n2A\r\n".to_vec(),
+            b"POST /x HTTP/1.1\r\nContent-Length: abc\r\n\r\n".to_vec(),
+            b"POST /x HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n".to_vec(),
+            b"POST /x HTTP/1.1\r\nContent-Length: 3\r\n\r\nab".to_vec(),
+            b"GET\r\n\r\n".to_vec(),
+            b"GET /x FTP/1.0\r\n\r\n".to_vec(),
+            b"GET /x HTT".to_vec(),
+            b"GET /s?a=1&b=x+y HTTP/1.1\r\n\r\n".to_vec(),
+            b"get /lower http/1.1\r\n\r\n".to_vec(),
+            b"GET /x HTTP/1.1\r\nNoColonLine\r\nHost: y\r\n\r\n".to_vec(),
+            b"GET /x HTTP/1.1\r\nDup: a\r\nDup: b\r\n\r\n".to_vec(),
+            b"GET /x HTTP/1.1\r\nHost: x".to_vec(),
+            b"GET /x HTTP/1.1\r\nHost: x\r\n".to_vec(),
+            b"   \r\nGET /ws HTTP/1.1\r\n\r\n".to_vec(),
+            b"\xff\xfe nonsense".to_vec(),
+            b"GET /x HTTP/1.1\r\nBad: \xff\xfe\r\n\r\n".to_vec(),
+            overlong_request,
+            overlong_header,
+            many_headers,
+        ];
+        for bytes in &corpus {
+            assert_parsers_agree(bytes);
+        }
+    }
+
+    #[test]
+    fn buffer_parser_matches_blocking_parser_under_fuzz() {
+        // Splice random fragments together; whatever comes out, both
+        // parsers must classify it identically.
+        use crate::util::rng::Rng;
+        let fragments: &[&[u8]] = &[
+            b"GET ",
+            b"POST ",
+            b"/v1/workloads",
+            b"/x?q=1",
+            b" HTTP/1.1",
+            b" HTTP/1.0",
+            b"\r\n",
+            b"\n",
+            b"Content-Length: 2",
+            b"Content-Length: 5",
+            b"Connection: close",
+            b"Connection: keep-alive",
+            b"Transfer-Encoding: chunked",
+            b"Host: example",
+            b"hi",
+            b"hello",
+            b" ",
+            b":",
+            b"\xff",
+        ];
+        let mut rng = Rng::new(0x9A7C);
+        for _ in 0..400 {
+            let mut bytes = Vec::new();
+            for _ in 0..rng.index(12) {
+                bytes.extend_from_slice(rng.choose(fragments));
+            }
+            assert_parsers_agree(&bytes);
+        }
+    }
+
+    #[test]
+    fn buffer_parser_is_incremental_over_every_split_point() {
+        // For every prefix of a pipelined stream, the parser either asks
+        // for more bytes or yields exactly what the full buffer yields.
+        let bytes: &[u8] =
+            b"POST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /c HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let Parse::Done { request: full, consumed } = parse_request_bytes(bytes, false)
+        else {
+            panic!("full buffer must parse");
+        };
+        for cut in 0..bytes.len() {
+            match parse_request_bytes(&bytes[..cut], false) {
+                Parse::Incomplete => assert!(cut < consumed, "stuck at {cut}"),
+                Parse::Done { request, consumed: c } => {
+                    assert_eq!(c, consumed, "at {cut}");
+                    assert_eq!(request, full, "at {cut}");
+                }
+                other => panic!("unexpected {other:?} at cut {cut}"),
+            }
+        }
+        // And with eof=false an empty buffer just waits.
+        assert!(matches!(parse_request_bytes(b"", false), Parse::Incomplete));
     }
 
     // Socket-level coverage of the daemon's connection loop (keep-alive,

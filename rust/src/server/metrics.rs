@@ -23,7 +23,7 @@ use crate::obs::hist::{Counter, DeltaHist, Gauge, LatencyHist};
 /// label vocabulary of the HTTP families. Path parameters are collapsed
 /// (`/v1/workloads/{id}`), so label cardinality is fixed no matter how
 /// many workloads exist.
-pub const ROUTES: [(&str, &str); 12] = [
+pub const ROUTES: [(&str, &str); 13] = [
     ("GET", "/healthz"),
     ("GET", "/metrics"),
     ("POST", "/v1/workloads"),
@@ -36,6 +36,7 @@ pub const ROUTES: [(&str, &str); 12] = [
     ("GET", "/v1/healthz"),
     ("GET", "/v1/version"),
     ("POST", "/v1/maintenance/defrag"),
+    ("POST", "/v1/submit/batch"),
 ];
 
 /// Index of the catch-all route label (`other`): unknown paths, bad
@@ -68,6 +69,7 @@ pub fn route_index(method: &str, segments: &[&str]) -> usize {
         ("GET", ["v1", "healthz"]) => 9,
         ("GET", ["v1", "version"]) => 10,
         ("POST", ["v1", "maintenance", "defrag"]) => 11,
+        ("POST", ["v1", "submit", "batch"]) => 12,
         _ => ROUTE_OTHER,
     }
 }
@@ -149,8 +151,18 @@ impl ServerMetrics {
 /// time in index order (the same scatter-gather discipline as
 /// `/v1/stats`).
 pub fn render(shards: &ShardSet) -> String {
+    let mut out = String::new();
+    render_into(shards, &mut out);
+    out
+}
+
+/// [`render`], writing into a caller-owned buffer (cleared first). The
+/// `/metrics` handler keeps one scratch buffer per serving thread so
+/// steady-state scrapes reuse a warm allocation instead of growing a
+/// fresh multi-kilobyte `String` each time.
+pub fn render_into(shards: &ShardSet, out: &mut String) {
     let m = shards.metrics();
-    let mut e = Expo::new();
+    let mut e = Expo::with_buffer(std::mem::take(out));
 
     // --- HTTP plane. Responses BEFORE requests (see module docs). -------
     e.counter(
@@ -296,7 +308,7 @@ pub fn render(shards: &ShardSet) -> String {
         "Seconds since the daemon state was constructed.",
         &oneg(shards.uptime().as_secs_f64()),
     );
-    e.finish()
+    *out = e.finish();
 }
 
 #[cfg(test)]
@@ -319,6 +331,32 @@ mod tests {
         assert_eq!(route_index("GET", &["v1", "nope"]), ROUTE_OTHER);
         assert_eq!(route_index("PUT", &["v1", "workloads"]), ROUTE_OTHER);
         assert_eq!(route_index("GET", &[]), ROUTE_OTHER);
+    }
+
+    #[test]
+    fn render_into_reuses_the_buffer_and_matches_render() {
+        let shards = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            shards: 1,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        // Drop the wall-clock uptime sample before comparing.
+        let stable = |text: &str| {
+            text.lines()
+                .filter(|l| !l.starts_with("migsched_uptime_seconds "))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        let fresh = render(&shards);
+        let mut buf = String::from("stale content from a previous scrape");
+        render_into(&shards, &mut buf);
+        assert_eq!(stable(&fresh), stable(&buf));
+        // The reused buffer keeps its grown capacity for the next scrape.
+        let grown = buf.capacity();
+        render_into(&shards, &mut buf);
+        assert!(buf.capacity() >= grown);
     }
 
     #[test]

@@ -2,23 +2,40 @@
 //! that schedules live workload requests with any configured policy.
 //!
 //! The offline crate set has no async runtime, so the daemon is built on
-//! `std::net` + a fixed worker [`threadpool`]: an accept loop hands each
-//! connection to a worker, which parses HTTP/1.1 ([`http`]), dispatches to
-//! the JSON API ([`api`]), and synchronously serves the response.
+//! `std::net` with two dependency-free serve models
+//! ([`daemon::ServeModel`]):
+//!
+//! * **Reactor** (default on unix) — N event-loop threads ([`reactor`])
+//!   over a readiness [`poller`] (epoll on Linux, poll(2) elsewhere on
+//!   unix). Connections are non-blocking state machines multiplexed on
+//!   one thread each; the hot path parses in place from a reusable read
+//!   buffer and renders into a reusable write buffer, so a kept-alive
+//!   connection serves requests without per-request allocation.
+//! * **Threadpool** — the portable fallback: an accept loop hands each
+//!   connection to a fixed worker [`threadpool`], which blocks on it.
+//!
+//! Both models share the HTTP/1.1 grammar ([`http`], whose two parse
+//! entry points are pinned against each other differentially), the JSON
+//! API ([`api`]), and per-connection limits (keep-alive request cap,
+//! idle timeout — configurable via [`daemon::DaemonConfig`]).
 //!
 //! The fleet is partitioned into disjoint **shards** ([`shard`]): each
 //! shard owns a sub-cluster, its own scheduler + incremental frag index
 //! and its own mutex, and tenants are consistent-hash routed to shards —
 //! so the data plane on different tenants never contends on one lock.
 //! `shards = 1` (the default) is the original single-mutex daemon,
-//! response-identical byte for byte. `benches/daemon_burst.rs` measures
-//! the requests/sec across shard × worker configurations.
+//! response-identical byte for byte. `POST /v1/submit/batch` amortizes
+//! shard-lock acquisition over many decisions with placements
+//! bit-identical to sequential submits. `benches/daemon_burst.rs`
+//! measures requests/sec across serve-model × shard × batch
+//! configurations.
 //!
 //! Endpoints (see [`api`] for schemas):
 //!
 //! | method & path                 | purpose                                   |
 //! |-------------------------------|-------------------------------------------|
 //! | `POST /v1/workloads`          | submit a workload (profile, tenant, lease)|
+//! | `POST /v1/submit/batch`       | submit many under one shard-lock hold     |
 //! | `DELETE /v1/workloads/N`      | terminate + release                       |
 //! | `GET /v1/workloads/N`         | placement lookup                          |
 //! | `POST /v1/tick`               | advance the logical slot clock (leases)   |
@@ -26,7 +43,7 @@
 //! | `GET /v1/cluster`             | full occupancy snapshot                   |
 //! | `POST /v1/maintenance/defrag` | plan + apply migrations (per shard)       |
 //! | `GET /v1/healthz`             | liveness JSON (status, uptime, shards)    |
-//! | `GET /v1/version`             | crate version + enabled features          |
+//! | `GET /v1/version`             | version, features, serving configuration  |
 //! | `GET /metrics`                | Prometheus text exposition ([`metrics`])  |
 //! | `GET /healthz`                | liveness (legacy plain-text)              |
 
@@ -35,11 +52,15 @@ pub mod client;
 pub mod daemon;
 pub mod http;
 pub mod metrics;
+#[cfg(unix)]
+pub(crate) mod poller;
+#[cfg(unix)]
+pub mod reactor;
 pub mod shard;
 pub mod threadpool;
 
-pub use client::HttpClient;
-pub use daemon::{Daemon, DaemonConfig, DaemonDefrag, ServerHandle};
-pub use http::{Request, Response};
+pub use client::{HttpClient, HttpConn};
+pub use daemon::{ConnLimits, Daemon, DaemonConfig, DaemonDefrag, ServeModel, ServerHandle};
+pub use http::{Body, Request, Response};
 pub use shard::{Lease, Shard, ShardRouter, ShardSet, ShardState};
 pub use threadpool::ThreadPool;

@@ -1,0 +1,607 @@
+//! The event-loop serve model: N loops, each owning a [`Poller`] with the
+//! shared listener registered, multiplexing every accepted connection
+//! through a non-blocking state machine instead of pinning a thread per
+//! connection.
+//!
+//! # Architecture
+//!
+//! * **No accept thread, no waker pipe.** Each loop registers its own
+//!   clone of the (non-blocking) listener at token 0. Readiness is
+//!   level-triggered, so whichever loop wakes first accepts; the rest see
+//!   `WouldBlock` and move on. At daemon loop counts (≤ 16) the thundering
+//!   herd costs less than the cross-thread handoff it replaces. A new
+//!   connection lands on the loop that accepted it and never migrates.
+//! * **Connection state machine.** `Open` (reading requests, writing
+//!   responses, keep-alive) → `Closing` (final response queued, flush
+//!   then half-close) → `Draining` (discard whatever the peer pipelined
+//!   past the last response until EOF, a deadline, or a byte cap — closing
+//!   with unread bytes makes the kernel RST the connection, which can
+//!   destroy the final response before the client reads it).
+//! * **Allocation discipline.** Each connection carries reusable read and
+//!   write buffers. Requests are parsed in place by
+//!   [`parse_request_bytes`]; responses are rendered by
+//!   [`Response::render_into`] appending onto the write buffer, so a
+//!   kept-alive connection reaches a steady state with zero allocation
+//!   per request.
+//! * **Backpressure.** When a connection's unflushed response backlog
+//!   passes [`WRITE_HIGHWATER`], the loop stops reading (and parsing) for
+//!   that connection and narrows its interest to writability until the
+//!   backlog drains — a slow reader cannot balloon either buffer.
+//!
+//! The HTTP grammar, dispatch layer, metrics accounting (requests counted
+//! at dispatch, responses only after the bytes reach the socket — see
+//! [`super::metrics`]) and idle/keep-alive limits are shared with the
+//! threadpool model byte for byte; `rust/src/server/http.rs` pins the two
+//! request parsers against each other differentially.
+//!
+//! [`Response::render_into`]: super::http::Response::render_into
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::api;
+use super::daemon::{next_conn_id, ConnLimits, REQUEST_TIMEOUT};
+use super::http::{parse_request_bytes, Parse};
+use super::metrics;
+use super::poller::{Event, Poller, INTEREST_READ, INTEREST_WRITE};
+use super::shard::ShardSet;
+use crate::obs::log::RateLimited;
+
+/// Poller token of the shared listener; connections get `slot + 1`.
+const LISTENER_TOKEN: usize = 0;
+
+/// Upper bound on one poller wait. Deadlines usually wake the loop
+/// sooner; this caps how long a lost shutdown wake can linger.
+const WAIT_CAP: Duration = Duration::from_millis(250);
+
+/// Unflushed-response backlog at which a connection stops being read.
+const WRITE_HIGHWATER: usize = 64 * 1024;
+
+/// Wall-clock bound on the post-close drain of a connection.
+const DRAIN_WINDOW: Duration = Duration::from_millis(500);
+
+/// Byte bound on the post-close drain of a connection.
+const DRAIN_CAP: usize = 64 * 1024;
+
+/// Stack chunk size for socket reads.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Buffer capacity above which an emptied connection buffer is shrunk,
+/// so one oversized request doesn't pin memory for the connection's
+/// remaining lifetime.
+const SHRINK_ABOVE: usize = 512 * 1024;
+
+/// Spawn `loops` event-loop threads serving `listener` until `shutdown`
+/// is raised (each loop rechecks the flag at least every [`WAIT_CAP`];
+/// the daemon's wake connection makes that prompt).
+pub fn serve(
+    listener: TcpListener,
+    shards: Arc<ShardSet>,
+    shutdown: Arc<AtomicBool>,
+    loops: usize,
+) -> io::Result<Vec<JoinHandle<()>>> {
+    listener.set_nonblocking(true)?;
+    let mut handles = Vec::with_capacity(loops);
+    for i in 0..loops.max(1) {
+        let listener = listener.try_clone()?;
+        let shards = Arc::clone(&shards);
+        let shutdown = Arc::clone(&shutdown);
+        handles.push(std::thread::Builder::new().name(format!("migsched-loop-{i}")).spawn(
+            move || {
+                if let Err(e) = event_loop(listener, shards, shutdown) {
+                    crate::log_warn!("event loop {i} exited: {e}");
+                }
+            },
+        )?);
+    }
+    Ok(handles)
+}
+
+enum State {
+    /// Serving requests; keep-alive still possible.
+    Open,
+    /// Final response queued; flush, then half-close into `Draining`.
+    Closing,
+    /// Response flushed and write side shut; discarding peer bytes until
+    /// EOF, the drain deadline, or [`DRAIN_CAP`].
+    Draining,
+}
+
+struct Conn {
+    stream: TcpStream,
+    id: u64,
+    state: State,
+    /// Unparsed request bytes (reused across requests).
+    read_buf: Vec<u8>,
+    /// Rendered-but-unflushed response bytes (reused across requests).
+    write_buf: Vec<u8>,
+    /// Prefix of `write_buf` already written to the socket.
+    written: usize,
+    /// End offset in `write_buf` of each queued response, in order;
+    /// `responses_total` increments as `written` crosses each one.
+    pending: VecDeque<usize>,
+    served: usize,
+    /// Next timeout: first-request deadline at accept, idle deadline
+    /// between kept-alive requests, drain deadline while `Draining`.
+    deadline: Instant,
+    /// Peer sent EOF (their write side is closed).
+    read_closed: bool,
+    /// Interest mask currently registered with the poller.
+    interest: u8,
+    /// Bytes discarded so far while `Draining`.
+    drained: usize,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, id: u64) -> Self {
+        Self {
+            stream,
+            id,
+            state: State::Open,
+            read_buf: Vec::with_capacity(READ_CHUNK),
+            write_buf: Vec::with_capacity(4096),
+            written: 0,
+            pending: VecDeque::new(),
+            served: 0,
+            deadline: Instant::now() + REQUEST_TIMEOUT,
+            read_closed: false,
+            interest: INTEREST_READ,
+            drained: 0,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.write_buf.len() - self.written
+    }
+
+    fn desired_interest(&self) -> u8 {
+        match self.state {
+            State::Draining => INTEREST_READ,
+            // Only reaches interest selection with backlog > 0 (a fully
+            // flushed Closing connection transitions out in `drive`).
+            State::Closing => INTEREST_WRITE,
+            State::Open => {
+                if self.backlog() >= WRITE_HIGHWATER {
+                    INTEREST_WRITE
+                } else if self.backlog() > 0 {
+                    INTEREST_READ | INTEREST_WRITE
+                } else {
+                    INTEREST_READ
+                }
+            }
+        }
+    }
+}
+
+fn event_loop(
+    listener: TcpListener,
+    shards: Arc<ShardSet>,
+    shutdown: Arc<AtomicBool>,
+) -> io::Result<()> {
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, INTEREST_READ)?;
+    let limits = shards.limits();
+    // Connection slots: token = slot + 1. Freed slots are recycled, and a
+    // slot's events can only be stale for a connection closed while
+    // handling its own (sole) event in the same batch, so no generation
+    // counter is needed.
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut events: Vec<Event> = Vec::new();
+    loop {
+        let now = Instant::now();
+        let mut timeout = WAIT_CAP;
+        for c in conns.iter().flatten() {
+            timeout = timeout.min(c.deadline.saturating_duration_since(now));
+        }
+        poller.wait(&mut events, Some(timeout))?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut i = 0;
+        while i < events.len() {
+            let ev = events[i];
+            i += 1;
+            if ev.token == LISTENER_TOKEN {
+                accept_burst(&listener, &mut poller, &mut conns, &mut free, &shards);
+                continue;
+            }
+            let slot = ev.token - 1;
+            let Some(conn) = conns.get_mut(slot).and_then(Option::as_mut) else {
+                continue;
+            };
+            if !drive(conn, &shards, &limits, &shutdown, ev.readable) {
+                close_conn(&mut poller, &mut conns, &mut free, slot, &shards);
+                continue;
+            }
+            let conn = conns[slot].as_mut().expect("slot still live");
+            let want = conn.desired_interest();
+            if want != conn.interest {
+                let fd = conn.stream.as_raw_fd();
+                if poller.reregister(fd, ev.token, want).is_err() {
+                    close_conn(&mut poller, &mut conns, &mut free, slot, &shards);
+                } else {
+                    conn.interest = want;
+                }
+            }
+        }
+        // Deadline sweep: first-request timeout, keep-alive idle timeout
+        // and the drain window all live in `Conn::deadline`.
+        let now = Instant::now();
+        let mut slot = 0;
+        while slot < conns.len() {
+            if matches!(&conns[slot], Some(c) if now >= c.deadline) {
+                close_conn(&mut poller, &mut conns, &mut free, slot, &shards);
+            }
+            slot += 1;
+        }
+    }
+    // Shutdown: hard-close everything still open so the open-connection
+    // gauge balances. In-flight responses already flushed opportunistically
+    // on their last drive.
+    let mut slot = 0;
+    while slot < conns.len() {
+        close_conn(&mut poller, &mut conns, &mut free, slot, &shards);
+        slot += 1;
+    }
+    Ok(())
+}
+
+/// Accept until the (shared, level-triggered) listener runs dry.
+fn accept_burst(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    shards: &ShardSet,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // drop the connection; nothing to undo yet
+                }
+                let _ = stream.set_nodelay(true);
+                let m = shards.metrics();
+                m.connections_total.inc();
+                m.connections_open.inc();
+                let id = next_conn_id();
+                crate::log_debug!("conn={id} accepted from {peer}");
+                let slot = free.pop().unwrap_or_else(|| {
+                    conns.push(None);
+                    conns.len() - 1
+                });
+                let conn = Conn::new(stream, id);
+                if let Err(e) = poller.register(conn.stream.as_raw_fd(), slot + 1, INTEREST_READ) {
+                    crate::log_warn!("conn={id} register with poller: {e}");
+                    m.connections_open.dec();
+                    free.push(slot);
+                    continue;
+                }
+                conns[slot] = Some(conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                // A dying listener repeats the same error at poll speed;
+                // log once per window (mirrors the threadpool model).
+                static ACCEPT_WARN: RateLimited = RateLimited::new(Duration::from_secs(5));
+                let msg = format!("accept error: {e}");
+                match ACCEPT_WARN.should_log(&msg) {
+                    Some(0) => crate::log_warn!("{msg}"),
+                    Some(dropped) => {
+                        crate::log_warn!("{msg} ({dropped} identical warning(s) suppressed)")
+                    }
+                    None => {}
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn close_conn(
+    poller: &mut Poller,
+    conns: &mut [Option<Conn>],
+    free: &mut Vec<usize>,
+    slot: usize,
+    shards: &ShardSet,
+) {
+    if let Some(conn) = conns[slot].take() {
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        shards.metrics().connections_open.dec();
+        crate::log_debug!("conn={} closed after {} request(s)", conn.id, conn.served);
+        free.push(slot);
+    }
+}
+
+/// Advance one connection as far as current readiness allows: read, then
+/// alternate parse/dispatch/render and flush until no further progress.
+/// Returns `false` when the connection should be closed now.
+fn drive(
+    conn: &mut Conn,
+    shards: &ShardSet,
+    limits: &ConnLimits,
+    shutdown: &AtomicBool,
+    readable: bool,
+) -> bool {
+    if matches!(conn.state, State::Draining) {
+        return drain(conn, readable);
+    }
+
+    if readable && !conn.read_closed && matches!(conn.state, State::Open) {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.read_buf.extend_from_slice(&chunk[..n]);
+                    // Level-triggered readiness will re-report what the
+                    // kernel still holds; give backpressure a chance to
+                    // engage rather than inhaling without bound.
+                    if conn.read_buf.len() >= WRITE_HIGHWATER {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    crate::log_debug!("conn={} read: {e}", conn.id);
+                    return false;
+                }
+            }
+        }
+    }
+
+    // Alternate pump and flush: flushing can clear backpressure that
+    // pump deferred to, so loop until a pass handles no request.
+    loop {
+        let progressed = match pump(conn, shards, limits, shutdown) {
+            Ok(p) => p,
+            Err(()) => return false,
+        };
+        if flush(conn, shards).is_err() {
+            return false;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    if conn.backlog() == 0 && matches!(conn.state, State::Closing) {
+        // Final response fully delivered to the kernel: half-close and
+        // drain (see module docs on why closing with unread bytes loses
+        // the response), unless the peer already finished sending.
+        let _ = conn.stream.shutdown(Shutdown::Write);
+        if conn.read_closed {
+            return false;
+        }
+        conn.state = State::Draining;
+        conn.deadline = Instant::now() + DRAIN_WINDOW;
+        conn.read_buf.clear();
+    }
+    true
+}
+
+/// `Draining` turn: discard peer bytes. Returns `false` once the peer
+/// reaches EOF, errors, or overruns the byte cap.
+fn drain(conn: &mut Conn, readable: bool) -> bool {
+    if !readable {
+        return true;
+    }
+    let mut sink = [0u8; READ_CHUNK];
+    loop {
+        match conn.stream.read(&mut sink) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.drained += n;
+                if conn.drained > DRAIN_CAP {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Parse, dispatch and render every complete request currently buffered
+/// (pipelining), respecting write backpressure. `Ok(true)` if at least
+/// one request was handled; `Err(())` to close immediately.
+fn pump(
+    conn: &mut Conn,
+    shards: &ShardSet,
+    limits: &ConnLimits,
+    shutdown: &AtomicBool,
+) -> Result<bool, ()> {
+    let m = shards.metrics();
+    let mut progressed = false;
+    while matches!(conn.state, State::Open) && conn.backlog() < WRITE_HIGHWATER {
+        match parse_request_bytes(&conn.read_buf, conn.read_closed) {
+            Parse::Incomplete => break,
+            Parse::Eof => {
+                // Peer is done sending and owes us nothing: close as soon
+                // as everything queued has been flushed (immediately, if
+                // nothing is).
+                if conn.backlog() == 0 {
+                    return Err(());
+                }
+                conn.state = State::Closing;
+                break;
+            }
+            Parse::Done { request, consumed } => {
+                conn.read_buf.drain(..consumed);
+                let started = Instant::now();
+                conn.served += 1;
+                crate::log_debug!(
+                    "conn={} req={} {} {}",
+                    conn.id,
+                    conn.served,
+                    request.method,
+                    request.path
+                );
+                let keep = request.keep_alive
+                    && conn.served < limits.max_requests_per_conn
+                    && !shutdown.load(Ordering::SeqCst);
+                let response = api::dispatch(&request, shards);
+                // Counted before the response bytes are queued; together
+                // with responses_total counting after the socket write,
+                // any concurrent scrape sees requests >= responses.
+                let route = metrics::route_index(&request.method, &request.segments());
+                m.record_request(route, response.status, started.elapsed());
+                response.render_into(&mut conn.write_buf, keep);
+                conn.pending.push_back(conn.write_buf.len());
+                crate::log_debug!(
+                    "conn={} req={} -> {} ({} bytes, {:?})",
+                    conn.id,
+                    conn.served,
+                    response.status,
+                    response.body.len(),
+                    started.elapsed()
+                );
+                progressed = true;
+                if keep {
+                    conn.deadline = Instant::now() + limits.idle_timeout;
+                } else {
+                    conn.state = State::Closing;
+                }
+            }
+            Parse::Bad(response) => {
+                // Malformed input: answer and hang up; whatever follows
+                // in the buffer is unframeable. No parsed route or
+                // meaningful handling latency exists, so it counts
+                // against the catch-all route at zero elapsed.
+                m.record_request(metrics::ROUTE_OTHER, response.status, Duration::ZERO);
+                response.render_into(&mut conn.write_buf, false);
+                conn.pending.push_back(conn.write_buf.len());
+                conn.read_buf.clear();
+                conn.state = State::Closing;
+                progressed = true;
+            }
+        }
+    }
+    Ok(progressed)
+}
+
+/// Write as much of the response backlog as the socket accepts,
+/// crediting `responses_total` for each response fully handed to the
+/// kernel. `Err(())` on a dead socket.
+fn flush(conn: &mut Conn, shards: &ShardSet) -> Result<(), ()> {
+    if conn.backlog() == 0 {
+        return Ok(());
+    }
+    let m = shards.metrics();
+    loop {
+        match conn.stream.write(&conn.write_buf[conn.written..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => {
+                conn.written += n;
+                while conn.pending.front().is_some_and(|&end| conn.written >= end) {
+                    conn.pending.pop_front();
+                    m.responses_total.inc();
+                }
+                if conn.backlog() == 0 {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                crate::log_debug!("conn={} write response: {e}", conn.id);
+                return Err(());
+            }
+        }
+    }
+    if conn.backlog() == 0 {
+        conn.write_buf.clear();
+        conn.written = 0;
+        if conn.write_buf.capacity() > SHRINK_ABOVE {
+            conn.write_buf.shrink_to(WRITE_HIGHWATER);
+        }
+        if conn.read_buf.is_empty() && conn.read_buf.capacity() > SHRINK_ABOVE {
+            conn.read_buf.shrink_to(READ_CHUNK);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::daemon::{Daemon, DaemonConfig};
+
+    fn start(loops: usize) -> (std::net::SocketAddr, Arc<AtomicBool>, Vec<JoinHandle<()>>) {
+        let daemon = Daemon::new(DaemonConfig {
+            num_gpus: 4,
+            workers: loops,
+            ..DaemonConfig::default()
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handles = serve(listener, daemon.shards(), Arc::clone(&shutdown), loops).unwrap();
+        (addr, shutdown, handles)
+    }
+
+    fn stop(addr: std::net::SocketAddr, shutdown: Arc<AtomicBool>, handles: Vec<JoinHandle<()>>) {
+        shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn serves_pipelined_requests_and_honors_connection_close() {
+        let (addr, shutdown, handles) = start(2);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(
+                b"GET /v1/healthz HTTP/1.1\r\n\r\n\
+                  GET /v1/version HTTP/1.1\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert_eq!(out.matches("HTTP/1.1 200 OK").count(), 2, "{out}");
+        assert!(out.contains("\"status\":\"ok\""), "{out}");
+        assert!(out.contains("\"version\""), "{out}");
+        stop(addr, shutdown, handles);
+    }
+
+    #[test]
+    fn serves_a_request_arriving_one_byte_at_a_time() {
+        let (addr, shutdown, handles) = start(1);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        for b in b"GET /v1/healthz HTTP/1.1\r\nConnection: close\r\n\r\n" {
+            stream.write_all(&[*b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        stop(addr, shutdown, handles);
+    }
+
+    #[test]
+    fn malformed_request_gets_an_error_response_then_close() {
+        let (addr, shutdown, handles) = start(1);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"BROKEN\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400 Bad Request"), "{out}");
+        stop(addr, shutdown, handles);
+    }
+}

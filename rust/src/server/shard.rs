@@ -20,15 +20,16 @@
 //! single-mutex design and its responses are byte-for-byte unchanged.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::daemon::DaemonConfig;
+use super::daemon::{ConnLimits, DaemonConfig};
 use super::metrics::ServerMetrics;
 use crate::cluster::Cluster;
 use crate::defrag::{apply_plan, plan_defrag_budgeted, CostModel, MigrationPlan};
 use crate::frag::{FragScorer, ScoreTable};
 use crate::sched::Scheduler;
+use crate::util::json::Json;
 use crate::workload::{TenantId, WorkloadId};
 
 /// A lease attached to an allocated workload (logical-slot expiry).
@@ -142,6 +143,11 @@ pub struct ShardSet {
     /// lock-free, so it lives outside the shard mutexes.
     metrics: ServerMetrics,
     started: Instant,
+    /// Per-connection serving limits, shared by both serve models.
+    limits: ConnLimits,
+    /// `GET /v1/version` body, rendered once at construction — the
+    /// response is config-determined, so serving it is a refcount bump.
+    version_body: Arc<[u8]>,
 }
 
 impl ShardSet {
@@ -178,6 +184,21 @@ impl ShardSet {
             shards.push(Shard { index, gpu_offset: offset, state: Mutex::new(state) });
             offset += size;
         }
+        let mut features: Vec<Json> = Vec::new();
+        if cfg!(feature = "xla") {
+            features.push(Json::from("xla"));
+        }
+        let version_body: Arc<[u8]> = Json::obj()
+            .with("name", env!("CARGO_PKG_NAME"))
+            .with("version", env!("CARGO_PKG_VERSION"))
+            .with("features", Json::Arr(features))
+            .with("scheduler", config.scheduler.name())
+            .with("serve_model", config.model.effective().name())
+            .with("idle_timeout_ms", config.idle_timeout.as_millis() as u64)
+            .with("max_requests_per_conn", config.max_requests_per_conn as u64)
+            .to_string_compact()
+            .into_bytes()
+            .into();
         Self {
             shards,
             router: ShardRouter::new(config.shards),
@@ -185,12 +206,28 @@ impl ShardSet {
             scheduler_name: config.scheduler.name(),
             metrics: ServerMetrics::new(config.shards),
             started: Instant::now(),
+            limits: ConnLimits {
+                idle_timeout: config.idle_timeout,
+                max_requests_per_conn: config.max_requests_per_conn,
+            },
+            version_body,
         }
     }
 
     /// The daemon's metric registry.
     pub fn metrics(&self) -> &ServerMetrics {
         &self.metrics
+    }
+
+    /// Per-connection serving limits (config-determined, never change
+    /// while serving).
+    pub fn limits(&self) -> ConnLimits {
+        self.limits
+    }
+
+    /// The preserialized `GET /v1/version` body.
+    pub fn version_body(&self) -> Arc<[u8]> {
+        Arc::clone(&self.version_body)
     }
 
     /// Time since this state was constructed (serving uptime).

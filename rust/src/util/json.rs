@@ -126,8 +126,15 @@ impl Json {
     /// Compact single-line rendering.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out, None, 0);
+        self.write_compact_into(&mut out);
         out
+    }
+
+    /// Compact rendering appended into a caller-owned buffer, so hot
+    /// paths (the daemon's batch responses, reused per-connection
+    /// scratch) can serialize without a fresh `String` per value.
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, None, 0);
     }
 
     /// Pretty rendering with 2-space indentation.
@@ -523,6 +530,186 @@ impl fmt::Display for Json {
     }
 }
 
+// ----- zero-allocation flat-object scanning -----------------------------
+//
+// The daemon's submit hot path only ever reads a handful of scalar fields
+// out of a small flat object (`{"profile": "...", "tenant": 3, ...}`).
+// Building a full `Json` tree for that costs one allocation per key plus
+// the value vector; `scan_flat_object` walks the text once and hands out
+// borrowed scalars instead. It is deliberately *narrower* than
+// `Json::parse`: anything it is not certain about — nested containers,
+// escape sequences, duplicate keys, exotic numbers — makes it bail with
+// `false` so the caller can fall back to `Json::parse` and reproduce the
+// exact error message (or tolerant behavior) of the slow path.
+
+/// A borrowed scalar produced by [`scan_flat_object`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scalar<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    /// A string containing no escape sequences, borrowed verbatim.
+    Str(&'a str),
+}
+
+impl<'a> Scalar<'a> {
+    pub fn as_str(&self) -> Option<&'a str> {
+        match *self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Same domain as [`Json::as_u64`]: non-negative integral values.
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            Scalar::Num(n) if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 => {
+                Some(n as u64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Scan a *flat* JSON object (`{"key": scalar, ...}`) without allocating,
+/// calling `visit(key, value)` for each member in document order.
+///
+/// Returns `false` — with no guarantee about how many `visit` calls
+/// already happened — whenever the document is not a flat scalar object
+/// this scanner can prove well-formed. Callers MUST treat `false` as
+/// "fall back to [`Json::parse`] and discard anything visited", which
+/// keeps error messages and edge-case behavior byte-identical to the
+/// allocating path.
+pub fn scan_flat_object<'a>(src: &'a str, mut visit: impl FnMut(&'a str, Scalar<'a>)) -> bool {
+    let b = src.as_bytes();
+    let mut pos = 0usize;
+    scan_ws(b, &mut pos);
+    if b.get(pos).copied() != Some(b'{') {
+        return false;
+    }
+    pos += 1;
+    scan_ws(b, &mut pos);
+    let mut seen: crate::util::small::SmallVec<&str, 8> = crate::util::small::SmallVec::new();
+    if b.get(pos).copied() == Some(b'}') {
+        pos += 1;
+    } else {
+        loop {
+            scan_ws(b, &mut pos);
+            let Some(key) = scan_simple_string(src, &mut pos) else {
+                return false;
+            };
+            // `Json::parse` rejects duplicate keys with a positioned
+            // error; let it do so.
+            if seen.iter().any(|&k| k == key) {
+                return false;
+            }
+            seen.push(key);
+            scan_ws(b, &mut pos);
+            if b.get(pos).copied() != Some(b':') {
+                return false;
+            }
+            pos += 1;
+            scan_ws(b, &mut pos);
+            let Some(value) = scan_scalar(src, &mut pos) else {
+                return false;
+            };
+            visit(key, value);
+            scan_ws(b, &mut pos);
+            match b.get(pos).copied() {
+                Some(b',') => pos += 1,
+                Some(b'}') => {
+                    pos += 1;
+                    break;
+                }
+                _ => return false,
+            }
+        }
+    }
+    scan_ws(b, &mut pos);
+    pos == b.len()
+}
+
+fn scan_ws(b: &[u8], pos: &mut usize) {
+    while matches!(b.get(*pos).copied(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        *pos += 1;
+    }
+}
+
+/// An escape-free string token; boundaries are the quote bytes, so the
+/// borrowed slice is always on char boundaries.
+fn scan_simple_string<'a>(src: &'a str, pos: &mut usize) -> Option<&'a str> {
+    let b = src.as_bytes();
+    if b.get(*pos).copied() != Some(b'"') {
+        return None;
+    }
+    let start = *pos + 1;
+    let mut i = start;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                *pos = i + 1;
+                return Some(&src[start..i]);
+            }
+            // Escapes and raw control bytes go to the full parser.
+            b'\\' => return None,
+            c if c < 0x20 => return None,
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+fn scan_scalar<'a>(src: &'a str, pos: &mut usize) -> Option<Scalar<'a>> {
+    let b = src.as_bytes();
+    match b.get(*pos).copied()? {
+        b'"' => scan_simple_string(src, pos).map(Scalar::Str),
+        b'n' => scan_lit(b, pos, "null").then_some(Scalar::Null),
+        b't' => scan_lit(b, pos, "true").then_some(Scalar::Bool(true)),
+        b'f' => scan_lit(b, pos, "false").then_some(Scalar::Bool(false)),
+        b'-' | b'0'..=b'9' => scan_simple_int(b, pos),
+        _ => None,
+    }
+}
+
+fn scan_lit(b: &[u8], pos: &mut usize, lit: &str) -> bool {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        true
+    } else {
+        false
+    }
+}
+
+/// Plain decimal integers only; fractions, exponents, leading zeros and
+/// anything that might overflow go to the full parser. The `u64 → f64`
+/// cast rounds to nearest like `str::parse::<f64>`, so accepted values
+/// match `Json::parse` bit-for-bit.
+fn scan_simple_int(b: &[u8], pos: &mut usize) -> Option<Scalar<'static>> {
+    let mut i = *pos;
+    let neg = b[i] == b'-';
+    if neg {
+        i += 1;
+    }
+    let start = i;
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    let digits = &b[start..i];
+    if digits.is_empty() || (digits.len() > 1 && digits[0] == b'0') {
+        return None;
+    }
+    if matches!(b.get(i).copied(), Some(b'.') | Some(b'e') | Some(b'E')) {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &d in digits {
+        v = v.checked_mul(10)?.checked_add(u64::from(d - b'0'))?;
+    }
+    *pos = i;
+    let n = v as f64;
+    Some(Scalar::Num(if neg { -n } else { n }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -635,5 +822,116 @@ mod tests {
                 obj
             }
         }
+    }
+
+    /// Run the scanner, collecting visits; `None` means it bailed.
+    fn scan(src: &str) -> Option<Vec<(String, String)>> {
+        let mut out = Vec::new();
+        scan_flat_object(src, |k, v| out.push((k.to_string(), format!("{v:?}"))))
+            .then_some(out)
+    }
+
+    #[test]
+    fn scanner_accepts_flat_scalar_objects() {
+        let got = scan(r#"{"profile": "1g.10gb", "tenant": 7, "on": true, "x": null}"#)
+            .unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("profile".into(), "Str(\"1g.10gb\")".into()),
+                ("tenant".into(), "Num(7.0)".into()),
+                ("on".into(), "Bool(true)".into()),
+                ("x".into(), "Null".into()),
+            ]
+        );
+        assert_eq!(scan("{}").unwrap(), vec![]);
+        assert_eq!(scan(" { } ").unwrap(), vec![]);
+        assert_eq!(scan(r#"{"n":-42}"#).unwrap(), vec![("n".into(), "Num(-42.0)".into())]);
+    }
+
+    #[test]
+    fn scanner_bails_to_the_full_parser_on_anything_unusual() {
+        // Every bail case must be something Json::parse either also
+        // rejects or handles with behavior the fast path can't mirror
+        // cheaply — nested values, escapes, floats, duplicates, junk.
+        for src in [
+            r#"{"a": [1]}"#,
+            r#"{"a": {"b": 1}}"#,
+            r#"{"a": "e\nsc"}"#,
+            r#"{"a": 1.5}"#,
+            r#"{"a": 1e3}"#,
+            r#"{"a": 007}"#,
+            r#"{"a": 1, "a": 2}"#,
+            r#"{"a": 1} trailing"#,
+            r#"{"a" 1}"#,
+            r#"{"a": }"#,
+            r#"[1, 2]"#,
+            r#"{"a": 99999999999999999999999999}"#,
+            "",
+        ] {
+            assert!(scan(src).is_none(), "scanner should bail on {src:?}");
+        }
+    }
+
+    #[test]
+    fn scanner_matches_json_parse_on_accepted_documents() {
+        // Whenever the scanner accepts, Json::parse must agree on both
+        // acceptance and content (the fast path may only be narrower).
+        use crate::util::rng::Rng;
+        let keys = ["profile", "tenant", "duration_slots", "k", "très"];
+        let mut rng = Rng::new(4242);
+        for _ in 0..300 {
+            let n = rng.index(4);
+            let mut obj = Json::obj();
+            for i in 0..n {
+                let key = format!("{}{i}", rng.choose(&keys));
+                let val = match rng.index(4) {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.chance(0.5)),
+                    2 => Json::Num(rng.below(1 << 50) as f64),
+                    _ => Json::Str(format!("s{}", rng.below(1000))),
+                };
+                obj.set(&key, val);
+            }
+            let src = obj.to_string_compact();
+            let mut visited = Vec::new();
+            assert!(
+                scan_flat_object(&src, |k, v| visited.push((k.to_string(), v))),
+                "scanner rejected canonical flat object {src}"
+            );
+            let parsed = Json::parse(&src).unwrap();
+            let Json::Obj(pairs) = parsed else { panic!("not an object: {src}") };
+            assert_eq!(visited.len(), pairs.len(), "{src}");
+            for ((sk, sv), (pk, pv)) in visited.iter().zip(&pairs) {
+                assert_eq!(sk, pk, "{src}");
+                match (sv, pv) {
+                    (Scalar::Null, Json::Null) => {}
+                    (Scalar::Bool(a), Json::Bool(b)) => assert_eq!(a, b, "{src}"),
+                    (Scalar::Num(a), Json::Num(b)) => assert_eq!(a, b, "{src}"),
+                    (Scalar::Str(a), Json::Str(b)) => assert_eq!(a, b, "{src}"),
+                    (s, p) => panic!("scanner {s:?} vs parser {p:?} in {src}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_accessors_mirror_json_accessors() {
+        assert_eq!(Scalar::Str("x").as_str(), Some("x"));
+        assert_eq!(Scalar::Num(3.0).as_str(), None);
+        assert_eq!(Scalar::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Scalar::Num(-1.0).as_u64(), None);
+        assert_eq!(Scalar::Null.as_u64(), None);
+        assert_eq!(
+            Json::parse("3").unwrap().as_u64(),
+            Scalar::Num(3.0).as_u64()
+        );
+    }
+
+    #[test]
+    fn write_compact_into_appends_to_the_buffer() {
+        let mut buf = String::from("prefix:");
+        Json::obj().with("a", 1u64).write_compact_into(&mut buf);
+        assert_eq!(buf, r#"prefix:{"a":1}"#);
     }
 }

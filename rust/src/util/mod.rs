@@ -21,12 +21,15 @@
 //!   by the `harness = false` bench binaries.
 //! * [`check`] — a property-based testing mini-harness (proptest replacement)
 //!   with seeded case generation and failure reporting.
+//! * [`small`] — an inline-first vector (smallvec replacement) keeping the
+//!   daemon's short per-request collections off the heap.
 
 pub mod bench;
 pub mod check;
 pub mod csv;
 pub mod json;
 pub mod rng;
+pub mod small;
 pub mod stats;
 pub mod table;
 

@@ -1,0 +1,186 @@
+//! A tiny inline-first vector used on the daemon's request hot path to
+//! keep short, bounded collections — path segments, scanned JSON field
+//! spans — off the heap.
+//!
+//! Deliberately minimal and `unsafe`-free: elements live in an inline
+//! `[T; N]` until the capacity overflows, at which point everything
+//! spills to an ordinary `Vec`. Requiring `T: Copy + Default` keeps the
+//! inline array initializable without `MaybeUninit`; the types stored
+//! here (string slices, span tuples) all qualify.
+
+use std::fmt;
+use std::ops::Deref;
+
+/// A vector with `N` inline slots that spills to the heap past that.
+///
+/// Invariant: when `heap` is empty the live elements are
+/// `inline[..len]`; after a spill they are all in `heap` and `len`
+/// mirrors `heap.len()`.
+#[derive(Clone)]
+pub struct SmallVec<T: Copy + Default, const N: usize> {
+    inline: [T; N],
+    len: usize,
+    heap: Vec<T>,
+}
+
+impl<T: Copy + Default, const N: usize> SmallVec<T, N> {
+    pub fn new() -> Self {
+        Self { inline: [T::default(); N], len: 0, heap: Vec::new() }
+    }
+
+    pub fn push(&mut self, value: T) {
+        if self.heap.is_empty() && self.len < N {
+            self.inline[self.len] = value;
+            self.len += 1;
+            return;
+        }
+        if self.heap.is_empty() {
+            // Spill: move the inline prefix over, then append.
+            self.heap.reserve(N * 2);
+            self.heap.extend_from_slice(&self.inline[..self.len]);
+        }
+        self.heap.push(value);
+        self.len = self.heap.len();
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the elements still fit in the inline slots (no heap
+    /// allocation has happened).
+    pub fn is_inline(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        if self.heap.is_empty() {
+            &self.inline[..self.len]
+        } else {
+            &self.heap
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.heap.clear();
+    }
+}
+
+impl<T: Copy + Default, const N: usize> Default for SmallVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> Deref for SmallVec<T, N> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy + Default + fmt::Debug, const N: usize> fmt::Debug for SmallVec<T, N> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl<T: Copy + Default + PartialEq, const N: usize> PartialEq for SmallVec<T, N> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + Default + Eq, const N: usize> Eq for SmallVec<T, N> {}
+
+impl<'a, T: Copy + Default, const N: usize> IntoIterator for &'a SmallVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> FromIterator<T> for SmallVec<T, N> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        let mut v = Self::new();
+        for item in iter {
+            v.push(item);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_inline_up_to_capacity() {
+        let mut v: SmallVec<u32, 4> = SmallVec::new();
+        assert!(v.is_empty());
+        for i in 0..4 {
+            v.push(i);
+        }
+        assert!(v.is_inline());
+        assert_eq!(v.as_slice(), &[0, 1, 2, 3]);
+        assert_eq!(v.len(), 4);
+    }
+
+    #[test]
+    fn spills_to_heap_past_capacity_preserving_order() {
+        let mut v: SmallVec<u32, 4> = SmallVec::new();
+        for i in 0..10 {
+            v.push(i);
+        }
+        assert!(!v.is_inline());
+        assert_eq!(v.as_slice(), &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(v.len(), 10);
+        // Keeps growing on the heap once spilled.
+        v.push(10);
+        assert_eq!(v.len(), 11);
+        assert_eq!(v[10], 10);
+    }
+
+    #[test]
+    fn deref_and_iteration_work_in_both_modes() {
+        let small: SmallVec<u32, 8> = (0..3).collect();
+        let big: SmallVec<u32, 2> = (0..5).collect();
+        assert_eq!(small.iter().sum::<u32>(), 3);
+        assert_eq!(big.iter().sum::<u32>(), 10);
+        assert_eq!(&small[1..], &[1, 2]);
+    }
+
+    #[test]
+    fn clear_resets_both_modes() {
+        let mut v: SmallVec<u32, 2> = (0..5).collect();
+        v.clear();
+        assert!(v.is_empty());
+        v.push(7);
+        assert_eq!(v.as_slice(), &[7]);
+    }
+
+    #[test]
+    fn equality_ignores_storage_mode() {
+        let a: SmallVec<u32, 8> = (0..3).collect();
+        let mut b: SmallVec<u32, 2> = (0..3).collect();
+        assert_eq!(a.as_slice(), b.as_slice());
+        b.push(3);
+        assert_ne!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn str_slices_work_as_elements() {
+        let mut v: SmallVec<&str, 4> = SmallVec::new();
+        v.push("v1");
+        v.push("workloads");
+        assert_eq!(v.as_slice(), &["v1", "workloads"]);
+    }
+}

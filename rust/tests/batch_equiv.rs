@@ -1,0 +1,175 @@
+//! Property test: `POST /v1/submit/batch` is **bit-identical** to issuing
+//! the same submits sequentially through `POST /v1/workloads`.
+//!
+//! Two shard sets are built from the same configuration and driven with
+//! the same randomized operation stream — one receives each round's
+//! submits as a single batch, the other as N sequential requests, with
+//! ticks and releases interleaved identically. After every round the
+//! per-item batch results must equal the sequential response bodies byte
+//! for byte, and at the end `/v1/stats`, `/v1/cluster` and the
+//! deterministic `/metrics` families must agree exactly. This pins the
+//! batch endpoint's amortized one-lock-per-shard walk to the same
+//! placements, counters and tie-breaking as the plain path across shard
+//! counts 1, 4 and 16.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use migsched::prelude::*;
+use migsched::server::api::dispatch;
+use migsched::server::{Daemon, DaemonConfig, Request, Response, ShardSet};
+use migsched::util::json::Json;
+
+const PROFILES: &[&str] = &["1g.10gb", "2g.20gb", "3g.40gb", "4g.40gb", "7g.80gb"];
+
+fn shard_set(shards: usize) -> Arc<ShardSet> {
+    Daemon::new(DaemonConfig {
+        num_gpus: 32,
+        shards,
+        workers: 1,
+        scheduler: SchedulerKind::MfiIdx,
+        ..DaemonConfig::default()
+    })
+    .shards()
+}
+
+fn req(method: &str, path: &str, body: String) -> Request {
+    Request {
+        method: method.into(),
+        path: path.into(),
+        query: HashMap::new(),
+        headers: Vec::new(),
+        body: body.into_bytes(),
+        keep_alive: false,
+    }
+}
+
+fn body_str(r: &Response) -> String {
+    String::from_utf8(r.body.to_vec()).expect("utf-8 response body")
+}
+
+/// One random submit request. Occasionally malformed (missing or unknown
+/// profile) so error bodies are pinned through the batch path too.
+fn random_submit(rng: &mut Rng) -> Json {
+    if rng.chance(0.04) {
+        return Json::obj().with("tenant", rng.below(50));
+    }
+    if rng.chance(0.04) {
+        return Json::obj().with("profile", "9g.90gb");
+    }
+    let mut item = Json::obj().with("profile", *rng.choose(PROFILES));
+    if rng.chance(0.8) {
+        item.set("tenant", rng.below(50));
+    }
+    if rng.chance(0.5) {
+        item.set("duration_slots", rng.range_inclusive(1, 20));
+    }
+    item
+}
+
+/// The `/metrics` lines that must match exactly between the two sets:
+/// everything except uptime and the wall-clock-valued decision-latency
+/// lines (their `_count` IS deterministic and stays in).
+fn deterministic_metrics(text: &str) -> String {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter(|l| !l.starts_with("migsched_uptime_seconds"))
+        .filter(|l| {
+            !l.starts_with("migsched_sched_decision_seconds")
+                || l.starts_with("migsched_sched_decision_seconds_count")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Drive one randomized episode on a given shard count and seed.
+fn run_case(shards: usize, seed: u64) {
+    let batched = shard_set(shards);
+    let sequential = shard_set(shards);
+    let mut rng = Rng::new(seed);
+    let mut live_ids: Vec<u64> = Vec::new();
+
+    for round in 0..10 {
+        let items: Vec<Json> =
+            (0..rng.range_inclusive(1, 8)).map(|_| random_submit(&mut rng)).collect();
+
+        // Batch path on set A.
+        let batch_body = Json::obj().with("requests", Json::Arr(items.clone())).to_string_compact();
+        let br = dispatch(&req("POST", "/v1/submit/batch", batch_body), &batched);
+        assert_eq!(br.status, 200, "case shards={shards} seed={seed}: {}", body_str(&br));
+        let envelope = Json::parse(&body_str(&br)).expect("batch envelope JSON");
+        let results = envelope.get("results").and_then(Json::as_arr).expect("results array");
+        assert_eq!(results.len(), items.len());
+
+        // Sequential path on set B, comparing item by item.
+        let mut accepted = 0u64;
+        for (i, item) in items.iter().enumerate() {
+            let sr = dispatch(&req("POST", "/v1/workloads", item.to_string_compact()), &sequential);
+            if sr.status == 201 {
+                accepted += 1;
+                let id = Json::parse(&body_str(&sr)).unwrap().req_u64("id").unwrap();
+                live_ids.push(id);
+            }
+            assert_eq!(
+                results[i].to_string_compact(),
+                body_str(&sr),
+                "shards={shards} seed={seed} round={round} item={i}: batch result \
+                 diverged from the sequential response for {}",
+                item.to_string_compact()
+            );
+        }
+        assert_eq!(
+            envelope.req_u64("accepted").unwrap(),
+            accepted,
+            "shards={shards} seed={seed} round={round}: accepted count"
+        );
+        assert_eq!(
+            envelope.req_u64("rejected").unwrap(),
+            items.len() as u64 - accepted,
+            "shards={shards} seed={seed} round={round}: rejected count"
+        );
+
+        // Interleave identical releases and clock ticks on both sets.
+        if !live_ids.is_empty() && rng.chance(0.5) {
+            let id = live_ids.swap_remove(rng.index(live_ids.len()));
+            let path = format!("/v1/workloads/{id}");
+            let ra = dispatch(&req("DELETE", &path, String::new()), &batched);
+            let rb = dispatch(&req("DELETE", &path, String::new()), &sequential);
+            assert_eq!(ra.status, rb.status, "release status for id {id}");
+            assert_eq!(body_str(&ra), body_str(&rb), "release body for id {id}");
+        }
+        if rng.chance(0.4) {
+            let body = Json::obj().with("slots", rng.range_inclusive(1, 5)).to_string_compact();
+            let ra = dispatch(&req("POST", "/v1/tick", body.clone()), &batched);
+            let rb = dispatch(&req("POST", "/v1/tick", body), &sequential);
+            assert_eq!(body_str(&ra), body_str(&rb), "tick body");
+        }
+    }
+
+    // Whole-cluster state must agree, not just per-response bodies.
+    for path in ["/v1/stats", "/v1/cluster"] {
+        let ra = dispatch(&req("GET", path, String::new()), &batched);
+        let rb = dispatch(&req("GET", path, String::new()), &sequential);
+        assert_eq!(
+            body_str(&ra),
+            body_str(&rb),
+            "shards={shards} seed={seed}: {path} diverged"
+        );
+    }
+    let ma = dispatch(&req("GET", "/metrics", String::new()), &batched);
+    let mb = dispatch(&req("GET", "/metrics", String::new()), &sequential);
+    assert_eq!(
+        deterministic_metrics(&body_str(&ma)),
+        deterministic_metrics(&body_str(&mb)),
+        "shards={shards} seed={seed}: deterministic metrics families diverged"
+    );
+}
+
+#[test]
+fn batch_equals_sequential_across_shard_counts() {
+    for &shards in &[1usize, 4, 16] {
+        for seed in 0..12u64 {
+            run_case(shards, seed);
+        }
+    }
+}

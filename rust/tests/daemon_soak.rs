@@ -16,7 +16,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use migsched::server::{Daemon, DaemonConfig, HttpClient};
+use migsched::server::{Daemon, DaemonConfig, HttpClient, ServeModel};
 use migsched::util::json::Json;
 
 /// Pull one value out of an exposition: the sum over all samples of
@@ -104,12 +104,24 @@ fn check_snapshot(text: &str) {
 
 #[test]
 fn multi_shard_soak_conserves_counters_and_drains() {
+    soak(ServeModel::default());
+}
+
+#[test]
+fn multi_shard_soak_on_the_threadpool_model() {
+    // The blocking fallback must satisfy the same invariants under the
+    // same concurrent load as the default event-loop model.
+    soak(ServeModel::Threadpool);
+}
+
+fn soak(model: ServeModel) {
     let n_threads: usize = 6;
     let per_thread: usize = 40;
     let daemon = Daemon::new(DaemonConfig {
         num_gpus: 12,
         workers: 8,
         shards: 4,
+        model,
         ..DaemonConfig::default()
     });
     let handle = daemon.serve("127.0.0.1:0").expect("bind");

@@ -461,3 +461,179 @@ fn defrag_endpoint_repairs_fragmentation_and_rehosts_rejected_profile() {
     }
     handle.shutdown();
 }
+
+#[test]
+fn batch_submit_over_the_wire_on_both_models() {
+    use migsched::server::ServeModel;
+    for model in [ServeModel::Reactor.effective(), ServeModel::Threadpool] {
+        let daemon = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            workers: 2,
+            model,
+            ..DaemonConfig::default()
+        });
+        let handle = daemon.serve("127.0.0.1:0").expect("bind");
+        let client = HttpClient::new(&handle.addr().to_string());
+        // Two full-GPU placements fill the fleet; the third item rejects.
+        let batch = Json::obj().with(
+            "requests",
+            Json::Arr(vec![
+                Json::obj().with("profile", "7g.80gb").with("tenant", 1u64),
+                Json::obj().with("profile", "7g.80gb").with("tenant", 2u64),
+                Json::obj().with("profile", "1g.10gb").with("tenant", 3u64),
+            ]),
+        );
+        let r = client.post_json("/v1/submit/batch", &batch).unwrap();
+        assert_eq!(r.status, 200, "[{}] {}", model.name(), r.body);
+        let j = r.json().unwrap();
+        assert_eq!(j.req_u64("accepted").unwrap(), 2, "[{}]", model.name());
+        assert_eq!(j.req_u64("rejected").unwrap(), 1, "[{}]", model.name());
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results[0].req_u64("id").is_ok(), "placed item has an id");
+        assert_eq!(results[2].get("rejected").unwrap().as_bool(), Some(true));
+        // The amortized path feeds the same counters as plain submits.
+        let stats = client.get("/v1/stats").unwrap().json().unwrap();
+        assert_eq!(stats.req_u64("arrived_total").unwrap(), 3, "[{}]", model.name());
+        assert_eq!(stats.req_u64("accepted_total").unwrap(), 2, "[{}]", model.name());
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn version_reports_the_serving_configuration() {
+    use migsched::server::ServeModel;
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 1,
+        workers: 1,
+        model: ServeModel::Threadpool,
+        idle_timeout: std::time::Duration::from_millis(1234),
+        max_requests_per_conn: 5,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let client = HttpClient::new(&handle.addr().to_string());
+    let v = client.get("/v1/version").unwrap().json().unwrap();
+    assert_eq!(v.req_str("serve_model").unwrap(), "threadpool");
+    assert_eq!(v.req_u64("idle_timeout_ms").unwrap(), 1234);
+    assert_eq!(v.req_u64("max_requests_per_conn").unwrap(), 5);
+    handle.shutdown();
+}
+
+#[test]
+fn configured_request_cap_bounds_a_connection() {
+    // A cap of 2 must answer exactly 2 of 4 pipelined requests, closing
+    // on the second — on both serve models.
+    use migsched::server::ServeModel;
+    for model in [ServeModel::Reactor.effective(), ServeModel::Threadpool] {
+        let daemon = Daemon::new(DaemonConfig {
+            num_gpus: 1,
+            workers: 1,
+            model,
+            max_requests_per_conn: 2,
+            ..DaemonConfig::default()
+        });
+        let handle = daemon.serve("127.0.0.1:0").expect("bind");
+        let addr = handle.addr().to_string();
+        let pipeline = "GET /healthz HTTP/1.1\r\n\r\n".repeat(4);
+        let reply = raw_request(&addr, pipeline.as_bytes());
+        assert_eq!(
+            reply.matches("HTTP/1.1 200 OK").count(),
+            2,
+            "[{}] configured cap must bound the connection: {reply}",
+            model.name()
+        );
+        assert_eq!(reply.matches("Connection: close").count(), 1, "[{}]", model.name());
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn configured_idle_timeout_closes_idle_connections() {
+    // After one kept-alive response the server must hang up on its own
+    // once the (shortened) idle timeout elapses; the read below would
+    // instead fail with a 10 s client-side timeout if it never did.
+    use migsched::server::ServeModel;
+    for model in [ServeModel::Reactor.effective(), ServeModel::Threadpool] {
+        let daemon = Daemon::new(DaemonConfig {
+            num_gpus: 1,
+            workers: 1,
+            model,
+            idle_timeout: std::time::Duration::from_millis(250),
+            ..DaemonConfig::default()
+        });
+        let handle = daemon.serve("127.0.0.1:0").expect("bind");
+        let addr = handle.addr().to_string();
+        let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        // Deliberately NO half-close: the connection stays open and idle.
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::new();
+        stream
+            .read_to_end(&mut out)
+            .expect("server closes the idle connection before the client timeout");
+        let reply = String::from_utf8_lossy(&out);
+        assert!(reply.starts_with("HTTP/1.1 200 OK"), "[{}] {reply}", model.name());
+        assert!(reply.contains("Connection: keep-alive"), "[{}] {reply}", model.name());
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(9),
+            "[{}] connection closed by idle timeout, not client timeout",
+            model.name()
+        );
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn threadpool_model_still_serves_pipelined_and_stateful_requests() {
+    // The blocking fallback stays a first-class citizen: pipelining,
+    // strict ordering and the submit/release cycle all work.
+    use migsched::server::ServeModel;
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 2,
+        workers: 2,
+        model: ServeModel::Threadpool,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    let pipeline = "GET /healthz HTTP/1.1\r\n\r\n".repeat(3);
+    let reply = raw_request(&addr, pipeline.as_bytes());
+    assert_eq!(reply.matches("HTTP/1.1 200 OK").count(), 3, "{reply}");
+
+    let client = HttpClient::new(&addr);
+    let r = client
+        .post_json("/v1/workloads", &Json::obj().with("profile", "3g.40gb").with("tenant", 4u64))
+        .unwrap();
+    assert_eq!(r.status, 201, "{}", r.body);
+    let id = r.json().unwrap().req_u64("id").unwrap();
+    assert_eq!(client.delete(&format!("/v1/workloads/{id}")).unwrap().status, 200);
+    handle.shutdown();
+}
+
+#[test]
+fn persistent_client_reuses_one_connection_and_recovers_from_caps() {
+    use migsched::server::HttpConn;
+    // More requests than the per-connection cap: HttpConn must ride the
+    // keep-alive connection to the cap, then transparently reconnect.
+    let daemon = Daemon::new(DaemonConfig {
+        num_gpus: 1,
+        workers: 1,
+        max_requests_per_conn: 3,
+        ..DaemonConfig::default()
+    });
+    let handle = daemon.serve("127.0.0.1:0").expect("bind");
+    let mut conn = HttpConn::connect(&handle.addr().to_string());
+    for i in 0..10 {
+        let r = conn.get("/healthz").unwrap();
+        assert_eq!(r.status, 200, "request {i}");
+        assert_eq!(r.body, "ok\n", "request {i}");
+    }
+    let stats = conn.get("/v1/stats").unwrap();
+    assert_eq!(stats.status, 200);
+    handle.shutdown();
+}
