@@ -41,6 +41,15 @@ SENTINEL = 1000000000  # == ref.INFEASIBLE as an exact integer
 # table, so the index's bucket bounds are held to the python oracle.
 RESTRICTED = ("3g.40gb", "1g.10gb")
 
+# Additional profile-subset combos exported under the ``subsets`` key.
+# Scores weight candidates in *slice* units, so the same tables pin every
+# hardware model sharing the 8-slice geometry (A100-80GB, A100-40GB,
+# H100) — the rust side checks them against more than one model.
+SUBSETS = (
+    ("7g.80gb", "2g.20gb", "1g.10gb"),
+    ("4g.40gb", "1g.20gb"),
+)
+
 
 def delta_table(deltas_f, feasible_f):
     deltas_f = np.asarray(deltas_f)
@@ -62,11 +71,38 @@ def main() -> None:
     _, deltas_f, feasible_f = ref.frag_program(occ, "partial")
     deltas, feasible = delta_table(deltas_f, feasible_f)
 
+    # Any-rule ΔF: same candidate windows, so feasibility is identical to
+    # the partial rule — asserted rather than exported twice.
+    _, adeltas_f, afeasible_f = ref.frag_program(occ, "any")
+    assert np.array_equal(
+        np.asarray(afeasible_f) > 0.5, np.asarray(feasible_f) > 0.5
+    ), "feasibility must be overlap-rule independent"
+    deltas_any, _ = delta_table(adeltas_f, afeasible_f)
+
     scores_restricted = (
         np.asarray(ref.frag_scores(occ, "partial", RESTRICTED)).astype(int).tolist()
     )
     _, rdeltas_f, rfeasible_f = ref.frag_program(occ, "partial", RESTRICTED)
     deltas_restricted, feasible_restricted = delta_table(rdeltas_f, rfeasible_f)
+
+    subsets = []
+    for profiles in SUBSETS:
+        scores_s = np.asarray(ref.frag_scores(occ, "partial", profiles)).astype(int).tolist()
+        _, sdeltas_f, sfeasible_f = ref.frag_program(occ, "partial", profiles)
+        sdeltas, sfeasible = delta_table(sdeltas_f, sfeasible_f)
+        assert scores_s[0x00] == 0 and scores_s[0xFF] == 0
+        assert all(s <= f for s, f in zip(scores_s, scores_partial))
+        max_s = max(scores_s)
+        for drow in sdeltas:
+            assert all(abs(d) <= max_s for d in drow if d != SENTINEL)
+        subsets.append({
+            "profiles": list(profiles),
+            "candidates": ref.candidate_indices(profiles),
+            "scores": scores_s,
+            "deltas": sdeltas,
+            "feasible": sfeasible,
+            "max_score": int(max_s),
+        })
 
     # The oracle must reproduce the paper's worked examples before we let it
     # pin the rust implementation (Section V-B: F(GPU 2)=16, F(GPU 1)=8).
@@ -87,7 +123,7 @@ def main() -> None:
         assert all(abs(d) <= max_restricted for d in drow if d != SENTINEL)
 
     fixture = {
-        "format": "migsched-golden-frag-v2",
+        "format": "migsched-golden-frag-v3",
         "source": "python/compile/kernels/ref.py (jnp oracle for Algorithm 1)",
         "num_slices": ref.NUM_SLICES,
         "num_candidates": ref.NUM_CANDIDATES,
@@ -95,6 +131,7 @@ def main() -> None:
         "scores_partial": scores_partial,
         "scores_any": scores_any,
         "deltas_partial": deltas,
+        "deltas_any": deltas_any,
         "feasible": feasible,
         "restricted_profiles": list(RESTRICTED),
         "restricted_candidates": ref.candidate_indices(RESTRICTED),
@@ -102,6 +139,7 @@ def main() -> None:
         "deltas_restricted": deltas_restricted,
         "feasible_restricted": feasible_restricted,
         "max_score_restricted": max_restricted,
+        "subsets": subsets,
     }
     with open(OUT, "w") as fh:
         json.dump(fixture, fh, separators=(",", ":"))

@@ -2,7 +2,7 @@
 //! evaluation tracks (Section VI).
 
 use super::state::Cluster;
-use crate::frag::FragScorer;
+use crate::frag::{FleetTables, FragScorer};
 use crate::util::json::Json;
 
 /// A snapshot of the paper's evaluation metrics at one instant.
@@ -40,6 +40,26 @@ impl ClusterMetrics {
             utilization: cluster.utilization(),
             active_gpus: cluster.active_gpus(),
             mean_frag_score: scorer.mean_score(cluster.gpus()),
+        }
+    }
+
+    /// Like [`ClusterMetrics::capture`] but scoring each GPU against its
+    /// own device class's table. On a single-class fleet the mean is
+    /// bit-identical to `capture` with that class's table (see
+    /// [`FleetTables::mean_score`]).
+    pub fn capture_fleet(
+        cluster: &Cluster,
+        tables: &FleetTables,
+        accepted_total: u64,
+        arrived_total: u64,
+    ) -> Self {
+        Self {
+            allocated_workloads: cluster.allocated_workloads(),
+            accepted_total,
+            arrived_total,
+            utilization: cluster.utilization(),
+            active_gpus: cluster.active_gpus(),
+            mean_frag_score: tables.mean_score(cluster),
         }
     }
 
@@ -88,6 +108,20 @@ mod tests {
         // GPU 0 scores 8 (paper worked example), GPU 1 scores 0.
         assert!((m.mean_frag_score - 4.0).abs() < 1e-12);
         assert!((m.acceptance_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capture_fleet_is_bit_identical_on_uniform_clusters() {
+        let hw = HardwareModel::a100_80gb();
+        let mut c = Cluster::new(hw.clone(), 3);
+        c.allocate(WorkloadId(0), Placement { gpu: 1, profile: Profile::P2g20gb, index: 2 })
+            .unwrap();
+        let table = ScoreTable::for_hardware(&hw);
+        let tables = crate::frag::FleetTables::for_cluster(&c);
+        let a = ClusterMetrics::capture(&c, &table, 3, 4);
+        let b = ClusterMetrics::capture_fleet(&c, &tables, 3, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.mean_frag_score.to_bits(), b.mean_frag_score.to_bits());
     }
 
     #[test]

@@ -9,4 +9,6 @@ pub mod snapshot;
 pub mod state;
 
 pub use metrics::ClusterMetrics;
-pub use state::{AllocError, ChangeKind, Cluster, ClusterEvent, CHANGE_LOG_CAPACITY};
+pub use state::{
+    AllocError, ChangeKind, ClassStats, Cluster, ClusterEvent, CHANGE_LOG_CAPACITY,
+};

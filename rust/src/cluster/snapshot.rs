@@ -7,15 +7,30 @@ use crate::util::json::Json;
 use crate::workload::WorkloadId;
 
 /// Serialize the cluster: hardware name, occupancy masks, allocations.
+///
+/// Single-class clusters emit the legacy v1 form (a single `hardware`
+/// string) byte-for-byte; heterogeneous clusters emit the v2 form with a
+/// `classes` name table and a per-GPU `gpu_classes` array (and no
+/// `hardware` key, so pre-fleet readers fail loudly instead of silently
+/// flattening the fleet).
 pub fn to_json(cluster: &Cluster) -> Json {
     let mut allocs: Vec<(WorkloadId, usize, Profile, u8)> = cluster
         .allocations()
         .map(|(id, p)| (id, p.gpu, p.profile, p.index))
         .collect();
     allocs.sort_by_key(|&(id, ..)| id);
-    parts_to_json(
-        cluster.hardware().name(),
-        cluster.num_gpus(),
+    if cluster.is_uniform() {
+        return parts_to_json(
+            cluster.hardware().name(),
+            cluster.num_gpus(),
+            &cluster.occupancy_masks(),
+            &allocs,
+        );
+    }
+    let classes: Vec<&str> = cluster.classes().iter().map(|hw| hw.name()).collect();
+    parts_to_json_fleet(
+        &classes,
+        cluster.class_ids(),
         &cluster.occupancy_masks(),
         &allocs,
     )
@@ -57,17 +72,96 @@ pub fn parts_to_json(
         )
 }
 
-/// Restore a cluster from a snapshot. The occupancy is rebuilt from the
-/// allocation list (the mask array is redundant and cross-checked).
+/// The v2 (heterogeneous) snapshot wire format: class-name table +
+/// per-GPU class ids, same masks/allocations layout as v1. Shared by
+/// [`to_json`] and the daemon's sharded `/v1/cluster` merge on mixed
+/// fleets (where per-shard class runs interleave in the global view).
+pub fn parts_to_json_fleet(
+    classes: &[&str],
+    gpu_classes: &[u8],
+    masks: &[u8],
+    allocs: &[(WorkloadId, usize, Profile, u8)],
+) -> Json {
+    Json::obj()
+        .with(
+            "classes",
+            Json::Arr(classes.iter().map(|&n| Json::Str(n.to_string())).collect()),
+        )
+        .with(
+            "gpu_classes",
+            Json::Arr(gpu_classes.iter().map(|&c| Json::Num(f64::from(c))).collect()),
+        )
+        .with("num_gpus", gpu_classes.len())
+        .with(
+            "gpu_masks",
+            Json::Arr(masks.iter().map(|&m| Json::Num(f64::from(m))).collect()),
+        )
+        .with(
+            "allocations",
+            Json::Arr(
+                allocs
+                    .iter()
+                    .map(|&(id, gpu, profile, index)| {
+                        Json::obj()
+                            .with("workload", id.0)
+                            .with("gpu", gpu)
+                            .with("profile", profile.canonical_name())
+                            .with("index", index as u64)
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+/// Restore a cluster from a snapshot (v1 single-`hardware` or v2
+/// `classes`/`gpu_classes`). The occupancy is rebuilt from the allocation
+/// list (the mask array is redundant and cross-checked).
 pub fn from_json(j: &Json) -> Result<Cluster, String> {
-    let hw_name = j.req_str("hardware")?;
-    let hw = HardwareModel::by_name(hw_name)
-        .ok_or_else(|| format!("unknown hardware model '{hw_name}'"))?;
-    let num_gpus = j.req_u64("num_gpus")? as usize;
-    if num_gpus == 0 {
-        return Err("num_gpus must be positive".into());
-    }
-    let mut cluster = Cluster::new(hw, num_gpus);
+    let mut cluster = if let Some(class_arr) = j.get("classes").and_then(Json::as_arr) {
+        // v2: explicit class table + per-GPU assignment.
+        let mut models = Vec::with_capacity(class_arr.len());
+        for c in class_arr {
+            let name = c.as_str().ok_or("bad class name in 'classes'")?;
+            models.push(
+                HardwareModel::by_name(name)
+                    .ok_or_else(|| format!("unknown hardware model '{name}'"))?,
+            );
+        }
+        if models.is_empty() {
+            return Err("'classes' must be non-empty".into());
+        }
+        let ids_arr = j
+            .get("gpu_classes")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'gpu_classes' array")?;
+        let mut class_ids = Vec::with_capacity(ids_arr.len());
+        for v in ids_arr {
+            let id = v.as_u64().ok_or("bad class id in 'gpu_classes'")?;
+            if id as usize >= models.len() {
+                return Err(format!("gpu class id {id} out of range"));
+            }
+            class_ids.push(id as u8);
+        }
+        if class_ids.is_empty() {
+            return Err("'gpu_classes' must be non-empty".into());
+        }
+        if let Some(n) = j.get("num_gpus").and_then(Json::as_u64) {
+            if n as usize != class_ids.len() {
+                return Err("num_gpus does not match gpu_classes arity".into());
+            }
+        }
+        Cluster::from_class_layout(models, class_ids)
+    } else {
+        // v1 (legacy): one hardware model for the whole cluster.
+        let hw_name = j.req_str("hardware")?;
+        let hw = HardwareModel::by_name(hw_name)
+            .ok_or_else(|| format!("unknown hardware model '{hw_name}'"))?;
+        let num_gpus = j.req_u64("num_gpus")? as usize;
+        if num_gpus == 0 {
+            return Err("num_gpus must be positive".into());
+        }
+        Cluster::new(hw, num_gpus)
+    };
     let allocs = j
         .get("allocations")
         .and_then(Json::as_arr)
@@ -146,6 +240,88 @@ mod tests {
         let mut j = to_json(&populated());
         j.set("hardware", "TPU-v5");
         assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn uniform_snapshot_stays_legacy_v1() {
+        // Single-class fleets must keep the pre-fleet wire format
+        // byte-for-byte: a `hardware` string and no class arrays.
+        let c = populated();
+        let j = to_json(&c);
+        assert_eq!(j.req_str("hardware").unwrap(), "A100-80GB");
+        assert!(j.get("classes").is_none());
+        assert!(j.get("gpu_classes").is_none());
+        let via_fleet = Cluster::from_fleet(
+            &crate::mig::FleetSpec::uniform(HardwareModel::a100_80gb(), 4),
+        );
+        assert_eq!(
+            to_json(&via_fleet).to_string_compact(),
+            to_json(&Cluster::new(HardwareModel::a100_80gb(), 4)).to_string_compact()
+        );
+    }
+
+    fn populated_mixed() -> Cluster {
+        let fleet = crate::mig::FleetSpec::parse("a100:2,a100-40gb:1,h100:1").unwrap();
+        let mut c = Cluster::from_fleet(&fleet);
+        c.allocate(WorkloadId(3), Placement { gpu: 2, profile: Profile::P3g40gb, index: 4 })
+            .unwrap();
+        c.allocate(WorkloadId(1), Placement { gpu: 0, profile: Profile::P7g80gb, index: 0 })
+            .unwrap();
+        c
+    }
+
+    #[test]
+    fn mixed_snapshot_roundtrip_preserves_classes() {
+        let c = populated_mixed();
+        let j = to_json(&c);
+        assert!(j.get("hardware").is_none(), "v2 must not masquerade as v1");
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.class_ids(), c.class_ids());
+        assert_eq!(back.occupancy_masks(), c.occupancy_masks());
+        assert_eq!(back.classes().len(), 3);
+        assert_eq!(back.hardware_of(2).name(), "A100-40GB");
+        assert_eq!(back.placement_of(WorkloadId(3)), c.placement_of(WorkloadId(3)));
+        // Allocations are sorted by workload id in the wire format.
+        let allocs = j.get("allocations").unwrap().as_arr().unwrap();
+        assert_eq!(allocs[0].req_u64("workload").unwrap(), 1);
+    }
+
+    #[test]
+    fn mixed_snapshot_survives_interleaved_class_runs() {
+        // A fleet-global view merged from shards interleaves classes; the
+        // layout must round-trip exactly, not be re-sorted into runs.
+        let models = vec![HardwareModel::a100_80gb(), HardwareModel::h100_80gb()];
+        let c = Cluster::from_class_layout(models, vec![0, 1, 0, 1, 0]);
+        let j = to_json(&c);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.class_ids(), &[0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn v2_rejects_malformed_class_data() {
+        let mut j = to_json(&populated_mixed());
+        j.set("gpu_classes", vec![0u64, 1, 2, 9]);
+        assert!(from_json(&j).unwrap_err().contains("out of range"));
+        let mut j = to_json(&populated_mixed());
+        j.set("num_gpus", 7u64);
+        assert!(from_json(&j).unwrap_err().contains("arity"));
+    }
+
+    #[test]
+    fn legacy_v1_snapshot_still_loads() {
+        // A pre-fleet snapshot (no class arrays) loads as a uniform fleet.
+        let text = r#"{
+            "hardware": "A100-40GB", "num_gpus": 2,
+            "gpu_masks": [15, 0],
+            "allocations": [
+                {"workload": 7, "gpu": 0, "profile": "3g.40gb", "index": 0}
+            ]
+        }"#;
+        let c = from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(c.is_uniform());
+        assert_eq!(c.hardware().name(), "A100-40GB");
+        assert_eq!(c.num_gpus(), 2);
+        assert_eq!(c.gpus()[0].mask(), 15);
     }
 
     #[test]

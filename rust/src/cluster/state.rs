@@ -1,8 +1,9 @@
 //! The cluster state: GPU occupancy vector + workload allocation registry.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
-use crate::mig::{GpuState, HardwareModel, Placement, Profile};
+use crate::mig::{FleetSpec, GpuState, HardwareModel, Placement, Profile};
 use crate::workload::WorkloadId;
 
 /// Direction of one cluster mutation.
@@ -33,8 +34,11 @@ pub struct ClusterEvent {
 /// this must rebuild from the occupancy vector (`events_since` → `None`).
 pub const CHANGE_LOG_CAPACITY: usize = 4096;
 
-/// A homogeneous MIG GPU cluster (paper Section IV: set `M` of GPUs of the
-/// same hardware model).
+/// A MIG GPU cluster (paper Section IV: a set `M` of GPUs), optionally
+/// heterogeneous: every GPU carries a compact class id into a small table
+/// of [`HardwareModel`] device classes. The paper's homogeneous cluster is
+/// the single-class special case ([`Cluster::new`]), and all legacy
+/// accessors ([`Cluster::hardware`] = class 0) keep their meaning there.
 ///
 /// `Cluster` owns the authoritative occupancy state. Schedulers *propose*
 /// placements ([`crate::sched::Scheduler::schedule`]); the owner (simulator
@@ -43,7 +47,12 @@ pub const CHANGE_LOG_CAPACITY: usize = 4096;
 /// errors detectable at this single choke point.
 #[derive(Clone, Debug)]
 pub struct Cluster {
-    hw: HardwareModel,
+    /// Device-class table, class id = index. Non-empty; shared so
+    /// consumers (schedulers, indexes) can cache per-class derived state
+    /// keyed on pointer identity.
+    classes: Arc<[HardwareModel]>,
+    /// Per-GPU class id, parallel to `gpus`. Immutable after construction.
+    class_ids: Arc<[u8]>,
     gpus: Vec<GpuState>,
     allocations: HashMap<WorkloadId, Placement>,
     /// Slices currently allocated (kept incrementally; equals the sum of
@@ -85,13 +94,67 @@ impl std::fmt::Display for AllocError {
 
 impl std::error::Error for AllocError {}
 
+/// Per-class instantaneous gauges (see [`Cluster::per_class_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    /// GPUs of this class in the cluster.
+    pub gpus: usize,
+    /// GPUs of this class hosting at least one workload.
+    pub active_gpus: usize,
+    /// Slices allocated on this class's GPUs.
+    pub used_slices: u64,
+    /// Workloads placed on this class's GPUs.
+    pub allocated_workloads: usize,
+}
+
 impl Cluster {
-    /// A cluster of `num_gpus` empty GPUs.
+    /// A homogeneous cluster of `num_gpus` empty GPUs — the single-class
+    /// special case.
     pub fn new(hw: HardwareModel, num_gpus: usize) -> Self {
+        Self::from_classes(vec![hw], &[num_gpus])
+    }
+
+    /// A cluster laid out from a fleet spec: GPUs of class 0 first, then
+    /// class 1, … (consecutive runs, so GPU ids are stable per class).
+    pub fn from_fleet(fleet: &FleetSpec) -> Self {
+        Self::from_classes(fleet.models(), &fleet.counts())
+    }
+
+    /// A cluster from an explicit class table + per-class GPU counts.
+    /// Unlike [`FleetSpec`], zero counts are allowed here (a shard of a
+    /// partitioned fleet may hold none of some class while still sharing
+    /// the fleet-wide class table, keeping class ids globally consistent).
+    pub fn from_classes(models: Vec<HardwareModel>, counts: &[usize]) -> Self {
+        assert!(!models.is_empty(), "cluster needs at least one device class");
+        assert_eq!(models.len(), counts.len(), "one count per device class");
+        assert!(models.len() <= u8::MAX as usize + 1, "at most 256 device classes");
+        let num_gpus: usize = counts.iter().sum();
         assert!(num_gpus > 0, "cluster needs at least one GPU");
+        let mut class_ids = Vec::with_capacity(num_gpus);
+        for (class, &count) in counts.iter().enumerate() {
+            class_ids.extend(std::iter::repeat(class as u8).take(count));
+        }
+        Self::from_class_layout(models, class_ids)
+    }
+
+    /// A cluster from an explicit class table + an arbitrary per-GPU class
+    /// assignment (GPU `i` is of class `class_ids[i]`). This is the fully
+    /// general layout — a fleet-global view merged from per-shard slices
+    /// interleaves class runs, so snapshot restore cannot assume
+    /// consecutive runs.
+    pub fn from_class_layout(models: Vec<HardwareModel>, class_ids: Vec<u8>) -> Self {
+        assert!(!models.is_empty(), "cluster needs at least one device class");
+        assert!(models.len() <= u8::MAX as usize + 1, "at most 256 device classes");
+        assert!(!class_ids.is_empty(), "cluster needs at least one GPU");
+        assert!(
+            class_ids.iter().all(|&c| (c as usize) < models.len()),
+            "class id out of range of the class table"
+        );
+        let num_gpus = class_ids.len();
         Self {
+            classes: models.into(),
+            class_ids: class_ids.into(),
             gpus: vec![GpuState::empty(); num_gpus],
-            hw,
             allocations: HashMap::new(),
             used_slices: 0,
             generation: 0,
@@ -140,8 +203,96 @@ impl Cluster {
 
     // ----- read access ----------------------------------------------------
 
+    /// Class 0's hardware model — THE hardware model on the single-class
+    /// clusters every pre-fleet caller builds. On mixed fleets, prefer
+    /// [`Cluster::hardware_of`] / [`Cluster::classes`].
     pub fn hardware(&self) -> &HardwareModel {
-        &self.hw
+        &self.classes[0]
+    }
+
+    /// The device-class table (class id = index). Length 1 ⇔ homogeneous.
+    pub fn classes(&self) -> &[HardwareModel] {
+        &self.classes
+    }
+
+    /// Shared handle to the class table; pointer identity keys per-class
+    /// derived caches (score tables, ΔF buckets).
+    pub fn classes_arc(&self) -> &Arc<[HardwareModel]> {
+        &self.classes
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Whether every GPU is of the same device class.
+    pub fn is_uniform(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    /// Per-GPU class ids, parallel to [`Cluster::gpus`].
+    pub fn class_ids(&self) -> &[u8] {
+        &self.class_ids
+    }
+
+    /// The class id of one GPU (panics out of range).
+    #[inline]
+    pub fn class_of(&self, gpu: usize) -> u8 {
+        self.class_ids[gpu]
+    }
+
+    /// The hardware model of one GPU (panics out of range).
+    #[inline]
+    pub fn hardware_of(&self, gpu: usize) -> &HardwareModel {
+        &self.classes[self.class_ids[gpu] as usize]
+    }
+
+    /// Whether at least one device class supports `profile`.
+    pub fn supports(&self, profile: Profile) -> bool {
+        self.classes.iter().any(|hw| hw.supports(profile))
+    }
+
+    /// Whether GPU `gpu`'s device class supports `profile`.
+    #[inline]
+    pub fn supports_on(&self, gpu: usize, profile: Profile) -> bool {
+        self.hardware_of(gpu).supports(profile)
+    }
+
+    /// Parse a profile name against every class (class 0 first, so
+    /// single-class clusters behave exactly like
+    /// [`HardwareModel::parse_profile`]). Canonical names always work;
+    /// hardware-specific names (e.g. `3g.20gb` on A100-40GB) resolve via
+    /// the first class that knows them.
+    pub fn parse_profile(&self, name: &str) -> Option<Profile> {
+        self.classes.iter().find_map(|hw| hw.parse_profile(name))
+    }
+
+    /// Per-class GPU counts, class id order.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes.len()];
+        for &c in self.class_ids.iter() {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Instantaneous per-class gauges (GPUs, active GPUs, used slices,
+    /// allocated workloads), class id order — the `/v1/stats` and
+    /// `/metrics` per-class breakdown.
+    pub fn per_class_stats(&self) -> Vec<ClassStats> {
+        let mut out = vec![ClassStats::default(); self.classes.len()];
+        for (i, g) in self.gpus.iter().enumerate() {
+            let s = &mut out[self.class_ids[i] as usize];
+            s.gpus += 1;
+            if !g.is_empty() {
+                s.active_gpus += 1;
+            }
+            s.used_slices += g.used_slices() as u64;
+        }
+        for placement in self.allocations.values() {
+            out[self.class_ids[placement.gpu] as usize].allocated_workloads += 1;
+        }
+        out
     }
 
     pub fn num_gpus(&self) -> usize {
@@ -157,9 +308,9 @@ impl Cluster {
         &self.gpus
     }
 
-    /// Total slice capacity (M × 8).
+    /// Total slice capacity (M × 8; every supported part has 8 slices).
     pub fn capacity_slices(&self) -> u64 {
-        (self.gpus.len() * self.hw.num_slices()) as u64
+        (self.gpus.len() * self.classes[0].num_slices()) as u64
     }
 
     /// Currently allocated slices.
@@ -204,16 +355,20 @@ impl Cluster {
         self.gpus.iter().map(|g| g.mask()).collect()
     }
 
-    /// Whether any GPU can host `profile` right now.
+    /// Whether any GPU can host `profile` right now (its class must
+    /// support the profile AND a feasible anchor must be free).
     pub fn can_host(&self, profile: Profile) -> bool {
-        self.hw.supports(profile) && self.gpus.iter().any(|g| g.can_host(profile))
+        self.gpus
+            .iter()
+            .enumerate()
+            .any(|(i, g)| self.supports_on(i, profile) && g.can_host(profile))
     }
 
     // ----- mutation ---------------------------------------------------------
 
     /// Commit a placement for a workload.
     pub fn allocate(&mut self, id: WorkloadId, placement: Placement) -> Result<(), AllocError> {
-        if !self.hw.supports(placement.profile) {
+        if !self.supports(placement.profile) {
             return Err(AllocError::UnsupportedProfile(placement.profile));
         }
         if placement.gpu >= self.gpus.len() {
@@ -221,6 +376,9 @@ impl Cluster {
                 gpu: placement.gpu,
                 cluster_size: self.gpus.len(),
             });
+        }
+        if !self.supports_on(placement.gpu, placement.profile) {
+            return Err(AllocError::UnsupportedProfile(placement.profile));
         }
         if self.allocations.contains_key(&id) {
             return Err(AllocError::DuplicateWorkload(id));
@@ -433,5 +591,116 @@ mod tests {
         let mut c = cluster();
         c.allocate(wid(1), pl(0, Profile::P7g80gb, 0)).unwrap();
         assert!((c.utilization() - 8.0 / 24.0).abs() < 1e-12);
+    }
+
+    fn mixed() -> Cluster {
+        Cluster::from_fleet(
+            &FleetSpec::new(vec![
+                (HardwareModel::a100_80gb(), 2),
+                (HardwareModel::h100_80gb(), 1),
+                (HardwareModel::a100_40gb(), 2),
+            ])
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn fleet_layout_is_consecutive_class_runs() {
+        let c = mixed();
+        assert_eq!(c.num_gpus(), 5);
+        assert_eq!(c.num_classes(), 3);
+        assert!(!c.is_uniform());
+        assert_eq!(c.class_ids(), &[0, 0, 1, 2, 2]);
+        assert_eq!(c.class_counts(), vec![2, 1, 2]);
+        assert_eq!(c.hardware().name(), "A100-80GB", "class 0 is the legacy view");
+        assert_eq!(c.hardware_of(2).name(), "H100-80GB");
+        assert_eq!(c.hardware_of(4).name(), "A100-40GB");
+        assert_eq!(c.capacity_slices(), 40);
+    }
+
+    #[test]
+    fn uniform_cluster_is_the_single_class_case() {
+        let c = cluster();
+        assert!(c.is_uniform());
+        assert_eq!(c.num_classes(), 1);
+        assert_eq!(c.class_ids(), &[0, 0, 0]);
+        assert_eq!(c.classes()[0], HardwareModel::a100_80gb());
+    }
+
+    #[test]
+    fn per_gpu_class_gates_support() {
+        // Class 1 supports only 1g.10gb: placements of bigger profiles on
+        // its GPU are rejected even though class 0 supports them.
+        let restricted = HardwareModel::h100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let mut c = Cluster::from_classes(
+            vec![HardwareModel::a100_80gb(), restricted],
+            &[1, 1],
+        );
+        assert!(c.supports(Profile::P7g80gb), "class 0 supports it");
+        assert!(!c.supports_on(1, Profile::P7g80gb));
+        assert_eq!(
+            c.allocate(wid(1), pl(1, Profile::P7g80gb, 0)),
+            Err(AllocError::UnsupportedProfile(Profile::P7g80gb))
+        );
+        c.allocate(wid(1), pl(0, Profile::P7g80gb, 0)).unwrap();
+        // GPU 0 is now full and GPU 1's class cannot host a 7g: can_host
+        // must consult the per-GPU class, not just class 0.
+        assert!(!c.can_host(Profile::P7g80gb));
+        assert!(c.can_host(Profile::P1g10gb));
+    }
+
+    #[test]
+    fn parse_profile_tries_every_class() {
+        let c = mixed();
+        // Canonical name resolves via class 0.
+        assert_eq!(c.parse_profile("3g.40gb"), Some(Profile::P3g40gb));
+        // A100-40GB-specific name resolves via class 2.
+        assert_eq!(c.parse_profile("3g.20gb"), Some(Profile::P3g40gb));
+        assert_eq!(c.parse_profile("9g.90gb"), None);
+    }
+
+    #[test]
+    fn per_class_stats_partition_the_gauges() {
+        let mut c = mixed();
+        c.allocate(wid(1), pl(0, Profile::P3g40gb, 0)).unwrap();
+        c.allocate(wid(2), pl(3, Profile::P2g20gb, 0)).unwrap();
+        c.allocate(wid(3), pl(4, Profile::P1g10gb, 6)).unwrap();
+        let stats = c.per_class_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(
+            stats[0],
+            ClassStats { gpus: 2, active_gpus: 1, used_slices: 4, allocated_workloads: 1 }
+        );
+        assert_eq!(
+            stats[1],
+            ClassStats { gpus: 1, active_gpus: 0, used_slices: 0, allocated_workloads: 0 }
+        );
+        assert_eq!(
+            stats[2],
+            ClassStats { gpus: 2, active_gpus: 2, used_slices: 3, allocated_workloads: 2 }
+        );
+        // The per-class breakdown conserves the cluster-wide gauges.
+        assert_eq!(stats.iter().map(|s| s.used_slices).sum::<u64>(), c.used_slices());
+        assert_eq!(
+            stats.iter().map(|s| s.allocated_workloads).sum::<usize>(),
+            c.allocated_workloads()
+        );
+    }
+
+    #[test]
+    fn zero_count_classes_keep_global_class_ids() {
+        // A shard holding none of class 1 still shares the 3-class table.
+        let c = Cluster::from_classes(
+            vec![
+                HardwareModel::a100_80gb(),
+                HardwareModel::h100_80gb(),
+                HardwareModel::a100_40gb(),
+            ],
+            &[2, 0, 1],
+        );
+        assert_eq!(c.num_classes(), 3);
+        assert_eq!(c.class_ids(), &[0, 0, 2]);
+        assert_eq!(c.class_counts(), vec![2, 0, 1]);
+        assert_eq!(c.per_class_stats()[1], ClassStats::default());
     }
 }

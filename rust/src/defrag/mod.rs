@@ -146,9 +146,12 @@ impl MigrationPlan {
     }
 }
 
-/// Total cluster fragmentation score under `table`.
-fn total_f(gpus: &[GpuState], table: &ScoreTable) -> u32 {
-    gpus.iter().map(|&g| table.score(g)).sum()
+/// Total cluster fragmentation score, each GPU under its class's table.
+fn total_f(gpus: &[GpuState], class_ids: &[u8], tables: &[ScoreTable]) -> u32 {
+    gpus.iter()
+        .zip(class_ids)
+        .map(|(&g, &c)| tables[c as usize].score(g))
+        .sum()
 }
 
 /// Compute a greedy defragmentation plan with at most `max_migrations`
@@ -173,13 +176,25 @@ pub fn plan_defrag_budgeted(
     cost: &CostModel,
     cost_budget: u64,
 ) -> MigrationPlan {
-    let hw = cluster.hardware();
+    // Per-GPU score tables: single-class clusters use the caller's table
+    // for every GPU (preserving custom-rule tables bit-for-bit); mixed
+    // fleets derive each class's table under the caller's overlap rule.
+    let class_tables: Vec<ScoreTable> = if cluster.is_uniform() {
+        vec![table.clone()]
+    } else {
+        cluster
+            .classes()
+            .iter()
+            .map(|hw| ScoreTable::for_hardware_rule(hw, table.rule()))
+            .collect()
+    };
+    let class_ids = cluster.class_ids();
     // Work on shadow state: occupancies + the allocation list.
     let mut gpus: Vec<GpuState> = cluster.gpus().to_vec();
     let mut allocs: Vec<(WorkloadId, Placement)> = cluster.allocations().collect();
     allocs.sort_by_key(|(id, _)| *id); // determinism
 
-    let f_before = total_f(&gpus, table);
+    let f_before = total_f(&gpus, class_ids, &class_tables);
     let mut current_f = f_before as i64;
     let mut plan = MigrationPlan { f_before, f_after: f_before, ..MigrationPlan::default() };
 
@@ -188,7 +203,12 @@ pub fn plan_defrag_budgeted(
         let mut best: Option<(usize, Placement, i64)> = None; // (alloc idx, target, ΔF)
         for (ai, &(_, from)) in allocs.iter().enumerate() {
             let profile = from.profile;
-            if cost_budget > 0 && plan.total_cost + cost.move_cost(hw, profile) > cost_budget {
+            let src_class = class_ids[from.gpu];
+            let src_hw = cluster.hardware_of(from.gpu);
+            let src_table = &class_tables[src_class as usize];
+            if cost_budget > 0
+                && plan.total_cost + cost.move_cost(src_hw, profile) > cost_budget
+            {
                 continue; // unaffordable this sweep
             }
             // State with the workload lifted out.
@@ -197,8 +217,15 @@ pub fn plan_defrag_budgeted(
                 .release(profile, from.index)
                 .expect("allocation registry consistent");
             let lifted_delta =
-                lifted_score_delta(&gpus, from.gpu, lifted, table);
+                src_table.score(lifted) as i64 - src_table.score(gpus[from.gpu]) as i64;
             for (gpu_id, &g) in gpus.iter().enumerate() {
+                // Migration preserves the workload's physical resources, so
+                // only same-class GPUs are targets: on another class the
+                // same profile shape has a different memory footprint (a
+                // resize, not a move). Single-class clusters are unaffected.
+                if class_ids[gpu_id] != src_class {
+                    continue;
+                }
                 let host = if gpu_id == from.gpu { lifted } else { g };
                 if profile.size() > host.free_slices() {
                     continue;
@@ -213,10 +240,11 @@ pub fn plan_defrag_budgeted(
                     // ΔF = (remove from source) + (add to target host).
                     // For same-GPU moves `host` IS the lifted state, so
                     // `add_delta` is measured against it and the sum stays
-                    // exact in both cases.
+                    // exact in both cases. Source and target share a class,
+                    // so one table prices both sides.
                     let placed = host.with_placement(profile, start);
                     let add_delta =
-                        table.score(placed) as i64 - table.score(host) as i64;
+                        src_table.score(placed) as i64 - src_table.score(host) as i64;
                     let delta = lifted_delta + add_delta;
                     let candidate = (ai, Placement { gpu: gpu_id, profile, index: start }, delta);
                     if delta < best.map(|b| b.2).unwrap_or(0) {
@@ -232,24 +260,19 @@ pub fn plan_defrag_budgeted(
         gpus[to.gpu].place(to.profile, to.index).unwrap();
         allocs[ai].1 = to;
         current_f += delta;
-        debug_assert_eq!(current_f, total_f(&gpus, table) as i64, "ΔF accounting");
-        let move_cost = cost.move_cost(hw, from.profile);
+        debug_assert_eq!(
+            current_f,
+            total_f(&gpus, class_ids, &class_tables) as i64,
+            "ΔF accounting"
+        );
+        let src_hw = cluster.hardware_of(from.gpu);
+        let move_cost = cost.move_cost(src_hw, from.profile);
         plan.total_cost += move_cost;
-        plan.bytes_moved += move_bytes(hw, from.profile);
+        plan.bytes_moved += move_bytes(src_hw, from.profile);
         plan.moves.push(Migration { workload: wid, from, to, delta_f: delta as i32, cost: move_cost });
     }
     plan.f_after = current_f as u32;
     plan
-}
-
-/// ΔF on the source GPU of lifting the workload out.
-fn lifted_score_delta(
-    gpus: &[GpuState],
-    gpu_id: usize,
-    lifted: GpuState,
-    table: &ScoreTable,
-) -> i64 {
-    table.score(lifted) as i64 - table.score(gpus[gpu_id]) as i64
 }
 
 /// Apply a plan to a live cluster (release + allocate per move, in order).
@@ -443,6 +466,36 @@ mod tests {
         assert_eq!(plan.moves[0].cost, 20);
         assert_eq!(plan.total_cost, 20);
         assert_eq!(plan.bytes_moved, 10 * BYTES_PER_GB);
+    }
+
+    #[test]
+    fn mixed_fleet_moves_stay_in_class_and_price_per_class() {
+        // 2×A100-80GB (10 GB/slice) + 1×A100-40GB (5 GB/slice). A badly
+        // placed 1g on each class: moves must not cross classes, and the
+        // A100-40GB move must be priced with 5 GB instance memory.
+        let fleet = crate::mig::FleetSpec::parse("a100:2,a100-40gb:1").unwrap();
+        let mut cluster = Cluster::from_fleet(&fleet);
+        alloc(&mut cluster, 0, 0, Profile::P1g10gb, 1);
+        alloc(&mut cluster, 1, 2, Profile::P1g10gb, 1);
+        let table = ScoreTable::for_hardware(cluster.hardware());
+        let plan = plan_defrag(&cluster, &table, 16);
+        assert!(!plan.is_empty());
+        for mv in &plan.moves {
+            assert_eq!(
+                cluster.class_of(mv.from.gpu),
+                cluster.class_of(mv.to.gpu),
+                "migration crossed device classes: {mv:?}"
+            );
+            let expected_gb =
+                u64::from(cluster.hardware_of(mv.from.gpu).profile_mem_gb(Profile::P1g10gb));
+            assert_eq!(mv.cost, expected_gb + 10, "per-class pricing: {mv:?}");
+        }
+        // Both classes' misplacements get repaired.
+        apply_plan(&mut cluster, &plan).unwrap();
+        assert!(cluster.gpu(0).unwrap().can_host(Profile::P4g40gb));
+        assert!(cluster.gpu(2).unwrap().can_host(Profile::P4g40gb));
+        // And the bytes ledger reflects 10 GB + 5 GB instances.
+        assert_eq!(plan.bytes_moved, 15 * BYTES_PER_GB);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! lowest GPU id, then lowest anchor index — the "first" semantics a FIFO
 //! scheduler needs for reproducible runs.
 
-use super::table::ScoreTable;
+use super::table::{FleetTables, ScoreTable};
+use crate::cluster::Cluster;
 use crate::mig::{GpuState, Placement, Profile};
 
 /// ΔF of placing `profile` at `start` on `gpu` (must be a free window).
@@ -93,6 +94,52 @@ pub fn evaluate_cluster(
         if size > crate::mig::NUM_SLICES as u8 - occ.count_ones() as u8 {
             continue;
         }
+        let base = scores[occ as usize] as i32;
+        for cand in cands {
+            if occ & cand.mask != 0 {
+                continue;
+            }
+            let d = scores[(occ | cand.mask) as usize] as i32 - base;
+            if d < best_delta {
+                best_delta = d;
+                best_gpu = gpu_id;
+                best_start = cand.start;
+            }
+        }
+    }
+    if best_gpu == usize::MAX {
+        None
+    } else {
+        Some(Placement { gpu: best_gpu, profile, index: best_start })
+    }
+}
+
+/// [`evaluate_cluster`] generalized to heterogeneous fleets: each GPU's ΔF
+/// is computed against its *own* class's score table, and GPUs whose class
+/// does not enable `profile` are skipped entirely. The scan order and the
+/// strictly-less `(ΔF, gpu, anchor)` tie-break are identical to the flat
+/// scan, so on a single-class fleet this returns bit-identical placements
+/// to `evaluate_cluster` (pinned by `fleet_scan_matches_flat_scan`).
+pub fn evaluate_fleet(
+    tables: &FleetTables,
+    cluster: &Cluster,
+    profile: Profile,
+) -> Option<Placement> {
+    let cands = &crate::mig::CANDIDATES[crate::mig::candidate_range(profile)];
+    let size = profile.size();
+    let class_ids = cluster.class_ids();
+    let mut best_delta = i32::MAX;
+    let mut best_gpu = usize::MAX;
+    let mut best_start = 0u8;
+    for (gpu_id, g) in cluster.gpus().iter().enumerate() {
+        if !cluster.hardware_of(gpu_id).supports(profile) {
+            continue;
+        }
+        let occ = g.mask();
+        if size > crate::mig::NUM_SLICES as u8 - occ.count_ones() as u8 {
+            continue;
+        }
+        let scores = tables.table(class_ids[gpu_id]).raw();
         let base = scores[occ as usize] as i32;
         for cand in cands {
             if occ & cand.mask != 0 {
@@ -249,6 +296,66 @@ mod tests {
         assert!(out.candidates.iter().all(|c| c.gpu == 0));
         let best = out.best.unwrap();
         assert_eq!(best.delta, out.candidates.iter().map(|c| c.delta).min().unwrap());
+    }
+
+    #[test]
+    fn fleet_scan_matches_flat_scan() {
+        // Single-class fleet: evaluate_fleet must reproduce evaluate_cluster
+        // exactly — same placements, same tie-breaks — over random states.
+        use crate::util::rng::Rng;
+        use crate::workload::WorkloadId;
+        let hw = HardwareModel::a100_80gb();
+        let t = ScoreTable::for_hardware(&hw);
+        let mut rng = Rng::new(777);
+        for round in 0..200 {
+            let mut cluster = crate::cluster::Cluster::new(hw.clone(), 6);
+            let mut next = 0u64;
+            for gpu in 0..6 {
+                for _ in 0..rng.index(6) {
+                    let p = *rng.choose(&crate::mig::profile::ALL_PROFILES);
+                    let feasible: Vec<u8> = cluster.gpus()[gpu].feasible_indexes(p).collect();
+                    if feasible.is_empty() {
+                        continue;
+                    }
+                    let s = *rng.choose(&feasible);
+                    cluster
+                        .allocate(WorkloadId(next), Placement { gpu, profile: p, index: s })
+                        .unwrap();
+                    next += 1;
+                }
+            }
+            let tables = FleetTables::for_cluster(&cluster);
+            for p in crate::mig::profile::ALL_PROFILES {
+                let flat = evaluate_cluster(&t, cluster.gpus(), p);
+                let fleet = evaluate_fleet(&tables, &cluster, p);
+                assert_eq!(flat, fleet, "round {round} profile {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_scan_skips_unsupporting_classes() {
+        use crate::mig::FleetSpec;
+        use crate::workload::WorkloadId;
+        // Class 1 only enables 1g.10gb: a 7g request must land on class 0
+        // even though GPU 0 (class 1) is emptier.
+        let restricted = HardwareModel::h100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let fleet = FleetSpec::new(vec![
+            (restricted, 1),
+            (HardwareModel::a100_80gb(), 2),
+        ])
+        .unwrap();
+        let mut cluster = crate::cluster::Cluster::from_fleet(&fleet);
+        cluster
+            .allocate(WorkloadId(1), Placement { gpu: 1, profile: Profile::P1g10gb, index: 0 })
+            .unwrap();
+        let tables = FleetTables::for_cluster(&cluster);
+        let pl = evaluate_fleet(&tables, &cluster, Profile::P7g80gb).unwrap();
+        assert_eq!(pl.gpu, 2, "empty class-0 GPU is skipped, partially-used gpu1 can't host 7g");
+        // But the restricted GPU still competes for the profile it enables.
+        let pl = evaluate_fleet(&tables, &cluster, Profile::P1g10gb).unwrap();
+        assert_eq!(pl.gpu, 1, "filling gpu1's broken window beats empty GPUs");
+        assert_eq!(pl.index, 1);
     }
 
     #[test]

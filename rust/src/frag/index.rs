@@ -42,6 +42,9 @@ use crate::mig::{candidate_range, Placement, Profile, CANDIDATES, NUM_PROFILES, 
 
 use super::table::ScoreTable;
 
+/// Per-class profile support mask (index = `Profile::index()`).
+type SupportRow = [bool; NUM_PROFILES];
+
 /// Sentinel bucket for "no feasible anchor on this GPU".
 const NO_BUCKET: u32 = u32::MAX;
 
@@ -147,11 +150,28 @@ impl ProfileBuckets {
 }
 
 /// The incremental per-profile argmin-ΔF index (see module docs).
+///
+/// On a heterogeneous fleet the index keeps one [`ScoreTable`] per device
+/// class and buckets every GPU by the ΔF computed against *its own*
+/// class's table; GPUs whose class does not enable a profile never enter
+/// that profile's buckets, matching
+/// [`evaluate_fleet`](super::evaluate_fleet)'s skip. The bucket offset is
+/// the max raw score across *all* class tables, so every class's ΔF range
+/// stays representable in one shared bucket axis.
 #[derive(Clone, Debug)]
 pub struct FragIndex {
-    table: ScoreTable,
-    /// Bucket key = ΔF + offset; offset = max table score, so every
-    /// feasible ΔF of this table maps into `[0, 2·offset]`.
+    /// One table per device class; `tables[0]` is the legacy single-table
+    /// view exposed by [`FragIndex::score_table`].
+    tables: Vec<ScoreTable>,
+    /// Per-GPU device class (all zeros on a single-class fleet).
+    class_ids: Vec<u8>,
+    /// Per-class profile enablement. The single-class constructors use
+    /// all-true rows: profile support on uniform clusters is (and was)
+    /// enforced by the scheduler's cluster-wide guard, and the index must
+    /// stay bit-identical to its pre-fleet behavior there.
+    class_supports: Vec<SupportRow>,
+    /// Bucket key = ΔF + offset; offset = max score over every class
+    /// table, so every feasible ΔF of any class maps into `[0, 2·offset]`.
     offset: i32,
     profiles: Vec<ProfileBuckets>,
     slots: Vec<[Slot; NUM_PROFILES]>,
@@ -163,17 +183,62 @@ pub struct FragIndex {
 
 impl FragIndex {
     /// Build the index for a cluster's current occupancy — O(M·k).
+    ///
+    /// On a single-class cluster the passed table is used as-is (callers
+    /// may supply a custom rule's table); on a multi-class cluster the
+    /// per-class tables are derived from the cluster's hardware models
+    /// under the passed table's overlap rule.
     pub fn for_cluster(table: ScoreTable, cluster: &Cluster) -> Self {
         let masks = cluster.occupancy_masks();
-        Self::from_masks(table, &masks, cluster.generation())
+        if cluster.is_uniform() {
+            return Self::from_masks(table, &masks, cluster.generation());
+        }
+        let rule = table.rule();
+        let tables = cluster
+            .classes()
+            .iter()
+            .map(|hw| ScoreTable::for_hardware_rule(hw, rule))
+            .collect();
+        let supports = cluster
+            .classes()
+            .iter()
+            .map(|hw| {
+                std::array::from_fn(|pi| {
+                    hw.supports(Profile::from_index(pi).expect("profile index in range"))
+                })
+            })
+            .collect();
+        Self::build(tables, cluster.class_ids().to_vec(), supports, &masks, cluster.generation())
     }
 
-    /// Build from raw occupancy masks at a known generation.
+    /// Build from raw occupancy masks at a known generation (single-class).
     pub fn from_masks(table: ScoreTable, masks: &[u8], generation: u64) -> Self {
-        let offset = *table.raw().iter().max().unwrap_or(&0) as i32;
+        Self::build(
+            vec![table],
+            vec![0; masks.len()],
+            vec![[true; NUM_PROFILES]],
+            masks,
+            generation,
+        )
+    }
+
+    fn build(
+        tables: Vec<ScoreTable>,
+        class_ids: Vec<u8>,
+        class_supports: Vec<SupportRow>,
+        masks: &[u8],
+        generation: u64,
+    ) -> Self {
+        let offset = tables
+            .iter()
+            .map(|t| *t.raw().iter().max().unwrap_or(&0) as i32)
+            .max()
+            .unwrap_or(0);
         let num_buckets = (2 * offset + 1) as usize;
         let mut index = Self {
-            table,
+            tables,
+            class_ids,
+            class_supports,
             offset,
             profiles: (0..NUM_PROFILES)
                 .map(|_| ProfileBuckets::new(num_buckets, masks.len()))
@@ -198,21 +263,29 @@ impl FragIndex {
         self.masks.len()
     }
 
+    /// The class-0 score table (the only table on single-class fleets).
     pub fn score_table(&self) -> &ScoreTable {
-        &self.table
+        &self.tables[0]
+    }
+
+    /// The score table governing one GPU.
+    pub fn score_table_of(&self, gpu: usize) -> &ScoreTable {
+        &self.tables[self.class_ids[gpu] as usize]
     }
 
     /// Re-derive one GPU's per-profile best anchors from its mask and move
     /// it between buckets — O(k) total across all profiles.
     fn update_gpu(&mut self, gpu: usize) {
         let occ = self.masks[gpu];
-        let scores = self.table.raw();
+        let class = self.class_ids[gpu] as usize;
+        let scores = self.tables[class].raw();
+        let supports = &self.class_supports[class];
         let base = scores[occ as usize] as i32;
         let free = NUM_SLICES as u8 - occ.count_ones() as u8;
         for (pi, pb) in self.profiles.iter_mut().enumerate() {
             let profile = Profile::from_index(pi).expect("profile index in range");
             let mut best: Option<(u8, i32)> = None;
-            if profile.size() <= free {
+            if supports[pi] && profile.size() <= free {
                 for cand in &CANDIDATES[candidate_range(profile)] {
                     if occ & cand.mask != 0 {
                         continue;
@@ -261,7 +334,9 @@ impl FragIndex {
     /// events replayed incrementally, or `None` when the change log could
     /// not bridge the gap and the index was rebuilt from scratch.
     pub fn sync(&mut self, cluster: &Cluster) -> Option<usize> {
-        let replayed = if cluster.num_gpus() != self.num_gpus() {
+        let replayed = if cluster.num_gpus() != self.num_gpus()
+            || cluster.class_ids() != &self.class_ids[..]
+        {
             None
         } else if self.generation == cluster.generation() {
             Some(0)
@@ -277,7 +352,7 @@ impl FragIndex {
             }
         };
         if replayed.is_none() {
-            *self = Self::for_cluster(self.table.clone(), cluster);
+            *self = Self::for_cluster(self.tables[0].clone(), cluster);
         }
         debug_assert_eq!(self.generation, cluster.generation());
         debug_assert_eq!(self.masks, cluster.occupancy_masks(), "index diverged from cluster");
@@ -399,6 +474,44 @@ mod tests {
                     evaluate_cluster(index.score_table(), cluster.gpus(), p),
                     "{p}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_index_matches_fleet_scan() {
+        use crate::frag::{evaluate_fleet, FleetTables};
+        use crate::mig::FleetSpec;
+        let fleet = FleetSpec::new(vec![
+            (HardwareModel::a100_80gb(), 2),
+            (HardwareModel::h100_80gb().with_profiles(&[Profile::P1g10gb, Profile::P3g40gb]), 2),
+            (HardwareModel::a100_40gb(), 1),
+        ])
+        .unwrap();
+        let mut cluster = Cluster::from_fleet(&fleet);
+        let tables = FleetTables::for_cluster(&cluster);
+        let mut index =
+            FragIndex::for_cluster(ScoreTable::for_hardware(cluster.hardware()), &cluster);
+        let mut rng = Rng::new(0xBEEF);
+        let mut next_id = 0u64;
+        for _ in 0..400 {
+            if rng.chance(0.6) {
+                let p = *rng.choose(&crate::mig::profile::ALL_PROFILES);
+                if !cluster.supports(p) {
+                    continue;
+                }
+                if let Some(pl) = index.best(p) {
+                    cluster.allocate(WorkloadId(next_id), pl).expect("index proposed valid");
+                    next_id += 1;
+                }
+            } else if cluster.allocated_workloads() > 0 {
+                let mut ids: Vec<WorkloadId> = cluster.allocations().map(|(id, _)| id).collect();
+                ids.sort();
+                cluster.release(*rng.choose(&ids)).unwrap();
+            }
+            index.sync(&cluster);
+            for p in crate::mig::profile::ALL_PROFILES {
+                assert_eq!(index.best(p), evaluate_fleet(&tables, &cluster, p), "{p}");
             }
         }
     }

@@ -33,11 +33,11 @@ pub mod score;
 pub mod table;
 
 pub use delta::{
-    best_delta_on_gpu, delta_f, evaluate_cluster, evaluate_cluster_full, DeltaOutcome,
-    EvaluatedCandidate,
+    best_delta_on_gpu, delta_f, evaluate_cluster, evaluate_cluster_full, evaluate_fleet,
+    DeltaOutcome, EvaluatedCandidate,
 };
 pub use index::FragIndex;
 pub use score::{
     max_score, score_direct, score_direct_rule, DirectScorer, FragScorer, OverlapRule,
 };
-pub use table::ScoreTable;
+pub use table::{FleetTables, ScoreTable};

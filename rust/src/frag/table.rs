@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::score::{score_direct_rule, FragScorer, OverlapRule};
+use crate::cluster::Cluster;
 use crate::mig::{GpuState, HardwareModel, Profile};
 
 /// Precomputed Algorithm 1 scores for all 256 occupancy masks.
@@ -74,6 +75,93 @@ impl FragScorer for ScoreTable {
     #[inline]
     fn score(&self, gpu: GpuState) -> u32 {
         self.score_mask(gpu.mask())
+    }
+}
+
+/// One [`ScoreTable`] per device class of a heterogeneous fleet.
+///
+/// Each GPU is scored against its *own* class's table; a single-class
+/// fleet degenerates to exactly one `ScoreTable`, so the homogeneous path
+/// stays bit-identical. The `classes` Arc is the same one the source
+/// [`Cluster`] holds, which makes [`FleetTables::matches`] a pointer
+/// compare — cheap enough to revalidate a cached instance on every
+/// scheduling call.
+#[derive(Clone, Debug)]
+pub struct FleetTables {
+    tables: Vec<ScoreTable>,
+    classes: Arc<[HardwareModel]>,
+}
+
+impl FleetTables {
+    /// Per-class tables for `cluster` under the default overlap rule.
+    pub fn for_cluster(cluster: &Cluster) -> Self {
+        Self::with_rule(cluster, OverlapRule::default())
+    }
+
+    /// Per-class tables for `cluster` under an explicit overlap rule.
+    pub fn with_rule(cluster: &Cluster, rule: OverlapRule) -> Self {
+        let classes = cluster.classes_arc().clone();
+        let tables =
+            classes.iter().map(|hw| ScoreTable::for_hardware_rule(hw, rule)).collect();
+        Self { tables, classes }
+    }
+
+    /// True when these tables were built from `cluster`'s class set (a
+    /// pointer compare on the shared class-table Arc).
+    pub fn matches(&self, cluster: &Cluster) -> bool {
+        Arc::ptr_eq(&self.classes, cluster.classes_arc())
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// The table for device class `class` (panics out of range).
+    pub fn table(&self, class: u8) -> &ScoreTable {
+        &self.tables[class as usize]
+    }
+
+    /// The table governing GPU `gpu` of `cluster`.
+    pub fn table_for(&self, cluster: &Cluster, gpu: usize) -> &ScoreTable {
+        &self.tables[cluster.class_of(gpu) as usize]
+    }
+
+    pub fn rule(&self) -> OverlapRule {
+        self.tables[0].rule()
+    }
+
+    /// Score one GPU against its own class's table.
+    #[inline]
+    pub fn score_gpu(&self, cluster: &Cluster, gpu: usize) -> u32 {
+        self.tables[cluster.class_of(gpu) as usize].score_mask(cluster.gpus()[gpu].mask())
+    }
+
+    /// Mean per-class score across the fleet; replicates
+    /// [`FragScorer::mean_score`]'s arithmetic exactly (sum of per-GPU
+    /// scores as f64, divided by the GPU count) so a single-class fleet
+    /// produces bit-identical means.
+    pub fn mean_score(&self, cluster: &Cluster) -> f64 {
+        let gpus = cluster.gpus();
+        if gpus.is_empty() {
+            return 0.0;
+        }
+        let ids = cluster.class_ids();
+        gpus.iter()
+            .zip(ids)
+            .map(|(g, &c)| self.tables[c as usize].score_mask(g.mask()) as f64)
+            .sum::<f64>()
+            / gpus.len() as f64
+    }
+
+    /// The largest raw score across all class tables — the bucket offset a
+    /// fleet-wide [`super::FragIndex`] must use so every ΔF stays
+    /// representable.
+    pub fn max_raw(&self) -> u32 {
+        self.tables
+            .iter()
+            .map(|t| t.raw().iter().copied().max().unwrap_or(0) as u32)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -153,6 +241,70 @@ mod tests {
         assert_eq!(table.score(gpu2), 16);
         let gpu1 = GpuState::empty().with_placement(Profile::P1g10gb, 5);
         assert_eq!(table.score(gpu1), 8);
+    }
+
+    #[test]
+    fn fleet_tables_score_each_gpu_against_its_own_class() {
+        use crate::mig::FleetSpec;
+        // Class 1 only knows 1g.10gb, so a half-occupied GPU scores
+        // differently under the two tables.
+        let restricted = HardwareModel::h100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let fleet = FleetSpec::new(vec![
+            (HardwareModel::a100_80gb(), 1),
+            (restricted.clone(), 1),
+        ])
+        .unwrap();
+        let mut cluster = Cluster::from_fleet(&fleet);
+        let tables = FleetTables::for_cluster(&cluster);
+        assert!(tables.matches(&cluster));
+        assert_eq!(tables.num_classes(), 2);
+
+        use crate::mig::Placement;
+        use crate::workload::WorkloadId;
+        cluster
+            .allocate(WorkloadId(1), Placement { gpu: 0, profile: Profile::P1g10gb, index: 5 })
+            .unwrap();
+        cluster
+            .allocate(WorkloadId(2), Placement { gpu: 1, profile: Profile::P1g10gb, index: 5 })
+            .unwrap();
+        // Same occupancy mask, different class table, different score.
+        let s0 = tables.score_gpu(&cluster, 0);
+        let s1 = tables.score_gpu(&cluster, 1);
+        assert_eq!(s0, 8, "A100-80GB table: paper worked example");
+        assert_eq!(s1, score_direct_rule(cluster.gpus()[1], &restricted, OverlapRule::Partial));
+        assert_ne!(s0, s1);
+        assert!((tables.mean_score(&cluster) - (s0 as f64 + s1 as f64) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_tables_uniform_mean_matches_frag_scorer() {
+        let hw = HardwareModel::a100_80gb();
+        let cluster = {
+            let mut c = Cluster::new(hw.clone(), 4);
+            use crate::mig::Placement;
+            use crate::workload::WorkloadId;
+            c.allocate(WorkloadId(1), Placement { gpu: 0, profile: Profile::P2g20gb, index: 0 })
+                .unwrap();
+            c.allocate(WorkloadId(2), Placement { gpu: 2, profile: Profile::P1g10gb, index: 5 })
+                .unwrap();
+            c
+        };
+        let table = ScoreTable::for_hardware(&hw);
+        let tables = FleetTables::for_cluster(&cluster);
+        // Bit-identical f64, not approximately equal: the homogeneous path
+        // must not drift by a ULP.
+        assert_eq!(tables.mean_score(&cluster).to_bits(), table.mean_score(cluster.gpus()).to_bits());
+        assert_eq!(tables.max_raw(), table.raw().iter().copied().max().unwrap() as u32);
+    }
+
+    #[test]
+    fn fleet_tables_matches_detects_foreign_clusters() {
+        let a = Cluster::new(HardwareModel::a100_80gb(), 2);
+        let b = Cluster::new(HardwareModel::a100_80gb(), 2);
+        let tables = FleetTables::for_cluster(&a);
+        assert!(tables.matches(&a));
+        // Same composition but a different Arc: conservative mismatch.
+        assert!(!tables.matches(&b));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use migsched::defrag::DefragPolicy;
+use migsched::mig::FleetSpec;
 use migsched::prelude::*;
 use migsched::sim::{fig4_report, fig5_report, fig6_report};
 use migsched::sim::experiment::run_sweep;
@@ -79,6 +80,8 @@ COMMANDS:
                   --scheduler MFI|MFI-IDX|FF|RR|BF-BI|WF-BI|...  (default MFI)
                   --distribution uniform|skew-small|skew-big|bimodal
                   --gpus N (default 100)   --seed N   --hardware a100-80gb
+                  [--fleet a100:64,h100:32,a100-40gb:16] (heterogeneous
+                   fleet; excludes --gpus/--hardware)
                   [--defrag-every N] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]
                   [--telemetry rows.jsonl] (per-checkpoint run telemetry)
@@ -88,6 +91,7 @@ COMMANDS:
   figures       regenerate a paper figure: --fig 4|5|6 [sweep flags]
   serve         online serving daemon
                   --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
+                  [--fleet a100:64,h100:32] (heterogeneous fleet)
                   --shards N (disjoint sub-clusters, default 1)   --workers N
                   [--serve-model reactor|threadpool] (default reactor on unix)
                   [--idle-timeout-ms N (default 5000)]
@@ -104,6 +108,7 @@ COMMANDS:
   trace replay  open-loop replay (arrivals continue past rejections)
                   --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
                   [--sched MFI|MFI-IDX|...] [--gpus N] [--every N]
+                  [--fleet a100:4,h100:2] (heterogeneous fleet)
                   [--max-events N] [--csv out.csv] [--json]
                   [--defrag-every N] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]
@@ -217,6 +222,28 @@ fn flag_hardware(flags: &Flags) -> Result<HardwareModel, String> {
     HardwareModel::by_name(name).ok_or_else(|| format!("unknown hardware model '{name}'"))
 }
 
+/// `--fleet "a100:64,h100:32,a100-40gb:16"` — a heterogeneous fleet of
+/// per-GPU device classes. The spec fixes both the GPU count and the
+/// per-GPU hardware, so combining it with `--gpus` or `--hardware` is
+/// rejected rather than silently overridden.
+fn flag_fleet(flags: &Flags) -> Result<Option<FleetSpec>, String> {
+    let Some(spec) = flags.get("fleet") else {
+        return Ok(None);
+    };
+    if spec == "true" {
+        return Err("--fleet requires a spec like 'a100:64,h100:32'".into());
+    }
+    for conflicting in ["gpus", "hardware"] {
+        if flags.contains_key(conflicting) {
+            return Err(format!(
+                "--fleet and --{conflicting} are mutually exclusive \
+                 (the fleet spec already fixes the GPU count and per-GPU hardware)"
+            ));
+        }
+    }
+    FleetSpec::parse(spec).map(Some)
+}
+
 /// `--telemetry PATH` (the bare flag without a path is rejected — a file
 /// literally named "true" is never what anyone wants).
 fn flag_telemetry(flags: &Flags) -> Result<Option<&str>, String> {
@@ -237,17 +264,25 @@ fn save_telemetry(path: &str, rows: &[Json]) -> Result<(), String> {
 
 fn cmd_sim(flags: &Flags) -> Result<(), String> {
     let kind = flag_scheduler(flags)?;
-    let hw = flag_hardware(flags)?;
+    let fleet = flag_fleet(flags)?;
+    let hw = match &fleet {
+        Some(f) => f.classes()[0].0.clone(),
+        None => flag_hardware(flags)?,
+    };
     let telemetry_path = flag_telemetry(flags)?;
-    let config = SimConfig {
+    let mut config = SimConfig {
         hardware: hw.clone(),
         num_gpus: flag_usize(flags, "gpus", 100)?,
+        fleet: None,
         distribution: flag_distribution(flags)?,
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: flag_u64(flags, "seed", 1)?,
         defrag: flag_defrag(flags)?,
         telemetry: telemetry_path.is_some(),
     };
+    if let Some(f) = fleet {
+        config = config.with_fleet(f);
+    }
     let engine = SimEngine::new(config.clone());
     let mut sched = kind.build(&hw);
     let t0 = std::time::Instant::now();
@@ -390,9 +425,15 @@ fn serve_config(flags: &Flags) -> Result<migsched::server::DaemonConfig, String>
         Some(name) => ServeModel::parse(name)
             .ok_or_else(|| format!("unknown serve model '{name}' (use reactor or threadpool)"))?,
     };
+    let fleet = flag_fleet(flags)?;
+    let (hardware, num_gpus) = match &fleet {
+        Some(f) => (f.classes()[0].0.clone(), f.total_gpus()),
+        None => (flag_hardware(flags)?, flag_usize(flags, "gpus", 100)?),
+    };
     let config = DaemonConfig {
-        hardware: flag_hardware(flags)?,
-        num_gpus: flag_usize(flags, "gpus", 100)?,
+        hardware,
+        num_gpus,
+        fleet,
         scheduler: flag_scheduler(flags)?,
         workers,
         shards: flag_usize(flags, "shards", 1)?,
@@ -416,6 +457,19 @@ fn serve_config(flags: &Flags) -> Result<migsched::server::DaemonConfig, String>
             config.num_gpus.max(1),
             config.shards
         ));
+    }
+    // Shards partition the fleet preserving its class composition; a spec
+    // whose per-class counts cannot reach every shard is unservable.
+    if let Some(f) = &config.fleet {
+        let parts = f.partition(config.shards);
+        if parts.iter().any(|row| row.iter().sum::<usize>() == 0) {
+            return Err(format!(
+                "fleet '{}' cannot be split into {} composition-preserving \
+                 shards (a shard would own no GPUs); use fewer --shards",
+                f.spec_string(),
+                config.shards
+            ));
+        }
     }
     Ok(config)
 }
@@ -576,12 +630,19 @@ fn cmd_trace_stats(flags: &Flags) -> Result<(), String> {
 fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
     let trace = load_or_ingest_trace(flags)?;
     let kind = flag_scheduler(flags)?;
-    let hw = flag_hardware(flags)?;
-    let num_gpus = flag_usize(
-        flags,
-        "gpus",
-        (trace.capacity_slices as usize / hw.num_slices()).max(1),
-    )?;
+    let fleet = flag_fleet(flags)?;
+    let hw = match &fleet {
+        Some(f) => f.classes()[0].0.clone(),
+        None => flag_hardware(flags)?,
+    };
+    let num_gpus = match &fleet {
+        Some(f) => f.total_gpus(),
+        None => flag_usize(
+            flags,
+            "gpus",
+            (trace.capacity_slices as usize / hw.num_slices()).max(1),
+        )?,
+    };
     if num_gpus == 0 {
         return Err("--gpus must be positive".into());
     }
@@ -589,6 +650,7 @@ fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
     let config = ReplayConfig {
         hardware: hw.clone(),
         num_gpus,
+        fleet,
         record_every: flag_u64(flags, "every", 0)?,
         max_events: flag_u64(flags, "max-events", 0)?,
         defrag: flag_defrag(flags)?,
@@ -671,6 +733,7 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
     let config = SimConfig {
         hardware: hw.clone(),
         num_gpus,
+        fleet: None,
         distribution: Distribution::Uniform, // informational only on replay
         checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
         seed: 0,
@@ -740,6 +803,36 @@ mod tests {
         assert!(err.contains("--max-requests-per-conn must be at least 1"), "{err}");
         let err = serve_config(&flags_of(&[("idle-timeout-ms", "abc")])).unwrap_err();
         assert!(err.contains("--idle-timeout-ms must be an integer"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_accepts_a_fleet_spec() {
+        let config = serve_config(&flags_of(&[("fleet", "a100:2,h100:2")])).unwrap();
+        assert_eq!(config.num_gpus, 4);
+        assert_eq!(config.hardware.name(), "A100-80GB");
+        let fleet = config.fleet.expect("fleet spec threaded through");
+        assert_eq!(fleet.spec_string(), "a100-80gb:2,h100-80gb:2");
+    }
+
+    #[test]
+    fn fleet_flag_rejects_bad_specs_and_conflicts() {
+        let err = flag_fleet(&flags_of(&[("fleet", "b200:4")])).unwrap_err();
+        assert!(err.contains("unknown hardware model 'b200'"), "{err}");
+        let err = flag_fleet(&flags_of(&[("fleet", "a100:0")])).unwrap_err();
+        assert!(err.contains("zero GPU count"), "{err}");
+        let err = flag_fleet(&flags_of(&[("fleet", "a100")])).unwrap_err();
+        assert!(err.contains("expected model:count"), "{err}");
+        let err = flag_fleet(&flags_of(&[("fleet", "true")])).unwrap_err();
+        assert!(err.contains("requires a spec"), "{err}");
+        for conflicting in ["gpus", "hardware"] {
+            let err = flag_fleet(&flags_of(&[("fleet", "a100:4"), (conflicting, "h100")]))
+                .unwrap_err();
+            assert!(err.contains("mutually exclusive"), "{err}");
+        }
+        // A fleet that cannot reach every shard is caught before binding.
+        let err = serve_config(&flags_of(&[("fleet", "a100:1,h100:1"), ("shards", "2")]))
+            .unwrap_err();
+        assert!(err.contains("composition-preserving"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Fleet composition: an ordered list of device classes for heterogeneous
+//! clusters.
+//!
+//! The paper evaluates on a homogeneous A100-80GB fleet; real MIG clouds
+//! mix device generations with different memory-per-slice (A100 40/80GB,
+//! H100, H200). A [`FleetSpec`] names the cluster's device classes in
+//! order — `(HardwareModel, count)` pairs — and is the single source of
+//! truth for per-GPU class assignment: GPUs are laid out as consecutive
+//! runs, class 0 first, so GPU ids and class ids are both stable and a
+//! single-class fleet is indistinguishable from the legacy
+//! `(hardware, num_gpus)` pair.
+//!
+//! The CLI grammar is `model:count[,model:count...]`, e.g.
+//! `--fleet "a100:64,h100:32,a100_40gb:16"`; model names are resolved by
+//! [`HardwareModel::by_name`] (case-insensitive, `_` and `-` equivalent).
+
+use super::hardware::HardwareModel;
+
+/// An ordered list of `(HardwareModel, count)` device classes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    classes: Vec<(HardwareModel, usize)>,
+}
+
+impl FleetSpec {
+    /// Build a fleet from explicit classes. Every class must have a
+    /// positive count and at least one class must be present.
+    pub fn new(classes: Vec<(HardwareModel, usize)>) -> Result<Self, String> {
+        if classes.is_empty() {
+            return Err("fleet spec has no device classes".to_string());
+        }
+        for (hw, count) in &classes {
+            if *count == 0 {
+                return Err(format!("device class '{}' has a zero GPU count", hw.name()));
+            }
+        }
+        Ok(Self { classes })
+    }
+
+    /// The homogeneous special case: one class, `count` GPUs.
+    pub fn uniform(hw: HardwareModel, count: usize) -> Self {
+        assert!(count > 0, "a fleet needs at least one GPU");
+        Self { classes: vec![(hw, count)] }
+    }
+
+    /// Parse the CLI grammar `model:count[,model:count...]`.
+    ///
+    /// Errors are complete sentences naming the offending entry: unknown
+    /// model names, non-numeric or zero counts, and malformed entries are
+    /// all rejected (the acceptance contract of `--fleet`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(
+                "empty fleet spec (expected \"model:count[,model:count...]\", \
+                 e.g. \"a100:64,h100:32\")"
+                    .to_string(),
+            );
+        }
+        let mut classes = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            let (name, count) = entry.split_once(':').ok_or_else(|| {
+                format!("bad fleet entry '{entry}' (expected model:count, e.g. a100:64)")
+            })?;
+            let name = name.trim();
+            let hw = HardwareModel::by_name(name).ok_or_else(|| {
+                format!("unknown hardware model '{name}' in fleet spec")
+            })?;
+            let count: usize = count.trim().parse().map_err(|_| {
+                format!("bad GPU count '{}' for fleet class '{name}'", count.trim())
+            })?;
+            if count == 0 {
+                return Err(format!("device class '{name}' has a zero GPU count"));
+            }
+            classes.push((hw, count));
+        }
+        Self::new(classes)
+    }
+
+    /// The classes in declaration order.
+    pub fn classes(&self) -> &[(HardwareModel, usize)] {
+        &self.classes
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// A single-class fleet — the byte-compatible legacy path.
+    pub fn is_uniform(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.classes.iter().map(|(_, n)| n).sum()
+    }
+
+    /// The hardware model of class `idx` (panics out of range).
+    pub fn class(&self, idx: usize) -> &HardwareModel {
+        &self.classes[idx].0
+    }
+
+    /// The class models without counts, in class-id order.
+    pub fn models(&self) -> Vec<HardwareModel> {
+        self.classes.iter().map(|(hw, _)| hw.clone()).collect()
+    }
+
+    /// Per-class GPU counts, in class-id order.
+    pub fn counts(&self) -> Vec<usize> {
+        self.classes.iter().map(|(_, n)| *n).collect()
+    }
+
+    /// Canonical spec string (`a100-80gb:64,h100-80gb:32`); parses back to
+    /// an equal fleet for the built-in models.
+    pub fn spec_string(&self) -> String {
+        self.classes
+            .iter()
+            .map(|(hw, n)| format!("{}:{n}", hw.name().to_ascii_lowercase()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Split the fleet across `shards` shards preserving class composition:
+    /// each class's count is divided by largest remainder, earlier shards
+    /// taking the extra GPU. Returns `[shard][class] -> count`; some shard
+    /// rows may be all-zero for tiny classes (callers that need every shard
+    /// non-empty must check). For a single-class fleet this reproduces the
+    /// legacy even partition (10 GPUs / 3 shards → sizes [4, 3, 3]).
+    pub fn partition(&self, shards: usize) -> Vec<Vec<usize>> {
+        assert!(shards > 0, "need at least one shard");
+        let mut out = vec![vec![0usize; self.classes.len()]; shards];
+        for (class, (_, count)) in self.classes.iter().enumerate() {
+            let base = count / shards;
+            let rem = count % shards;
+            for (shard, row) in out.iter_mut().enumerate() {
+                row[class] = base + usize::from(shard < rem);
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for FleetSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_the_issue_example() {
+        let f = FleetSpec::parse("a100:64,h100:32,a100_40gb:16").unwrap();
+        assert_eq!(f.num_classes(), 3);
+        assert_eq!(f.total_gpus(), 112);
+        assert_eq!(f.class(0).name(), "A100-80GB");
+        assert_eq!(f.class(1).name(), "H100-80GB");
+        assert_eq!(f.class(2).name(), "A100-40GB");
+        assert!(!f.is_uniform());
+        assert_eq!(f.counts(), vec![64, 32, 16]);
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_case() {
+        let f = FleetSpec::parse(" A100 : 2 , H200-141GB : 1 ").unwrap();
+        assert_eq!(f.total_gpus(), 3);
+        assert_eq!(f.class(1).name(), "H200-141GB");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for (spec, needle) in [
+            ("", "empty fleet spec"),
+            ("a100", "expected model:count"),
+            ("v100:4", "unknown hardware model 'v100'"),
+            ("a100:zero", "bad GPU count 'zero'"),
+            ("a100:0", "zero GPU count"),
+            ("a100:2,h100:0", "zero GPU count"),
+            ("a100:-1", "bad GPU count"),
+        ] {
+            let err = FleetSpec::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "spec {spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn uniform_is_the_single_class_case() {
+        let f = FleetSpec::uniform(HardwareModel::a100_80gb(), 10);
+        assert!(f.is_uniform());
+        assert_eq!(f.total_gpus(), 10);
+        assert_eq!(f.spec_string(), "a100-80gb:10");
+        // The canonical string parses back to the same fleet.
+        assert_eq!(FleetSpec::parse(&f.spec_string()).unwrap(), f);
+    }
+
+    #[test]
+    fn spec_string_round_trips_mixed_fleets() {
+        let f = FleetSpec::parse("a100:3,h100:2,h200:1").unwrap();
+        assert_eq!(f.spec_string(), "a100-80gb:3,h100-80gb:2,h200-141gb:1");
+        assert_eq!(FleetSpec::parse(&f.spec_string()).unwrap(), f);
+    }
+
+    #[test]
+    fn partition_preserves_class_composition() {
+        let f = FleetSpec::parse("a100:10,h100:5,a100-40gb:2").unwrap();
+        let parts = f.partition(3);
+        assert_eq!(parts.len(), 3);
+        // Per-class totals conserved across shards.
+        for class in 0..3 {
+            let total: usize = parts.iter().map(|row| row[class]).sum();
+            assert_eq!(total, f.counts()[class], "class {class}");
+        }
+        // Largest remainder, earlier shards first: 10→[4,3,3], 5→[2,2,1],
+        // 2→[1,1,0].
+        assert_eq!(parts[0], vec![4, 2, 1]);
+        assert_eq!(parts[1], vec![3, 2, 1]);
+        assert_eq!(parts[2], vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn partition_matches_legacy_even_split_for_uniform() {
+        // The PR 4 pin: 10 GPUs over 3 shards → sizes [4, 3, 3].
+        let f = FleetSpec::uniform(HardwareModel::a100_80gb(), 10);
+        let parts = f.partition(3);
+        let sizes: Vec<usize> = parts.iter().map(|row| row.iter().sum()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn display_is_the_spec_string() {
+        let f = FleetSpec::parse("a100:1,h100:1").unwrap();
+        assert_eq!(format!("{f}"), "a100-80gb:1,h100-80gb:1");
+    }
+}

@@ -8,11 +8,13 @@
 //! start indexes. The combination of contiguity and anchor constraints is
 //! exactly what makes MIG clusters fragment.
 
+pub mod fleet;
 pub mod gpu;
 pub mod hardware;
 pub mod placement;
 pub mod profile;
 
+pub use fleet::FleetSpec;
 pub use gpu::GpuState;
 pub use hardware::HardwareModel;
 pub use placement::{candidate_range, candidates_json, Candidate, Placement, CANDIDATES, NUM_CANDIDATES};

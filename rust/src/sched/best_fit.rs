@@ -44,16 +44,19 @@ impl Scheduler for BestFit {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if !cluster.supports(profile) {
             return None;
         }
         if self.strict {
-            // Min free slices among GPUs with capacity; ties → lowest id.
+            // Min free slices among capability-eligible GPUs with capacity;
+            // ties → lowest id.
             let gpu_id = cluster
                 .gpus()
                 .iter()
                 .enumerate()
-                .filter(|(_, g)| g.free_slices() >= profile.size())
+                .filter(|(id, g)| {
+                    cluster.supports_on(*id, profile) && g.free_slices() >= profile.size()
+                })
                 .min_by_key(|(id, g)| (g.free_slices(), *id))
                 .map(|(id, _)| id)?;
             let index = self.policy.select(cluster.gpus()[gpu_id], profile)?;
@@ -63,7 +66,9 @@ impl Scheduler for BestFit {
             .gpus()
             .iter()
             .enumerate()
-            .filter(|(_, g)| g.free_slices() >= profile.size())
+            .filter(|(id, g)| {
+                cluster.supports_on(*id, profile) && g.free_slices() >= profile.size()
+            })
             .map(|(id, g)| (g.free_slices(), id))
             .collect();
         ranked.sort_unstable();

@@ -54,20 +54,27 @@ impl Scheduler for FirstFit {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if !cluster.supports(profile) {
             return None;
         }
         if self.strict {
             // Commit to the first GPU passing the resource-count check.
+            // GPUs whose device class does not enable the profile are not
+            // candidates at all (a capability fact, not a fragmentation
+            // one), so the count check only ranges over eligible classes.
             let gpu_id = cluster
                 .gpus()
                 .iter()
-                .position(|g| g.free_slices() >= profile.size())?;
+                .enumerate()
+                .find(|(id, g)| {
+                    cluster.supports_on(*id, profile) && g.free_slices() >= profile.size()
+                })
+                .map(|(id, _)| id)?;
             let index = cluster.gpus()[gpu_id].first_feasible(profile)?;
             return Some(Placement { gpu: gpu_id, profile, index });
         }
         for (gpu_id, g) in cluster.gpus().iter().enumerate() {
-            if g.free_slices() < profile.size() {
+            if !cluster.supports_on(gpu_id, profile) || g.free_slices() < profile.size() {
                 continue;
             }
             if let Some(index) = g.first_feasible(profile) {

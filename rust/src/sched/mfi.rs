@@ -13,13 +13,16 @@
 
 use super::Scheduler;
 use crate::cluster::Cluster;
-use crate::frag::{evaluate_cluster, OverlapRule, ScoreTable};
+use crate::frag::{evaluate_cluster, evaluate_fleet, FleetTables, OverlapRule, ScoreTable};
 use crate::mig::{HardwareModel, Placement, Profile};
 
 /// The MFI scheduler.
 #[derive(Clone, Debug)]
 pub struct Mfi {
     table: ScoreTable,
+    /// Per-class tables, built lazily on the first mixed-fleet decision and
+    /// revalidated by Arc identity on every call (see [`FleetTables::matches`]).
+    fleet: Option<FleetTables>,
     name: String,
 }
 
@@ -31,14 +34,14 @@ impl Mfi {
 
     /// MFI for a specific hardware model, default overlap rule.
     pub fn for_hardware(hw: &HardwareModel) -> Self {
-        Self { table: ScoreTable::for_hardware(hw), name: "MFI".to_string() }
+        Self { table: ScoreTable::for_hardware(hw), fleet: None, name: "MFI".to_string() }
     }
 
     /// MFI under an explicit fragmentation overlap rule (ablation).
     pub fn with_rule(hw: &HardwareModel, rule: OverlapRule) -> Self {
         let name =
             if rule == OverlapRule::default() { "MFI".into() } else { format!("MFI-{}", rule.name()) };
-        Self { table: ScoreTable::for_hardware_rule(hw, rule), name }
+        Self { table: ScoreTable::for_hardware_rule(hw, rule), fleet: None, name }
     }
 
     pub fn score_table(&self) -> &ScoreTable {
@@ -58,10 +61,25 @@ impl Scheduler for Mfi {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if cluster.is_uniform() {
+            // Homogeneous hot path: untouched by the fleet refactor.
+            if !cluster.hardware().supports(profile) {
+                return None;
+            }
+            return evaluate_cluster(&self.table, cluster.gpus(), profile);
+        }
+        if !cluster.supports(profile) {
             return None;
         }
-        evaluate_cluster(&self.table, cluster.gpus(), profile)
+        let fresh = !matches!(&self.fleet, Some(t) if t.matches(cluster));
+        if fresh {
+            self.fleet = Some(FleetTables::with_rule(cluster, self.table.rule()));
+        }
+        evaluate_fleet(self.fleet.as_ref().expect("fleet tables built"), cluster, profile)
+    }
+
+    fn reset(&mut self) {
+        self.fleet = None;
     }
 }
 

@@ -108,7 +108,11 @@ impl Scheduler for MfiIndexed {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        // Cluster-wide guard: on a uniform cluster this is the legacy
+        // single-model check; on a mixed fleet a profile no class enables
+        // is rejected without touching the index (per-class enablement is
+        // enforced inside `FragIndex` bucketing).
+        if !cluster.supports(profile) {
             return None;
         }
         self.sync(cluster);

@@ -48,6 +48,16 @@ impl MfiXla {
         cluster: &Cluster,
         profile: Profile,
     ) -> Result<Option<Placement>> {
+        if !cluster.is_uniform() {
+            // The AOT artifact bakes in ONE hardware model's score table;
+            // scoring a mixed fleet with it would silently misprice every
+            // non-class-0 GPU. Fail loudly instead.
+            anyhow::bail!(
+                "MFI-XLA evaluates against a single compiled hardware table and does not \
+                 support heterogeneous fleets ({} device classes)",
+                cluster.num_classes()
+            );
+        }
         if !cluster.hardware().supports(profile) {
             return Ok(None);
         }

@@ -29,14 +29,14 @@ impl Scheduler for RandomFit {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if !cluster.supports(profile) {
             return None;
         }
         // Reservoir-sample uniformly over feasible placements in one pass.
         let mut chosen: Option<Placement> = None;
         let mut count = 0u64;
         for (gpu_id, g) in cluster.gpus().iter().enumerate() {
-            if g.free_slices() < profile.size() {
+            if !cluster.supports_on(gpu_id, profile) || g.free_slices() < profile.size() {
                 continue;
             }
             for idx in g.feasible_indexes(profile) {

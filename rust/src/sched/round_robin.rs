@@ -49,13 +49,19 @@ impl Scheduler for RoundRobin {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if !cluster.supports(profile) {
             return None;
         }
         let n = cluster.num_gpus();
         for off in 0..n {
             let gpu_id = (self.cursor + off) % n;
             let g = cluster.gpus()[gpu_id];
+            // A GPU whose device class does not enable the profile is not
+            // an available GPU for this request: the cursor walks past it
+            // without committing (capability, not fragmentation).
+            if !cluster.supports_on(gpu_id, profile) {
+                continue;
+            }
             if self.strict {
                 // Commit to the first non-full GPU; the cursor advances
                 // past it whether or not the placement succeeds.

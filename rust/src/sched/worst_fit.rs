@@ -43,17 +43,20 @@ impl Scheduler for WorstFit {
     }
 
     fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
-        if !cluster.hardware().supports(profile) {
+        if !cluster.supports(profile) {
             return None;
         }
         if self.strict {
-            // Max free slices among GPUs with capacity; ties → lowest id
-            // (reverse-id key because max_by_key keeps the LAST maximum).
+            // Max free slices among capability-eligible GPUs with capacity;
+            // ties → lowest id (reverse-id key because max_by_key keeps the
+            // LAST maximum).
             let gpu_id = cluster
                 .gpus()
                 .iter()
                 .enumerate()
-                .filter(|(_, g)| g.free_slices() >= profile.size())
+                .filter(|(id, g)| {
+                    cluster.supports_on(*id, profile) && g.free_slices() >= profile.size()
+                })
                 .max_by_key(|(id, g)| (g.free_slices(), usize::MAX - *id))
                 .map(|(id, _)| id)?;
             let index = self.policy.select(cluster.gpus()[gpu_id], profile)?;
@@ -63,7 +66,9 @@ impl Scheduler for WorstFit {
             .gpus()
             .iter()
             .enumerate()
-            .filter(|(_, g)| g.free_slices() >= profile.size())
+            .filter(|(id, g)| {
+                cluster.supports_on(*id, profile) && g.free_slices() >= profile.size()
+            })
             .map(|(id, g)| (std::cmp::Reverse(g.free_slices()), id))
             .collect();
         ranked.sort_unstable();

@@ -13,7 +13,6 @@ use std::borrow::Cow;
 use super::http::{Request, Response};
 use super::shard::{Lease, Shard, ShardSet, ShardState};
 use crate::cluster::{snapshot, ClusterMetrics};
-use crate::frag::FragScorer;
 use crate::util::json::{scan_flat_object, Json};
 use crate::workload::{TenantId, WorkloadId};
 
@@ -123,7 +122,10 @@ fn submit_one(
     shards: &ShardSet,
     req: &SubmitReq<'_>,
 ) -> (u16, Json) {
-    let profile = match s.cluster.hardware().parse_profile(&req.profile) {
+    // Resolved against every device class in the shard's fleet, so
+    // hardware-specific names (A100-40GB's "3g.20gb", H200's "1g.18gb")
+    // are accepted whenever some class serves them.
+    let profile = match s.cluster.parse_profile(&req.profile) {
         Some(p) => p,
         None => {
             // Rejected before it counts as an arrival (unchanged from the
@@ -155,8 +157,9 @@ fn submit_one(
         }
     };
     // ΔF per commit: only the target GPU's score changes on allocate, so
-    // the delta is two table lookups, not a fleet rescore.
-    let f_before = i64::from(s.scorer.score(s.cluster.gpus()[placement.gpu]));
+    // the delta is two table lookups (against the GPU's own class's
+    // table), not a fleet rescore.
+    let f_before = i64::from(s.tables.score_gpu(&s.cluster, placement.gpu));
     let seq = s.next_seq;
     s.next_seq += 1;
     let id = shards.workload_id(shard, seq);
@@ -167,7 +170,7 @@ fn submit_one(
         let ShardState { scheduler, cluster, .. } = &mut *s;
         scheduler.on_commit(cluster, placement);
     }
-    let f_after = i64::from(s.scorer.score(s.cluster.gpus()[placement.gpu]));
+    let f_after = i64::from(s.tables.score_gpu(&s.cluster, placement.gpu));
     metrics.delta_f[shard.index].record(f_after - f_before);
     s.accepted_total += 1;
     let expires_at = req.duration.map(|d| s.clock_slot + d);
@@ -390,6 +393,8 @@ fn stats(shards: &ShardSet) -> Response {
     let mut clock = 0u64;
     let mut migrations = 0u64;
     let mut migrated_bytes = 0u64;
+    let num_classes = shards.fleet().num_classes();
+    let mut per_class = vec![crate::cluster::ClassStats::default(); num_classes];
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
         allocated += s.cluster.allocated_workloads();
@@ -402,8 +407,17 @@ fn stats(shards: &ShardSet) -> Response {
         active += s.cluster.active_gpus();
         used += s.cluster.used_slices();
         capacity += s.cluster.capacity_slices();
-        score_total +=
-            s.cluster.gpus().iter().map(|&g| u64::from(s.scorer.score(g))).sum::<u64>();
+        score_total += (0..s.cluster.num_gpus())
+            .map(|g| u64::from(s.tables.score_gpu(&s.cluster, g)))
+            .sum::<u64>();
+        if num_classes > 1 {
+            for (acc, stats) in per_class.iter_mut().zip(s.cluster.per_class_stats()) {
+                acc.gpus += stats.gpus;
+                acc.active_gpus += stats.active_gpus;
+                acc.used_slices += stats.used_slices;
+                acc.allocated_workloads += stats.allocated_workloads;
+            }
+        }
         clock = s.clock_slot;
     }
     let metrics = ClusterMetrics {
@@ -431,6 +445,25 @@ fn stats(shards: &ShardSet) -> Response {
     if shards.num_shards() > 1 {
         j.set("shards", shards.num_shards());
     }
+    // Per-class breakdown, heterogeneous fleets only — single-class stats
+    // stay byte-identical to the legacy serialization.
+    if num_classes > 1 {
+        let classes: Vec<Json> = shards
+            .fleet()
+            .classes()
+            .iter()
+            .zip(&per_class)
+            .map(|((hw, _), stats)| {
+                Json::obj()
+                    .with("model", hw.name())
+                    .with("gpus", stats.gpus)
+                    .with("active_gpus", stats.active_gpus)
+                    .with("used_slices", stats.used_slices)
+                    .with("allocated_workloads", stats.allocated_workloads)
+            })
+            .collect();
+        j.set("classes", Json::Arr(classes));
+    }
     Response::json(200, &j)
 }
 
@@ -441,19 +474,31 @@ fn stats(shards: &ShardSet) -> Response {
 fn cluster_snapshot(shards: &ShardSet) -> Response {
     let mut hardware_name = String::new();
     let mut masks: Vec<u8> = Vec::new();
+    let mut gpu_classes: Vec<u8> = Vec::new();
     let mut diagrams: Vec<Json> = Vec::new();
     let mut allocs: Vec<(WorkloadId, usize, crate::mig::Profile, u8)> = Vec::new();
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
         hardware_name = s.cluster.hardware().name().to_string();
         masks.extend(s.cluster.occupancy_masks());
+        gpu_classes.extend_from_slice(s.cluster.class_ids());
         for (id, p) in s.cluster.allocations() {
             allocs.push((id, shard.gpu_offset + p.gpu, p.profile, p.index));
         }
         diagrams.extend(s.cluster.gpus().iter().map(|g| Json::from(g.diagram())));
     }
     allocs.sort_by_key(|&(id, ..)| id);
-    let mut j = snapshot::parts_to_json(&hardware_name, shards.total_gpus(), &masks, &allocs);
+    let fleet = shards.fleet();
+    let mut j = if fleet.is_uniform() {
+        snapshot::parts_to_json(&hardware_name, shards.total_gpus(), &masks, &allocs)
+    } else {
+        // v2: global class table + the concatenated per-shard class
+        // assignment (class runs interleave across shards, which the v2
+        // loader supports).
+        let models = fleet.models();
+        let names: Vec<&str> = models.iter().map(|hw| hw.name()).collect();
+        snapshot::parts_to_json_fleet(&names, &gpu_classes, &masks, &allocs)
+    };
     j.set("diagrams", Json::Arr(diagrams));
     Response::json(200, &j)
 }
@@ -478,14 +523,34 @@ fn hardware(shards: &ShardSet) -> Response {
                 )
         })
         .collect();
-    Response::json(
-        200,
-        &Json::obj()
-            .with("model", hw.name())
-            .with("num_slices", hw.num_slices())
-            .with("total_memory_gb", hw.total_memory_gb() as u64)
-            .with("profiles", Json::Arr(profiles)),
-    )
+    let mut j = Json::obj()
+        .with("model", hw.name())
+        .with("num_slices", hw.num_slices())
+        .with("total_memory_gb", hw.total_memory_gb() as u64)
+        .with("profiles", Json::Arr(profiles));
+    let fleet = shards.fleet();
+    if !fleet.is_uniform() {
+        // Heterogeneous fleet: `model`/`profiles` above describe class 0;
+        // name every class so clients know to consult `/v1/stats` and
+        // `/v1/cluster` for the per-class picture. Absent on uniform
+        // fleets, keeping those bytes unchanged.
+        j.set(
+            "classes",
+            Json::Arr(
+                fleet
+                    .classes()
+                    .iter()
+                    .map(|(hw, n)| {
+                        Json::obj()
+                            .with("model", hw.name())
+                            .with("gpus", *n)
+                            .with("total_memory_gb", hw.total_memory_gb() as u64)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Response::json(200, &j)
 }
 
 /// `GET /metrics` — the whole registry as Prometheus text exposition
@@ -1075,6 +1140,109 @@ mod tests {
         // Shard 0's gauges agree with the partial report.
         let s0 = state.shard(0).unwrap().state.lock().unwrap();
         assert_eq!(s0.migrations_total, j.req_u64("migrations").unwrap());
+    }
+
+    fn fleet_set(spec: &str, shards: usize) -> Arc<ShardSet> {
+        let fleet = crate::mig::FleetSpec::parse(spec).unwrap();
+        Daemon::new(DaemonConfig {
+            num_gpus: fleet.total_gpus(),
+            hardware: fleet.classes()[0].0.clone(),
+            fleet: Some(fleet),
+            shards,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards()
+    }
+
+    #[test]
+    fn hetero_submit_resolves_profiles_from_any_class() {
+        // "3g.20gb" is the A100-40GB's name for the 3g shape; a mixed
+        // fleet accepts it even though class 0 (A100-80GB) calls it
+        // "3g.40gb".
+        let state = fleet_set("a100:1,a100-40gb:1", 1);
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"profile":"3g.20gb"}"#), &state);
+        assert_eq!(r.status, 201, "{:?}", String::from_utf8_lossy(&r.body));
+        assert_eq!(json_of(&r).req_str("profile").unwrap(), "3g.40gb");
+        // Still a real vocabulary: unknown names stay 400.
+        let r = dispatch(&req("POST", "/v1/workloads", r#"{"profile":"9g.90gb"}"#), &state);
+        assert_eq!(r.status, 400);
+    }
+
+    #[test]
+    fn hetero_stats_carry_a_conserving_class_breakdown() {
+        let state = fleet_set("a100:2,h100:2", 1);
+        for body in [
+            r#"{"profile":"7g.80gb"}"#,
+            r#"{"profile":"2g.20gb"}"#,
+            r#"{"profile":"1g.10gb"}"#,
+        ] {
+            assert_eq!(dispatch(&req("POST", "/v1/workloads", body), &state).status, 201);
+        }
+        let stats = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        let classes = stats.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].req_str("model").unwrap(), "A100-80GB");
+        assert_eq!(classes[1].req_str("model").unwrap(), "H100-80GB");
+        // Per-class gauges sum to the fleet-wide gauges.
+        for (key, want) in [
+            ("gpus", stats.req_u64("num_gpus").unwrap()),
+            ("active_gpus", stats.req_u64("active_gpus").unwrap()),
+            ("allocated_workloads", stats.req_u64("allocated_workloads").unwrap()),
+        ] {
+            let sum: u64 = classes.iter().map(|c| c.req_u64(key).unwrap()).sum();
+            assert_eq!(sum, want, "per-class '{key}' must conserve the total");
+        }
+        let used: u64 = classes.iter().map(|c| c.req_u64("used_slices").unwrap()).sum();
+        assert_eq!(used as f64 / stats.req_u64("capacity_slices").unwrap() as f64, {
+            stats.get("utilization").and_then(Json::as_f64).unwrap()
+        });
+        // Uniform daemons never grow the key.
+        let uniform = json_of(&dispatch(&req("GET", "/v1/stats", ""), &shard_set()));
+        assert!(uniform.get("classes").is_none());
+    }
+
+    #[test]
+    fn hetero_cluster_snapshot_is_v2_and_loadable() {
+        // Two shards over a 2-class fleet: the merged snapshot interleaves
+        // class runs, and the v2 loader must rebuild the exact layout.
+        let state = fleet_set("a100:3,a100-40gb:3", 2);
+        for body in [
+            r#"{"profile":"3g.40gb","tenant":1}"#,
+            r#"{"profile":"1g.10gb","tenant":2}"#,
+            r#"{"profile":"2g.20gb","tenant":3}"#,
+        ] {
+            assert_eq!(dispatch(&req("POST", "/v1/workloads", body), &state).status, 201);
+        }
+        let snap = json_of(&dispatch(&req("GET", "/v1/cluster", ""), &state));
+        assert!(snap.get("hardware").is_none(), "v2 must not carry the v1 key");
+        assert_eq!(snap.req_u64("num_gpus").unwrap(), 6);
+        let classes = snap.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        // Shards own [a100:2, a40:2] and [a100:1, a40:1] → global ids
+        // interleave: [0,0,1,1,0,1].
+        let ids: Vec<u64> = snap
+            .get("gpu_classes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![0, 0, 1, 1, 0, 1]);
+        let restored = snapshot::from_json(&snap).unwrap();
+        assert_eq!(restored.num_gpus(), 6);
+        assert_eq!(restored.allocated_workloads(), 3);
+        assert_eq!(
+            restored.class_ids(),
+            &[0, 0, 1, 1, 0, 1],
+            "merged interleaved class runs survive the round-trip"
+        );
+        // /v1/hardware names every class (and only then).
+        let hw = json_of(&dispatch(&req("GET", "/v1/hardware", ""), &state));
+        assert_eq!(hw.get("classes").unwrap().as_arr().unwrap().len(), 2);
+        let hw = json_of(&dispatch(&req("GET", "/v1/hardware", ""), &shard_set()));
+        assert!(hw.get("classes").is_none());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use super::http::parse_request_from;
 use super::metrics;
 use super::shard::ShardSet;
 use super::threadpool::ThreadPool;
-use crate::mig::HardwareModel;
+use crate::mig::{FleetSpec, HardwareModel};
 use crate::obs::log::RateLimited;
 use crate::sched::SchedulerKind;
 
@@ -121,6 +121,12 @@ pub struct DaemonDefrag {
 pub struct DaemonConfig {
     pub hardware: HardwareModel,
     pub num_gpus: usize,
+    /// Heterogeneous fleet (`--fleet`). When set it defines the served
+    /// cluster — `hardware`/`num_gpus` must agree with class 0 / the fleet
+    /// total (the CLI keeps them in sync) — and the partition across
+    /// shards preserves class composition. `None` = a uniform fleet of
+    /// `num_gpus` × `hardware`, the byte-compatible legacy path.
+    pub fleet: Option<FleetSpec>,
     pub scheduler: SchedulerKind,
     /// Serving threads: event loops under [`ServeModel::Reactor`], HTTP
     /// workers under [`ServeModel::Threadpool`]. Must be ≥ 1.
@@ -146,6 +152,7 @@ impl Default for DaemonConfig {
         Self {
             hardware: HardwareModel::a100_80gb(),
             num_gpus: 100,
+            fleet: None,
             scheduler: SchedulerKind::Mfi,
             workers: 8,
             shards: 1,

@@ -255,6 +255,8 @@ pub fn render_into(shards: &ShardSet, out: &mut String) {
     let mut capacity = 0u64;
     let mut score_total = 0u64;
     let mut clock = 0u64;
+    let num_classes = shards.fleet().num_classes();
+    let mut per_class = vec![crate::cluster::ClassStats::default(); num_classes];
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
         allocated += s.cluster.allocated_workloads() as u64;
@@ -267,8 +269,19 @@ pub fn render_into(shards: &ShardSet, out: &mut String) {
         active += s.cluster.active_gpus() as u64;
         used += s.cluster.used_slices();
         capacity += s.cluster.capacity_slices();
-        score_total +=
-            s.cluster.gpus().iter().map(|&g| u64::from(s.scorer.score(g))).sum::<u64>();
+        // Each GPU scores against its own class's table (identical to the
+        // flat scorer on uniform fleets).
+        score_total += (0..s.cluster.num_gpus())
+            .map(|g| u64::from(s.tables.score_gpu(&s.cluster, g)))
+            .sum::<u64>();
+        if num_classes > 1 {
+            for (acc, stats) in per_class.iter_mut().zip(s.cluster.per_class_stats()) {
+                acc.gpus += stats.gpus;
+                acc.active_gpus += stats.active_gpus;
+                acc.used_slices += stats.used_slices;
+                acc.allocated_workloads += stats.allocated_workloads;
+            }
+        }
         clock = s.clock_slot;
     }
     let one = |v: u64| vec![(Labels::new(), v)];
@@ -302,6 +315,38 @@ pub fn render_into(shards: &ShardSet, out: &mut String) {
     e.gauge("migsched_clock_slot", "Logical slot clock.", &oneg(clock as f64));
     e.gauge("migsched_num_gpus", "Fleet size in GPUs.", &oneg(shards.total_gpus() as f64));
     e.gauge("migsched_capacity_slices", "Fleet memory-slice capacity.", &oneg(capacity as f64));
+    // Per-class gauges, heterogeneous fleets only — a single-class scrape
+    // stays byte-identical to the legacy exposition.
+    if num_classes > 1 {
+        let models = shards.fleet().models();
+        let labeled = |pick: fn(&crate::cluster::ClassStats) -> u64| {
+            models
+                .iter()
+                .zip(&per_class)
+                .map(|(hw, stats)| (Labels::new().with("model", hw.name()), pick(stats) as f64))
+                .collect::<Vec<_>>()
+        };
+        e.gauge(
+            "migsched_class_gpus",
+            "GPUs per device class.",
+            &labeled(|s| s.gpus as u64),
+        );
+        e.gauge(
+            "migsched_class_active_gpus",
+            "GPUs with at least one instance, per device class.",
+            &labeled(|s| s.active_gpus as u64),
+        );
+        e.gauge(
+            "migsched_class_used_slices",
+            "Memory slices in use, per device class.",
+            &labeled(|s| s.used_slices),
+        );
+        e.gauge(
+            "migsched_class_allocated_workloads",
+            "Workloads currently placed, per device class.",
+            &labeled(|s| s.allocated_workloads as u64),
+        );
+    }
     e.gauge("migsched_shards", "Shard count.", &oneg(shards.num_shards() as f64));
     e.gauge(
         "migsched_uptime_seconds",
@@ -357,6 +402,43 @@ mod tests {
         let grown = buf.capacity();
         render_into(&shards, &mut buf);
         assert!(buf.capacity() >= grown);
+    }
+
+    #[test]
+    fn per_class_gauges_appear_only_on_mixed_fleets() {
+        let uniform = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            shards: 1,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        assert!(!render(&uniform).contains("migsched_class_"));
+
+        let fleet = crate::mig::FleetSpec::parse("a100:2,h100:1").unwrap();
+        let mixed = Daemon::new(DaemonConfig {
+            num_gpus: fleet.total_gpus(),
+            hardware: fleet.classes()[0].0.clone(),
+            fleet: Some(fleet),
+            shards: 1,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        let text = render(&mixed);
+        assert!(text.contains("# TYPE migsched_class_gpus gauge"));
+        assert!(text.contains("migsched_class_gpus{model=\"A100-80GB\"} 2\n"));
+        assert!(text.contains("migsched_class_gpus{model=\"H100-80GB\"} 1\n"));
+        for family in [
+            "migsched_class_active_gpus",
+            "migsched_class_used_slices",
+            "migsched_class_allocated_workloads",
+        ] {
+            assert!(
+                text.contains(&format!("{family}{{model=\"A100-80GB\"}} 0\n")),
+                "missing idle sample for {family}"
+            );
+        }
     }
 
     #[test]

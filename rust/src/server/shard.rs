@@ -27,7 +27,8 @@ use super::daemon::{ConnLimits, DaemonConfig};
 use super::metrics::ServerMetrics;
 use crate::cluster::Cluster;
 use crate::defrag::{apply_plan, plan_defrag_budgeted, CostModel, MigrationPlan};
-use crate::frag::{FragScorer, ScoreTable};
+use crate::frag::{FleetTables, ScoreTable};
+use crate::mig::FleetSpec;
 use crate::sched::Scheduler;
 use crate::util::json::Json;
 use crate::workload::{TenantId, WorkloadId};
@@ -47,6 +48,9 @@ pub struct ShardState {
     pub cluster: Cluster,
     pub scheduler: Box<dyn Scheduler + Send>,
     pub scorer: ScoreTable,
+    /// Per-class score tables for this shard's sub-cluster; on a uniform
+    /// fleet its arithmetic is bit-identical to `scorer` alone.
+    pub tables: FleetTables,
     pub leases: HashMap<WorkloadId, Lease>,
     /// Local submission sequence; the wire-visible id is
     /// `seq * num_shards + shard_index` (see [`ShardSet::workload_id`]).
@@ -100,7 +104,7 @@ impl ShardState {
         max_moves: usize,
         cost_budget: u64,
     ) -> Result<MigrationPlan, String> {
-        if self.scorer.mean_score(self.cluster.gpus()) < threshold {
+        if self.tables.mean_score(&self.cluster) < threshold {
             return Ok(MigrationPlan::default());
         }
         let plan = plan_defrag_budgeted(
@@ -137,6 +141,9 @@ pub struct Shard {
 pub struct ShardSet {
     shards: Vec<Shard>,
     router: ShardRouter,
+    /// The served fleet (uniform when no `--fleet` was given); the source
+    /// of truth for class names/ids in `/v1/stats` and `/v1/cluster`.
+    fleet: FleetSpec,
     total_gpus: usize,
     scheduler_name: &'static str,
     /// The daemon's metric registry (see [`super::metrics`]); recording is
@@ -151,26 +158,49 @@ pub struct ShardSet {
 }
 
 impl ShardSet {
-    /// Partition `config.num_gpus` GPUs into `config.shards` sub-clusters
+    /// Partition the fleet into `config.shards` sub-clusters. Each class's
+    /// count is split by largest remainder (earlier shards taking the
+    /// extra GPU), so every shard preserves the fleet's class composition;
+    /// for a uniform fleet this reproduces the legacy even partition
     /// (sizes differing by at most one, larger shards first).
     pub fn new(config: &DaemonConfig) -> Self {
         assert!(config.shards >= 1, "daemon needs at least one shard");
+        let fleet = config.fleet.clone().unwrap_or_else(|| {
+            FleetSpec::uniform(config.hardware.clone(), config.num_gpus)
+        });
+        assert_eq!(
+            fleet.total_gpus(),
+            config.num_gpus,
+            "fleet total ({}) disagrees with num_gpus ({})",
+            fleet.total_gpus(),
+            config.num_gpus
+        );
         assert!(
             config.shards <= config.num_gpus,
             "more shards ({}) than GPUs ({})",
             config.shards,
             config.num_gpus
         );
-        let base = config.num_gpus / config.shards;
-        let rem = config.num_gpus % config.shards;
+        let parts = fleet.partition(config.shards);
+        assert!(
+            parts.iter().all(|row| row.iter().sum::<usize>() > 0),
+            "fleet {} cannot be split into {} composition-preserving shard(s) \
+             (a shard would own no GPUs)",
+            fleet.spec_string(),
+            config.shards
+        );
+        let models = fleet.models();
         let mut shards = Vec::with_capacity(config.shards);
         let mut offset = 0usize;
-        for index in 0..config.shards {
-            let size = base + usize::from(index < rem);
+        for (index, row) in parts.iter().enumerate() {
+            let size: usize = row.iter().sum();
+            let cluster = Cluster::from_classes(models.clone(), row);
+            let tables = FleetTables::for_cluster(&cluster);
             let state = ShardState {
-                cluster: Cluster::new(config.hardware.clone(), size),
+                cluster,
                 scheduler: config.scheduler.build(&config.hardware),
                 scorer: ScoreTable::for_hardware(&config.hardware),
+                tables,
                 leases: HashMap::new(),
                 next_seq: 0,
                 clock_slot: 0,
@@ -188,20 +218,24 @@ impl ShardSet {
         if cfg!(feature = "xla") {
             features.push(Json::from("xla"));
         }
-        let version_body: Arc<[u8]> = Json::obj()
+        let mut version = Json::obj()
             .with("name", env!("CARGO_PKG_NAME"))
             .with("version", env!("CARGO_PKG_VERSION"))
             .with("features", Json::Arr(features))
             .with("scheduler", config.scheduler.name())
             .with("serve_model", config.model.effective().name())
             .with("idle_timeout_ms", config.idle_timeout.as_millis() as u64)
-            .with("max_requests_per_conn", config.max_requests_per_conn as u64)
-            .to_string_compact()
-            .into_bytes()
-            .into();
+            .with("max_requests_per_conn", config.max_requests_per_conn as u64);
+        if !fleet.is_uniform() {
+            // Only on heterogeneous fleets, so single-class `/v1/version`
+            // bytes are unchanged.
+            version.set("fleet", fleet.spec_string().as_str());
+        }
+        let version_body: Arc<[u8]> = version.to_string_compact().into_bytes().into();
         Self {
             shards,
             router: ShardRouter::new(config.shards),
+            fleet,
             total_gpus: config.num_gpus,
             scheduler_name: config.scheduler.name(),
             metrics: ServerMetrics::new(config.shards),
@@ -242,6 +276,11 @@ impl ShardSet {
     /// Fleet size across all shards.
     pub fn total_gpus(&self) -> usize {
         self.total_gpus
+    }
+
+    /// The served fleet (a single-class spec when no `--fleet` was given).
+    pub fn fleet(&self) -> &FleetSpec {
+        &self.fleet
     }
 
     pub fn scheduler_name(&self) -> &'static str {
@@ -464,6 +503,84 @@ mod tests {
     #[should_panic(expected = "more shards")]
     fn rejects_more_shards_than_gpus() {
         let _ = ShardSet::new(&config(2, 3));
+    }
+
+    fn fleet_config(spec: &str, shards: usize) -> DaemonConfig {
+        let fleet = FleetSpec::parse(spec).unwrap();
+        DaemonConfig {
+            num_gpus: fleet.total_gpus(),
+            hardware: fleet.classes()[0].0.clone(),
+            fleet: Some(fleet),
+            shards,
+            workers: 1,
+            ..DaemonConfig::default()
+        }
+    }
+
+    #[test]
+    fn fleet_partition_preserves_class_composition() {
+        // 5 A100 + 3 H100 over 2 shards: each class split by largest
+        // remainder → shard 0 gets [3, 2], shard 1 gets [2, 1].
+        let set = ShardSet::new(&fleet_config("a100:5,h100:3", 2));
+        assert_eq!(set.total_gpus(), 8);
+        assert_eq!(set.fleet().spec_string(), "a100-80gb:5,h100-80gb:3");
+        let mut per_class_total = [0usize; 2];
+        let mut expected_offset = 0usize;
+        for shard in set.shards() {
+            assert_eq!(shard.gpu_offset, expected_offset);
+            let s = shard.state.lock().unwrap();
+            assert_eq!(s.cluster.num_classes(), 2, "global class table on every shard");
+            for stats in s.cluster.per_class_stats().iter().enumerate() {
+                per_class_total[stats.0] += stats.1.gpus;
+            }
+            expected_offset += s.cluster.num_gpus();
+        }
+        assert_eq!(per_class_total, [5, 3], "no GPU lost or duplicated per class");
+        let sizes: Vec<usize> = set
+            .shards()
+            .iter()
+            .map(|s| s.state.lock().unwrap().cluster.num_gpus())
+            .collect();
+        assert_eq!(sizes, vec![5, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "composition-preserving")]
+    fn rejects_partitions_that_empty_a_shard() {
+        // Two 1-GPU classes over 2 shards: both extras land on shard 0,
+        // leaving shard 1 with no GPUs at all.
+        let _ = ShardSet::new(&fleet_config("a100:1,h100:1", 2));
+    }
+
+    #[test]
+    fn fleet_defrag_sweep_stays_in_class() {
+        use crate::mig::Placement;
+        let set = ShardSet::new(&fleet_config("a100:2,a100-40gb:2", 1));
+        let shard = set.shard(0).unwrap();
+        let mut s = shard.state.lock().unwrap();
+        // Misplace a 1g on each class's first GPU (blocking 4g anchors).
+        s.cluster
+            .allocate(
+                WorkloadId(0),
+                Placement { gpu: 0, profile: Profile::P1g10gb, index: 1 },
+            )
+            .unwrap();
+        s.cluster
+            .allocate(
+                WorkloadId(1),
+                Placement { gpu: 2, profile: Profile::P1g10gb, index: 1 },
+            )
+            .unwrap();
+        let plan = s.defrag_sweep(0.0, 16, 0).unwrap();
+        assert!(!plan.is_empty());
+        for mv in &plan.moves {
+            assert_eq!(
+                s.cluster.class_of(mv.from.gpu),
+                s.cluster.class_of(mv.to.gpu),
+                "daemon sweep crossed device classes: {mv:?}"
+            );
+        }
+        assert_eq!(s.migrations_total, plan.moves.len() as u64);
     }
 
     #[test]

@@ -13,8 +13,8 @@ use std::collections::BinaryHeap;
 
 use crate::cluster::{Cluster, ClusterMetrics};
 use crate::defrag::DefragPolicy;
-use crate::frag::{FragScorer, ScoreTable};
-use crate::mig::HardwareModel;
+use crate::frag::{FleetTables, ScoreTable};
+use crate::mig::{FleetSpec, HardwareModel};
 use crate::obs::hist::LatencyHist;
 use crate::obs::telemetry::{slot_row, SlotStats};
 use crate::sched::Scheduler;
@@ -28,6 +28,11 @@ pub struct SimConfig {
     pub hardware: HardwareModel,
     /// Cluster size `M` (paper: 100).
     pub num_gpus: usize,
+    /// Heterogeneous fleet. When set it defines the cluster (overriding
+    /// `hardware`/`num_gpus`) and every GPU is scored against its own
+    /// device class's table. `None` = a uniform fleet of `num_gpus` ×
+    /// `hardware` — the pre-fleet behavior, bit-identical.
+    pub fleet: Option<FleetSpec>,
     pub distribution: Distribution,
     /// Demand fractions at which metrics are captured, ascending in (0, 1].
     pub checkpoints: Vec<f64>,
@@ -48,6 +53,7 @@ impl SimConfig {
         Self {
             hardware: HardwareModel::a100_80gb(),
             num_gpus: 100,
+            fleet: None,
             distribution,
             checkpoints: (1..=10).map(|i| i as f64 / 10.0).collect(),
             seed,
@@ -59,6 +65,17 @@ impl SimConfig {
     /// A scaled-down variant for tests and quick CLI runs.
     pub fn small(distribution: Distribution, seed: u64) -> Self {
         Self { num_gpus: 10, ..Self::paper(distribution, seed) }
+    }
+
+    /// Simulate a heterogeneous fleet (builder style): the cluster is
+    /// built from the fleet's class layout; `hardware`/`num_gpus` are
+    /// kept in sync with class 0 / the fleet total for capacity math and
+    /// scheduler construction.
+    pub fn with_fleet(mut self, fleet: FleetSpec) -> Self {
+        self.num_gpus = fleet.total_gpus();
+        self.hardware = fleet.classes()[0].0.clone();
+        self.fleet = Some(fleet);
+        self
     }
 
     /// Enable periodic defragmentation (builder style): every `interval`
@@ -147,12 +164,17 @@ impl SimEngine {
         &self.config
     }
 
+    /// GPUs in the simulated cluster (the fleet total when one is set).
+    fn total_gpus(&self) -> usize {
+        self.config.fleet.as_ref().map(|f| f.total_gpus()).unwrap_or(self.config.num_gpus)
+    }
+
     /// Run one simulation with the given scheduler (reset beforehand).
     pub fn run(&self, scheduler: &mut dyn Scheduler) -> SimResult {
         let mut rng = Rng::new(self.config.seed);
         let gen = WorkloadGenerator::new(self.config.distribution.clone());
         let capacity =
-            (self.config.num_gpus * self.config.hardware.num_slices()) as u64;
+            (self.total_gpus() * self.config.hardware.num_slices()) as u64;
         let generated = gen.generate(capacity, &mut rng);
         self.replay(scheduler, &generated.workloads)
     }
@@ -162,9 +184,16 @@ impl SimEngine {
     pub fn replay(&self, scheduler: &mut dyn Scheduler, workloads: &[Workload]) -> SimResult {
         scheduler.reset();
         let capacity =
-            (self.config.num_gpus * self.config.hardware.num_slices()) as u64;
-        let mut cluster = Cluster::new(self.config.hardware.clone(), self.config.num_gpus);
-        let scorer = ScoreTable::for_hardware(&self.config.hardware);
+            (self.total_gpus() * self.config.hardware.num_slices()) as u64;
+        let mut cluster = match &self.config.fleet {
+            Some(fleet) => Cluster::from_fleet(fleet),
+            None => Cluster::new(self.config.hardware.clone(), self.config.num_gpus),
+        };
+        // `scorer` feeds the defrag planner (which derives per-class tables
+        // from its rule on mixed fleets); all scoring below goes through
+        // `tables`, whose uniform-fleet arithmetic is bit-identical.
+        let scorer = ScoreTable::for_hardware(cluster.hardware());
+        let tables = FleetTables::for_cluster(&cluster);
 
         // Departure queue: min-heap on (slot, workload id).
         let mut departures: BinaryHeap<std::cmp::Reverse<(u64, u64)>> = BinaryHeap::new();
@@ -223,7 +252,7 @@ impl SimEngine {
             if let Some(policy) = &self.config.defrag {
                 if t > 0
                     && t % policy.every == 0
-                    && scorer.mean_score(cluster.gpus()) >= policy.threshold
+                    && tables.mean_score(&cluster) >= policy.threshold
                 {
                     let plan = crate::defrag::plan_defrag_budgeted(
                         &cluster,
@@ -259,13 +288,14 @@ impl SimEngine {
                 departures.push(std::cmp::Reverse((t + w.duration_slots, w.id.0)));
             }
             // 3. per-slot fragmentation sample (Fig. 6 time average).
-            frag_sum += scorer.mean_score(cluster.gpus());
+            frag_sum += tables.mean_score(&cluster);
             // 4. checkpoint capture.
             while next_checkpoint < checkpoint_slots.len()
                 && checkpoint_slots[next_checkpoint].0 == t
             {
                 let (slot, frac) = checkpoint_slots[next_checkpoint];
-                let metrics = ClusterMetrics::capture(&cluster, &scorer, accepted, arrived);
+                let metrics =
+                    ClusterMetrics::capture_fleet(&cluster, &tables, accepted, arrived);
                 records.push(CheckpointRecord { demand: frac, slot, metrics });
                 if self.config.telemetry {
                     telemetry.push(slot_row(
@@ -294,7 +324,7 @@ impl SimEngine {
             seed: self.config.seed,
             horizon,
             records,
-            final_metrics: ClusterMetrics::capture(&cluster, &scorer, accepted, arrived),
+            final_metrics: ClusterMetrics::capture_fleet(&cluster, &tables, accepted, arrived),
             time_avg_frag: if horizon == 0 { 0.0 } else { frag_sum / horizon as f64 },
             accepted,
             arrived,
@@ -505,6 +535,74 @@ mod tests {
         // One decision timed per arrival.
         assert_eq!(last.get("decisions").and_then(Json::as_u64), Some(r.arrived));
         assert!(last.get("decision_seconds_p99").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn uniform_fleet_run_is_bit_identical_to_legacy() {
+        // A single-class FleetSpec must be a strict special case: same
+        // placements, same counters, bit-identical floating-point metrics.
+        let legacy_cfg = SimConfig::small(Distribution::Bimodal, 17);
+        let legacy_engine = SimEngine::new(legacy_cfg.clone());
+        let mut s = SchedulerKind::Mfi.build(&legacy_cfg.hardware);
+        let legacy = legacy_engine.run(&mut *s);
+
+        let fleet = crate::mig::FleetSpec::parse("a100:10").unwrap();
+        let fleet_cfg = SimConfig::small(Distribution::Bimodal, 17).with_fleet(fleet);
+        let fleet_engine = SimEngine::new(fleet_cfg.clone());
+        let mut s = SchedulerKind::Mfi.build(&fleet_cfg.hardware);
+        let r = fleet_engine.run(&mut *s);
+
+        assert_eq!(legacy.accepted, r.accepted);
+        assert_eq!(legacy.horizon, r.horizon);
+        assert_eq!(legacy.time_avg_frag.to_bits(), r.time_avg_frag.to_bits());
+        for (a, b) in legacy.records.iter().zip(&r.records) {
+            assert_eq!(a.metrics, b.metrics, "checkpoint {}", a.demand);
+            assert_eq!(
+                a.metrics.mean_frag_score.to_bits(),
+                b.metrics.mean_frag_score.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_run_conserves_and_indexed_mfi_agrees() {
+        let fleet = crate::mig::FleetSpec::parse("a100:4,h100:3,a100-40gb:3").unwrap();
+        let cfg = SimConfig::small(Distribution::Uniform, 23).with_fleet(fleet);
+        let engine = SimEngine::new(cfg.clone());
+
+        let mut a = SchedulerKind::Mfi.build(&cfg.hardware);
+        let ra = engine.run(&mut *a);
+        assert_eq!(ra.arrived, ra.horizon);
+        assert!(ra.accepted <= ra.arrived);
+        assert!(ra.acceptance_rate() > 0.0);
+        for rec in &ra.records {
+            assert!(rec.metrics.utilization <= 1.0 + 1e-9);
+            assert!(rec.metrics.active_gpus <= 10);
+        }
+
+        // The incremental index must reproduce the flat fleet scan through
+        // the full driver on a heterogeneous cluster too.
+        let mut b = SchedulerKind::MfiIdx.build(&cfg.hardware);
+        let rb = engine.run(&mut *b);
+        assert_eq!(ra.accepted, rb.accepted);
+        assert_eq!(ra.time_avg_frag.to_bits(), rb.time_avg_frag.to_bits());
+        for (x, y) in ra.records.iter().zip(&rb.records) {
+            assert_eq!(x.metrics, y.metrics, "checkpoint {}", x.demand);
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_defrag_keeps_accounting() {
+        let fleet = crate::mig::FleetSpec::parse("a100:3,a100-40gb:3").unwrap();
+        let cfg = SimConfig::small(Distribution::SkewBig, 31)
+            .with_fleet(fleet)
+            .with_defrag(5, 8);
+        let engine = SimEngine::new(cfg.clone());
+        let mut s = SchedulerKind::Ff.build(&cfg.hardware);
+        let r = engine.run(&mut *s);
+        assert!(r.accepted <= r.arrived);
+        // Migration bytes only when migrations happened.
+        assert_eq!(r.migrations == 0, r.migrated_bytes == 0);
     }
 
     #[test]

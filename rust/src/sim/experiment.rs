@@ -202,6 +202,7 @@ pub fn run_sweep(config: &ExperimentConfig) -> SweepResult {
                         let sim_cfg = SimConfig {
                             hardware: config.hardware.clone(),
                             num_gpus: config.num_gpus,
+                            fleet: None,
                             distribution: distribution.clone(),
                             checkpoints: config.checkpoints.clone(),
                             seed: run_seeds[run],

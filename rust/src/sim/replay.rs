@@ -26,8 +26,8 @@ use std::collections::BinaryHeap;
 
 use crate::cluster::{Cluster, ClusterMetrics};
 use crate::defrag::DefragPolicy;
-use crate::frag::{FragScorer, ScoreTable};
-use crate::mig::HardwareModel;
+use crate::frag::{FleetTables, ScoreTable};
+use crate::mig::{FleetSpec, HardwareModel};
 use crate::obs::hist::LatencyHist;
 use crate::obs::telemetry::{slot_row, SlotStats};
 use crate::sched::Scheduler;
@@ -40,6 +40,11 @@ pub struct ReplayConfig {
     pub hardware: HardwareModel,
     /// Cluster size `M` to replay against.
     pub num_gpus: usize,
+    /// Heterogeneous fleet. When set it defines the cluster (overriding
+    /// `hardware`/`num_gpus`) and each GPU is scored against its own
+    /// device class's table. `None` = a uniform fleet of `num_gpus` ×
+    /// `hardware` — the pre-fleet behavior, bit-identical.
+    pub fleet: Option<FleetSpec>,
     /// Sample a [`ReplaySample`] every this many slots along the trace's
     /// span (0 = auto: aim for ~20 samples).
     pub record_every: u64,
@@ -60,6 +65,7 @@ impl ReplayConfig {
         Self {
             hardware: HardwareModel::a100_80gb(),
             num_gpus,
+            fleet: None,
             record_every: 0,
             max_events: 0,
             defrag: None,
@@ -152,7 +158,6 @@ impl ReplayResult {
 /// arrivals per slot, slot gaps and open-loop rejection semantics are all
 /// honored; see the module docs for the contract.
 pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) -> ReplayResult {
-    assert!(config.num_gpus > 0, "need a non-empty cluster");
     scheduler.reset();
     let arrivals = trace.arrivals();
     let limit = if config.max_events == 0 {
@@ -162,8 +167,18 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
     };
     let arrivals = &arrivals[..limit];
 
-    let mut cluster = Cluster::new(config.hardware.clone(), config.num_gpus);
-    let scorer = ScoreTable::for_hardware(&config.hardware);
+    let mut cluster = match &config.fleet {
+        Some(fleet) => Cluster::from_fleet(fleet),
+        None => {
+            assert!(config.num_gpus > 0, "need a non-empty cluster");
+            Cluster::new(config.hardware.clone(), config.num_gpus)
+        }
+    };
+    // `scorer` feeds the defrag planner (which derives per-class tables
+    // from its rule on mixed fleets); all scoring below goes through
+    // `tables`, whose uniform-fleet arithmetic is bit-identical.
+    let scorer = ScoreTable::for_hardware(cluster.hardware());
+    let tables = FleetTables::for_cluster(&cluster);
 
     let first_slot = arrivals.first().map(|w| w.arrival_slot).unwrap_or(0);
     let last_slot = arrivals.last().map(|w| w.arrival_slot).unwrap_or(0);
@@ -217,7 +232,7 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
                     .expect("departure of allocated workload");
                 scheduler.on_release(&cluster, freed);
             }
-            frag_now = scorer.mean_score(cluster.gpus());
+            frag_now = tables.mean_score(&cluster);
         }
         frag_weighted_sum += frag_now * (t - integrated_to) as f64;
         integrated_to = t;
@@ -246,7 +261,7 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
                         live_before,
                         "defrag must not create or drop allocations"
                     );
-                    frag_now = scorer.mean_score(cluster.gpus());
+                    frag_now = tables.mean_score(&cluster);
                 }
                 last_defrag = t;
                 defrag_sweeps += 1;
@@ -280,11 +295,11 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
             }
             i += 1;
         }
-        frag_now = scorer.mean_score(cluster.gpus());
+        frag_now = tables.mean_score(&cluster);
         peak_active = peak_active.max(cluster.active_gpus());
         // 3. Slot-cadence sampling.
         if last_recorded.map(|r| t - r >= record_every).unwrap_or(true) {
-            let metrics = ClusterMetrics::capture(&cluster, &scorer, accepted, arrived);
+            let metrics = ClusterMetrics::capture_fleet(&cluster, &tables, accepted, arrived);
             samples.push(ReplaySample { slot: t, metrics });
             if config.telemetry {
                 telemetry.push(slot_row(
@@ -310,7 +325,7 @@ pub fn run(trace: &Trace, scheduler: &mut dyn Scheduler, config: &ReplayConfig) 
         frag_weighted_sum += frag_now * (last_slot + 1 - integrated_to) as f64;
     }
 
-    let final_metrics = ClusterMetrics::capture(&cluster, &scorer, accepted, arrived);
+    let final_metrics = ClusterMetrics::capture_fleet(&cluster, &tables, accepted, arrived);
     // Always close the trajectory with the final state.
     if samples.last().map(|s| s.slot != last_slot).unwrap_or(false) {
         samples.push(ReplaySample { slot: last_slot, metrics: final_metrics });
@@ -696,6 +711,45 @@ mod tests {
             traced.to_json().to_string_compact(),
             "telemetry capture must not leak into the summary bytes"
         );
+    }
+
+    #[test]
+    fn uniform_fleet_replay_json_bytes_match_legacy() {
+        // Single-class fleet path must leave the replay summary
+        // byte-identical to the pre-fleet uniform constructor.
+        let legacy = run_ff(&ReplayConfig::new(2)).to_json().to_string_compact();
+        let cfg = ReplayConfig {
+            fleet: Some(crate::mig::FleetSpec::parse("a100:2").unwrap()),
+            ..ReplayConfig::new(2)
+        };
+        let fleet = run_ff(&cfg).to_json().to_string_compact();
+        assert_eq!(legacy, fleet, "uniform fleet must not perturb replay bytes");
+    }
+
+    #[test]
+    fn mixed_fleet_replay_conserves_and_indexed_mfi_agrees() {
+        use crate::util::rng::Rng;
+        use crate::workload::{Distribution, WorkloadGenerator};
+        let gen = WorkloadGenerator::new(Distribution::Uniform).with_tenants(5);
+        let ws = gen.generate_stream(500, 0.4, 30, &mut Rng::new(77));
+        let t = trace_of(&ws);
+        let hw = HardwareModel::a100_80gb();
+        let cfg = ReplayConfig {
+            fleet: Some(crate::mig::FleetSpec::parse("a100:3,h100:2,a100-40gb:2").unwrap()),
+            ..ReplayConfig::new(7)
+        };
+        let mut a = SchedulerKind::Mfi.build(&hw);
+        let mut b = SchedulerKind::MfiIdx.build(&hw);
+        let ra = run(&t, &mut *a, &cfg);
+        let rb = run(&t, &mut *b, &cfg);
+        assert!(ra.conserved());
+        assert!(ra.accepted > 0);
+        assert_eq!(ra.accepted, rb.accepted);
+        assert_eq!(ra.rejected, rb.rejected);
+        assert_eq!(ra.time_avg_frag.to_bits(), rb.time_avg_frag.to_bits());
+        for (sa, sb) in ra.samples.iter().zip(&rb.samples) {
+            assert_eq!(sa.metrics, sb.metrics, "slot {}", sa.slot);
+        }
     }
 
     #[test]

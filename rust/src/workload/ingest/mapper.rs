@@ -77,15 +77,27 @@ impl std::fmt::Display for MapError {
 const FULL_GPU_COMPUTE: f64 = 7.0;
 
 /// Maps (gpu share, memory GB) requests onto MIG profiles.
+///
+/// The target's slice geometry is an explicit part of the mapper state:
+/// the same `mem_gb` request lands on *different* profiles depending on
+/// the device class it is mapped against (16 GB is 4 slices of an
+/// A100-40GB but a single slice of an H200), so on a heterogeneous fleet
+/// ingestion must build one mapper per target class, never share one
+/// across classes.
 #[derive(Clone, Debug)]
 pub struct ProfileMapper {
     hardware: HardwareModel,
     policy: MappingPolicy,
+    /// GB per memory slice on the target class (`total_memory_gb / 8`),
+    /// frozen at construction — the quantity that varies across a fleet.
+    mem_per_slice_gb: f64,
 }
 
 impl ProfileMapper {
     pub fn new(hardware: HardwareModel, policy: MappingPolicy) -> Self {
-        Self { hardware, policy }
+        let mem_per_slice_gb =
+            f64::from(hardware.total_memory_gb()) / hardware.num_slices() as f64;
+        Self { hardware, policy, mem_per_slice_gb }
     }
 
     pub fn policy(&self) -> MappingPolicy {
@@ -94,6 +106,12 @@ impl ProfileMapper {
 
     pub fn hardware(&self) -> &HardwareModel {
         &self.hardware
+    }
+
+    /// The target class's memory-slice granularity in GB (10 for
+    /// A100-80GB/H100, 5 for A100-40GB, 18 for H200).
+    pub fn mem_per_slice_gb(&self) -> f64 {
+        self.mem_per_slice_gb
     }
 
     /// Map a request to a profile. `gpu_share` is the fraction of one GPU
@@ -114,9 +132,7 @@ impl ProfileMapper {
         // row that slipped through the format filter — give it the smallest
         // footprint rather than inventing a rejection.
         let need_compute = ((gpu_share * FULL_GPU_COMPUTE).ceil() as u32).max(1);
-        let mem_per_slice = f64::from(self.hardware.total_memory_gb())
-            / self.hardware.num_slices() as f64;
-        let need_mem_slices = (mem_gb / mem_per_slice).ceil() as u32;
+        let need_mem_slices = (mem_gb / self.mem_per_slice_gb).ceil() as u32;
 
         // Smallest enabled profile satisfying both demands: profiles() is
         // Table I order (largest first), so take the LAST fitting one —
@@ -257,5 +273,27 @@ mod tests {
         let m = ProfileMapper::new(HardwareModel::a100_40gb(), MappingPolicy::NearestUp);
         // 8 GB on a 5 GB/slice part → 2 memory slices → 1g.20gb shape.
         assert_eq!(m.map(0.1, 8.0).unwrap().profile, Profile::P1g20gb);
+    }
+
+    #[test]
+    fn same_request_maps_per_target_class_geometry() {
+        // The heterogeneous-fleet contract: one mapper per target class.
+        // A 16 GB request is 4 slices of an A100-40GB (→ 3g.40gb shape,
+        // the smallest profile with size ≥ 4) but a single slice of an
+        // H200 (→ 1g.10gb shape). Sharing one mapper across classes would
+        // silently over- or under-provision one of them.
+        let a40 = ProfileMapper::new(HardwareModel::a100_40gb(), MappingPolicy::NearestUp);
+        let h200 = ProfileMapper::new(HardwareModel::h200_141gb(), MappingPolicy::NearestUp);
+        assert_eq!(a40.mem_per_slice_gb(), 5.0);
+        assert_eq!(h200.mem_per_slice_gb(), 18.0);
+        let on_a40 = a40.map(0.1, 16.0).unwrap();
+        let on_h200 = h200.map(0.1, 16.0).unwrap();
+        assert_eq!(on_a40.profile, Profile::P3g40gb);
+        assert_eq!(on_h200.profile, Profile::P1g10gb);
+        assert!(!on_a40.clamped && !on_h200.clamped);
+        // And clamping thresholds differ too: 50 GB overflows the 40 GB
+        // part but fits comfortably on the H200.
+        assert!(a40.map(0.1, 50.0).unwrap().clamped);
+        assert!(!h200.map(0.1, 50.0).unwrap().clamped);
     }
 }

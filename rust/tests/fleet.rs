@@ -1,0 +1,186 @@
+//! Heterogeneous-fleet cross-layer properties.
+//!
+//! * On ANY interleaving of schedule / commit / release operations over a
+//!   randomly interleaved mixed fleet, the indexed scheduler (`MFI-IDX`)
+//!   must produce bit-identical placements to the flat per-class rescan
+//!   (`MFI` / `evaluate_fleet`) — extending the PR 2 equivalence suite
+//!   (`tests/incremental.rs`) from uniform clusters to arbitrary class
+//!   layouts.
+//! * `FleetSpec::partition` conserves every class's GPU count across any
+//!   shard count.
+//! * A single-class fleet is a strict special case: snapshots serialize
+//!   byte-identically to the legacy constructor's.
+
+use migsched::cluster::{snapshot, Cluster};
+use migsched::frag::{evaluate_fleet, FleetTables};
+use migsched::mig::{FleetSpec, HardwareModel, Placement, Profile, ALL_PROFILES};
+use migsched::sched::{Mfi, MfiIndexed, Scheduler};
+use migsched::util::check::forall_shrink_vec;
+use migsched::workload::WorkloadId;
+
+/// The class vocabulary random layouts draw from: three models with two
+/// distinct per-slice memories, so nearest-fit and ΔF pricing genuinely
+/// differ across classes.
+fn models() -> Vec<HardwareModel> {
+    vec![
+        HardwareModel::a100_80gb(),
+        HardwareModel::h100_80gb(),
+        HardwareModel::a100_40gb(),
+    ]
+}
+
+/// Build a 5-GPU cluster whose per-GPU class is drawn from `seed` — an
+/// arbitrary interleaving, not contiguous class runs.
+fn cluster_from_seed(seed: u64) -> Cluster {
+    let layout: Vec<u8> = (0..5).map(|g| ((seed >> (2 * g)) % 3) as u8).collect();
+    Cluster::from_class_layout(models(), layout)
+}
+
+/// Replay an op-encoded episode against both schedulers on one shared
+/// mixed cluster; every proposal must match. Encoding (shrinkable
+/// `Vec<u64>`): ops[0] seeds the class layout; thereafter `op % 4 < 3` →
+/// arrival of profile `(op / 4) % 6`, `op % 4 == 3` → release of the
+/// `(op / 4) % live`-th oldest live workload.
+fn drive_and_compare(ops: &[u64], hooks: bool) -> Result<(), String> {
+    let (seed, ops) = match ops.split_first() {
+        Some(x) => x,
+        None => return Ok(()),
+    };
+    let hw = HardwareModel::a100_80gb();
+    let mut flat = Mfi::for_hardware(&hw);
+    let mut indexed = MfiIndexed::for_hardware(&hw);
+    let mut cluster = cluster_from_seed(*seed);
+    let mut live: Vec<WorkloadId> = Vec::new();
+    let mut next_id = 0u64;
+    for (step, &op) in ops.iter().enumerate() {
+        if op % 4 < 3 || live.is_empty() {
+            let profile = Profile::from_index(((op / 4) % 6) as usize).unwrap();
+            let a = flat.schedule(&cluster, profile);
+            let b = indexed.schedule(&cluster, profile);
+            if a != b {
+                return Err(format!(
+                    "step {step}: {profile} → MFI {a:?} vs MFI-IDX {b:?} \
+                     (hooks={hooks}, layout={:?})",
+                    cluster.class_ids()
+                ));
+            }
+            if let Some(placement) = a {
+                let id = WorkloadId(next_id);
+                next_id += 1;
+                cluster.allocate(id, placement).map_err(|e| format!("step {step}: {e}"))?;
+                if hooks {
+                    indexed.on_commit(&cluster, placement);
+                }
+                live.push(id);
+            }
+        } else {
+            let victim = live.remove(((op / 4) as usize) % live.len());
+            let freed = cluster.release(victim).map_err(|e| format!("step {step}: {e}"))?;
+            if hooks {
+                indexed.on_release(&cluster, freed);
+            }
+        }
+    }
+    // Terminal state: every profile's argmin must still agree with the
+    // from-scratch per-class fleet scan.
+    let tables = FleetTables::for_cluster(&cluster);
+    for p in ALL_PROFILES {
+        let want = evaluate_fleet(&tables, &cluster, p);
+        let got = indexed.schedule(&cluster, p);
+        if got != want {
+            return Err(format!(
+                "terminal {p}: {got:?} vs {want:?} (hooks={hooks}, layout={:?})",
+                cluster.class_ids()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fleet_indexed_equals_flat_with_hooks() {
+    forall_shrink_vec(
+        "fleet-mfi-idx-equivalence-hooked",
+        |rng| (0..1 + rng.index(120)).map(|_| rng.next_u64()).collect(),
+        |ops| drive_and_compare(ops, true),
+    );
+}
+
+#[test]
+fn prop_fleet_indexed_equals_flat_with_hooks_dropped() {
+    // Same property with the hooks never called: the indexed scheduler
+    // must fall back to change-log catch-up and stay identical.
+    forall_shrink_vec(
+        "fleet-mfi-idx-equivalence-hookless",
+        |rng| (0..1 + rng.index(120)).map(|_| rng.next_u64()).collect(),
+        |ops| drive_and_compare(ops, false),
+    );
+}
+
+#[test]
+fn prop_partition_conserves_every_class() {
+    // Encoding: ops[0] → shard count (1..=4); each further op → one class
+    // with 1..=5 GPUs (up to 3 classes used round-robin over the model
+    // vocabulary, duplicates merged by construction order).
+    forall_shrink_vec(
+        "fleet-partition-conservation",
+        |rng| (0..2 + rng.index(3)).map(|_| rng.next_u64()).collect(),
+        |ops| {
+            let (first, rest) = match ops.split_first() {
+                Some(x) => x,
+                None => return Ok(()),
+            };
+            if rest.is_empty() {
+                return Ok(());
+            }
+            let shards = 1 + (*first % 4) as usize;
+            let vocabulary = models();
+            let classes: Vec<(HardwareModel, usize)> = rest
+                .iter()
+                .take(3)
+                .enumerate()
+                .map(|(i, op)| (vocabulary[i % 3].clone(), 1 + (op % 5) as usize))
+                .collect();
+            let fleet = FleetSpec::new(classes).map_err(|e| e.to_string())?;
+            let parts = fleet.partition(shards);
+            if parts.len() != shards {
+                return Err(format!("{} rows for {shards} shards", parts.len()));
+            }
+            for (class, &want) in fleet.counts().iter().enumerate() {
+                let got: usize = parts.iter().map(|row| row[class]).sum();
+                if got != want {
+                    return Err(format!(
+                        "class {class}: {got} GPUs across shards, fleet has {want} \
+                         (spec={}, shards={shards})",
+                        fleet.spec_string()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn uniform_fleet_snapshot_bytes_match_legacy() {
+    let fleet = FleetSpec::parse("a100:3").unwrap();
+    let mut from_fleet = Cluster::from_fleet(&fleet);
+    let mut legacy = Cluster::new(HardwareModel::a100_80gb(), 3);
+    for (id, (gpu, profile, index)) in [
+        (0, Profile::P3g40gb, 0),
+        (1, Profile::P1g10gb, 5),
+        (2, Profile::P2g20gb, 2),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let placement = Placement { gpu, profile, index };
+        from_fleet.allocate(WorkloadId(id as u64), placement).unwrap();
+        legacy.allocate(WorkloadId(id as u64), placement).unwrap();
+    }
+    let a = snapshot::to_json(&from_fleet).to_string_compact();
+    let b = snapshot::to_json(&legacy).to_string_compact();
+    assert_eq!(a, b, "single-class fleet must serialize byte-identically");
+    assert!(a.contains("\"hardware\""), "uniform snapshots stay on the v1 format");
+    assert!(!a.contains("gpu_classes"));
+}

@@ -23,7 +23,7 @@ const FIXTURE: &str = include_str!("golden/frag_golden.json");
 
 fn fixture() -> Json {
     let j = Json::parse(FIXTURE).expect("golden fixture parses");
-    assert_eq!(j.req_str("format").unwrap(), "migsched-golden-frag-v2");
+    assert_eq!(j.req_str("format").unwrap(), "migsched-golden-frag-v3");
     assert_eq!(j.req_u64("num_slices").unwrap(), 8);
     assert_eq!(j.req_u64("num_candidates").unwrap() as usize, NUM_CANDIDATES);
     j
@@ -129,6 +129,130 @@ fn deltas_and_feasibility_match_python_oracle() {
             } else {
                 assert_eq!(oracle_delta, sentinel, "occ={mask:#010b} cand={c}");
                 assert_eq!(batch.deltas[mask][c], INFEASIBLE_DELTA);
+            }
+        }
+    }
+}
+
+/// Any-rule ΔF (fixture v3): the literal-Algorithm-1 overlap rule's delta
+/// table must match the oracle for every (mask, candidate) pair, and be
+/// consistent with the any-rule score table (ΔF = F(m ∪ w) − F(m), which
+/// the any rule — unlike partial — can drive negative).
+#[test]
+fn any_rule_deltas_match_python_oracle() {
+    let j = fixture();
+    let sentinel = j.req_u64("infeasible_sentinel").unwrap() as i64;
+    let deltas = j.get("deltas_any").and_then(Json::as_arr).expect("deltas_any");
+    let feasible = j.get("feasible").and_then(Json::as_arr).expect("feasible");
+    let scores = u32_vec(&j, "scores_any");
+    assert_eq!(deltas.len(), 256);
+    let table = ScoreTable::for_hardware_rule(&HardwareModel::a100_80gb(), OverlapRule::Any);
+    let mut saw_negative = false;
+    for mask in 0..256usize {
+        let g = GpuState::from_mask(mask as u8);
+        let drow = deltas[mask].as_arr().expect("delta row");
+        let frow = feasible[mask].as_arr().expect("feasible row");
+        assert_eq!(drow.len(), NUM_CANDIDATES);
+        for (c, cand) in CANDIDATES.iter().enumerate() {
+            let oracle_delta = drow[c].as_f64().expect("numeric delta") as i64;
+            if frow[c].as_u64().expect("0/1") == 1 {
+                assert_eq!(
+                    i64::from(table.delta(g, cand.profile, cand.start)),
+                    oracle_delta,
+                    "any-rule ΔF occ={mask:#010b} cand={}@{}",
+                    cand.profile,
+                    cand.start
+                );
+                let after = mask | cand.mask as usize;
+                assert_eq!(
+                    oracle_delta,
+                    i64::from(scores[after]) - i64::from(scores[mask]),
+                    "fixture any-rule tables disagree at occ={mask:#010b} cand={c}"
+                );
+                saw_negative |= oracle_delta < 0;
+            } else {
+                assert_eq!(oracle_delta, sentinel, "occ={mask:#010b} cand={c}");
+            }
+        }
+    }
+    assert!(saw_negative, "the any rule is known to produce negative ΔF somewhere");
+}
+
+/// The `subsets` combos (fixture v3): two further profile-subset tables
+/// beyond `restricted_*`, each checked bit-for-bit against the rust
+/// `ScoreTable`. Scores weight candidates in slice units, so the same
+/// oracle tables pin every model sharing the 8-slice geometry — the loop
+/// runs them against A100-80GB, **A100-40GB** and H100 (per-class
+/// `profile_mem_gb` differs; Algorithm 1's arithmetic must not).
+#[test]
+fn subset_combo_tables_match_python_oracle_across_models() {
+    let j = fixture();
+    let sentinel = j.req_u64("infeasible_sentinel").unwrap() as i64;
+    let full = u32_vec(&j, "scores_partial");
+    let subsets = j.get("subsets").and_then(Json::as_arr).expect("subsets");
+    assert!(subsets.len() >= 2, "fixture must carry at least two extra combos");
+    let models = [
+        HardwareModel::a100_80gb(),
+        HardwareModel::a100_40gb(),
+        HardwareModel::h100_80gb(),
+    ];
+    for sub in subsets {
+        let profiles: Vec<Profile> = sub
+            .get("profiles")
+            .and_then(Json::as_arr)
+            .expect("subset profiles")
+            .iter()
+            .map(|v| Profile::parse(v.as_str().expect("name")).expect("known profile"))
+            .collect();
+        let cand_idx: Vec<usize> = sub
+            .get("candidates")
+            .and_then(Json::as_arr)
+            .expect("subset candidates")
+            .iter()
+            .map(|v| v.as_u64().expect("index") as usize)
+            .collect();
+        let scores = u32_vec(sub, "scores");
+        let max_score = sub.req_u64("max_score").unwrap() as u32;
+        let deltas = sub.get("deltas").and_then(Json::as_arr).expect("subset deltas");
+        let feasible = sub.get("feasible").and_then(Json::as_arr).expect("subset feasible");
+        for base in &models {
+            let hw = base.clone().with_profiles(&profiles);
+            let table = ScoreTable::for_hardware(&hw);
+            assert_eq!(
+                *table.raw().iter().max().unwrap() as u32,
+                max_score,
+                "{}: index bucket offset disagrees with oracle",
+                hw.name()
+            );
+            for mask in 0..256usize {
+                let g = GpuState::from_mask(mask as u8);
+                assert_eq!(
+                    table.score(g),
+                    scores[mask],
+                    "{}: subset score disagrees at occ={mask:#010b}",
+                    hw.name()
+                );
+                assert!(scores[mask] <= full[mask], "subset score exceeds full set");
+                let drow = deltas[mask].as_arr().expect("delta row");
+                let frow = feasible[mask].as_arr().expect("feasible row");
+                assert_eq!(drow.len(), cand_idx.len());
+                for (col, &c) in cand_idx.iter().enumerate() {
+                    let cand = &CANDIDATES[c];
+                    let oracle_feasible = frow[col].as_u64().expect("0/1") == 1;
+                    assert_eq!(g.fits_at(cand.profile, cand.start), oracle_feasible);
+                    let oracle_delta = drow[col].as_f64().expect("numeric") as i64;
+                    if oracle_feasible {
+                        assert_eq!(
+                            i64::from(table.delta(g, cand.profile, cand.start)),
+                            oracle_delta,
+                            "{}: occ={mask:#010b} cand={c}",
+                            hw.name()
+                        );
+                        assert!(oracle_delta.unsigned_abs() <= u64::from(max_score));
+                    } else {
+                        assert_eq!(oracle_delta, sentinel);
+                    }
+                }
             }
         }
     }
