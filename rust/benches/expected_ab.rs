@@ -1,0 +1,161 @@
+//! MFI vs MFI-EXP acceptance A/B (experiment E1): paired-seed Monte
+//! Carlo runs over the four Table II mixes plus an open-loop replay of
+//! the bundled ~2k-row Alibaba-style trace, pitting the agnostic MFI
+//! baseline against the distribution-aware MFI-EXP (online workload
+//! estimator + expected-fragmentation scoring). Both arms see identical
+//! seeds and identical arrival sequences, so every delta is attributable
+//! to the scoring policy alone.
+//!
+//! The run is recorded machine-readably in `BENCH_expected.json` at the
+//! repository root (schema: `{format, bench, quick_mode, gpus, seeds,
+//! estimator_decay, mixes: [{distribution, MFI: {...}, "MFI-EXP": {...},
+//! delta_accepted, median_ms}], trace: {...}, wins}`).
+
+use std::path::Path;
+
+use migsched::mig::HardwareModel;
+use migsched::sched::SchedulerKind;
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::sim::{Distribution, SimConfig, SimEngine};
+use migsched::util::bench::{quick_mode, BenchRunner};
+use migsched::util::json::Json;
+use migsched::workload::ingest::{ingest_path, IngestConfig, TraceFormat};
+use migsched::workload::EstimatorConfig;
+
+const GPUS: usize = 24;
+const TRACE_GPUS: usize = 16;
+
+/// Pooled (accepted, arrived) per arm over `seeds` paired runs of `dist`.
+fn run_mix(
+    dist: &Distribution,
+    seeds: u64,
+    hw: &HardwareModel,
+    est: &EstimatorConfig,
+    arms: &[SchedulerKind; 2],
+) -> [(u64, u64); 2] {
+    let mut totals = [(0u64, 0u64); 2];
+    for s in 0..seeds {
+        let config = SimConfig {
+            hardware: hw.clone(),
+            num_gpus: GPUS,
+            fleet: None,
+            distribution: dist.clone(),
+            checkpoints: vec![1.0],
+            seed: 1 + s,
+            defrag: None,
+            telemetry: false,
+        };
+        let engine = SimEngine::new(config);
+        for (arm, kind) in arms.iter().enumerate() {
+            let mut sched = kind.build_with_estimator(hw, Some(est));
+            let result = engine.run(&mut *sched);
+            totals[arm].0 += result.accepted;
+            totals[arm].1 += result.arrived;
+        }
+    }
+    totals
+}
+
+fn arm_json(accepted: u64, arrived: u64) -> Json {
+    Json::obj().with("accepted", accepted).with("arrived", arrived).with(
+        "acceptance_rate",
+        if arrived == 0 { 0.0 } else { accepted as f64 / arrived as f64 },
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let seeds: u64 = if quick { 3 } else { 10 };
+    let hw = HardwareModel::a100_80gb();
+    let est = EstimatorConfig::default();
+    let arms = [SchedulerKind::Mfi, SchedulerKind::MfiExp];
+    println!(
+        "== expected-score A/B bench: MFI vs MFI-EXP, M={GPUS}, \
+         {seeds} paired seeds x 4 mixes =="
+    );
+
+    let mut runner = BenchRunner::new("expected_ab");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut wins = 0u64;
+    for dist in Distribution::paper_set() {
+        let mut totals = [(0u64, 0u64); 2];
+        let reps = if quick { 1 } else { 2 };
+        let r = runner
+            .bench_once(&format!("ab/{}/M{GPUS}", dist.name()), reps, || {
+                totals = run_mix(&dist, seeds, &hw, &est, &arms);
+            })
+            .clone();
+        let delta = totals[1].0 as i64 - totals[0].0 as i64;
+        if delta > 0 {
+            wins += 1;
+        }
+        println!(
+            "   {:>10}: MFI {}/{}  MFI-EXP {}/{}  delta {delta:+}",
+            dist.name(),
+            totals[0].0,
+            totals[0].1,
+            totals[1].0,
+            totals[1].1
+        );
+        rows.push(
+            Json::obj()
+                .with("distribution", dist.name())
+                .with(arms[0].name(), arm_json(totals[0].0, totals[0].1))
+                .with(arms[1].name(), arm_json(totals[1].0, totals[1].1))
+                .with("delta_accepted", delta)
+                .with("median_ms", r.median_ns / 1e6),
+        );
+    }
+    println!("-- MFI-EXP acceptance wins on {wins}/4 synthetic mixes");
+
+    // Real-shaped arm: the bundled Alibaba-style trace, both schedulers
+    // over the identical arrival sequence.
+    let csv =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/bench_alibaba_2k.csv");
+    let config = IngestConfig::new(TraceFormat::Alibaba).with_gpus(TRACE_GPUS);
+    let (trace, report) = ingest_path(&csv, &config).expect("ingest bundled bench trace");
+    let rcfg = ReplayConfig::new(TRACE_GPUS);
+    let mut trace_row = Json::obj()
+        .with("source", "examples/traces/bench_alibaba_2k.csv")
+        .with("rows", report.rows_total)
+        .with("gpus", TRACE_GPUS as u64);
+    let mut trace_accepted = [0u64; 2];
+    for (arm, kind) in arms.iter().enumerate() {
+        let mut sched = kind.build_with_estimator(&hw, Some(&est));
+        let mut last = None;
+        let reps = if quick { 1 } else { 3 };
+        runner.bench_once(&format!("ab/alibaba-2k/{kind}/M{TRACE_GPUS}"), reps, || {
+            last = Some(replay::run(&trace, &mut *sched, &rcfg));
+        });
+        let outcome = last.expect("at least one rep ran");
+        assert!(outcome.conserved(), "{kind}: counters must conserve");
+        trace_accepted[arm] = outcome.accepted;
+        println!(
+            "   alibaba-2k {kind}: acceptance {:.4} ({} / {})",
+            outcome.acceptance_rate(),
+            outcome.accepted,
+            outcome.arrived
+        );
+        trace_row.set(kind.name(), arm_json(outcome.accepted, outcome.arrived));
+    }
+    trace_row.set("delta_accepted", trace_accepted[1] as i64 - trace_accepted[0] as i64);
+
+    runner.save_csv();
+    let doc = Json::obj()
+        .with("format", "migsched-bench-expected-v1")
+        .with("bench", "expected_ab")
+        .with("quick_mode", quick)
+        .with("baseline", arms[0].name())
+        .with("candidate", arms[1].name())
+        .with("gpus", GPUS as u64)
+        .with("seeds", seeds)
+        .with("estimator_decay", est.decay_slots)
+        .with("mixes", Json::Arr(rows))
+        .with("trace", trace_row)
+        .with("wins", wins);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_expected.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("-- saved {}", path.display()),
+        Err(e) => eprintln!("warning: could not save {}: {e}", path.display()),
+    }
+}

@@ -1,0 +1,506 @@
+//! Expected (distribution-aware) fragmentation scoring.
+//!
+//! The paper's `F(m)` (Algorithm 1) weights every profile equally. FGD
+//! (Weng et al., USENIX ATC '23) instead prices a GPU by the fragmentation
+//! *the workload actually experiences*: the mix-weighted expectation of
+//! per-profile unallocatable capacity. Algorithm 1 is separable per
+//! profile, so we precompute a per-profile **component table** — the
+//! contribution of each profile to `F(m)` for each of the 256 occupancy
+//! masks — and collapse it into a single expected-score table for any
+//! observed mix:
+//!
+//! ```text
+//! E[F(m)] = Σ_p  share(p) · F_p(m)        Σ_p F_p(m) = F(m)
+//! ```
+//!
+//! `share(p)` is the estimator's weight normalized to [`SHARE_SCALE`]
+//! fixed-point (pure integer arithmetic → bit-reproducible runs). Two
+//! structural facts make the scheduler correct:
+//!
+//! * **Uniform mix ≡ agnostic.** Equal weights normalize to equal integer
+//!   shares, so `E = share · F` — a positive scalar multiple with the
+//!   same argmin and the same ties as the agnostic score.
+//! * **Empty mix has no signal.** All-zero weights give an all-zero table
+//!   (every ΔE = 0 — the argmin would degenerate to first-feasible), so
+//!   consumers must fall back to the agnostic scorer ([`super::ScoreTable`])
+//!   when the estimator is empty; `sched::MfiExpected` does exactly that.
+//!
+//! [`ExpectedFleet`] mirrors [`FleetTables`] (one component table per
+//! device class, Arc-identity revalidation), so heterogeneous fleets work
+//! exactly like they do for the agnostic scorer.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::score::OverlapRule;
+use super::table::FleetTables;
+use crate::cluster::Cluster;
+use crate::mig::{GpuState, HardwareModel, Placement, Profile, NUM_PROFILES};
+use crate::workload::ProfileMix;
+
+/// Fixed-point scale of the normalized mix shares inside an
+/// [`ExpectedTable`]. Matches the estimator's weight scale so one
+/// observation's worth of mass is far above the normalization truncation.
+pub const SHARE_SCALE: u64 = 1 << 20;
+
+/// Per-profile contributions to Algorithm 1, for all 256 occupancy masks.
+///
+/// `components[occ][p]` is profile `p`'s summand of `F(occ)` — its memory
+/// weight per blocked anchor while its size still fits — so the row sums
+/// reproduce the agnostic [`super::ScoreTable`] exactly (pinned by
+/// `components_sum_to_agnostic_table`). Built once per (hardware profile
+/// set, overlap rule) and cached process-wide, like the agnostic table.
+#[derive(Clone, Debug)]
+pub struct ComponentTables {
+    components: Arc<[[u16; NUM_PROFILES]; 256]>,
+    rule: OverlapRule,
+    hw_name: String,
+}
+
+impl ComponentTables {
+    /// Build (or fetch from the process-wide cache) the component tables
+    /// for a hardware model under the default overlap rule.
+    pub fn for_hardware(hw: &HardwareModel) -> Self {
+        Self::for_hardware_rule(hw, OverlapRule::default())
+    }
+
+    /// Build (or fetch) the component tables for a model and overlap rule.
+    pub fn for_hardware_rule(hw: &HardwareModel, rule: OverlapRule) -> Self {
+        type Cache = Mutex<HashMap<(u8, OverlapRule), Arc<[[u16; NUM_PROFILES]; 256]>>>;
+        static CACHE: OnceLock<Cache> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (hw.profile_set_key(), rule);
+        let components = {
+            let mut guard = cache.lock().unwrap();
+            guard.entry(key).or_insert_with(|| Arc::new(build_components(hw, rule))).clone()
+        };
+        Self { components, rule, hw_name: hw.name().to_string() }
+    }
+
+    /// Profile `p`'s contribution to `F(occ)`.
+    #[inline]
+    pub fn component(&self, occ: u8, p: Profile) -> u32 {
+        self.components[occ as usize][p.index()] as u32
+    }
+
+    pub fn rule(&self) -> OverlapRule {
+        self.rule
+    }
+
+    pub fn hardware_name(&self) -> &str {
+        &self.hw_name
+    }
+
+    /// Collapse the components into one expected-score table for a mix.
+    ///
+    /// Weights are normalized to [`SHARE_SCALE`] fixed-point shares by
+    /// integer division, so the table depends only on the mix *ratios* at
+    /// that resolution and the arithmetic is reproducible bit for bit. An
+    /// all-zero weight vector yields the all-zero table — callers must
+    /// fall back to the agnostic scorer instead of using it.
+    pub fn weighted(&self, weights: &[u64; NUM_PROFILES]) -> ExpectedTable {
+        let total: u64 = weights.iter().sum();
+        let mut shares = [0u64; NUM_PROFILES];
+        if total > 0 {
+            for (s, &w) in shares.iter_mut().zip(weights) {
+                *s = w * SHARE_SCALE / total;
+            }
+        }
+        let mut scores = Box::new([0u64; 256]);
+        for (occ, row) in self.components.iter().enumerate() {
+            scores[occ] =
+                row.iter().zip(&shares).map(|(&c, &s)| c as u64 * s).sum::<u64>();
+        }
+        ExpectedTable { scores }
+    }
+}
+
+fn build_components(hw: &HardwareModel, rule: OverlapRule) -> [[u16; NUM_PROFILES]; 256] {
+    let mut t = [[0u16; NUM_PROFILES]; 256];
+    for occ in 0..=255u8 {
+        let gpu = GpuState::from_mask(occ);
+        for p in hw.profiles() {
+            if p.size() > gpu.free_slices() {
+                continue;
+            }
+            let mut f = 0u16;
+            for &start in p.starts() {
+                let w = p.mask_at(start);
+                let blocked = match rule {
+                    OverlapRule::Any => occ & w != 0,
+                    OverlapRule::Partial => occ & w != 0 && occ & w != w,
+                };
+                if blocked {
+                    f += p.mem_weight() as u16;
+                }
+            }
+            t[occ as usize][p.index()] = f;
+        }
+    }
+    t
+}
+
+/// A mix-weighted expected-fragmentation table: 256 fixed-point scores,
+/// the distribution-aware analogue of [`super::ScoreTable`].
+#[derive(Clone, Debug)]
+pub struct ExpectedTable {
+    scores: Box<[u64; 256]>,
+}
+
+impl ExpectedTable {
+    #[inline]
+    pub fn score_mask(&self, occ: u8) -> u64 {
+        self.scores[occ as usize]
+    }
+
+    /// ΔE of hypothetically placing `profile` at `start` (free window).
+    #[inline]
+    pub fn delta(&self, gpu: GpuState, profile: Profile, start: u8) -> i64 {
+        let occ = gpu.mask();
+        let mask = profile.mask_at(start);
+        debug_assert_eq!(occ & mask, 0, "delta() requires a free window");
+        self.scores[(occ | mask) as usize] as i64 - self.scores[occ as usize] as i64
+    }
+
+    pub fn raw(&self) -> &[u64; 256] {
+        &self.scores
+    }
+}
+
+/// Argmin-ΔE placement over a uniform cluster — [`super::evaluate_cluster`]
+/// with the expected table. The scan order, the feasibility skips and the
+/// strictly-less `(ΔE, gpu, anchor)` tie-break are identical, so whenever
+/// the expected table is a positive scalar multiple of the agnostic one
+/// (uniform mix) the two return bit-identical placements.
+pub fn evaluate_cluster_expected(
+    table: &ExpectedTable,
+    gpus: &[GpuState],
+    profile: Profile,
+) -> Option<Placement> {
+    let scores = table.raw();
+    let cands = &crate::mig::CANDIDATES[crate::mig::candidate_range(profile)];
+    let size = profile.size();
+    let mut best_delta = i64::MAX;
+    let mut best_gpu = usize::MAX;
+    let mut best_start = 0u8;
+    for (gpu_id, g) in gpus.iter().enumerate() {
+        let occ = g.mask();
+        if size > crate::mig::NUM_SLICES as u8 - occ.count_ones() as u8 {
+            continue;
+        }
+        let base = scores[occ as usize] as i64;
+        for cand in cands {
+            if occ & cand.mask != 0 {
+                continue;
+            }
+            let d = scores[(occ | cand.mask) as usize] as i64 - base;
+            if d < best_delta {
+                best_delta = d;
+                best_gpu = gpu_id;
+                best_start = cand.start;
+            }
+        }
+    }
+    if best_gpu == usize::MAX {
+        None
+    } else {
+        Some(Placement { gpu: best_gpu, profile, index: best_start })
+    }
+}
+
+/// Per-device-class expected tables for a heterogeneous fleet — the
+/// distribution-aware analogue of [`FleetTables`]. Component tables are
+/// built per class at construction; the collapsed expected tables are
+/// cached against the estimator's version counter and rebuilt only when
+/// the mix actually changed.
+#[derive(Clone, Debug)]
+pub struct ExpectedFleet {
+    components: Vec<ComponentTables>,
+    tables: Vec<ExpectedTable>,
+    classes: Arc<[HardwareModel]>,
+    mix_version: Option<u64>,
+}
+
+impl ExpectedFleet {
+    /// Per-class component tables for `cluster` under the default rule.
+    pub fn for_cluster(cluster: &Cluster) -> Self {
+        Self::with_rule(cluster, OverlapRule::default())
+    }
+
+    /// Per-class component tables for `cluster` under an explicit rule.
+    pub fn with_rule(cluster: &Cluster, rule: OverlapRule) -> Self {
+        let classes = cluster.classes_arc().clone();
+        let components: Vec<ComponentTables> =
+            classes.iter().map(|hw| ComponentTables::for_hardware_rule(hw, rule)).collect();
+        Self { components, tables: Vec::new(), classes, mix_version: None }
+    }
+
+    /// True when built from `cluster`'s class set (pointer compare on the
+    /// shared class-table Arc, same discipline as [`FleetTables::matches`]).
+    pub fn matches(&self, cluster: &Cluster) -> bool {
+        Arc::ptr_eq(&self.classes, cluster.classes_arc())
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.components.len()
+    }
+
+    pub fn rule(&self) -> OverlapRule {
+        self.components[0].rule()
+    }
+
+    /// Rebuild the per-class expected tables iff `mix` changed since the
+    /// last refresh (keyed on [`ProfileMix::version`]).
+    pub fn refresh(&mut self, mix: &ProfileMix) {
+        if self.mix_version == Some(mix.version()) {
+            return;
+        }
+        self.tables = self.components.iter().map(|c| c.weighted(mix.weights())).collect();
+        self.mix_version = Some(mix.version());
+    }
+
+    /// The expected table for device class `class`. Panics when called
+    /// before the first [`refresh`](Self::refresh).
+    pub fn table(&self, class: u8) -> &ExpectedTable {
+        &self.tables[class as usize]
+    }
+}
+
+/// Argmin-ΔE over a heterogeneous fleet — [`super::evaluate_fleet`] with
+/// per-class expected tables. Identical scan order, supports/capacity
+/// skips and strictly-less tie-break. [`ExpectedFleet::refresh`] must have
+/// run for the current mix.
+pub fn evaluate_fleet_expected(
+    fleet: &ExpectedFleet,
+    cluster: &Cluster,
+    profile: Profile,
+) -> Option<Placement> {
+    let cands = &crate::mig::CANDIDATES[crate::mig::candidate_range(profile)];
+    let size = profile.size();
+    let class_ids = cluster.class_ids();
+    let mut best_delta = i64::MAX;
+    let mut best_gpu = usize::MAX;
+    let mut best_start = 0u8;
+    for (gpu_id, g) in cluster.gpus().iter().enumerate() {
+        if !cluster.hardware_of(gpu_id).supports(profile) {
+            continue;
+        }
+        let occ = g.mask();
+        if size > crate::mig::NUM_SLICES as u8 - occ.count_ones() as u8 {
+            continue;
+        }
+        let scores = fleet.table(class_ids[gpu_id]).raw();
+        let base = scores[occ as usize] as i64;
+        for cand in cands {
+            if occ & cand.mask != 0 {
+                continue;
+            }
+            let d = scores[(occ | cand.mask) as usize] as i64 - base;
+            if d < best_delta {
+                best_delta = d;
+                best_gpu = gpu_id;
+                best_start = cand.start;
+            }
+        }
+    }
+    if best_gpu == usize::MAX {
+        None
+    } else {
+        Some(Placement { gpu: best_gpu, profile, index: best_start })
+    }
+}
+
+/// Convenience for call sites that already hold agnostic [`FleetTables`]:
+/// an [`ExpectedFleet`] under the same overlap rule.
+pub fn expected_fleet_like(tables: &FleetTables, cluster: &Cluster) -> ExpectedFleet {
+    ExpectedFleet::with_rule(cluster, tables.rule())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frag::delta::tests_support::random_reachable_state;
+    use crate::frag::score::score_direct_rule;
+    use crate::frag::{evaluate_cluster, evaluate_fleet, ScoreTable};
+    use crate::mig::profile::ALL_PROFILES;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn components_sum_to_agnostic_table() {
+        for hw in [
+            HardwareModel::a100_80gb(),
+            HardwareModel::a100_40gb(),
+            HardwareModel::h100_80gb(),
+            HardwareModel::a100_80gb().with_profiles(&[Profile::P1g10gb, Profile::P3g40gb]),
+        ] {
+            for rule in [OverlapRule::Partial, OverlapRule::Any] {
+                let comp = ComponentTables::for_hardware_rule(&hw, rule);
+                let table = ScoreTable::for_hardware_rule(&hw, rule);
+                for occ in 0u16..=255 {
+                    let sum: u32 =
+                        ALL_PROFILES.iter().map(|&p| comp.component(occ as u8, p)).sum();
+                    assert_eq!(
+                        sum,
+                        table.score_mask(occ as u8),
+                        "hw={} rule={rule:?} occ={occ:#010b}",
+                        hw.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn component_is_the_direct_score_of_a_single_profile_model() {
+        // Restricting the hardware to one profile makes Algorithm 1 compute
+        // exactly that profile's component.
+        let hw = HardwareModel::a100_80gb();
+        let comp = ComponentTables::for_hardware(&hw);
+        for p in ALL_PROFILES {
+            let solo = hw.with_profiles(&[p]);
+            for occ in 0u16..=255 {
+                let g = GpuState::from_mask(occ as u8);
+                assert_eq!(
+                    comp.component(occ as u8, p),
+                    score_direct_rule(g, &solo, OverlapRule::Partial),
+                    "{p} occ={occ:#010b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mix_is_a_scalar_multiple_of_the_agnostic_table() {
+        let hw = HardwareModel::a100_80gb();
+        let comp = ComponentTables::for_hardware(&hw);
+        let table = ScoreTable::for_hardware(&hw);
+        let expected = comp.weighted(&[10, 10, 10, 10, 10, 10]);
+        let share = SHARE_SCALE / 6;
+        for occ in 0u16..=255 {
+            assert_eq!(
+                expected.score_mask(occ as u8),
+                table.score_mask(occ as u8) as u64 * share,
+                "occ={occ:#010b}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_mix_argmin_matches_agnostic_argmin_on_random_states() {
+        let hw = HardwareModel::a100_80gb();
+        let table = ScoreTable::for_hardware(&hw);
+        let expected = ComponentTables::for_hardware(&hw).weighted(&[7; NUM_PROFILES]);
+        let mut rng = Rng::new(2026);
+        for round in 0..300 {
+            let gpus: Vec<GpuState> =
+                (0..6).map(|_| random_reachable_state(&mut rng)).collect();
+            for p in ALL_PROFILES {
+                let agnostic = evaluate_cluster(&table, &gpus, p);
+                let exp = evaluate_cluster_expected(&expected, &gpus, p);
+                assert_eq!(agnostic, exp, "round {round} profile {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_produce_the_zero_table() {
+        let comp = ComponentTables::for_hardware(&HardwareModel::a100_80gb());
+        let t = comp.weighted(&[0; NUM_PROFILES]);
+        assert!(t.raw().iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn skewed_mix_prices_only_the_observed_profiles() {
+        // A mix of pure 1g.10gb arrivals: the expected score of a state
+        // must be exactly share × the 1g.10gb component.
+        let comp = ComponentTables::for_hardware(&HardwareModel::a100_80gb());
+        let mut weights = [0u64; NUM_PROFILES];
+        weights[Profile::P1g10gb.index()] = 1234;
+        let t = comp.weighted(&weights);
+        for occ in 0u16..=255 {
+            assert_eq!(
+                t.score_mask(occ as u8),
+                comp.component(occ as u8, Profile::P1g10gb) as u64 * SHARE_SCALE,
+                "occ={occ:#010b}"
+            );
+        }
+    }
+
+    #[test]
+    fn expected_delta_matches_score_difference() {
+        let comp = ComponentTables::for_hardware(&HardwareModel::a100_80gb());
+        let t = comp.weighted(&[3, 1, 4, 1, 5, 9]);
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let g = random_reachable_state(&mut rng);
+            for p in ALL_PROFILES {
+                for &s in p.starts() {
+                    if !g.fits_at(p, s) {
+                        continue;
+                    }
+                    let expect = t.score_mask(g.with_placement(p, s).mask()) as i64
+                        - t.score_mask(g.mask()) as i64;
+                    assert_eq!(t.delta(g, p, s), expect, "{p}@{s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_refresh_is_version_keyed_and_matches_uniform_agnostic() {
+        use crate::mig::FleetSpec;
+        let fleet_spec = FleetSpec::new(vec![
+            (HardwareModel::a100_80gb(), 2),
+            (HardwareModel::h100_80gb(), 2),
+        ])
+        .unwrap();
+        let cluster = Cluster::from_fleet(&fleet_spec);
+        let tables = FleetTables::for_cluster(&cluster);
+        let mut exp = ExpectedFleet::for_cluster(&cluster);
+        assert!(exp.matches(&cluster));
+        assert_eq!(exp.num_classes(), 2);
+
+        let mut mix = ProfileMix::new(0);
+        for p in ALL_PROFILES {
+            mix.observe(p); // uniform: one observation per profile
+        }
+        exp.refresh(&mix);
+        let v = mix.version();
+        exp.refresh(&mix); // no-op on unchanged version
+        assert_eq!(v, mix.version());
+        for p in ALL_PROFILES {
+            assert_eq!(
+                evaluate_fleet(&tables, &cluster, p),
+                evaluate_fleet_expected(&exp, &cluster, p),
+                "uniform-mix fleet argmin must match agnostic for {p}"
+            );
+        }
+
+        // After the mix shifts, the refresh rebuilds (different version).
+        mix.observe(Profile::P1g10gb);
+        exp.refresh(&mix);
+        let one_sided = exp.table(0).score_mask(0b0000_0001);
+        assert!(one_sided > 0, "shifted mix must still price fragmentation");
+    }
+
+    #[test]
+    fn fleet_expected_skips_unsupporting_classes() {
+        use crate::mig::FleetSpec;
+        use crate::workload::WorkloadId;
+        let restricted = HardwareModel::h100_80gb().with_profiles(&[Profile::P1g10gb]);
+        let spec =
+            FleetSpec::new(vec![(restricted, 1), (HardwareModel::a100_80gb(), 2)]).unwrap();
+        let mut cluster = Cluster::from_fleet(&spec);
+        cluster
+            .allocate(WorkloadId(1), Placement { gpu: 1, profile: Profile::P1g10gb, index: 0 })
+            .unwrap();
+        let mut exp = ExpectedFleet::for_cluster(&cluster);
+        let mut mix = ProfileMix::new(0);
+        for p in ALL_PROFILES {
+            mix.observe(p);
+        }
+        exp.refresh(&mix);
+        let pl = evaluate_fleet_expected(&exp, &cluster, Profile::P7g80gb).unwrap();
+        assert_eq!(pl.gpu, 2, "class-0 GPU does not support 7g and must be skipped");
+    }
+}

@@ -28,6 +28,7 @@
 //! [`evaluate_cluster`] rescan, with identical tie-breaking.
 
 pub mod delta;
+pub mod expected;
 pub mod index;
 pub mod score;
 pub mod table;
@@ -35,6 +36,10 @@ pub mod table;
 pub use delta::{
     best_delta_on_gpu, delta_f, evaluate_cluster, evaluate_cluster_full, evaluate_fleet,
     DeltaOutcome, EvaluatedCandidate,
+};
+pub use expected::{
+    evaluate_cluster_expected, evaluate_fleet_expected, ComponentTables, ExpectedFleet,
+    ExpectedTable,
 };
 pub use index::FragIndex;
 pub use score::{

@@ -6,6 +6,7 @@
 //! * `sim`          — one Monte Carlo run, metrics to stdout
 //! * `sweep`        — full multi-seed experiment, prints Figs. 4/5/6
 //! * `figures`      — regenerate one paper figure (`--fig 4|5|6`)
+//! * `ab`           — paired A/B comparison of MFI vs MFI-EXP
 //! * `serve`        — run the online serving daemon (JSON over HTTP)
 //! * `inspect`      — hardware spec tables / Table II / candidate table
 //! * `trace ingest` — import an Alibaba/Philly-style CSV job log
@@ -27,7 +28,7 @@ use migsched::sim::experiment::run_sweep;
 use migsched::sim::replay::{self, ReplayConfig};
 use migsched::util::json::Json;
 use migsched::workload::ingest::{self, IngestConfig, MappingPolicy, TraceFormat};
-use migsched::workload::Trace;
+use migsched::workload::{EstimatorConfig, Trace};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +44,7 @@ fn main() -> ExitCode {
         "sim" => cmd_sim(&flags),
         "sweep" => cmd_sweep(&flags),
         "figures" => cmd_figures(&flags),
+        "ab" => cmd_ab(&flags),
         "serve" => cmd_serve(&flags),
         "inspect" => cmd_inspect(&flags),
         "trace ingest" => cmd_trace_ingest(&flags),
@@ -77,11 +79,13 @@ USAGE:
 
 COMMANDS:
   sim           one Monte Carlo run
-                  --scheduler MFI|MFI-IDX|FF|RR|BF-BI|WF-BI|...  (default MFI)
+                  --scheduler MFI|MFI-IDX|MFI-EXP|FF|RR|BF-BI|...  (default MFI)
                   --distribution uniform|skew-small|skew-big|bimodal
                   --gpus N (default 100)   --seed N   --hardware a100-80gb
                   [--fleet a100:64,h100:32,a100-40gb:16] (heterogeneous
                    fleet; excludes --gpus/--hardware)
+                  [--estimator-decay N] [--estimator-seed stats.json]
+                   (workload estimator knobs, MFI-EXP only)
                   [--defrag-every N] [--defrag-threshold F]
                   [--defrag-moves N] [--defrag-budget COST]
                   [--telemetry rows.jsonl] (per-checkpoint run telemetry)
@@ -89,8 +93,17 @@ COMMANDS:
                   --runs N   --gpus N   --quick (20 runs, M=20)
                   --out DIR (CSV exports, default results/)
   figures       regenerate a paper figure: --fig 4|5|6 [sweep flags]
+  ab            paired A/B: agnostic MFI vs distribution-aware MFI-EXP,
+                same seeds on both arms, JSON report of acceptance deltas
+                  --gpus N (default 20)   --seeds N (default 5)   --seed N
+                  [--estimator-decay N] [--estimator-seed stats.json]
+                  [--trace trace.jsonl | --in jobs.csv --format F]
+                  [--replay-gpus N] [--max-events N] [--out report.json]
   serve         online serving daemon
-                  --addr 127.0.0.1:8080   --gpus N   --scheduler MFI|MFI-IDX
+                  --addr 127.0.0.1:8080   --gpus N
+                  --scheduler MFI|MFI-IDX|MFI-EXP
+                  [--estimator-decay N] [--estimator-seed stats.json]
+                   (per-shard workload estimator, MFI-EXP only)
                   [--fleet a100:64,h100:32] (heterogeneous fleet)
                   --shards N (disjoint sub-clusters, default 1)   --workers N
                   [--serve-model reactor|threadpool] (default reactor on unix)
@@ -107,7 +120,8 @@ COMMANDS:
                   --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
   trace replay  open-loop replay (arrivals continue past rejections)
                   --trace trace.jsonl | --in jobs.csv --format F [ingest flags]
-                  [--sched MFI|MFI-IDX|...] [--gpus N] [--every N]
+                  [--sched MFI|MFI-IDX|MFI-EXP|...] [--gpus N] [--every N]
+                  [--estimator-decay N] [--estimator-seed stats.json]
                   [--fleet a100:4,h100:2] (heterogeneous fleet)
                   [--max-events N] [--csv out.csv] [--json]
                   [--defrag-every N] [--defrag-threshold F]
@@ -212,6 +226,53 @@ fn flag_scheduler(flags: &Flags) -> Result<SchedulerKind, String> {
     SchedulerKind::parse(name).ok_or_else(|| format!("unknown scheduler '{name}'"))
 }
 
+/// Parse the `--estimator-*` flags into the online workload-estimator
+/// wiring. Only the distribution-aware MFI-EXP consumes an estimator, so
+/// the knobs are rejected under any other scheduler (a silently inert
+/// flag would let users attribute results to a configuration that never
+/// ran). `--estimator-seed` takes a `migsched trace stats --json` report.
+fn flag_estimator(
+    flags: &Flags,
+    kind: SchedulerKind,
+) -> Result<Option<EstimatorConfig>, String> {
+    if kind != SchedulerKind::MfiExp {
+        for knob in ["estimator-decay", "estimator-seed"] {
+            if flags.contains_key(knob) {
+                return Err(format!("--{knob} requires --sched mfi-exp"));
+            }
+        }
+        return Ok(None);
+    }
+    let mut config = EstimatorConfig {
+        decay_slots: flag_u64(
+            flags,
+            "estimator-decay",
+            migsched::workload::estimator::DEFAULT_DECAY_SLOTS,
+        )?,
+        seed_counts: None,
+    };
+    if let Some(path) = flags.get("estimator-seed") {
+        if path == "true" {
+            return Err("--estimator-seed requires a stats-report path \
+                        (write one with `migsched trace stats --json`)"
+                .into());
+        }
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let stats = Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))?;
+        // Reuse the estimator's own stats-report parser, then recover the
+        // raw counts (seeding a fresh mix is exactly count x WEIGHT_SCALE).
+        let mut mix = migsched::workload::ProfileMix::new(0);
+        mix.seed_from_stats_json(&stats).map_err(|e| format!("{path}: {e}"))?;
+        let mut counts = [0u64; migsched::mig::NUM_PROFILES];
+        for (count, w) in counts.iter_mut().zip(mix.weights().iter()) {
+            *count = w / migsched::workload::estimator::WEIGHT_SCALE;
+        }
+        config.seed_counts = Some(counts);
+    }
+    Ok(Some(config))
+}
+
 fn flag_distribution(flags: &Flags) -> Result<Distribution, String> {
     let name = flags.get("distribution").map(String::as_str).unwrap_or("uniform");
     Distribution::parse(name).ok_or_else(|| format!("unknown distribution '{name}'"))
@@ -264,6 +325,7 @@ fn save_telemetry(path: &str, rows: &[Json]) -> Result<(), String> {
 
 fn cmd_sim(flags: &Flags) -> Result<(), String> {
     let kind = flag_scheduler(flags)?;
+    let estimator = flag_estimator(flags, kind)?;
     let fleet = flag_fleet(flags)?;
     let hw = match &fleet {
         Some(f) => f.classes()[0].0.clone(),
@@ -284,7 +346,7 @@ fn cmd_sim(flags: &Flags) -> Result<(), String> {
         config = config.with_fleet(f);
     }
     let engine = SimEngine::new(config.clone());
-    let mut sched = kind.build(&hw);
+    let mut sched = kind.build_with_estimator(&hw, estimator.as_ref());
     let t0 = std::time::Instant::now();
     let result = engine.run(&mut *sched);
     let elapsed = t0.elapsed();
@@ -396,6 +458,163 @@ fn cmd_figures(flags: &Flags) -> Result<(), String> {
     Ok(())
 }
 
+/// Summarize one A/B arm for the `ab` report.
+fn ab_arm_json(accepted: u64, arrived: u64, frag_sum: f64, runs: u64) -> Json {
+    Json::obj()
+        .with("accepted", accepted)
+        .with("arrived", arrived)
+        .with(
+            "acceptance_rate",
+            if arrived == 0 { 0.0 } else { accepted as f64 / arrived as f64 },
+        )
+        .with("mean_time_avg_frag", frag_sum / runs.max(1) as f64)
+}
+
+/// Paired A/B harness: the agnostic MFI baseline against the
+/// distribution-aware MFI-EXP, run over the synthetic mixes (and, with
+/// `--trace`/`--in`, an open-loop replay of a recorded trace) with the
+/// same seeds on both arms. Prints and optionally saves a JSON report of
+/// per-mix acceptance deltas; a conservation violation on either replay
+/// arm fails the command.
+fn cmd_ab(flags: &Flags) -> Result<(), String> {
+    let gpus = flag_usize(flags, "gpus", 20)?;
+    if gpus == 0 {
+        return Err("--gpus must be positive".into());
+    }
+    let seeds = flag_u64(flags, "seeds", 5)?;
+    if seeds == 0 {
+        return Err("--seeds must be positive".into());
+    }
+    let base_seed = flag_u64(flags, "seed", 1)?;
+    let hw = flag_hardware(flags)?;
+    // The harness compares against MFI-EXP by construction, so the
+    // estimator knobs always apply here.
+    let estimator = flag_estimator(flags, SchedulerKind::MfiExp)?
+        .expect("MFI-EXP always carries an estimator configuration");
+    let arms = [SchedulerKind::Mfi, SchedulerKind::MfiExp];
+
+    let t0 = std::time::Instant::now();
+    let mut mix_rows = Vec::new();
+    for dist in [
+        Distribution::Uniform,
+        Distribution::SkewSmall,
+        Distribution::SkewBig,
+        Distribution::Bimodal,
+    ] {
+        // (accepted, arrived, time-avg-frag sum) per arm, pooled over seeds.
+        let mut totals = [(0u64, 0u64, 0.0f64); 2];
+        for s in 0..seeds {
+            let config = SimConfig {
+                hardware: hw.clone(),
+                num_gpus: gpus,
+                fleet: None,
+                distribution: dist.clone(),
+                checkpoints: vec![1.0],
+                seed: base_seed + s,
+                defrag: None,
+                telemetry: false,
+            };
+            let engine = SimEngine::new(config);
+            for (arm, kind) in arms.iter().enumerate() {
+                let mut sched = kind.build_with_estimator(&hw, Some(&estimator));
+                let result = engine.run(&mut *sched);
+                totals[arm].0 += result.accepted;
+                totals[arm].1 += result.arrived;
+                totals[arm].2 += result.time_avg_frag;
+            }
+        }
+        let mut row = Json::obj().with("distribution", dist.name());
+        for (arm, kind) in arms.iter().enumerate() {
+            let (accepted, arrived, frag) = totals[arm];
+            row.set(kind.name(), ab_arm_json(accepted, arrived, frag, seeds));
+        }
+        row.set("delta_accepted", totals[1].0 as i64 - totals[0].0 as i64);
+        row.set(
+            "delta_acceptance_rate",
+            totals[1].0 as f64 / totals[1].1.max(1) as f64
+                - totals[0].0 as f64 / totals[0].1.max(1) as f64,
+        );
+        eprintln!(
+            "mix {:>10}: MFI {}/{}  MFI-EXP {}/{}  delta {:+}",
+            dist.name(),
+            totals[0].0,
+            totals[0].1,
+            totals[1].0,
+            totals[1].1,
+            totals[1].0 as i64 - totals[0].0 as i64
+        );
+        mix_rows.push(row);
+    }
+
+    let mut report = Json::obj()
+        .with("format", "migsched-ab-v1")
+        .with("baseline", arms[0].name())
+        .with("candidate", arms[1].name())
+        .with("gpus", gpus)
+        .with("seeds", seeds)
+        .with("base_seed", base_seed)
+        .with("estimator_decay", estimator.decay_slots)
+        .with("mixes", Json::Arr(mix_rows));
+
+    // Optional third surface: open-loop replay of a recorded trace, both
+    // arms over the identical arrival sequence.
+    if flags.contains_key("trace") || flags.contains_key("in") {
+        let trace = load_or_ingest_trace(flags)?;
+        let num_gpus = flag_usize(
+            flags,
+            "replay-gpus",
+            (trace.capacity_slices as usize / hw.num_slices()).max(1),
+        )?;
+        let config = ReplayConfig {
+            hardware: hw.clone(),
+            num_gpus,
+            fleet: None,
+            record_every: 0,
+            max_events: flag_u64(flags, "max-events", 0)?,
+            defrag: None,
+            telemetry: false,
+        };
+        let mut row = Json::obj()
+            .with("description", trace.description.as_str())
+            .with("gpus", num_gpus);
+        let mut accepted = [0u64; 2];
+        for (arm, kind) in arms.iter().enumerate() {
+            let mut sched = kind.build_with_estimator(&hw, Some(&estimator));
+            let result = replay::run(&trace, &mut *sched, &config);
+            if !result.conserved() {
+                return Err(format!(
+                    "{} replay violated counter conservation: \
+                     arrived={} accepted={} rejected={}",
+                    kind.name(),
+                    result.arrived,
+                    result.accepted,
+                    result.rejected
+                ));
+            }
+            accepted[arm] = result.accepted;
+            row.set(
+                kind.name(),
+                Json::obj()
+                    .with("accepted", result.accepted)
+                    .with("arrived", result.arrived)
+                    .with("acceptance_rate", result.acceptance_rate())
+                    .with("time_avg_frag", result.time_avg_frag),
+            );
+        }
+        row.set("delta_accepted", accepted[1] as i64 - accepted[0] as i64);
+        report.set("trace", row);
+    }
+
+    eprintln!("ab finished in {:.2?}", t0.elapsed());
+    println!("{}", report.to_string_pretty());
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, report.to_string_pretty())
+            .map_err(|e| format!("saving {out}: {e}"))?;
+        eprintln!("report saved to {out}");
+    }
+    Ok(())
+}
+
 /// Build and validate the daemon configuration from `serve` flags.
 /// Every knob is checked up front so a misconfigured daemon fails with a
 /// clear message before a socket ever binds.
@@ -430,11 +649,14 @@ fn serve_config(flags: &Flags) -> Result<migsched::server::DaemonConfig, String>
         Some(f) => (f.classes()[0].0.clone(), f.total_gpus()),
         None => (flag_hardware(flags)?, flag_usize(flags, "gpus", 100)?),
     };
+    let scheduler = flag_scheduler(flags)?;
+    let estimator = flag_estimator(flags, scheduler)?;
     let config = DaemonConfig {
         hardware,
         num_gpus,
         fleet,
-        scheduler: flag_scheduler(flags)?,
+        scheduler,
+        estimator,
         workers,
         shards: flag_usize(flags, "shards", 1)?,
         model,
@@ -630,6 +852,7 @@ fn cmd_trace_stats(flags: &Flags) -> Result<(), String> {
 fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
     let trace = load_or_ingest_trace(flags)?;
     let kind = flag_scheduler(flags)?;
+    let estimator = flag_estimator(flags, kind)?;
     let fleet = flag_fleet(flags)?;
     let hw = match &fleet {
         Some(f) => f.classes()[0].0.clone(),
@@ -656,7 +879,7 @@ fn cmd_trace_open_replay(flags: &Flags) -> Result<(), String> {
         defrag: flag_defrag(flags)?,
         telemetry: telemetry_path.is_some(),
     };
-    let mut sched = kind.build(&hw);
+    let mut sched = kind.build_with_estimator(&hw, estimator.as_ref());
     let t0 = std::time::Instant::now();
     let result = replay::run(&trace, &mut *sched, &config);
     let elapsed = t0.elapsed();
@@ -722,6 +945,7 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
     let path = flags.get("trace").ok_or("trace-replay requires --trace FILE")?;
     let trace = Trace::load(std::path::Path::new(path))?;
     let kind = flag_scheduler(flags)?;
+    let estimator = flag_estimator(flags, kind)?;
     let hw = flag_hardware(flags)?;
     let num_gpus = flag_usize(
         flags,
@@ -741,7 +965,7 @@ fn cmd_trace_replay(flags: &Flags) -> Result<(), String> {
         telemetry: telemetry_path.is_some(),
     };
     let engine = SimEngine::new(config.clone());
-    let mut sched = kind.build(&hw);
+    let mut sched = kind.build_with_estimator(&hw, estimator.as_ref());
     let result = engine.replay_trace(&mut *sched, &trace);
     let mut summary = Json::obj()
         .with("trace", path.as_str())
@@ -833,6 +1057,59 @@ mod tests {
         let err = serve_config(&flags_of(&[("fleet", "a100:1,h100:1"), ("shards", "2")]))
             .unwrap_err();
         assert!(err.contains("composition-preserving"), "{err}");
+    }
+
+    #[test]
+    fn estimator_flags_require_the_distribution_aware_scheduler() {
+        // Inert knobs are rejected, not silently dropped.
+        let err = flag_estimator(&flags_of(&[("estimator-decay", "64")]), SchedulerKind::Mfi)
+            .unwrap_err();
+        assert!(err.contains("--estimator-decay requires --sched mfi-exp"), "{err}");
+        let err = serve_config(&flags_of(&[("estimator-seed", "stats.json")])).unwrap_err();
+        assert!(err.contains("--estimator-seed requires --sched mfi-exp"), "{err}");
+        assert!(flag_estimator(&Flags::new(), SchedulerKind::Mfi).unwrap().is_none());
+        // The bare flag without a path is rejected like --telemetry.
+        let err = flag_estimator(&flags_of(&[("estimator-seed", "true")]), SchedulerKind::MfiExp)
+            .unwrap_err();
+        assert!(err.contains("requires a stats-report path"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_builds_a_per_shard_estimator_for_mfi_exp() {
+        let config =
+            serve_config(&flags_of(&[("scheduler", "mfi-exp"), ("estimator-decay", "128")]))
+                .unwrap();
+        assert_eq!(config.scheduler, SchedulerKind::MfiExp);
+        let est = config.estimator.expect("estimator wired through");
+        assert_eq!(est.decay_slots, 128);
+        assert_eq!(est.seed_counts, None);
+        // Default decay when the flag is omitted; no estimator at all for
+        // agnostic schedulers (the daemon stays byte-compatible).
+        let config = serve_config(&flags_of(&[("scheduler", "mfi-exp")])).unwrap();
+        assert_eq!(config.estimator.unwrap().decay_slots, EstimatorConfig::default().decay_slots);
+        let config = serve_config(&Flags::new()).unwrap();
+        assert!(config.estimator.is_none());
+    }
+
+    #[test]
+    fn estimator_seed_flag_reads_a_trace_stats_report() {
+        let path = std::env::temp_dir().join("migsched_main_estimator_seed.json");
+        std::fs::write(&path, r#"{"arrivals":10,"profiles":{"1g.10gb":6,"3g.40gb":4}}"#)
+            .unwrap();
+        let flags = flags_of(&[("estimator-seed", path.to_str().unwrap())]);
+        let est = flag_estimator(&flags, SchedulerKind::MfiExp).unwrap().unwrap();
+        let counts = est.seed_counts.expect("seed counts recovered from the report");
+        assert_eq!(counts[migsched::mig::Profile::P1g10gb.index()], 6);
+        assert_eq!(counts[migsched::mig::Profile::P3g40gb.index()], 4);
+        assert_eq!(counts[migsched::mig::Profile::P7g80gb.index()], 0);
+        std::fs::remove_file(&path).ok();
+        // A missing file is a clear error, not a silent empty seed.
+        let err = flag_estimator(
+            &flags_of(&[("estimator-seed", "/nonexistent/stats.json")]),
+            SchedulerKind::MfiExp,
+        )
+        .unwrap_err();
+        assert!(err.contains("reading /nonexistent/stats.json"), "{err}");
     }
 
     #[test]

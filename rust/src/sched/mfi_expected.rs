@@ -1,0 +1,348 @@
+//! MFI-EXP — MFI with distribution-aware (expected-fragmentation) pricing.
+//!
+//! Identical decision procedure to [`Mfi`](super::Mfi) — dry-run every
+//! feasible placement, commit the strict `(Δ, gpu, anchor)` argmin — but
+//! the score each candidate is priced against is the *expected*
+//! fragmentation under the observed workload mix
+//! ([`crate::frag::expected`]), learned online by a [`ProfileMix`]
+//! estimator that [`Scheduler::on_commit`] feeds with every accepted
+//! arrival.
+//!
+//! Two exact-equivalence guarantees (property-tested):
+//!
+//! * **Empty estimator ≡ MFI.** With no observed or seeded mass there is
+//!   no signal, and the expected table would be all-zero (degenerate
+//!   first-feasible argmin) — so the scheduler falls back to the agnostic
+//!   [`ScoreTable`]/[`FleetTables`] path, bit-identical to `Mfi`.
+//! * **Uniform estimator ≡ MFI.** Equal weights collapse to a positive
+//!   scalar multiple of the agnostic score, preserving the argmin and
+//!   every tie.
+//!
+//! The estimator state is part of the policy: [`Scheduler::reset`]
+//! restores the *construction-time* mix (empty, or the `--estimator-seed`
+//! histogram), so repeated simulation runs stay reproducible.
+
+use super::Scheduler;
+use crate::cluster::Cluster;
+use crate::frag::expected::{
+    evaluate_cluster_expected, evaluate_fleet_expected, ComponentTables, ExpectedFleet,
+    ExpectedTable,
+};
+use crate::frag::{evaluate_cluster, evaluate_fleet, FleetTables, OverlapRule, ScoreTable};
+use crate::mig::{HardwareModel, Placement, Profile};
+use crate::workload::{EstimatorConfig, ProfileMix};
+
+/// The MFI-EXP scheduler.
+#[derive(Clone, Debug)]
+pub struct MfiExpected {
+    /// Agnostic table — the empty-estimator fallback path.
+    table: ScoreTable,
+    /// Agnostic per-class tables for the mixed-fleet fallback path.
+    fleet: Option<FleetTables>,
+    /// The live estimator, fed by `on_commit`.
+    mix: ProfileMix,
+    /// Construction-time mix, restored by `reset()` so seeded runs are
+    /// reproducible across engine restarts.
+    initial_mix: ProfileMix,
+    /// Per-profile components for the construction hardware (uniform path).
+    components: ComponentTables,
+    /// Cached collapsed table for the uniform path, keyed on mix version.
+    expected: Option<ExpectedTable>,
+    expected_version: u64,
+    /// Per-class expected tables for mixed fleets (lazily built, Arc-identity
+    /// revalidated like the agnostic `FleetTables`).
+    expected_fleet: Option<ExpectedFleet>,
+    name: String,
+}
+
+impl MfiExpected {
+    /// MFI-EXP for the default hardware model (A100-80GB), empty estimator.
+    pub fn new() -> Self {
+        Self::for_hardware(&HardwareModel::a100_80gb())
+    }
+
+    /// MFI-EXP for a hardware model with the default estimator config
+    /// (empty mix, default decay).
+    pub fn for_hardware(hw: &HardwareModel) -> Self {
+        Self::with_config(hw, &EstimatorConfig::default())
+    }
+
+    /// MFI-EXP under an explicit fragmentation overlap rule (ablation).
+    pub fn with_rule(hw: &HardwareModel, rule: OverlapRule) -> Self {
+        let mut s = Self::with_config(hw, &EstimatorConfig::default());
+        s.table = ScoreTable::for_hardware_rule(hw, rule);
+        s.components = ComponentTables::for_hardware_rule(hw, rule);
+        s.name = if rule == OverlapRule::default() {
+            "MFI-EXP".into()
+        } else {
+            format!("MFI-EXP-{}", rule.name())
+        };
+        s
+    }
+
+    /// MFI-EXP with an explicit estimator configuration (decay + optional
+    /// seed histogram) — the CLI/daemon construction path.
+    pub fn with_config(hw: &HardwareModel, config: &EstimatorConfig) -> Self {
+        let mix = config.build_mix();
+        Self {
+            table: ScoreTable::for_hardware(hw),
+            fleet: None,
+            initial_mix: mix.clone(),
+            mix,
+            components: ComponentTables::for_hardware(hw),
+            expected: None,
+            expected_version: 0,
+            expected_fleet: None,
+            name: "MFI-EXP".to_string(),
+        }
+    }
+
+    /// The live estimator (read-only).
+    pub fn mix(&self) -> &ProfileMix {
+        &self.mix
+    }
+
+    /// Replace the live *and* initial mix (snapshot restore / seeding after
+    /// construction).
+    pub fn set_mix(&mut self, mix: ProfileMix) {
+        self.initial_mix = mix.clone();
+        self.mix = mix;
+        self.expected = None;
+        self.expected_fleet = None;
+    }
+}
+
+impl Default for MfiExpected {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for MfiExpected {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, profile: Profile) -> Option<Placement> {
+        if cluster.is_uniform() {
+            if !cluster.hardware().supports(profile) {
+                return None;
+            }
+            if self.mix.is_empty() {
+                // No signal: agnostic path, bit-identical to MFI.
+                return evaluate_cluster(&self.table, cluster.gpus(), profile);
+            }
+            if self.expected.is_none() || self.expected_version != self.mix.version() {
+                self.expected = Some(self.components.weighted(self.mix.weights()));
+                self.expected_version = self.mix.version();
+            }
+            let expected = self.expected.as_ref().expect("expected table built");
+            return evaluate_cluster_expected(expected, cluster.gpus(), profile);
+        }
+        if !cluster.supports(profile) {
+            return None;
+        }
+        if self.mix.is_empty() {
+            let fresh = !matches!(&self.fleet, Some(t) if t.matches(cluster));
+            if fresh {
+                self.fleet = Some(FleetTables::with_rule(cluster, self.table.rule()));
+            }
+            let tables = self.fleet.as_ref().expect("fleet tables built");
+            return evaluate_fleet(tables, cluster, profile);
+        }
+        let fresh = !matches!(&self.expected_fleet, Some(t) if t.matches(cluster));
+        if fresh {
+            self.expected_fleet = Some(ExpectedFleet::with_rule(cluster, self.table.rule()));
+        }
+        let fleet = self.expected_fleet.as_mut().expect("expected fleet built");
+        fleet.refresh(&self.mix);
+        evaluate_fleet_expected(fleet, cluster, profile)
+    }
+
+    fn on_commit(&mut self, _cluster: &Cluster, placement: Placement) {
+        self.mix.observe(placement.profile);
+    }
+
+    fn reset(&mut self) {
+        self.fleet = None;
+        self.expected = None;
+        self.expected_fleet = None;
+        self.mix = self.initial_mix.clone();
+        self.expected_version = 0;
+    }
+
+    fn estimator(&self) -> Option<&ProfileMix> {
+        Some(&self.mix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Mfi;
+    use super::*;
+    use crate::frag::delta::tests_support::random_reachable_state;
+    use crate::mig::profile::ALL_PROFILES;
+    use crate::mig::{GpuState, NUM_PROFILES};
+    use crate::util::rng::Rng;
+    use crate::workload::WorkloadId;
+
+    fn random_cluster(rng: &mut Rng, gpus: usize) -> Cluster {
+        let hw = HardwareModel::a100_80gb();
+        let mut cluster = Cluster::new(hw, gpus);
+        let mut next = 0u64;
+        for gpu in 0..gpus {
+            for _ in 0..rng.index(6) {
+                let p = *rng.choose(&ALL_PROFILES);
+                let feasible: Vec<u8> = cluster.gpus()[gpu].feasible_indexes(p).collect();
+                if feasible.is_empty() {
+                    continue;
+                }
+                let s = *rng.choose(&feasible);
+                cluster
+                    .allocate(WorkloadId(next), Placement { gpu, profile: p, index: s })
+                    .unwrap();
+                next += 1;
+            }
+        }
+        cluster
+    }
+
+    #[test]
+    fn empty_estimator_is_bit_identical_to_mfi() {
+        let hw = HardwareModel::a100_80gb();
+        let mut mfi = Mfi::for_hardware(&hw);
+        let mut exp = MfiExpected::for_hardware(&hw);
+        assert!(exp.mix().is_empty());
+        let mut rng = Rng::new(4021);
+        for round in 0..200 {
+            let cluster = random_cluster(&mut rng, 5);
+            for p in ALL_PROFILES {
+                let a = mfi.schedule(&cluster, p);
+                let b = exp.schedule(&cluster, p);
+                assert_eq!(a, b, "round {round} profile {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_estimator_is_bit_identical_to_mfi() {
+        let hw = HardwareModel::a100_80gb();
+        let mut mfi = Mfi::for_hardware(&hw);
+        let cfg = EstimatorConfig { decay_slots: 0, seed_counts: Some([11; NUM_PROFILES]) };
+        let mut exp = MfiExpected::with_config(&hw, &cfg);
+        assert!(!exp.mix().is_empty());
+        let mut rng = Rng::new(555);
+        for round in 0..200 {
+            let cluster = random_cluster(&mut rng, 4);
+            for p in ALL_PROFILES {
+                let a = mfi.schedule(&cluster, p);
+                let b = exp.schedule(&cluster, p);
+                assert_eq!(a, b, "round {round} profile {p} (uniform mix)");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_mix_argmin_matches_brute_force_over_the_expected_table() {
+        let hw = HardwareModel::a100_80gb();
+        let cfg = EstimatorConfig {
+            decay_slots: 0,
+            seed_counts: Some([1, 2, 30, 4, 5, 60]),
+        };
+        let mut exp = MfiExpected::with_config(&hw, &cfg);
+        let table = ComponentTables::for_hardware(&hw).weighted(exp.mix().weights());
+        let mut rng = Rng::new(808);
+        for _ in 0..150 {
+            let gpus: Vec<GpuState> =
+                (0..5).map(|_| random_reachable_state(&mut rng)).collect();
+            for p in ALL_PROFILES {
+                let fast = evaluate_cluster_expected(&table, &gpus, p);
+                let mut best: Option<(i64, usize, u8)> = None;
+                for (gid, g) in gpus.iter().enumerate() {
+                    if p.size() > g.free_slices() {
+                        continue;
+                    }
+                    for &a in p.starts() {
+                        if !g.fits_at(p, a) {
+                            continue;
+                        }
+                        let d = table.delta(*g, p, a);
+                        if best.is_none() || (d, gid, a) < best.unwrap() {
+                            best = Some((d, gid, a));
+                        }
+                    }
+                }
+                match (fast, best) {
+                    (None, None) => {}
+                    (Some(pl), Some((_, gid, a))) => {
+                        assert_eq!((pl.gpu, pl.index), (gid, a), "{p}");
+                    }
+                    (a, b) => panic!("mismatch for {p}: {a:?} vs {b:?}"),
+                }
+            }
+        }
+        // The scheduler's own decision agrees with the standalone table.
+        let cluster = Cluster::new(hw, 3);
+        let via_sched = exp.schedule(&cluster, Profile::P2g20gb);
+        let via_table = evaluate_cluster_expected(&table, cluster.gpus(), Profile::P2g20gb);
+        assert_eq!(via_sched, via_table);
+    }
+
+    #[test]
+    fn on_commit_feeds_the_estimator_and_reset_restores_the_seed() {
+        let hw = HardwareModel::a100_80gb();
+        let mut counts = [0u64; NUM_PROFILES];
+        counts[Profile::P3g40gb.index()] = 4;
+        let cfg = EstimatorConfig { decay_slots: 64, seed_counts: Some(counts) };
+        let mut exp = MfiExpected::with_config(&hw, &cfg);
+        let seeded_weights = *exp.mix().weights();
+
+        let cluster = Cluster::new(hw, 2);
+        let pl = exp.schedule(&cluster, Profile::P1g10gb).unwrap();
+        exp.on_commit(&cluster, pl);
+        assert_eq!(exp.mix().arrivals(), 1);
+        assert!(exp.mix().weights()[Profile::P1g10gb.index()] > 0);
+        assert_ne!(exp.mix().weights(), &seeded_weights);
+        assert_eq!(exp.estimator().unwrap().arrivals(), 1);
+
+        exp.reset();
+        assert_eq!(exp.mix().weights(), &seeded_weights, "reset restores the seeded mix");
+        assert_eq!(exp.mix().arrivals(), 0);
+    }
+
+    #[test]
+    fn never_rejects_feasible_requests_with_any_mix() {
+        // Completeness: like MFI, the expected scan visits every feasible
+        // candidate, so rejection implies infeasibility — regardless of mix.
+        let hw = HardwareModel::a100_80gb();
+        let cfg =
+            EstimatorConfig { decay_slots: 16, seed_counts: Some([9, 0, 0, 0, 0, 1]) };
+        let mut exp = MfiExpected::with_config(&hw, &cfg);
+        let mut rng = Rng::new(31337);
+        let mut cluster = Cluster::new(hw, 3);
+        let mut next = 0u64;
+        for _ in 0..400 {
+            let p = *rng.choose(&ALL_PROFILES);
+            match exp.schedule(&cluster, p) {
+                Some(pl) => {
+                    cluster.allocate(WorkloadId(next), pl).expect("proposed placement valid");
+                    exp.on_commit(&cluster, pl);
+                    next += 1;
+                }
+                None => assert!(!cluster.can_host(p), "rejected feasible {p}"),
+            }
+            if rng.chance(0.4) && cluster.allocated_workloads() > 0 {
+                let ids: Vec<WorkloadId> = cluster.allocations().map(|(id, _)| id).collect();
+                let id = *rng.choose(&ids);
+                cluster.release(id).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn names_and_rules() {
+        assert_eq!(MfiExpected::new().name(), "MFI-EXP");
+        let any = MfiExpected::with_rule(&HardwareModel::a100_80gb(), OverlapRule::Any);
+        assert_eq!(any.name(), "MFI-EXP-any");
+    }
+}

@@ -16,6 +16,7 @@
 //! | [`RandomFit`]  | agnostic | uniform among feasible      | uniform |
 //! | [`Mfi`]        | aware    | argmin ΔF (Algorithm 2)     | argmin ΔF |
 //! | [`MfiIndexed`] | aware    | argmin ΔF via incremental index | argmin ΔF |
+//! | [`MfiExpected`]| aware + distribution | argmin ΔE[F] under the observed mix | argmin ΔE[F] |
 //! | [`MfiXla`]     | aware    | argmin ΔF via PJRT artifact | argmin ΔF |
 //!
 //! [`MfiIndexed`] is placement-for-placement identical to [`Mfi`] but
@@ -27,6 +28,7 @@ pub mod best_fit;
 pub mod first_fit;
 pub mod index_policy;
 pub mod mfi;
+pub mod mfi_expected;
 pub mod mfi_indexed;
 #[cfg(feature = "xla")]
 pub mod mfi_xla;
@@ -38,6 +40,7 @@ pub use best_fit::BestFit;
 pub use first_fit::FirstFit;
 pub use index_policy::IndexPolicy;
 pub use mfi::Mfi;
+pub use mfi_expected::MfiExpected;
 pub use mfi_indexed::MfiIndexed;
 #[cfg(feature = "xla")]
 pub use mfi_xla::MfiXla;
@@ -73,7 +76,18 @@ pub trait Scheduler {
     fn on_release(&mut self, _cluster: &Cluster, _placement: Placement) {}
 
     /// Reset internal policy state between simulation runs (cursors, RNG).
+    ///
+    /// Schedulers with a construction-time estimator seed restore *that*
+    /// state, not an empty one, so seeded runs stay reproducible.
     fn reset(&mut self) {}
+
+    /// The scheduler's online workload estimator, when it has one
+    /// ([`MfiExpected`]). Observability surfaces (`/v1/stats`, `/metrics`)
+    /// use this to report the learned mix; `None` (the default) keeps
+    /// estimator-free schedulers' output unchanged.
+    fn estimator(&self) -> Option<&crate::workload::ProfileMix> {
+        None
+    }
 }
 
 /// Constructible scheduler kinds (CLI/config/benches).
@@ -96,6 +110,11 @@ pub enum SchedulerKind {
     /// MFI on the incremental argmin-ΔF index — same placements as
     /// [`SchedulerKind::Mfi`], sublinear per decision (not in the paper).
     MfiIdx,
+    /// MFI pricing candidates by *expected* fragmentation under the
+    /// online-estimated workload mix (FGD-style; not in the paper).
+    /// Bit-identical to [`SchedulerKind::Mfi`] while the estimator is
+    /// empty or uniform.
+    MfiExp,
     /// Random feasible placement — sanity floor (not in the paper).
     Random,
     /// Retrying FF: falls through to the next GPU when the
@@ -123,10 +142,11 @@ impl SchedulerKind {
     }
 
     /// Everything, for exhaustive sweeps/ablations.
-    pub fn all() -> [SchedulerKind; 13] {
+    pub fn all() -> [SchedulerKind; 14] {
         [
             SchedulerKind::Mfi,
             SchedulerKind::MfiIdx,
+            SchedulerKind::MfiExp,
             SchedulerKind::Ff,
             SchedulerKind::Rr,
             SchedulerKind::BfBi,
@@ -150,6 +170,7 @@ impl SchedulerKind {
             self,
             SchedulerKind::Mfi
                 | SchedulerKind::MfiIdx
+                | SchedulerKind::MfiExp
                 | SchedulerKind::Random
                 | SchedulerKind::FfRetry
                 | SchedulerKind::RrRetry
@@ -168,6 +189,7 @@ impl SchedulerKind {
             SchedulerKind::WfFi => "WF-FI",
             SchedulerKind::Mfi => "MFI",
             SchedulerKind::MfiIdx => "MFI-IDX",
+            SchedulerKind::MfiExp => "MFI-EXP",
             SchedulerKind::Random => "RANDOM",
             SchedulerKind::FfRetry => "FF-R",
             SchedulerKind::RrRetry => "RR-R",
@@ -186,6 +208,7 @@ impl SchedulerKind {
             "WF-FI" => Some(SchedulerKind::WfFi),
             "MFI" => Some(SchedulerKind::Mfi),
             "MFI-IDX" | "MFI-INDEXED" => Some(SchedulerKind::MfiIdx),
+            "MFI-EXP" | "MFI-EXPECTED" => Some(SchedulerKind::MfiExp),
             "RANDOM" | "RAND" => Some(SchedulerKind::Random),
             "FF-R" => Some(SchedulerKind::FfRetry),
             "RR-R" => Some(SchedulerKind::RrRetry),
@@ -206,11 +229,29 @@ impl SchedulerKind {
             SchedulerKind::WfFi => Box::new(WorstFit::new(IndexPolicy::FirstIndex)),
             SchedulerKind::Mfi => Box::new(Mfi::for_hardware(hw)),
             SchedulerKind::MfiIdx => Box::new(MfiIndexed::for_hardware(hw)),
+            SchedulerKind::MfiExp => Box::new(MfiExpected::for_hardware(hw)),
             SchedulerKind::Random => Box::new(RandomFit::new(0x5EED)),
             SchedulerKind::FfRetry => Box::new(FirstFit::retry()),
             SchedulerKind::RrRetry => Box::new(RoundRobin::retry()),
             SchedulerKind::BfBiRetry => Box::new(BestFit::retry(IndexPolicy::BestIndex)),
             SchedulerKind::WfBiRetry => Box::new(WorstFit::retry(IndexPolicy::BestIndex)),
+        }
+    }
+
+    /// [`build`](Self::build), threading an estimator configuration into
+    /// the schedulers that have one. Only [`SchedulerKind::MfiExp`]
+    /// consumes it; every other kind builds exactly as `build` does, so
+    /// call sites can pass the config through unconditionally.
+    pub fn build_with_estimator(
+        self,
+        hw: &crate::mig::HardwareModel,
+        estimator: Option<&crate::workload::EstimatorConfig>,
+    ) -> Box<dyn Scheduler + Send> {
+        match (self, estimator) {
+            (SchedulerKind::MfiExp, Some(config)) => {
+                Box::new(MfiExpected::with_config(hw, config))
+            }
+            _ => self.build(hw),
         }
     }
 }
@@ -243,6 +284,23 @@ mod tests {
             let s = k.build(&hw);
             assert_eq!(s.name(), k.name());
         }
+    }
+
+    #[test]
+    fn build_with_estimator_seeds_only_mfi_exp() {
+        use crate::mig::NUM_PROFILES;
+        use crate::workload::EstimatorConfig;
+        let hw = HardwareModel::a100_80gb();
+        let cfg = EstimatorConfig { decay_slots: 8, seed_counts: Some([1; NUM_PROFILES]) };
+        let s = SchedulerKind::MfiExp.build_with_estimator(&hw, Some(&cfg));
+        assert_eq!(s.name(), "MFI-EXP");
+        assert!(!s.estimator().expect("MFI-EXP has an estimator").is_empty());
+        // Every other kind ignores the config and reports no estimator.
+        let s = SchedulerKind::Mfi.build_with_estimator(&hw, Some(&cfg));
+        assert!(s.estimator().is_none());
+        // MFI-EXP without a config still carries an (empty) estimator.
+        let s = SchedulerKind::MfiExp.build(&hw);
+        assert!(s.estimator().expect("estimator present").is_empty());
     }
 
     #[test]

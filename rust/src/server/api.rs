@@ -395,8 +395,22 @@ fn stats(shards: &ShardSet) -> Response {
     let mut migrated_bytes = 0u64;
     let num_classes = shards.fleet().num_classes();
     let mut per_class = vec![crate::cluster::ClassStats::default(); num_classes];
+    let mut has_est = false;
+    let mut est_decay = 0u64;
+    let mut est_arrivals = 0u64;
+    let mut est_weights = [0u64; crate::mig::NUM_PROFILES];
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
+        if let Some(mix) = s.scheduler.estimator() {
+            // Estimators are shard-local; the report sums their raw
+            // fixed-point weights (integers, so the merge is exact).
+            has_est = true;
+            est_decay = mix.decay_slots();
+            est_arrivals += mix.arrivals();
+            for (acc, w) in est_weights.iter_mut().zip(mix.weights().iter()) {
+                *acc += *w;
+            }
+        }
         allocated += s.cluster.allocated_workloads();
         accepted += s.accepted_total;
         arrived += s.arrived_total;
@@ -435,6 +449,29 @@ fn stats(shards: &ShardSet) -> Response {
     j.set("num_gpus", shards.total_gpus());
     j.set("capacity_slices", capacity);
     j.set("scheduler", shards.scheduler_name());
+    // Only distribution-aware schedulers expose an estimator, so agnostic
+    // daemons keep the legacy byte-identical serialization.
+    if has_est {
+        let total: u64 = est_weights.iter().sum();
+        let mut weights = Json::obj();
+        let mut mix = Json::obj();
+        for p in crate::mig::ALL_PROFILES {
+            let w = est_weights[p.index()];
+            weights.set(p.canonical_name(), w);
+            mix.set(
+                p.canonical_name(),
+                if total == 0 { 0.0 } else { w as f64 / total as f64 },
+            );
+        }
+        j.set(
+            "estimator",
+            Json::obj()
+                .with("decay_slots", est_decay)
+                .with("arrivals", est_arrivals)
+                .with("weights", weights)
+                .with("mix", mix),
+        );
+    }
     // Emitted only once maintenance has actually migrated something, so a
     // migration-free daemon's stats stay byte-identical to the legacy
     // single-mutex serialization (the PR 4 compatibility pin).
@@ -1033,6 +1070,45 @@ mod tests {
     // at two layers: shard-geometry unit tests in `server::shard` and the
     // end-to-end socket test `sharded_daemon_serves_disjoint_subclusters`
     // in rust/tests/server_api.rs.
+
+    #[test]
+    fn stats_estimator_block_is_gated_on_the_scheduler() {
+        use crate::sched::SchedulerKind;
+        // Agnostic daemons never grow the key — the legacy byte pin in
+        // shard1_responses_match_legacy_single_mutex_construction covers
+        // the full serialization.
+        let plain = json_of(&dispatch(&req("GET", "/v1/stats", ""), &shard_set()));
+        assert!(plain.get("estimator").is_none());
+
+        let state = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            workers: 1,
+            scheduler: SchedulerKind::MfiExp,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        let before = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        let est = before.get("estimator").expect("MFI-EXP daemons expose the estimator");
+        assert_eq!(est.req_u64("arrivals").unwrap(), 0);
+        assert_eq!(est.req_u64("decay_slots").unwrap(), 512);
+        // Each accepted submit feeds the estimator through on_commit.
+        for body in [r#"{"profile":"3g.40gb"}"#, r#"{"profile":"1g.10gb"}"#] {
+            assert_eq!(dispatch(&req("POST", "/v1/workloads", body), &state).status, 201);
+        }
+        let after = json_of(&dispatch(&req("GET", "/v1/stats", ""), &state));
+        let est = after.get("estimator").unwrap();
+        assert_eq!(est.req_u64("arrivals").unwrap(), 2);
+        let weights = est.get("weights").unwrap();
+        assert!(weights.req_u64("3g.40gb").unwrap() > 0);
+        assert!(weights.req_u64("1g.10gb").unwrap() > 0);
+        assert_eq!(weights.req_u64("7g.80gb").unwrap(), 0);
+        let mix = est.get("mix").unwrap();
+        let sum: f64 = crate::mig::ALL_PROFILES
+            .iter()
+            .map(|p| mix.get(p.canonical_name()).and_then(Json::as_f64).unwrap())
+            .sum();
+        assert!((sum - 1.0).abs() < 1e-9, "mix shares must sum to 1, got {sum}");
+    }
 
     #[test]
     fn defrag_endpoint_on_clean_cluster_is_a_noop() {

@@ -138,6 +138,16 @@ pub struct DaemonConfig {
     /// Background continuous defrag (`None` = the pre-existing behavior:
     /// migrations only via `POST /v1/maintenance/defrag`).
     pub defrag: Option<DaemonDefrag>,
+    /// Online workload estimator seeding/decay for distribution-aware
+    /// schedulers (`--estimator-decay` / `--estimator-seed`; only MFI-EXP
+    /// consumes it). The estimator is **per-shard**: each shard's
+    /// scheduler lives behind that shard's own mutex, and tenants are
+    /// consistent-hash routed, so every shard learns the mix of its own
+    /// tenant population from the submits it actually serves — no
+    /// cross-shard lock or shared atomic state on the data-plane hot
+    /// path, matching the shard-local defrag sweeper discipline.
+    /// `None` = build schedulers exactly as before (byte-compatible).
+    pub estimator: Option<crate::workload::EstimatorConfig>,
     /// How connections are served; see [`ServeModel`].
     pub model: ServeModel,
     /// Idle timeout between kept-alive requests (`--idle-timeout-ms`).
@@ -157,6 +167,7 @@ impl Default for DaemonConfig {
             workers: 8,
             shards: 1,
             defrag: None,
+            estimator: None,
             model: ServeModel::default(),
             idle_timeout: KEEP_ALIVE_IDLE,
             max_requests_per_conn: MAX_REQUESTS_PER_CONN,

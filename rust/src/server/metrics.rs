@@ -257,8 +257,18 @@ pub fn render_into(shards: &ShardSet, out: &mut String) {
     let mut clock = 0u64;
     let num_classes = shards.fleet().num_classes();
     let mut per_class = vec![crate::cluster::ClassStats::default(); num_classes];
+    let mut has_est = false;
+    let mut est_weights = [0u64; crate::mig::NUM_PROFILES];
     for shard in shards.shards() {
         let s = shard.state.lock().unwrap();
+        if let Some(mix) = s.scheduler.estimator() {
+            // Shard-local estimators merge by summing their fixed-point
+            // weights (integers, so the merge is exact).
+            has_est = true;
+            for (acc, w) in est_weights.iter_mut().zip(mix.weights().iter()) {
+                *acc += *w;
+            }
+        }
         allocated += s.cluster.allocated_workloads() as u64;
         accepted += s.accepted_total;
         arrived += s.arrived_total;
@@ -345,6 +355,26 @@ pub fn render_into(shards: &ShardSet, out: &mut String) {
             "migsched_class_allocated_workloads",
             "Workloads currently placed, per device class.",
             &labeled(|s| s.allocated_workloads as u64),
+        );
+    }
+    // Estimator gauges, distribution-aware schedulers only — an agnostic
+    // daemon's scrape stays byte-identical to the legacy exposition.
+    if has_est {
+        let total: u64 = est_weights.iter().sum();
+        let samples: Vec<_> = crate::mig::ALL_PROFILES
+            .iter()
+            .map(|p| {
+                let w = est_weights[p.index()];
+                (
+                    Labels::new().with("profile", p.canonical_name()),
+                    if total > 0 { w as f64 / total as f64 } else { 0.0 },
+                )
+            })
+            .collect();
+        e.gauge(
+            "migsched_estimator_profile_weight",
+            "Estimated workload-mix share per profile (decayed, normalized).",
+            &samples,
         );
     }
     e.gauge("migsched_shards", "Shard count.", &oneg(shards.num_shards() as f64));
@@ -439,6 +469,48 @@ mod tests {
                 "missing idle sample for {family}"
             );
         }
+    }
+
+    #[test]
+    fn estimator_gauges_appear_only_with_distribution_aware_schedulers() {
+        use crate::server::api::dispatch;
+        use crate::server::http::Request;
+        // Agnostic daemons must not grow the family — byte-discipline as
+        // with the per-class gauges.
+        let plain = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            shards: 1,
+            workers: 1,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        assert!(!render(&plain).contains("migsched_estimator_profile_weight"));
+
+        let aware = Daemon::new(DaemonConfig {
+            num_gpus: 2,
+            shards: 1,
+            workers: 1,
+            scheduler: crate::sched::SchedulerKind::MfiExp,
+            ..DaemonConfig::default()
+        })
+        .shards();
+        let idle = render(&aware);
+        // Exposed from startup (all-zero shares before any commit).
+        assert!(idle.contains("# TYPE migsched_estimator_profile_weight gauge"));
+        assert!(idle.contains("migsched_estimator_profile_weight{profile=\"3g.40gb\"} 0\n"));
+        let submit = Request {
+            method: "POST".into(),
+            path: "/v1/workloads".into(),
+            query: std::collections::HashMap::new(),
+            headers: Vec::new(),
+            body: br#"{"profile":"3g.40gb"}"#.to_vec(),
+            keep_alive: false,
+        };
+        assert_eq!(dispatch(&submit, &aware).status, 201);
+        let text = render(&aware);
+        // One observed profile holds the whole normalized mass.
+        assert!(text.contains("migsched_estimator_profile_weight{profile=\"3g.40gb\"} 1\n"));
+        assert!(text.contains("migsched_estimator_profile_weight{profile=\"1g.10gb\"} 0\n"));
     }
 
     #[test]

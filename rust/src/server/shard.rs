@@ -198,7 +198,9 @@ impl ShardSet {
             let tables = FleetTables::for_cluster(&cluster);
             let state = ShardState {
                 cluster,
-                scheduler: config.scheduler.build(&config.hardware),
+                scheduler: config
+                    .scheduler
+                    .build_with_estimator(&config.hardware, config.estimator.as_ref()),
                 scorer: ScoreTable::for_hardware(&config.hardware),
                 tables,
                 leases: HashMap::new(),
@@ -586,5 +588,34 @@ mod tests {
     #[test]
     fn default_config_is_single_shard() {
         assert_eq!(DaemonConfig::default().shards, 1);
+    }
+
+    #[test]
+    fn estimator_config_seeds_every_shard_scheduler() {
+        use crate::sched::SchedulerKind;
+        use crate::workload::EstimatorConfig;
+        // Each shard owns its own estimator instance (shard-local, behind
+        // the shard mutex) and all of them start from the CLI seed.
+        let mut cfg = config(4, 2);
+        cfg.scheduler = SchedulerKind::MfiExp;
+        cfg.estimator = Some(EstimatorConfig {
+            decay_slots: 128,
+            seed_counts: Some([3, 0, 0, 0, 0, 1]),
+        });
+        let set = ShardSet::new(&cfg);
+        for shard in set.shards() {
+            let s = shard.state.lock().unwrap();
+            let mix = s.scheduler.estimator().expect("MFI-EXP exposes its estimator");
+            assert!(!mix.is_empty(), "seeded mix on shard {}", shard.index);
+            assert_eq!(mix.decay_slots(), 128);
+        }
+        // Distribution-agnostic schedulers ignore the config entirely.
+        let mut cfg = config(4, 2);
+        cfg.estimator = Some(EstimatorConfig::default());
+        let set = ShardSet::new(&cfg);
+        for shard in set.shards() {
+            let s = shard.state.lock().unwrap();
+            assert!(s.scheduler.estimator().is_none());
+        }
     }
 }

@@ -410,6 +410,42 @@ mod tests {
     }
 
     #[test]
+    fn mfi_exp_run_is_deterministic_given_seed() {
+        // The estimator's fixed-point weights must make MFI-EXP exactly
+        // reproducible: two runs with the same seed are bit-identical,
+        // including the floating-point fragmentation averages.
+        for dist in [Distribution::Uniform, Distribution::SkewBig] {
+            let a = run(SchedulerKind::MfiExp, dist.clone(), 42);
+            let b = run(SchedulerKind::MfiExp, dist, 42);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.horizon, b.horizon);
+            assert_eq!(a.time_avg_frag.to_bits(), b.time_avg_frag.to_bits());
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(ra.metrics, rb.metrics, "checkpoint {}", ra.demand);
+            }
+        }
+    }
+
+    #[test]
+    fn mfi_exp_mixed_fleet_run_conserves() {
+        // Distribution-aware scoring on a heterogeneous fleet goes through
+        // the per-class ExpectedFleet path; the run must keep the same
+        // accounting invariants as every other scheduler.
+        let fleet = crate::mig::FleetSpec::parse("a100:4,h100:3,a100-40gb:3").unwrap();
+        let cfg = SimConfig::small(Distribution::Uniform, 23).with_fleet(fleet);
+        let engine = SimEngine::new(cfg.clone());
+        let mut s = SchedulerKind::MfiExp.build(&cfg.hardware);
+        let r = engine.run(&mut *s);
+        assert_eq!(r.arrived, r.horizon);
+        assert!(r.accepted <= r.arrived);
+        assert!(r.acceptance_rate() > 0.0);
+        for rec in &r.records {
+            assert!(rec.metrics.utilization <= 1.0 + 1e-9);
+            assert!(rec.metrics.active_gpus <= 10);
+        }
+    }
+
+    #[test]
     fn mfi_acceptance_at_low_demand_is_perfect() {
         let r = run(SchedulerKind::Mfi, Distribution::Uniform, 3);
         let early = r.at_demand(0.3).unwrap();

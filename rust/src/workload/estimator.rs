@@ -1,0 +1,412 @@
+//! Online workload estimator: an exponentially-decaying per-profile demand
+//! histogram ([`ProfileMix`]) learned from the arrival stream.
+//!
+//! The paper's fragmentation metric is workload-agnostic; FGD (Weng et
+//! al., USENIX ATC '23) shows that weighting fragmentation by the
+//! *observed* profile distribution recovers additional acceptance. The
+//! estimator is the online half of that idea: every committed arrival
+//! bumps its profile's weight, and all weights decay geometrically so the
+//! mix tracks the recent stream rather than the full history.
+//!
+//! **Determinism.** Weights are pure integers. One observation applies
+//! `w[i] -= w[i] / D` to every profile (retention `1 - 1/D`) and then adds
+//! [`WEIGHT_SCALE`] to the observed profile, so two runs fed the same
+//! arrival sequence hold bit-identical state — no floats, no wall clock.
+//! `D` ([`ProfileMix::decay_slots`]) is expressed in *slots* under the
+//! paper's one-arrival-per-slot protocol; in open-loop replay and the
+//! daemon the decay advances per observed arrival, which keeps the
+//! estimator a function of the arrival sequence alone. `D = 0` disables
+//! decay (plain counting). After `n` observations of a shifted mix the
+//! old mass retains a factor `(1 - 1/D)^n ≈ e^(-n/D)`, so the estimator
+//! re-converges within a few multiples of `D` — the drift bound the
+//! tests pin.
+//!
+//! The mix can be *seeded* before a run — from raw per-profile counts, a
+//! replay prefix ([`ProfileMix::seed_from_trace`]), or a saved
+//! `migsched trace stats` JSON report ([`ProfileMix::seed_from_stats_json`])
+//! — and snapshotted/restored losslessly through the same integer state.
+
+use crate::mig::{Profile, ALL_PROFILES, NUM_PROFILES};
+use crate::util::json::Json;
+use crate::workload::{Trace, TraceEvent};
+
+/// Fixed-point weight added per observation. Large enough that the
+/// geometric decay's integer truncation is far below one observation's
+/// worth of mass.
+pub const WEIGHT_SCALE: u64 = 1 << 20;
+
+/// Default decay time constant in slots: long enough to smooth burst
+/// noise, short enough to track a mid-trace mix shift within a few
+/// thousand arrivals.
+pub const DEFAULT_DECAY_SLOTS: u64 = 512;
+
+/// An exponentially-decaying per-profile demand histogram.
+///
+/// All state is integer, so observation sequences map to bit-identical
+/// weights across runs and platforms. The `version` counter bumps on
+/// every mutation; consumers that derive expensive state from the mix
+/// (the expected-fragmentation tables) key their caches on it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProfileMix {
+    weights: [u64; NUM_PROFILES],
+    decay_slots: u64,
+    arrivals: u64,
+    version: u64,
+}
+
+impl Default for ProfileMix {
+    fn default() -> Self {
+        Self::new(DEFAULT_DECAY_SLOTS)
+    }
+}
+
+impl ProfileMix {
+    /// An empty mix with decay time constant `decay_slots` (0 = no decay).
+    pub fn new(decay_slots: u64) -> Self {
+        Self { weights: [0; NUM_PROFILES], decay_slots, arrivals: 0, version: 0 }
+    }
+
+    /// Record one arrival: decay every weight by `1/decay_slots`, then add
+    /// [`WEIGHT_SCALE`] to the observed profile.
+    pub fn observe(&mut self, profile: Profile) {
+        if self.decay_slots > 0 {
+            for w in &mut self.weights {
+                *w -= *w / self.decay_slots;
+            }
+        }
+        self.weights[profile.index()] += WEIGHT_SCALE;
+        self.arrivals += 1;
+        self.version += 1;
+    }
+
+    /// Raw fixed-point weights, indexed by [`Profile::index`].
+    pub fn weights(&self) -> &[u64; NUM_PROFILES] {
+        &self.weights
+    }
+
+    /// True when no observation or seed has contributed any mass — the
+    /// condition under which distribution-aware scoring falls back to the
+    /// agnostic scorer.
+    pub fn is_empty(&self) -> bool {
+        self.weights.iter().all(|&w| w == 0)
+    }
+
+    /// Monotone mutation counter; bumps on observe/seed/restore.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Observations recorded via [`observe`](Self::observe) (seeding does
+    /// not count).
+    pub fn arrivals(&self) -> u64 {
+        self.arrivals
+    }
+
+    pub fn decay_slots(&self) -> u64 {
+        self.decay_slots
+    }
+
+    /// Normalized shares (sum 1.0), for reporting only — decisions use the
+    /// integer weights. All zeros when the mix is empty.
+    pub fn normalized(&self) -> [f64; NUM_PROFILES] {
+        let total: u64 = self.weights.iter().sum();
+        if total == 0 {
+            return [0.0; NUM_PROFILES];
+        }
+        let mut out = [0.0; NUM_PROFILES];
+        for (share, &w) in out.iter_mut().zip(&self.weights) {
+            *share = w as f64 / total as f64;
+        }
+        out
+    }
+
+    /// Seed from per-profile arrival counts (e.g. a trace histogram):
+    /// each count contributes `count × WEIGHT_SCALE` undecayed mass.
+    pub fn seed_from_counts(&mut self, counts: &[u64; NUM_PROFILES]) {
+        for (w, &count) in self.weights.iter_mut().zip(counts) {
+            *w += count * WEIGHT_SCALE;
+        }
+        self.version += 1;
+    }
+
+    /// Seed from the first `prefix` arrivals of a trace (0 = all),
+    /// replaying them through [`observe`](Self::observe) so the decay
+    /// semantics match a live run over the same prefix.
+    pub fn seed_from_trace(&mut self, trace: &Trace, prefix: usize) {
+        let take = if prefix == 0 { usize::MAX } else { prefix };
+        let arrivals = self.arrivals;
+        for event in trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Arrival(w) => Some(w.profile),
+                TraceEvent::Departure(..) => None,
+            })
+            .take(take)
+        {
+            self.observe(event);
+        }
+        self.arrivals = arrivals; // seeding is not live observation
+    }
+
+    /// Seed from a saved `migsched trace stats` report (the JSON written
+    /// by `trace stats --json`): reads the `profiles` object mapping
+    /// canonical profile names to arrival counts.
+    pub fn seed_from_stats_json(&mut self, stats: &Json) -> Result<(), String> {
+        let profiles = stats
+            .get("profiles")
+            .ok_or_else(|| "stats report has no \"profiles\" object".to_string())?;
+        let pairs = match profiles {
+            Json::Obj(pairs) => pairs,
+            _ => return Err("\"profiles\" must be an object of per-profile counts".to_string()),
+        };
+        let mut counts = [0u64; NUM_PROFILES];
+        for (name, value) in pairs {
+            let profile = Profile::parse(name)
+                .ok_or_else(|| format!("unknown profile {name:?} in stats report"))?;
+            let count = value
+                .as_u64()
+                .ok_or_else(|| format!("profile {name:?} count must be a non-negative integer"))?;
+            counts[profile.index()] += count;
+        }
+        self.seed_from_counts(&counts);
+        Ok(())
+    }
+
+    /// Serialize the full integer state (weights keyed by canonical
+    /// profile name, decay constant, arrival count).
+    pub fn snapshot(&self) -> Json {
+        let mut weights = Json::obj();
+        for p in ALL_PROFILES {
+            weights.set(p.canonical_name(), self.weights[p.index()]);
+        }
+        Json::obj()
+            .with("decay_slots", self.decay_slots)
+            .with("arrivals", self.arrivals)
+            .with("weights", weights)
+    }
+
+    /// Restore from a [`snapshot`](Self::snapshot). Replaces weights,
+    /// decay constant and arrival count; bumps the version.
+    pub fn restore(&mut self, snapshot: &Json) -> Result<(), String> {
+        let decay = snapshot.req_u64("decay_slots")?;
+        let arrivals = snapshot.req_u64("arrivals")?;
+        let weights_obj = snapshot
+            .get("weights")
+            .ok_or_else(|| "snapshot has no \"weights\" object".to_string())?;
+        let pairs = match weights_obj {
+            Json::Obj(pairs) => pairs,
+            _ => return Err("\"weights\" must be an object".to_string()),
+        };
+        let mut weights = [0u64; NUM_PROFILES];
+        for (name, value) in pairs {
+            let profile = Profile::parse(name)
+                .ok_or_else(|| format!("unknown profile {name:?} in snapshot"))?;
+            let w = value
+                .as_u64()
+                .ok_or_else(|| format!("weight for {name:?} must be a non-negative integer"))?;
+            weights[profile.index()] = w;
+        }
+        self.decay_slots = decay;
+        self.arrivals = arrivals;
+        self.weights = weights;
+        self.version += 1;
+        Ok(())
+    }
+}
+
+/// Construction-time estimator wiring for CLI/daemon surfaces: the decay
+/// constant plus an optional seed histogram (from `--estimator-seed`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EstimatorConfig {
+    /// Decay time constant in slots (0 = no decay).
+    pub decay_slots: u64,
+    /// Initial per-profile counts seeded before the run.
+    pub seed_counts: Option<[u64; NUM_PROFILES]>,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        Self { decay_slots: DEFAULT_DECAY_SLOTS, seed_counts: None }
+    }
+}
+
+impl EstimatorConfig {
+    /// Build the initial mix this configuration describes.
+    pub fn build_mix(&self) -> ProfileMix {
+        let mut mix = ProfileMix::new(self.decay_slots);
+        if let Some(counts) = &self.seed_counts {
+            mix.seed_from_counts(counts);
+        }
+        mix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_mix_reports_empty_and_uniform_zero_shares() {
+        let mix = ProfileMix::new(64);
+        assert!(mix.is_empty());
+        assert_eq!(mix.arrivals(), 0);
+        assert_eq!(mix.normalized(), [0.0; NUM_PROFILES]);
+    }
+
+    #[test]
+    fn observations_are_deterministic_and_order_sensitive_state_is_integer() {
+        let feed = [
+            Profile::P1g10gb,
+            Profile::P3g40gb,
+            Profile::P1g10gb,
+            Profile::P7g80gb,
+            Profile::P1g10gb,
+        ];
+        let mut a = ProfileMix::new(32);
+        let mut b = ProfileMix::new(32);
+        for p in feed {
+            a.observe(p);
+            b.observe(p);
+        }
+        assert_eq!(a, b, "same feed must produce bit-identical state");
+        assert_eq!(a.arrivals(), 5);
+        assert_eq!(a.version(), 5);
+        let shares = a.normalized();
+        assert!(shares[Profile::P1g10gb.index()] > shares[Profile::P3g40gb.index()]);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_decay_counts_plainly() {
+        let mut mix = ProfileMix::new(0);
+        for _ in 0..10 {
+            mix.observe(Profile::P2g20gb);
+        }
+        assert_eq!(mix.weights()[Profile::P2g20gb.index()], 10 * WEIGHT_SCALE);
+    }
+
+    #[test]
+    fn drift_reconverges_within_a_bounded_number_of_observations() {
+        // Phase 1: saturate on 1g.10gb. Phase 2: switch to 7g.80gb. After
+        // 8·D observations of the new mix, the old mass retains at most
+        // (1 - 1/D)^(8D) ≈ e^-8 < 0.04% — the estimator must be dominated
+        // by the new profile.
+        let decay = 32u64;
+        let mut mix = ProfileMix::new(decay);
+        for _ in 0..(8 * decay) {
+            mix.observe(Profile::P1g10gb);
+        }
+        let old_share_before = mix.normalized()[Profile::P1g10gb.index()];
+        assert!(old_share_before > 0.99);
+        for _ in 0..(8 * decay) {
+            mix.observe(Profile::P7g80gb);
+        }
+        let shares = mix.normalized();
+        assert!(
+            shares[Profile::P7g80gb.index()] > 0.99,
+            "estimator did not re-converge: {shares:?}"
+        );
+        assert!(shares[Profile::P1g10gb.index()] < 0.01);
+    }
+
+    #[test]
+    fn seed_from_counts_matches_manual_weights() {
+        let mut mix = ProfileMix::new(128);
+        let mut counts = [0u64; NUM_PROFILES];
+        counts[Profile::P3g40gb.index()] = 7;
+        counts[Profile::P1g10gb.index()] = 3;
+        mix.seed_from_counts(&counts);
+        assert!(!mix.is_empty());
+        assert_eq!(mix.weights()[Profile::P3g40gb.index()], 7 * WEIGHT_SCALE);
+        assert_eq!(mix.weights()[Profile::P1g10gb.index()], 3 * WEIGHT_SCALE);
+        assert_eq!(mix.arrivals(), 0, "seeding is not observation");
+    }
+
+    #[test]
+    fn seed_from_trace_prefix_matches_observing_the_prefix() {
+        use crate::workload::{Workload, WorkloadId};
+        let profiles =
+            [Profile::P1g10gb, Profile::P2g20gb, Profile::P1g10gb, Profile::P7g80gb];
+        let ws: Vec<Workload> = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Workload {
+                id: WorkloadId(i as u64),
+                tenant: crate::workload::TenantId(0),
+                profile: p,
+                arrival_slot: i as u64,
+                duration_slots: 5,
+            })
+            .collect();
+        let trace = Trace::from_workloads("estimator seed test", 64, &ws);
+
+        let mut seeded = ProfileMix::new(16);
+        seeded.seed_from_trace(&trace, 3);
+        let mut observed = ProfileMix::new(16);
+        for &p in profiles.iter().take(3) {
+            observed.observe(p);
+        }
+        assert_eq!(seeded.weights(), observed.weights());
+        assert_eq!(seeded.arrivals(), 0);
+        // prefix 0 = the whole trace.
+        let mut full = ProfileMix::new(16);
+        full.seed_from_trace(&trace, 0);
+        let mut full_observed = ProfileMix::new(16);
+        for &p in &profiles {
+            full_observed.observe(p);
+        }
+        assert_eq!(full.weights(), full_observed.weights());
+    }
+
+    #[test]
+    fn seed_from_stats_json_reads_the_trace_stats_report() {
+        let stats = Json::parse(
+            r#"{"arrivals":10,"profiles":{"1g.10gb":6,"3g.40gb":4},"tenants":1}"#,
+        )
+        .unwrap();
+        let mut mix = ProfileMix::new(256);
+        mix.seed_from_stats_json(&stats).unwrap();
+        assert_eq!(mix.weights()[Profile::P1g10gb.index()], 6 * WEIGHT_SCALE);
+        assert_eq!(mix.weights()[Profile::P3g40gb.index()], 4 * WEIGHT_SCALE);
+
+        let missing = Json::parse(r#"{"arrivals":10}"#).unwrap();
+        assert!(ProfileMix::new(1).seed_from_stats_json(&missing).is_err());
+        let bad_name = Json::parse(r#"{"profiles":{"9g.999gb":1}}"#).unwrap();
+        assert!(ProfileMix::new(1).seed_from_stats_json(&bad_name).is_err());
+        let bad_count = Json::parse(r#"{"profiles":{"1g.10gb":-3}}"#).unwrap();
+        assert!(ProfileMix::new(1).seed_from_stats_json(&bad_count).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_exactly() {
+        let mut mix = ProfileMix::new(48);
+        for p in [Profile::P1g10gb, Profile::P4g40gb, Profile::P1g10gb] {
+            mix.observe(p);
+        }
+        let snap = mix.snapshot();
+        let mut restored = ProfileMix::new(7);
+        restored.restore(&snap).unwrap();
+        assert_eq!(restored.weights(), mix.weights());
+        assert_eq!(restored.decay_slots(), mix.decay_slots());
+        assert_eq!(restored.arrivals(), mix.arrivals());
+        // And the round-trip survives serialization to text.
+        let reparsed = Json::parse(&snap.to_string_compact()).unwrap();
+        let mut again = ProfileMix::new(0);
+        again.restore(&reparsed).unwrap();
+        assert_eq!(again.weights(), mix.weights());
+    }
+
+    #[test]
+    fn estimator_config_builds_the_seeded_mix() {
+        let empty = EstimatorConfig::default().build_mix();
+        assert!(empty.is_empty());
+        assert_eq!(empty.decay_slots(), DEFAULT_DECAY_SLOTS);
+        let mut counts = [0u64; NUM_PROFILES];
+        counts[Profile::P2g20gb.index()] = 5;
+        let cfg = EstimatorConfig { decay_slots: 99, seed_counts: Some(counts) };
+        let mix = cfg.build_mix();
+        assert_eq!(mix.decay_slots(), 99);
+        assert_eq!(mix.weights()[Profile::P2g20gb.index()], 5 * WEIGHT_SCALE);
+    }
+}

@@ -5,12 +5,14 @@
 //! real GPU-cluster job logs (Alibaba/Philly-style) into that format.
 
 pub mod distribution;
+pub mod estimator;
 pub mod generator;
 pub mod ingest;
 pub mod spec;
 pub mod trace;
 
 pub use distribution::Distribution;
+pub use estimator::{EstimatorConfig, ProfileMix};
 pub use generator::{GeneratedWorkloads, WorkloadGenerator};
 pub use ingest::{IngestConfig, IngestReport, MappingPolicy, ProfileMapper, TraceFormat};
 pub use spec::{TenantId, Workload, WorkloadId};

@@ -1,0 +1,148 @@
+//! Distribution-aware scoring conformance and drift behaviour.
+//!
+//! * With an *empty* or *uniform* estimator, `MFI-EXP` must be
+//!   bit-identical to flat `MFI` on ANY interleaving of schedule / commit
+//!   / release operations — empty mixes fall back to the agnostic scorer
+//!   outright, and a uniform mix scales every table entry by one shared
+//!   constant, preserving the strict `(ΔF, gpu, anchor)` order including
+//!   ties. (The multi-class fleet version lives in `tests/fleet.rs`.)
+//! * Mid-trace mix shift (ROADMAP drift test): replaying a skew-small →
+//!   skew-big trace, the online estimator re-converges to the new mix
+//!   within a bounded number of arrivals, and `MFI-EXP`'s acceptance does
+//!   not collapse below the agnostic baseline under real pressure.
+
+use migsched::cluster::Cluster;
+use migsched::mig::{HardwareModel, Profile};
+use migsched::sched::{Mfi, MfiExpected, Scheduler, SchedulerKind};
+use migsched::sim::replay::{self, ReplayConfig};
+use migsched::util::check::forall_shrink_vec;
+use migsched::util::rng::Rng;
+use migsched::workload::{
+    Distribution, EstimatorConfig, Trace, WorkloadGenerator, WorkloadId,
+};
+
+/// Replay an op-encoded episode against flat MFI and two degenerate
+/// MFI-EXP instances on one shared cluster; every proposal must match.
+/// Encoding (shrinkable `Vec<u64>`): `op % 4 < 3` → arrival of profile
+/// `(op / 4) % 6`; `op % 4 == 3` → release of the `(op / 4) % live`-th
+/// oldest live workload.
+fn drive_and_compare(ops: &[u64], gpus: usize) -> Result<(), String> {
+    let hw = HardwareModel::a100_80gb();
+    let mut flat = Mfi::for_hardware(&hw);
+    let mut empty = MfiExpected::for_hardware(&hw);
+    let uniform_cfg = EstimatorConfig { decay_slots: 0, seed_counts: Some([1; 6]) };
+    let mut uniform = MfiExpected::with_config(&hw, &uniform_cfg);
+    let mut cluster = Cluster::new(hw, gpus);
+    let mut live: Vec<WorkloadId> = Vec::new();
+    let mut next_id = 0u64;
+    for (step, &op) in ops.iter().enumerate() {
+        if op % 4 < 3 || live.is_empty() {
+            let profile = Profile::from_index(((op / 4) % 6) as usize).unwrap();
+            let want = flat.schedule(&cluster, profile);
+            // The estimators are deliberately never fed `on_commit`: the
+            // property is about the empty/uniform mix, not the online one.
+            let got_empty = empty.schedule(&cluster, profile);
+            let got_uniform = uniform.schedule(&cluster, profile);
+            if got_empty != want || got_uniform != want {
+                return Err(format!(
+                    "step {step}: {profile} → MFI {want:?} vs MFI-EXP(empty) \
+                     {got_empty:?} vs MFI-EXP(uniform) {got_uniform:?}"
+                ));
+            }
+            if let Some(placement) = want {
+                let id = WorkloadId(next_id);
+                next_id += 1;
+                cluster.allocate(id, placement).map_err(|e| format!("step {step}: {e}"))?;
+                live.push(id);
+            }
+        } else {
+            let victim = live.remove(((op / 4) as usize) % live.len());
+            cluster.release(victim).map_err(|e| format!("step {step}: {e}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_empty_and_uniform_mfi_exp_equal_flat_mfi() {
+    forall_shrink_vec(
+        "mfi-exp-degenerate-equivalence",
+        |rng| (0..rng.index(120)).map(|_| rng.next_u64()).collect(),
+        |ops| drive_and_compare(ops, 4),
+    );
+}
+
+/// Two concatenated open-loop segments with the same arrival cadence but
+/// inverted profile mixes: skew-small (1g.10gb-dominated, 30% vs 5% for
+/// 7g.80gb) followed by skew-big (the exact inversion).
+fn shifted_trace(per_segment: usize, seed: u64) -> Trace {
+    let small = WorkloadGenerator::new(Distribution::SkewSmall)
+        .with_tenants(5)
+        .generate_stream(per_segment, 0.35, 40, &mut Rng::new(seed));
+    let mut big = WorkloadGenerator::new(Distribution::SkewBig)
+        .with_tenants(5)
+        .generate_stream(per_segment, 0.35, 40, &mut Rng::new(seed ^ 0x5eed));
+    let id_offset = small.len() as u64;
+    let slot_offset = small.last().map(|w| w.arrival_slot + 1).unwrap_or(0);
+    for w in &mut big {
+        w.id = WorkloadId(w.id.0 + id_offset);
+        w.arrival_slot += slot_offset;
+    }
+    let mut all = small;
+    all.extend(big);
+    Trace::from_workloads("mix shift: skew-small then skew-big", 448, &all)
+}
+
+#[test]
+fn estimator_reconverges_after_a_mid_trace_mix_shift() {
+    let trace = shifted_trace(700, 7);
+    let hw = HardwareModel::a100_80gb();
+    // Generous capacity: acceptance stays near 1 on both arms, so the
+    // estimator sees (essentially) the arrival stream itself.
+    let config = ReplayConfig::new(64);
+    let est = EstimatorConfig { decay_slots: 96, seed_counts: None };
+    let mut sched = SchedulerKind::MfiExp.build_with_estimator(&hw, Some(&est));
+    let result = replay::run(&trace, &mut *sched, &config);
+    assert!(result.conserved());
+    assert!(
+        result.acceptance_rate() > 0.9,
+        "capacity was sized for near-full acceptance, got {}",
+        result.acceptance_rate()
+    );
+    let mix = sched.estimator().expect("MFI-EXP exposes its estimator");
+    let shares = mix.normalized();
+    let big = shares[Profile::P7g80gb.index()];
+    let small = shares[Profile::P1g10gb.index()];
+    // After ~700 post-shift arrivals with D = 96, segment A's mass
+    // retains (1 - 1/96)^700 ≈ e^(-7.3) < 0.1% — the estimator must have
+    // flipped from 1g.10gb-dominated to 7g.80gb-dominated.
+    assert!(big > small, "estimator did not re-converge: 7g={big:.3} 1g={small:.3}");
+    assert!(big > 0.15, "7g.80gb share should approach its 30% arrival share: {big:.3}");
+    assert!(small < 0.15, "1g.10gb share should decay toward its 5% arrival share: {small:.3}");
+}
+
+#[test]
+fn mfi_exp_acceptance_does_not_collapse_on_the_shifted_tail() {
+    // ~3x overload so rejections are real, not incidental.
+    let trace = shifted_trace(700, 11);
+    let hw = HardwareModel::a100_80gb();
+    let config = ReplayConfig::new(12);
+    let mut mfi = SchedulerKind::Mfi.build(&hw);
+    let base = replay::run(&trace, &mut *mfi, &config);
+    let est = EstimatorConfig { decay_slots: 96, seed_counts: None };
+    let mut exp = SchedulerKind::MfiExp.build_with_estimator(&hw, Some(&est));
+    let aware = replay::run(&trace, &mut *exp, &config);
+    assert!(base.conserved() && aware.conserved());
+    assert!(
+        base.accepted > 0 && base.rejected > 0,
+        "pressure check: accepted={} rejected={}",
+        base.accepted,
+        base.rejected
+    );
+    assert!(
+        aware.accepted as f64 >= 0.9 * base.accepted as f64,
+        "MFI-EXP collapsed on the shifted trace: {} vs MFI {}",
+        aware.accepted,
+        base.accepted
+    );
+}

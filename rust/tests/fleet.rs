@@ -14,9 +14,9 @@
 use migsched::cluster::{snapshot, Cluster};
 use migsched::frag::{evaluate_fleet, FleetTables};
 use migsched::mig::{FleetSpec, HardwareModel, Placement, Profile, ALL_PROFILES};
-use migsched::sched::{Mfi, MfiIndexed, Scheduler};
+use migsched::sched::{Mfi, MfiExpected, MfiIndexed, Scheduler};
 use migsched::util::check::forall_shrink_vec;
-use migsched::workload::WorkloadId;
+use migsched::workload::{EstimatorConfig, WorkloadId};
 
 /// The class vocabulary random layouts draw from: three models with two
 /// distinct per-slice memories, so nearest-fit and ΔF pricing genuinely
@@ -95,6 +95,65 @@ fn drive_and_compare(ops: &[u64], hooks: bool) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Same episode encoding as [`drive_and_compare`], but pitting the
+/// distribution-aware MFI-EXP against flat MFI. With an *empty* estimator
+/// (no mass observed) or a *uniform* seed (equal mass on every profile),
+/// expected-fragmentation scoring must degenerate to the agnostic
+/// objective bit-for-bit on any class layout — empty falls back to the
+/// agnostic scorer outright, and a uniform mix scales every entry of
+/// every class's table by the same constant, which preserves the strict
+/// `(ΔF, gpu, anchor)` order including ties.
+fn drive_and_compare_expected(ops: &[u64]) -> Result<(), String> {
+    let (seed, ops) = match ops.split_first() {
+        Some(x) => x,
+        None => return Ok(()),
+    };
+    let hw = HardwareModel::a100_80gb();
+    let mut flat = Mfi::for_hardware(&hw);
+    let mut empty = MfiExpected::for_hardware(&hw);
+    let uniform_cfg = EstimatorConfig { decay_slots: 0, seed_counts: Some([1; 6]) };
+    let mut uniform = MfiExpected::with_config(&hw, &uniform_cfg);
+    let mut cluster = cluster_from_seed(*seed);
+    let mut live: Vec<WorkloadId> = Vec::new();
+    let mut next_id = 0u64;
+    for (step, &op) in ops.iter().enumerate() {
+        if op % 4 < 3 || live.is_empty() {
+            let profile = Profile::from_index(((op / 4) % 6) as usize).unwrap();
+            let want = flat.schedule(&cluster, profile);
+            // The estimators are deliberately never fed `on_commit`: the
+            // property is about the empty/uniform mix, not the online one.
+            let got_empty = empty.schedule(&cluster, profile);
+            let got_uniform = uniform.schedule(&cluster, profile);
+            if got_empty != want || got_uniform != want {
+                return Err(format!(
+                    "step {step}: {profile} → MFI {want:?} vs MFI-EXP(empty) \
+                     {got_empty:?} vs MFI-EXP(uniform) {got_uniform:?} (layout={:?})",
+                    cluster.class_ids()
+                ));
+            }
+            if let Some(placement) = want {
+                let id = WorkloadId(next_id);
+                next_id += 1;
+                cluster.allocate(id, placement).map_err(|e| format!("step {step}: {e}"))?;
+                live.push(id);
+            }
+        } else {
+            let victim = live.remove(((op / 4) as usize) % live.len());
+            cluster.release(victim).map_err(|e| format!("step {step}: {e}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fleet_mfi_exp_empty_or_uniform_equals_flat() {
+    forall_shrink_vec(
+        "fleet-mfi-exp-degenerate-equivalence",
+        |rng| (0..1 + rng.index(120)).map(|_| rng.next_u64()).collect(),
+        drive_and_compare_expected,
+    );
 }
 
 #[test]
